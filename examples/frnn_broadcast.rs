@@ -1,0 +1,125 @@
+//! FRNN broadcast-replication mode (paper §6.5.2, Fig 9).
+//!
+//! The FRNN dataset (54 GB) fits in every node's local SSD (144 GB), so the
+//! paper "simply uses FanStore's broadcast function to replicate the
+//! dataset across all nodes — all I/O traffic is completed within the local
+//! node".  This example demonstrates exactly that on the real in-process
+//! cluster (replication == nodes ⇒ zero remote fetches), trains the LSTM
+//! surrogate through the pipeline via PJRT, and reruns the Fig 9 scaling
+//! simulation.
+//!
+//! Run: `make artifacts && cargo run --release --offline --example frnn_broadcast`
+
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::runtime::tensor::Tensor;
+use fanstore::runtime::Engine;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+use fanstore::workload::datasets::DatasetSpec;
+
+/// FRNN "shot" file: T x F f32 diagnostics + 1 label byte.
+const T: usize = 16;
+const F: usize = 16;
+
+fn gen_shots(n: usize, seed: u64) -> Vec<fanstore::partition::builder::InputFile> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|i| {
+            let disrupt = rng.chance(0.5);
+            let mut vals = vec![0f32; T * F];
+            for (j, v) in vals.iter_mut().enumerate() {
+                *v = rng.normal() as f32;
+                // disruptions: strong signal in the last quarter window
+                if disrupt && j / F >= 3 * T / 4 {
+                    *v += 2.5;
+                }
+            }
+            let mut data = Vec::with_capacity(T * F * 4 + 1);
+            for v in &vals {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+            data.push(disrupt as u8);
+            fanstore::partition::builder::InputFile {
+                path: format!("shots/shot{i:06}.sig"),
+                data,
+            }
+        })
+        .collect()
+}
+
+fn main() -> fanstore::Result<()> {
+    let artifacts = std::env::var("FANSTORE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let engine = Engine::load_subset(&artifacts, &["lstm_train_step"])?;
+    let spec = engine.spec("lstm_train_step")?.clone();
+    let n_params = spec.param_count();
+    let batch = spec.inputs[n_params].dims[0];
+    let mut params = spec.load_params()?;
+
+    println!("generating {} tokamak shot files (FRNN profile: single flat dir)", 1024);
+    let files = gen_shots(1024, 99);
+    assert_eq!(DatasetSpec::frnn().full_dirs, 1, "FRNN is one flat directory");
+
+    let nodes = 4u32;
+    let cfg = ClusterConfig {
+        nodes,
+        partitions: nodes,
+        replication: nodes, // broadcast: every node holds everything
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(&files, cfg)?;
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+
+    println!("training LSTM surrogate for 60 steps through the broadcast store...");
+    let mut clients: Vec<_> = (0..nodes).map(|n| cluster.client(n)).collect();
+    let mut rng = Prng::new(3);
+    let mut last_loss = f32::NAN;
+    let mut first_loss = f32::NAN;
+    for step in 0..60 {
+        let mut replicas = Vec::new();
+        for node in 0..nodes as usize {
+            // read a mini-batch of shot files through the VFS
+            let mut x = Vec::with_capacity(batch * T * F);
+            let mut y = Vec::with_capacity(batch);
+            for _ in 0..batch {
+                let p = &paths[rng.index(paths.len())];
+                let bytes = clients[node].read_all(p)?;
+                for c in bytes[..T * F * 4].chunks_exact(4) {
+                    x.push(f32::from_le_bytes(c.try_into().unwrap()));
+                }
+                y.push(*bytes.last().unwrap() as f32);
+            }
+            let mut inputs = params.clone();
+            inputs.push(Tensor::from_f32(&[batch, T, F], &x));
+            inputs.push(Tensor::from_f32(&[batch], &y));
+            inputs.push(Tensor::scalar_f32(0.1));
+            let out = engine.execute("lstm_train_step", &inputs)?;
+            replicas.push(out[..n_params].to_vec());
+            last_loss = out[n_params].scalar_value()?;
+        }
+        params = fanstore::trainer::allreduce_mean(&replicas)?;
+        if step == 0 {
+            first_loss = last_loss;
+        }
+        if step % 10 == 0 {
+            println!("  step {step:>3}: BCE loss {last_loss:.4}");
+        }
+    }
+    println!("loss: {first_loss:.4} -> {last_loss:.4}");
+    assert!(last_loss < first_loss, "LSTM failed to learn");
+
+    let report = cluster.shutdown();
+    let remote: u64 = report.per_node.iter().map(|s| s.remote_reads_issued).sum();
+    println!("remote fetches under broadcast replication: {remote} (must be 0)");
+    assert_eq!(remote, 0, "broadcast mode must serve everything locally");
+
+    println!("\nsimulated Fig 9 scaling:");
+    let series = fanstore::experiments::apps_scaling::run_fig9();
+    fanstore::experiments::apps_scaling::report_series("Fig 9 (FRNN)", &series);
+    println!("frnn_broadcast OK");
+    Ok(())
+}

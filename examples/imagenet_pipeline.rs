@@ -1,0 +1,103 @@
+//! ImageNet-style I/O pipeline study (the paper's motivating workload, §2).
+//!
+//! Two parts:
+//!   * **real**: an in-process FanStore cluster serves an ImageNet-profile
+//!     dataset (Table 2 statistics, scaled) to concurrent reader threads on
+//!     every node — wall-clock bandwidth/files/s of this host's actual
+//!     FanStore code path at 1..8 nodes;
+//!   * **simulated**: the same workload priced on the virtual-time testbed
+//!     models (Fig 3/5-style), so the two can be compared side by side.
+//!
+//! Run: `cargo run --release --offline --example imagenet_pipeline`
+
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::experiments::iosim::{run_benchmark, FanStoreSim, SimDataset};
+use fanstore::net::fabric::Fabric;
+use fanstore::util::{human_bytes, human_rate};
+use fanstore::vfs::Vfs;
+use fanstore::workload::datasets::DatasetSpec;
+
+fn real_run(nodes: u32, files: usize) -> fanstore::Result<(f64, f64, f64)> {
+    let spec = DatasetSpec::imagenet();
+    let data = spec.generate(files, 8, 77); // ~13 KiB mean at divisor 8
+    let cfg = ClusterConfig {
+        nodes,
+        partitions: nodes * 4,
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(&data, cfg)?;
+    let paths: Vec<String> = data
+        .iter()
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for node in 0..nodes {
+        // 4 reader threads per node, as Keras defaults to (§3.3)
+        for t in 0..4u32 {
+            let mut vfs = cluster.client(node);
+            let paths = paths.clone();
+            handles.push(std::thread::spawn(move || -> fanstore::Result<u64> {
+                let mut bytes = 0u64;
+                let mut i = t as usize;
+                while i < paths.len() {
+                    bytes += vfs.read_all(&paths[i])?.len() as u64;
+                    i += 4;
+                }
+                Ok(bytes)
+            }));
+        }
+    }
+    let mut total = 0u64;
+    for h in handles {
+        total += h.join().expect("reader")?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let report = cluster.shutdown();
+    let remote: u64 = report.per_node.iter().map(|s| s.remote_reads_issued).sum();
+    let reads = files as u64 * nodes as u64;
+    Ok((
+        total as f64 / secs,
+        reads as f64 / secs,
+        remote as f64 / reads as f64,
+    ))
+}
+
+fn main() -> fanstore::Result<()> {
+    println!("ImageNet-profile pipeline: {} files full-scale, mean file {}",
+        DatasetSpec::imagenet().full_files,
+        human_bytes(DatasetSpec::imagenet().mean_file_size()));
+
+    println!("\n-- real in-proc cluster (wall clock, this host) --");
+    println!("   (all simulated nodes share THIS host's cores: aggregate wall-clock");
+    println!("   bandwidth cannot scale with node count here — what scales is shown");
+    println!("   by the virtual-time model below; this section validates the real");
+    println!("   code path and the locality split)");
+    println!("{:>6} {:>14} {:>12} {:>9}", "nodes", "agg BW", "files/s", "remote%");
+    for nodes in [1u32, 2, 4, 8] {
+        let (bw, fps, remote) = real_run(nodes, 600)?;
+        println!(
+            "{nodes:>6} {:>14} {fps:>12.0} {:>8.1}%",
+            human_rate(bw),
+            remote * 100.0
+        );
+    }
+
+    println!("\n-- simulated 2018 testbed (virtual time, Fig 5 model) --");
+    println!("{:>6} {:>14} {:>12}", "nodes", "agg BW", "files/s");
+    for nodes in [1u32, 4, 8, 16] {
+        let parts = 48.max(nodes);
+        let ds = SimDataset::uniform(4096, 128 << 10, parts, 1.0);
+        let mut sim = FanStoreSim::new(nodes, parts, 1, Fabric::fdr_infiniband());
+        let r = run_benchmark(&mut sim, &ds, nodes, 4);
+        println!(
+            "{nodes:>6} {:>14} {:>12.0}",
+            human_rate(r.bandwidth_mbs() * 1e6),
+            r.files_per_sec()
+        );
+    }
+    println!("\nimagenet_pipeline OK");
+    Ok(())
+}

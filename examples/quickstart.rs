@@ -1,0 +1,111 @@
+//! Quickstart: the end-to-end validation driver.
+//!
+//! Proves all three layers compose on a real small workload:
+//!   1. generate a labelled image dataset (10 classes, raw u8 files),
+//!   2. pack it into FanStore partitions and launch a 4-node in-process
+//!      cluster (real worker threads, real message passing, real bytes),
+//!   3. train the CNN surrogate for a few hundred steps — every mini-batch
+//!      file read goes open→locate→(local|remote fetch)→cache→decode, every
+//!      train step is one PJRT call into the AOT-compiled JAX graph whose
+//!      HLO embeds the Pallas preprocess + tile-matmul kernels,
+//!   4. log the loss curve, validate on the replicated test set, write
+//!      checkpoints back through the VFS (visible-until-close),
+//!   5. print the per-node I/O accounting.
+//!
+//! Run: `make artifacts && cargo run --release --offline --example quickstart`
+//! The run recorded in EXPERIMENTS.md §End-to-end used the defaults below.
+
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::runtime::Engine;
+use fanstore::trainer::data::gen_classification_dataset;
+use fanstore::trainer::{train_cnn, DatasetView, TrainConfig};
+use fanstore::vfs::Vfs;
+
+fn main() -> fanstore::Result<()> {
+    let artifacts = std::env::var("FANSTORE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    println!("[1/5] loading PJRT engine from {artifacts}/ ...");
+    let engine = Engine::load_subset(&artifacts, &["cnn_train_step", "cnn_eval_step"])?;
+
+    println!("[2/5] generating dataset: 1280 train + 320 test images (32x32x3 u8 files)");
+    let mut files = gen_classification_dataset(1280, "train", 11);
+    files.extend(gen_classification_dataset(320, "test", 23));
+
+    println!("[3/5] packing partitions + launching 4-node cluster (test/ replicated)");
+    let cfg = ClusterConfig {
+        nodes: 4,
+        partitions: 8,
+        replicate_dirs: vec!["test".into()],
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(&files, cfg)?;
+    println!(
+        "      prep: {} files, {} raw",
+        cluster.prep_stats.files,
+        fanstore::util::human_bytes(cluster.prep_stats.raw_bytes)
+    );
+
+    let train_paths: Vec<String> = files
+        .iter()
+        .filter(|f| f.path.starts_with("train"))
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    let test_paths: Vec<String> = files
+        .iter()
+        .filter(|f| f.path.starts_with("test"))
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+
+    println!("[4/5] training: 4 data-parallel replicas, 3 epochs (~120 steps x 32 batch)");
+    let tc = TrainConfig {
+        epochs: 3,
+        max_steps_per_epoch: None,
+        lr: 0.05,
+        view: DatasetView::Global,
+        seed: 7,
+        checkpoint: true,
+        flip_prob: 0.0,
+    };
+    let log = train_cnn(&cluster, &engine, &train_paths, &test_paths, &tc)?;
+    println!("      loss curve (every 8th step):");
+    for (i, l) in log.step_losses.iter().enumerate().step_by(8) {
+        println!("        step {i:>4}: {l:.4}");
+    }
+    for e in &log.epochs {
+        println!(
+            "      epoch {}: loss {:.4}, train acc {:.1}%, TEST ACC {:.1}%, {} file reads in {:.2}s ({:.0} files/s)",
+            e.epoch,
+            e.mean_loss,
+            e.train_acc * 100.0,
+            e.test_acc * 100.0,
+            e.files_read,
+            e.seconds,
+            e.files_read as f64 / e.seconds
+        );
+    }
+
+    // read a checkpoint back through the global namespace from another node
+    let mut vfs = cluster.client(3);
+    let ckpts = vfs.readdir("/ckpt")?;
+    println!("[5/5] checkpoints visible cluster-wide: {ckpts:?}");
+    let blob = vfs.read_all(&format!("/ckpt/{}", ckpts.last().unwrap()))?;
+    println!("      last checkpoint: {} bytes", blob.len());
+
+    let report = cluster.shutdown();
+    println!("per-node I/O accounting:");
+    for (i, s) in report.per_node.iter().enumerate() {
+        println!(
+            "  node {i}: {} local reads, {} remote fetches ({}), {} outputs",
+            s.local_reads,
+            s.remote_reads_issued,
+            fanstore::util::human_bytes(s.bytes_fetched_remote),
+            s.outputs_committed
+        );
+    }
+    let final_acc = log.final_test_acc();
+    println!("FINAL TEST ACCURACY: {:.1}%", final_acc * 100.0);
+    assert!(final_acc > 0.5, "training failed to learn");
+    println!("quickstart OK");
+    Ok(())
+}

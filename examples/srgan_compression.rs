@@ -1,0 +1,107 @@
+//! SRGAN compression study (paper §6.6, Figs 10/11).
+//!
+//! Uses the real LZSS codec end to end:
+//!   * packs an SRGAN-profile dataset (Table 2 statistics, ~2.8x
+//!     compressible) with and without compression, reporting the real prep
+//!     cost and ratio (§6.3's 4.3x prep slowdown);
+//!   * serves both variants from an in-process cluster and measures the
+//!     wall-clock read path (remote fetches move compressed bytes,
+//!     decompression on the reader — §5.4);
+//!   * reruns Fig 10 on the simulated GPU cluster for the scale trend.
+//!
+//! Run: `cargo run --release --offline --example srgan_compression`
+
+use fanstore::compress::Codec;
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::util::{human_bytes, human_rate};
+use fanstore::vfs::Vfs;
+use fanstore::workload::datasets::DatasetSpec;
+
+fn serve(codec: Codec, files: &[fanstore::partition::builder::InputFile]) -> fanstore::Result<(f64, f64)> {
+    let cfg = ClusterConfig {
+        nodes: 4,
+        partitions: 8,
+        codec,
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(files, cfg)?;
+    let ratio = cluster.prep_stats.ratio();
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for node in 0..4u32 {
+        let mut vfs = cluster.client(node);
+        let paths = paths.clone();
+        handles.push(std::thread::spawn(move || -> fanstore::Result<u64> {
+            let mut bytes = 0u64;
+            for p in &paths {
+                bytes += vfs.read_all(p)?.len() as u64;
+            }
+            Ok(bytes)
+        }));
+    }
+    let mut total = 0u64;
+    for h in handles {
+        total += h.join().expect("reader")?;
+    }
+    let bw = total as f64 / t0.elapsed().as_secs_f64();
+    cluster.shutdown();
+    Ok((bw, ratio))
+}
+
+fn main() -> fanstore::Result<()> {
+    let spec = DatasetSpec::srgan();
+    println!(
+        "SRGAN-profile dataset: full scale {} files / {}, generating scaled replica...",
+        spec.full_files,
+        human_bytes(spec.full_bytes)
+    );
+    let files = spec.generate(240, 16, 55);
+    let raw: u64 = files.iter().map(|f| f.data.len() as u64).sum();
+    println!("scaled replica: {} files, {}", files.len(), human_bytes(raw));
+
+    // prep cost ± compression (real packing, real codec)
+    let t0 = std::time::Instant::now();
+    let (_, plain) =
+        fanstore::partition::builder::build_partitions(&files, 8, Codec::None)?;
+    let t_plain = t0.elapsed().as_secs_f64();
+    let t0 = std::time::Instant::now();
+    let (_, packed) =
+        fanstore::partition::builder::build_partitions(&files, 8, Codec::Lzss(5))?;
+    let t_lzss = t0.elapsed().as_secs_f64();
+    println!(
+        "\nprep cost: plain {:.3}s vs +LZSS {:.3}s ({:.1}x slowdown; paper 4.3x)",
+        t_plain,
+        t_lzss,
+        t_lzss / t_plain
+    );
+    println!(
+        "compression ratio: {:.2}x (paper 2.8x); stored {} -> {}",
+        packed.ratio(),
+        human_bytes(plain.stored_bytes),
+        human_bytes(packed.stored_bytes)
+    );
+
+    // real read path ± compression
+    let (bw_plain, _) = serve(Codec::None, &files)?;
+    let (bw_comp, ratio) = serve(Codec::Lzss(5), &files)?;
+    println!(
+        "\nin-proc 4-node read path: plain {} vs compressed {} ({:+.1}%, ratio {:.2}x)",
+        human_rate(bw_plain),
+        human_rate(bw_comp),
+        (bw_comp / bw_plain - 1.0) * 100.0,
+        ratio
+    );
+
+    // simulated Fig 10 trend
+    println!("\nsimulated GPU-cluster SRGAN (Fig 10):");
+    let rows = fanstore::experiments::compression::run_fig10();
+    fanstore::experiments::compression::report_fig10(&rows);
+    println!("srgan_compression OK");
+    Ok(())
+}

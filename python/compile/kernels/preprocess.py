@@ -1,0 +1,65 @@
+"""L1 Pallas kernel: image decode + normalize + flip augmentation.
+
+This is the per-file CPU work of the data pipeline — the compute that
+FanStore's I/O path has to keep fed.  Each dataset file holds one raw u8
+image; after the VFS read, this kernel turns the bytes into a normalized f32
+tensor and applies the horizontal-flip augmentation selected by the trainer.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the grid runs over the batch
+dimension, so each program instance streams one [H, W, C] u8 image block
+HBM→VMEM, does element-wise VPU work, and writes the f32 block back.  The
+BlockSpec pipeline replaces the host-side prefetch threads the paper's
+frameworks (Keras, 4 I/O threads/process) used.  interpret=True is mandatory
+here: the CPU PJRT plugin cannot run Mosaic custom-calls.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _preprocess_kernel(img_ref, mean_ref, std_ref, flip_ref, out_ref):
+    """One grid step = one image.
+
+    img_ref:  u8  [H, W, C] block in VMEM
+    mean_ref: f32 [C]
+    std_ref:  f32 [C]
+    flip_ref: i32 []    (this image's flip flag, scalar block)
+    out_ref:  f32 [H, W, C]
+    """
+    x = img_ref[...].astype(jnp.float32)
+    x = (x - mean_ref[...][None, None, :]) / std_ref[...][None, None, :]
+    flipped = x[:, ::-1, :]
+    flip = flip_ref[...]
+    out_ref[...] = jnp.where(flip == 0, x, flipped)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def preprocess(images_u8, mean, std, flip, *, interpret=True):
+    """Normalize + flip a batch of u8 images with a Pallas kernel.
+
+    Args:
+      images_u8: u8 [B, H, W, C]
+      mean, std: f32 [C] channel statistics on the 0-255 scale
+      flip:      i32 [B] per-image horizontal-flip flags
+    Returns:
+      f32 [B, H, W, C]
+    """
+    b, h, w, c = images_u8.shape
+    return pl.pallas_call(
+        _preprocess_kernel,
+        grid=(b,),
+        in_specs=[
+            pl.BlockSpec((None, h, w, c), lambda i: (i, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+            pl.BlockSpec((None,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((None, h, w, c), lambda i: (i, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, h, w, c), jnp.float32),
+        interpret=interpret,
+    )(images_u8, mean, std, flip)

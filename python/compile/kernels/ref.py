@@ -1,0 +1,54 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the ground truth the kernels in this package are tested against
+(python/tests/test_kernels.py).  They are also used directly by model.py when
+a shape falls outside the kernels' tiling constraints.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def preprocess_ref(images_u8, mean, std, flip):
+    """Decode + normalize + horizontal-flip augmentation, pure jnp.
+
+    Args:
+      images_u8: uint8 [B, H, W, C] raw pixels as stored in the dataset files.
+      mean:      f32 [C] per-channel mean (0-255 scale).
+      std:       f32 [C] per-channel std  (0-255 scale).
+      flip:      i32 [B] 1 = flip the image horizontally, 0 = keep.
+
+    Returns:
+      f32 [B, H, W, C] normalized images.
+    """
+    x = images_u8.astype(jnp.float32)
+    x = (x - mean[None, None, None, :]) / std[None, None, None, :]
+    flipped = x[:, :, ::-1, :]
+    keep = (flip == 0)[:, None, None, None]
+    return jnp.where(keep, x, flipped)
+
+
+def matmul_ref(a, b):
+    """f32 matmul oracle for the tiled Pallas matmul."""
+    return jnp.matmul(a, b)
+
+
+def _sigmoid(x):
+    return 1.0 / (1.0 + jnp.exp(-x))
+
+
+def lstm_cell_ref(x, h, c, wx, wh, b):
+    """Single LSTM cell step, gate order (i, f, g, o).
+
+    x: [B, F], h/c: [B, H], wx: [F, 4H], wh: [H, 4H], b: [4H].
+    """
+    z = x @ wx + h @ wh + b
+    hidden = h.shape[-1]
+    i = _sigmoid(z[:, 0 * hidden : 1 * hidden])
+    f = _sigmoid(z[:, 1 * hidden : 2 * hidden])
+    g = jnp.tanh(z[:, 2 * hidden : 3 * hidden])
+    o = _sigmoid(z[:, 3 * hidden : 4 * hidden])
+    c_new = f * c + i * g
+    h_new = o * jnp.tanh(c_new)
+    return h_new, c_new

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: MXU-tiled matmul with a VMEM accumulator.
+
+Used by model.py for the dense layers of the CNN / LSTM / GAN surrogates so
+the training-step HLO exercises a Pallas kernel end to end.
+
+TPU mapping: (bm, bn) output tiles with a K-panel loop as the innermost grid
+dimension; the f32 accumulator lives in VMEM scratch across K steps (revisited
+output block), which is the Pallas idiom for the paper-era "stream panels
+through the systolic array" schedule.  Tiles default to 128 to line up with
+the MXU; shapes must divide by the chosen blocks (model.py pads or falls back
+to ref.matmul_ref otherwise).  interpret=True for CPU-PJRT execution.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, acc_ref, *, k_steps):
+    """Grid = (M/bm, N/bn, K/bk); K is innermost so acc persists per (i, j)."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        a_ref[...], b_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == k_steps - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "interpret")
+)
+def tile_matmul(a, b, *, bm=128, bn=128, bk=128, interpret=True):
+    """C = A @ B with (bm, bn, bk) tiling.
+
+    A: f32 [M, K], B: f32 [K, N], M % bm == N % bn == K % bk == 0.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k},{n}) not divisible by tiles ({bm},{bn},{bk})"
+    )
+    k_steps = k // bk
+    kernel = functools.partial(_matmul_kernel, k_steps=k_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, k_steps),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        scratch_shapes=[pltpu_scratch(bm, bn)],
+        interpret=interpret,
+    )(a, b)
+
+
+def pltpu_scratch(bm, bn):
+    """VMEM f32 scratch accumulator; ANY-memory fallback under interpret."""
+    try:  # pragma: no cover - depends on jax version
+        from jax.experimental.pallas import tpu as pltpu
+
+        return pltpu.VMEM((bm, bn), jnp.float32)
+    except Exception:  # pragma: no cover
+        return pl.MemoryRef((bm, bn), jnp.float32)
+
+
+@jax.custom_vjp
+def dmatmul(a, b):
+    """Differentiable Pallas matmul.
+
+    Pallas interpret-mode kernels do not support reverse-mode AD directly, so
+    we supply the well-known matmul VJP — itself computed with the Pallas
+    kernel, which keeps the MXU tile kernel on both the forward and backward
+    hot paths of the lowered train-step HLO.
+    """
+    return matmul_any(a, b)
+
+
+def _dmatmul_fwd(a, b):
+    return matmul_any(a, b), (a, b)
+
+
+def _dmatmul_bwd(res, dc):
+    a, b = res
+    da = matmul_any(dc, b.T)  # [M,N]x[N,K] -> [M,K]
+    db = matmul_any(a.T, dc)  # [K,M]x[M,N] -> [K,N]
+    return da, db
+
+
+dmatmul.defvjp(_dmatmul_fwd, _dmatmul_bwd)
+
+
+def matmul_any(a, b, *, interpret=True):
+    """tile_matmul when the shape tiles cleanly, jnp fallback otherwise.
+
+    Keeps model.py free of shape bookkeeping: small dense layers (e.g. the
+    10-way logits) fall back to XLA's own matmul, big ones go through the
+    Pallas kernel with the largest clean tile ≤128.
+    """
+    m, k = a.shape
+    n = b.shape[1]
+
+    def best(dim):
+        for t in (128, 64, 32, 16, 8):
+            if dim % t == 0:
+                return t
+        return None
+
+    bm, bn, bk = best(m), best(n), best(k)
+    if bm and bn and bk:
+        return tile_matmul(a, b, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    return jnp.matmul(a, b)

@@ -1,0 +1,339 @@
+"""L2: JAX training-step graphs for the three FanStore application surrogates.
+
+The paper evaluates FanStore with three real applications (Table 1):
+ResNet-50 (CNN), SRGAN (GAN), and FRNN (RNN/LSTM).  Their full-scale models
+need GPUs the testbed does not have, so we build scale-faithful surrogates —
+same architecture family, same training-step structure (fwd, bwd, SGD) —
+sized so the compute:I/O ratio can be calibrated by the Rust simulator
+(DESIGN.md §1).
+
+Every function here is lowered ONCE by aot.py to HLO text and executed from
+the Rust coordinator via PJRT; Python is never on the request path.  Dense
+layers go through the Pallas `dmatmul` kernel so both fwd and bwd HLO contain
+the L1 kernel; convolutions use lax.conv (XLA's native conv is the right tool
+on every backend, and the paper's hot spot is I/O, not conv).
+
+All steps take and return a flat tuple of arrays (params..., aux...) because
+the PJRT boundary is positional.  See `SPECS` at the bottom for the manifest
+consumed by aot.py and the Rust runtime.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from compile.kernels.preprocess import preprocess
+from compile.kernels.tile_matmul import dmatmul
+from compile.kernels import ref
+
+# ---------------------------------------------------------------------------
+# Shared sizes (kept in sync with rust/src/runtime via the manifest emitted
+# by aot.py).
+# ---------------------------------------------------------------------------
+
+CNN_BATCH = 32
+CNN_HW = 32  # image height == width
+CNN_CLASSES = 10
+
+LSTM_BATCH = 32
+LSTM_T = 16  # time steps per sample window
+LSTM_F = 16  # diagnostic signals per step
+LSTM_H = 64
+
+GAN_BATCH = 8
+GAN_LR_HW = 16  # low-res input, upscaled 2x to 32
+
+# ImageNet-ish channel statistics on the 0-255 scale.
+MEAN = jnp.array([125.3, 123.0, 113.9], jnp.float32)
+STD = jnp.array([63.0, 62.1, 66.7], jnp.float32)
+
+
+def _dense(x, w, b):
+    """Dense layer through the differentiable Pallas matmul."""
+    return dmatmul(x, w) + b
+
+
+# ---------------------------------------------------------------------------
+# CNN (ResNet-50 surrogate): conv-pool x2 + residual block + 2 dense layers.
+# ---------------------------------------------------------------------------
+
+
+def cnn_init(seed=0):
+    """Initial CNN parameters (He-scaled), returned as a flat tuple."""
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 6)
+
+    def he(key, shape, fan_in):
+        return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(
+            jnp.float32
+        )
+
+    conv1 = he(ks[0], (3, 3, 3, 16), 27)
+    conv2 = he(ks[1], (3, 3, 16, 32), 144)
+    conv3 = he(ks[2], (3, 3, 32, 32), 288)  # residual block conv
+    fc1_w = he(ks[3], (2048, 128), 2048)  # 8*8*32 = 2048 after two pools
+    fc1_b = jnp.zeros((128,), jnp.float32)
+    fc2_w = he(ks[4], (128, CNN_CLASSES), 128)
+    fc2_b = jnp.zeros((CNN_CLASSES,), jnp.float32)
+    return (conv1, conv2, conv3, fc1_w, fc1_b, fc2_w, fc2_b)
+
+
+CNN_PARAM_NAMES = ("conv1", "conv2", "conv3", "fc1_w", "fc1_b", "fc2_w", "fc2_b")
+
+
+def _conv(x, w, stride=1):
+    return lax.conv_general_dilated(
+        x, w, (stride, stride), "SAME", dimension_numbers=("NHWC", "HWIO", "NHWC")
+    )
+
+
+def _pool2(x):
+    return lax.reduce_window(
+        x, -jnp.inf, lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def cnn_logits(params, x):
+    """Forward pass, f32 [B,H,W,C] -> [B, classes]."""
+    conv1, conv2, conv3, fc1_w, fc1_b, fc2_w, fc2_b = params
+    h = jax.nn.relu(_conv(x, conv1))
+    h = _pool2(h)  # 16x16x16
+    h = jax.nn.relu(_conv(h, conv2))
+    h = _pool2(h)  # 8x8x32
+    h = h + jax.nn.relu(_conv(h, conv3))  # residual block (ResNet's signature)
+    h = h.reshape(h.shape[0], -1)
+    h = jax.nn.relu(_dense(h, fc1_w, fc1_b))
+    return jnp.matmul(h, fc2_w) + fc2_b  # 10-way logits: too thin to tile
+
+
+def _xent(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def cnn_train_step(*args):
+    """(params..., images_u8, labels, flip, mean, std, lr) ->
+    (new_params..., loss, acc).
+
+    The Pallas preprocess kernel runs inside the step (before grad — only
+    params are differentiated), so one PJRT call does decode+normalize+
+    augment+fwd+bwd+SGD: the whole per-iteration compute of §3.1.
+
+    `mean`/`std` are the normalization statistics maintained by the caller
+    (the trainer keeps per-node running stats, like framework BatchNorm —
+    they are NOT gradient-allreduced, which is what the Fig 1 partitioned
+    view trips over).
+    """
+    n = len(CNN_PARAM_NAMES)
+    params = args[:n]
+    images_u8, labels, flip, mean, std, lr = args[n:]
+    x = preprocess(images_u8, mean, std, flip)
+
+    def loss_fn(p):
+        logits = cnn_logits(p, x)
+        return _xent(logits, labels), logits
+
+    (loss, logits), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss, acc)
+
+
+def cnn_eval_step(*args):
+    """(params..., images_u8, labels, mean, std) -> (loss, correct_count).
+
+    Inference only — tile_matmul runs without the VJP wrapper.  Evaluation
+    normalizes with the *rank-0* statistics, as Horovod checkpoints do.
+    """
+    n = len(CNN_PARAM_NAMES)
+    params = args[:n]
+    images_u8, labels, mean, std = args[n:]
+    flip = jnp.zeros((images_u8.shape[0],), jnp.int32)
+    x = preprocess(images_u8, mean, std, flip)
+    logits = cnn_logits(params, x)
+    loss = _xent(logits, labels)
+    correct = jnp.sum((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))
+    return (loss, correct)
+
+
+# ---------------------------------------------------------------------------
+# LSTM (FRNN surrogate): disruption prediction over diagnostic time series.
+# ---------------------------------------------------------------------------
+
+
+def lstm_init(seed=1):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 4)
+    scale_x = jnp.sqrt(1.0 / LSTM_F)
+    scale_h = jnp.sqrt(1.0 / LSTM_H)
+    wx = (jax.random.normal(ks[0], (LSTM_F, 4 * LSTM_H)) * scale_x).astype(jnp.float32)
+    wh = (jax.random.normal(ks[1], (LSTM_H, 4 * LSTM_H)) * scale_h).astype(jnp.float32)
+    b = jnp.zeros((4 * LSTM_H,), jnp.float32)
+    # forget-gate bias = 1 (standard LSTM trick)
+    b = b.at[LSTM_H : 2 * LSTM_H].set(1.0)
+    out_w = (jax.random.normal(ks[2], (LSTM_H, 1)) * scale_h).astype(jnp.float32)
+    out_b = jnp.zeros((1,), jnp.float32)
+    return (wx, wh, b, out_w, out_b)
+
+
+LSTM_PARAM_NAMES = ("wx", "wh", "b", "out_w", "out_b")
+
+
+def lstm_logit(params, x_seq):
+    """x_seq: f32 [B, T, F] -> disruption logit [B]."""
+    wx, wh, b, out_w, out_b = params
+    bsz = x_seq.shape[0]
+    h0 = jnp.zeros((bsz, LSTM_H), jnp.float32)
+    c0 = jnp.zeros((bsz, LSTM_H), jnp.float32)
+
+    def step(carry, x_t):
+        h, c = carry
+        h, c = ref.lstm_cell_ref(x_t, h, c, wx, wh, b)
+        return (h, c), None
+
+    (h, _), _ = lax.scan(step, (h0, c0), jnp.swapaxes(x_seq, 0, 1))
+    return (jnp.matmul(h, out_w) + out_b)[:, 0]
+
+
+def lstm_train_step(*args):
+    """(params..., x_seq, y, lr) -> (new_params..., loss)."""
+    n = len(LSTM_PARAM_NAMES)
+    params = args[:n]
+    x_seq, y, lr = args[n:]
+
+    def loss_fn(p):
+        logit = lstm_logit(p, x_seq)
+        # numerically stable BCE-with-logits
+        return jnp.mean(
+            jnp.maximum(logit, 0) - logit * y + jnp.log1p(jnp.exp(-jnp.abs(logit)))
+        )
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+# ---------------------------------------------------------------------------
+# GAN generator init stage (SRGAN surrogate): 2x super-resolution, MSE loss.
+# SRGAN's "initialization" epochs train the generator alone on pixel loss —
+# exactly what this step does.
+# ---------------------------------------------------------------------------
+
+
+def gan_init_params(seed=2):
+    k = jax.random.PRNGKey(seed)
+    ks = jax.random.split(k, 3)
+
+    def he(key, shape, fan_in):
+        return (jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)).astype(
+            jnp.float32
+        )
+
+    g1 = he(ks[0], (3, 3, 3, 32), 27)
+    g2 = he(ks[1], (3, 3, 32, 12), 288)  # 12 = 3 channels * 2*2 pixel-shuffle
+    g3 = he(ks[2], (3, 3, 3, 3), 27)
+    return (g1, g2, g3)
+
+
+GAN_PARAM_NAMES = ("g1", "g2", "g3")
+
+
+def gan_generate(params, lr_img):
+    """lr_img: f32 [B, 16, 16, 3] -> sr [B, 32, 32, 3] via pixel shuffle."""
+    g1, g2, g3 = params
+    h = jax.nn.relu(_conv(lr_img, g1))
+    h = _conv(h, g2)  # [B, 16, 16, 12]
+    b, hh, ww, _ = h.shape
+    # depth-to-space (pixel shuffle) r=2
+    h = h.reshape(b, hh, ww, 2, 2, 3)
+    h = h.transpose(0, 1, 3, 2, 4, 5).reshape(b, hh * 2, ww * 2, 3)
+    return _conv(jax.nn.relu(h), g3)
+
+
+def gan_init_step(*args):
+    """(params..., lr_img, hr_img, lr) -> (new_params..., mse)."""
+    n = len(GAN_PARAM_NAMES)
+    params = args[:n]
+    lr_img, hr_img, lr = args[n:]
+
+    def loss_fn(p):
+        sr = gan_generate(p, lr_img)
+        return jnp.mean((sr - hr_img) ** 2)
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    new_params = tuple(p - lr * g for p, g in zip(params, grads))
+    return (*new_params, loss)
+
+
+# ---------------------------------------------------------------------------
+# Standalone preprocess graph (used by the I/O pipeline benchmarks, where the
+# trainer wants decode+normalize without a train step).
+# ---------------------------------------------------------------------------
+
+
+def preprocess_batch(images_u8, flip):
+    return (preprocess(images_u8, MEAN, STD, flip),)
+
+
+# ---------------------------------------------------------------------------
+# AOT manifest: name -> (fn, example-args builder, param init fn, param names)
+# ---------------------------------------------------------------------------
+
+
+def _cnn_example_args():
+    params = cnn_init()
+    images = jnp.zeros((CNN_BATCH, CNN_HW, CNN_HW, 3), jnp.uint8)
+    labels = jnp.zeros((CNN_BATCH,), jnp.int32)
+    flip = jnp.zeros((CNN_BATCH,), jnp.int32)
+    lr = jnp.float32(0.05)
+    return (*params, images, labels, flip, MEAN, STD, lr)
+
+
+def _cnn_eval_example_args():
+    params = cnn_init()
+    images = jnp.zeros((CNN_BATCH, CNN_HW, CNN_HW, 3), jnp.uint8)
+    labels = jnp.zeros((CNN_BATCH,), jnp.int32)
+    return (*params, images, labels, MEAN, STD)
+
+
+def _lstm_example_args():
+    params = lstm_init()
+    x = jnp.zeros((LSTM_BATCH, LSTM_T, LSTM_F), jnp.float32)
+    y = jnp.zeros((LSTM_BATCH,), jnp.float32)
+    lr = jnp.float32(0.05)
+    return (*params, x, y, lr)
+
+
+def _gan_example_args():
+    params = gan_init_params()
+    lr_img = jnp.zeros((GAN_BATCH, GAN_LR_HW, GAN_LR_HW, 3), jnp.float32)
+    hr_img = jnp.zeros((GAN_BATCH, GAN_LR_HW * 2, GAN_LR_HW * 2, 3), jnp.float32)
+    lr = jnp.float32(0.001)
+    return (*params, lr_img, hr_img, lr)
+
+
+def _preprocess_example_args():
+    images = jnp.zeros((CNN_BATCH, CNN_HW, CNN_HW, 3), jnp.uint8)
+    flip = jnp.zeros((CNN_BATCH,), jnp.int32)
+    return (images, flip)
+
+
+SPECS = {
+    "cnn_train_step": (cnn_train_step, _cnn_example_args, cnn_init, CNN_PARAM_NAMES),
+    "cnn_eval_step": (cnn_eval_step, _cnn_eval_example_args, None, None),
+    "lstm_train_step": (
+        lstm_train_step,
+        _lstm_example_args,
+        lstm_init,
+        LSTM_PARAM_NAMES,
+    ),
+    "gan_init_step": (
+        gan_init_step,
+        _gan_example_args,
+        gan_init_params,
+        GAN_PARAM_NAMES,
+    ),
+    "preprocess_batch": (preprocess_batch, _preprocess_example_args, None, None),
+}

@@ -1,0 +1,97 @@
+"""AOT path: manifest grammar, HLO text validity, params binary sizes."""
+
+import os
+
+import numpy as np
+import pytest
+
+from compile import aot, model
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.build(str(out))
+    return str(out)
+
+
+def _parse_manifest(path):
+    arts = {}
+    cur = None
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line or line.startswith("#"):
+                continue
+            tok = line.split()
+            if tok[0] == "artifact":
+                cur = {"name": tok[1], "in": [], "out": [], "params": None}
+                arts[tok[1]] = cur
+            elif tok[0] == "hlo":
+                cur["hlo"] = tok[1]
+            elif tok[0] == "in":
+                cur["in"].append(tuple(tok[1:]))
+            elif tok[0] == "out":
+                cur["out"].append(tuple(tok[1:]))
+            elif tok[0] == "params":
+                cur["params"] = tok[1]
+            elif tok[0] == "end":
+                cur = None
+            else:
+                raise AssertionError(f"unknown manifest token {tok[0]}")
+    return arts
+
+
+def test_manifest_covers_all_specs(built):
+    arts = _parse_manifest(os.path.join(built, "manifest.txt"))
+    assert set(arts) == set(model.SPECS)
+
+
+def test_hlo_text_is_parseable_hlo(built):
+    arts = _parse_manifest(os.path.join(built, "manifest.txt"))
+    for art in arts.values():
+        text = open(os.path.join(built, art["hlo"])).read()
+        assert text.startswith("HloModule"), art["name"]
+        assert "ENTRY" in text, art["name"]
+
+
+def test_params_bin_sizes_match_shapes(built):
+    arts = _parse_manifest(os.path.join(built, "manifest.txt"))
+    for art in arts.values():
+        if art["params"] is None:
+            continue
+        n_param_bytes = 0
+        for name, dtype, dims, kind in art["in"]:
+            if kind != "param":
+                continue
+            assert dtype == "f32", "params are f32 by contract"
+            count = 1
+            if dims != "scalar":
+                for d in dims.split("x"):
+                    count *= int(d)
+            n_param_bytes += 4 * count
+        size = os.path.getsize(os.path.join(built, art["params"]))
+        assert size == n_param_bytes, art["name"]
+
+
+def test_train_steps_return_params_first(built):
+    arts = _parse_manifest(os.path.join(built, "manifest.txt"))
+    for art in arts.values():
+        n_params = sum(1 for i in art["in"] if i[3] == "param")
+        if n_params == 0:
+            continue
+        # contract: first n_params outputs mirror the param shapes
+        for i in range(n_params):
+            assert art["in"][i][1:3] == art["out"][i][1:3], (
+                art["name"],
+                i,
+                art["in"][i],
+                art["out"][i],
+            )
+
+
+def test_dtypes_in_vocabulary(built):
+    arts = _parse_manifest(os.path.join(built, "manifest.txt"))
+    for art in arts.values():
+        for rec in art["in"] + art["out"]:
+            assert rec[1] in {"u8", "i32", "f32"}

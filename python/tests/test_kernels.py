@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles (ref.py).
+
+Hypothesis sweeps shapes and values; interpret-mode Pallas is slow, so
+example counts are kept modest but cover the tiling envelope the models use.
+"""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.preprocess import preprocess
+from compile.kernels.tile_matmul import tile_matmul, matmul_any, dmatmul
+
+SET = dict(max_examples=12, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# preprocess
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    b=st.integers(1, 6),
+    h=st.integers(1, 12),
+    w=st.integers(1, 12),
+    c=st.integers(1, 4),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_preprocess_matches_ref(b, h, w, c, seed):
+    rng = np.random.RandomState(seed)
+    img = rng.randint(0, 256, (b, h, w, c), dtype=np.uint8)
+    mean = rng.uniform(0, 255, c).astype(np.float32)
+    std = rng.uniform(1, 128, c).astype(np.float32)
+    flip = rng.randint(0, 2, b).astype(np.int32)
+    got = preprocess(
+        jnp.asarray(img), jnp.asarray(mean), jnp.asarray(std), jnp.asarray(flip)
+    )
+    want = ref.preprocess_ref(
+        jnp.asarray(img), jnp.asarray(mean), jnp.asarray(std), jnp.asarray(flip)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_preprocess_all_flip():
+    img = np.arange(2 * 4 * 4 * 3, dtype=np.uint8).reshape(2, 4, 4, 3)
+    mean = np.zeros(3, np.float32)
+    std = np.ones(3, np.float32)
+    flip = np.ones(2, np.int32)
+    got = np.asarray(
+        preprocess(jnp.asarray(img), jnp.asarray(mean), jnp.asarray(std), jnp.asarray(flip))
+    )
+    np.testing.assert_allclose(got, img[:, :, ::-1, :].astype(np.float32))
+
+
+def test_preprocess_no_flip_is_normalize():
+    rng = np.random.RandomState(3)
+    img = rng.randint(0, 256, (3, 5, 7, 3), dtype=np.uint8)
+    mean = np.array([10.0, 20.0, 30.0], np.float32)
+    std = np.array([2.0, 4.0, 8.0], np.float32)
+    flip = np.zeros(3, np.int32)
+    got = np.asarray(
+        preprocess(jnp.asarray(img), jnp.asarray(mean), jnp.asarray(std), jnp.asarray(flip))
+    )
+    want = (img.astype(np.float32) - mean) / std
+    np.testing.assert_allclose(got, want, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# tile_matmul
+# ---------------------------------------------------------------------------
+
+
+@settings(**SET)
+@given(
+    mi=st.integers(1, 4),
+    ni=st.integers(1, 4),
+    ki=st.integers(1, 4),
+    bm=st.sampled_from([8, 16, 32]),
+    bn=st.sampled_from([8, 16, 32]),
+    bk=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_tile_matmul_matches_ref(mi, ni, ki, bm, bn, bk, seed):
+    m, n, k = mi * bm, ni * bn, ki * bk
+    rng = np.random.RandomState(seed)
+    a = rng.randn(m, k).astype(np.float32)
+    b = rng.randn(k, n).astype(np.float32)
+    got = tile_matmul(jnp.asarray(a), jnp.asarray(b), bm=bm, bn=bn, bk=bk)
+    want = ref.matmul_ref(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_tile_matmul_rejects_ragged():
+    a = jnp.zeros((33, 64), jnp.float32)
+    b = jnp.zeros((64, 32), jnp.float32)
+    with pytest.raises(AssertionError):
+        tile_matmul(a, b, bm=32, bn=32, bk=32)
+
+
+def test_matmul_any_fallback_shape():
+    rng = np.random.RandomState(0)
+    a = rng.randn(7, 13).astype(np.float32)  # primes: no clean tile
+    b = rng.randn(13, 11).astype(np.float32)
+    got = matmul_any(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_any_tiled_shape():
+    rng = np.random.RandomState(1)
+    a = rng.randn(64, 128).astype(np.float32)
+    b = rng.randn(128, 64).astype(np.float32)
+    got = matmul_any(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# dmatmul (custom VJP through the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def test_dmatmul_grads_match_jnp():
+    rng = np.random.RandomState(7)
+    a = jnp.asarray(rng.randn(32, 64).astype(np.float32))
+    b = jnp.asarray(rng.randn(64, 32).astype(np.float32))
+
+    def f_pallas(a, b):
+        return jnp.sum(jnp.sin(dmatmul(a, b)))
+
+    def f_ref(a, b):
+        return jnp.sum(jnp.sin(a @ b))
+
+    ga_p, gb_p = jax.grad(f_pallas, argnums=(0, 1))(a, b)
+    ga_r, gb_r = jax.grad(f_ref, argnums=(0, 1))(a, b)
+    np.testing.assert_allclose(np.asarray(ga_p), np.asarray(ga_r), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(gb_p), np.asarray(gb_r), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_dmatmul_forward_sweep(seed):
+    rng = np.random.RandomState(seed)
+    a = rng.randn(16, 32).astype(np.float32)
+    b = rng.randn(32, 16).astype(np.float32)
+    got = dmatmul(jnp.asarray(a), jnp.asarray(b))
+    np.testing.assert_allclose(np.asarray(got), a @ b, rtol=1e-4, atol=1e-4)

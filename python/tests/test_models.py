@@ -1,0 +1,101 @@
+"""L2 correctness: the train-step graphs learn on learnable synthetic data,
+and their shapes match the AOT manifest contract."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import model
+
+
+def _synthetic_images(rng, n, classes=10):
+    """Class-separable u8 images: class k has a bright kth vertical band."""
+    imgs = rng.randint(0, 64, (n, model.CNN_HW, model.CNN_HW, 3), dtype=np.uint8)
+    labels = rng.randint(0, classes, n).astype(np.int32)
+    band = model.CNN_HW // classes
+    for i, lbl in enumerate(labels):
+        imgs[i, :, lbl * band : (lbl + 1) * band, :] = 220
+    return imgs, labels
+
+
+def test_cnn_train_step_learns():
+    rng = np.random.RandomState(0)
+    params = model.cnn_init()
+    imgs, labels = _synthetic_images(rng, model.CNN_BATCH)
+    flip = np.zeros(model.CNN_BATCH, np.int32)
+    first_loss = None
+    for step in range(30):
+        out = model.cnn_train_step(
+            *params,
+            jnp.asarray(imgs),
+            jnp.asarray(labels),
+            jnp.asarray(flip),
+            model.MEAN,
+            model.STD,
+            jnp.float32(0.05),
+        )
+        params = out[: len(model.CNN_PARAM_NAMES)]
+        loss = float(out[-2])
+        if first_loss is None:
+            first_loss = loss
+    assert loss < first_loss * 0.5, f"loss did not drop: {first_loss} -> {loss}"
+
+
+def test_cnn_eval_step_counts():
+    rng = np.random.RandomState(1)
+    params = model.cnn_init()
+    imgs, labels = _synthetic_images(rng, model.CNN_BATCH)
+    loss, correct = model.cnn_eval_step(
+        *params, jnp.asarray(imgs), jnp.asarray(labels), model.MEAN, model.STD
+    )
+    assert 0.0 <= float(correct) <= model.CNN_BATCH
+    assert np.isfinite(float(loss))
+
+
+def test_lstm_train_step_learns():
+    rng = np.random.RandomState(2)
+    params = model.lstm_init()
+    # disruptions = strong mean signal in the last quarter of the window
+    x = rng.randn(model.LSTM_BATCH, model.LSTM_T, model.LSTM_F).astype(np.float32)
+    y = rng.randint(0, 2, model.LSTM_BATCH).astype(np.float32)
+    x[y == 1, -model.LSTM_T // 4 :, :] += 2.5
+    first_loss = None
+    for _ in range(40):
+        out = model.lstm_train_step(
+            *params, jnp.asarray(x), jnp.asarray(y), jnp.float32(0.1)
+        )
+        params = out[: len(model.LSTM_PARAM_NAMES)]
+        loss = float(out[-1])
+        if first_loss is None:
+            first_loss = loss
+    assert loss < first_loss * 0.7, f"loss did not drop: {first_loss} -> {loss}"
+
+
+def test_gan_init_step_learns():
+    rng = np.random.RandomState(3)
+    params = model.gan_init_params()
+    hr = rng.uniform(0, 1, (model.GAN_BATCH, 32, 32, 3)).astype(np.float32)
+    lr_img = hr[:, ::2, ::2, :]  # 4x undersampling as in the paper's SRGAN
+    first_loss = None
+    for _ in range(30):
+        out = model.gan_init_step(
+            *params, jnp.asarray(lr_img), jnp.asarray(hr), jnp.float32(0.01)
+        )
+        params = out[: len(model.GAN_PARAM_NAMES)]
+        loss = float(out[-1])
+        if first_loss is None:
+            first_loss = loss
+    assert loss < first_loss, f"mse did not drop: {first_loss} -> {loss}"
+
+
+def test_preprocess_batch_shape():
+    imgs = np.zeros((model.CNN_BATCH, model.CNN_HW, model.CNN_HW, 3), np.uint8)
+    flip = np.zeros(model.CNN_BATCH, np.int32)
+    (out,) = model.preprocess_batch(jnp.asarray(imgs), jnp.asarray(flip))
+    assert out.shape == imgs.shape and out.dtype == jnp.float32
+
+
+def test_gan_generate_upscales_2x():
+    params = model.gan_init_params()
+    lr_img = jnp.zeros((2, model.GAN_LR_HW, model.GAN_LR_HW, 3), jnp.float32)
+    sr = model.gan_generate(params, lr_img)
+    assert sr.shape == (2, model.GAN_LR_HW * 2, model.GAN_LR_HW * 2, 3)

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 10 (SRGAN ± compressed data across GPU scales).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = fanstore::experiments::compression::run_fig10();
+    fanstore::experiments::compression::report_fig10(&rows);
+    println!("[bench fig10 done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate Fig 11 (relative compressed/uncompressed bandwidth
+//! across CPU-cluster scales).
+
+fn main() {
+    let scale = std::env::var("FANSTORE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(16);
+    let t0 = std::time::Instant::now();
+    let res = fanstore::experiments::compression::run_fig11(scale);
+    fanstore::experiments::compression::report_fig11(&res);
+    println!("[bench fig11 done in {:.2}s, count scale 1/{scale}]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 1 (global vs partitioned dataset view — REAL
+//! training through FanStore + PJRT).  Needs `make artifacts` first.
+
+fn main() {
+    let dir = std::env::var("FANSTORE_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    if !std::path::Path::new(&dir).join("manifest.txt").exists() {
+        eprintln!("fig1_views: artifacts/ missing — run `make artifacts` first");
+        return;
+    }
+    let t0 = std::time::Instant::now();
+    let engine = fanstore::runtime::Engine::load_subset(&dir, &["cnn_train_step", "cnn_eval_step"])
+        .expect("engine");
+    let runs = fanstore::experiments::views::run(&engine, 4, 640, 160, 6, None).expect("fig1");
+    fanstore::experiments::views::report(&runs);
+    println!("[bench fig1 done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,14 @@
+//! Bench: regenerate Fig 3 (single-node bandwidth + throughput on four
+//! storage backends).  `cargo bench --bench fig3_single_node`
+//! Optionally FANSTORE_SCALE=N divides the paper's file counts (default 8).
+
+fn main() {
+    let scale = std::env::var("FANSTORE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let t0 = std::time::Instant::now();
+    let rows = fanstore::experiments::single_node::run(scale);
+    fanstore::experiments::single_node::report(&rows);
+    println!("[bench fig3 done in {:.2}s, count scale 1/{scale}]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 4 (application throughput on four backends).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let rows = fanstore::experiments::apps::run();
+    fanstore::experiments::apps::report(&rows);
+    println!("[bench fig4 done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

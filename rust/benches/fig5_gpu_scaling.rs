@@ -1,0 +1,26 @@
+//! Bench: regenerate Fig 5 (benchmark scaling on the GPU cluster).
+
+fn main() {
+    let scale = std::env::var("FANSTORE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(8);
+    let t0 = std::time::Instant::now();
+    let res = fanstore::experiments::scaling::run(
+        fanstore::experiments::scaling::ClusterKind::Gpu,
+        scale,
+        1.0,
+    );
+    fanstore::experiments::scaling::report(&res);
+    let ablation = fanstore::experiments::scaling::run_replication_ablation(
+        fanstore::experiments::scaling::ClusterKind::Gpu,
+        16,
+        (128 << 10) / scale.max(1),
+        128 << 10,
+    );
+    fanstore::experiments::scaling::report_replication_ablation(&ablation, 16);
+    println!("[bench fig5 done in {:.2}s, count scale 1/{scale}]", t0.elapsed().as_secs_f64());
+}
+
+// appended: the replication-factor ablation (DESIGN.md §4) shares this
+// bench since it runs on the same GPU-cluster model.

@@ -1,0 +1,16 @@
+//! Bench: regenerate Fig 6 (benchmark scaling on the 512-node CPU cluster).
+
+fn main() {
+    let scale = std::env::var("FANSTORE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(4);
+    let t0 = std::time::Instant::now();
+    let res = fanstore::experiments::scaling::run(
+        fanstore::experiments::scaling::ClusterKind::Cpu,
+        scale,
+        1.0,
+    );
+    fanstore::experiments::scaling::report(&res);
+    println!("[bench fig6 done in {:.2}s, count scale 1/{scale}]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,10 @@
+//! Bench: regenerate Fig 7 (ResNet-50 weak scaling, GPU + CPU clusters,
+//! with the SFS reference points).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let series = fanstore::experiments::apps_scaling::run_fig7();
+    fanstore::experiments::apps_scaling::report_series("Fig 7 (ResNet-50)", &series);
+    fanstore::experiments::apps_scaling::shape_checks_fig7(&series);
+    println!("[bench fig7 done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

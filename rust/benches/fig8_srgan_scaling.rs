@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 8 (SRGAN init + train weak scaling, GPU cluster).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let series = fanstore::experiments::apps_scaling::run_fig8();
+    fanstore::experiments::apps_scaling::report_series("Fig 8 (SRGAN)", &series);
+    println!("[bench fig8 done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

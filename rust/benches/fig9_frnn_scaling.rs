@@ -1,0 +1,8 @@
+//! Bench: regenerate Fig 9 (FRNN weak scaling with broadcast replication).
+
+fn main() {
+    let t0 = std::time::Instant::now();
+    let series = fanstore::experiments::apps_scaling::run_fig9();
+    fanstore::experiments::apps_scaling::report_series("Fig 9 (FRNN)", &series);
+    println!("[bench fig9 done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

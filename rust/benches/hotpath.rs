@@ -1,0 +1,272 @@
+//! Hot-path microbenchmarks (the §Perf driver in EXPERIMENTS.md).
+//!
+//! Measures, with wall-clock timing loops:
+//!   * LZSS compress/decompress rates per level (compressible + random)
+//!     — the decompress rate here calibrates `FanStoreSim::decompress_bw`;
+//!   * metadata hashtable lookup/stat/readdir throughput;
+//!   * refcount-cache acquire/release;
+//!   * partition pack/scan throughput;
+//!   * transport round-trip latency (the in-proc "MPI" path);
+//!   * end-to-end in-proc read_all on a 4-node cluster.
+
+use std::time::Instant;
+
+use fanstore::cache::RefCountCache;
+use fanstore::compress::lzss;
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::metadata::record::{FileLocation, FileMeta, FileStat};
+use fanstore::metadata::table::MetaTable;
+use fanstore::net::transport::{InProcTransport, Request};
+use fanstore::partition::builder::{build_partitions, InputFile};
+use fanstore::util::human_rate;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+use fanstore::workload::datasets::synth_content;
+
+fn time<F: FnMut()>(mut f: F, iters: u32) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_lzss() {
+    println!("== LZSS codec ==");
+    let mut rng = Prng::new(42);
+    let srgan_like = synth_content(&mut rng, 4 << 20, 0.72);
+    let mut random = vec![0u8; 4 << 20];
+    rng.fill_bytes(&mut random);
+
+    for level in [1u8, 3, 5, 9] {
+        let secs = time(
+            || {
+                std::hint::black_box(lzss::compress(&srgan_like, level));
+            },
+            3,
+        );
+        let c = lzss::compress(&srgan_like, level);
+        println!(
+            "  compress  level {level}: {:>12}  ratio {:.2}x (srgan-like 4 MiB)",
+            human_rate(srgan_like.len() as f64 / secs),
+            srgan_like.len() as f64 / c.len() as f64
+        );
+    }
+    let c5 = lzss::compress(&srgan_like, 5);
+    let secs = time(
+        || {
+            std::hint::black_box(lzss::decompress(&c5, srgan_like.len()).unwrap());
+        },
+        10,
+    );
+    println!(
+        "  decompress        : {:>12}  (raw-output rate; calibrates FanStoreSim::decompress_bw)",
+        human_rate(srgan_like.len() as f64 / secs)
+    );
+    let secs = time(
+        || {
+            std::hint::black_box(lzss::compress(&random, 5));
+        },
+        3,
+    );
+    println!(
+        "  compress  random  : {:>12}  (incompressible reject path)",
+        human_rate(random.len() as f64 / secs)
+    );
+}
+
+fn bench_metadata() {
+    println!("== metadata table ==");
+    let mut t = MetaTable::new();
+    let n = 200_000u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        t.insert(
+            &format!("/data/d{:03}/f{i:07}", i % 500),
+            FileMeta {
+                stat: FileStat::regular(i, 1000),
+                location: FileLocation {
+                    node: 0,
+                    partition: 0,
+                    offset: 0,
+                    stored_len: 1000,
+                    compressed: false,
+                },
+            },
+        );
+    }
+    println!(
+        "  insert: {:.0} entries/s ({n} files)",
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+    let t0 = Instant::now();
+    let mut found = 0u64;
+    for i in 0..n {
+        if t.stat(&format!("/data/d{:03}/f{i:07}", i % 500)).is_ok() {
+            found += 1;
+        }
+    }
+    println!(
+        "  stat:   {:.0} ops/s (hit {found})",
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+    let t0 = Instant::now();
+    let mut listed = 0usize;
+    for d in 0..500 {
+        listed += t.readdir(&format!("/data/d{d:03}")).unwrap().len();
+    }
+    println!(
+        "  readdir: {:.0} dirs/s ({listed} entries total, cached)",
+        500.0 / t0.elapsed().as_secs_f64()
+    );
+}
+
+fn bench_cache() {
+    println!("== refcount cache ==");
+    let mut c = RefCountCache::new();
+    let n = 500_000u64;
+    let t0 = Instant::now();
+    for i in 0..n {
+        let path = format!("/f{}", i % 1000);
+        if c.acquire(&path).is_none() {
+            c.insert(&path, vec![0u8; 64]);
+        }
+        c.release(&path);
+    }
+    println!(
+        "  acquire+release: {:.0} ops/s",
+        n as f64 / t0.elapsed().as_secs_f64()
+    );
+}
+
+fn bench_partition() {
+    println!("== partition pack/scan ==");
+    let mut rng = Prng::new(7);
+    let files: Vec<InputFile> = (0..2000)
+        .map(|i| {
+            let mut data = vec![0u8; 32 * 1024];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("d/f{i}"),
+                data,
+            }
+        })
+        .collect();
+    let total: usize = files.iter().map(|f| f.data.len()).sum();
+    let t0 = Instant::now();
+    let (blobs, _) = build_partitions(&files, 8, fanstore::compress::Codec::None).unwrap();
+    println!(
+        "  pack: {:>12} ({} files)",
+        human_rate(total as f64 / t0.elapsed().as_secs_f64()),
+        files.len()
+    );
+    let t0 = Instant::now();
+    let mut n = 0;
+    for b in &blobs {
+        n += fanstore::partition::format::PartitionReader::new(b)
+            .unwrap()
+            .read_all()
+            .unwrap()
+            .len();
+    }
+    println!(
+        "  scan: {:>12} ({n} entries)",
+        human_rate(total as f64 / t0.elapsed().as_secs_f64())
+    );
+}
+
+fn bench_transport() {
+    println!("== transport round trip ==");
+    let (tp, eps) = InProcTransport::fully_connected(2);
+    let mut eps = eps.into_iter();
+    let _e0 = eps.next().unwrap();
+    let e1 = eps.next().unwrap();
+    let handle = std::thread::spawn(move || {
+        while let Ok(msg) = e1.inbox.recv() {
+            if matches!(msg.req, Request::Shutdown) {
+                let _ = msg.reply.send(fanstore::net::transport::Response::Ok);
+                break;
+            }
+            let _ = msg
+                .reply
+                .send(fanstore::net::transport::Response::FileData {
+                    stored: vec![0u8; 128 * 1024],
+                    raw_len: 128 * 1024,
+                    compressed: false,
+                });
+        }
+    });
+    let iters = 20_000;
+    let t0 = Instant::now();
+    for i in 0..iters {
+        let r = tp
+            .call(
+                0,
+                1,
+                Request::ReadFile {
+                    path: format!("/f{i}"),
+                },
+            )
+            .unwrap();
+        std::hint::black_box(r);
+    }
+    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    println!(
+        "  round trip (128 KiB payload): {:.1} µs, {:.0} req/s",
+        per * 1e6,
+        1.0 / per
+    );
+    tp.shutdown_all();
+    handle.join().unwrap();
+}
+
+fn bench_read_path() {
+    println!("== in-proc end-to-end read_all (4 nodes) ==");
+    let mut rng = Prng::new(9);
+    let files: Vec<InputFile> = (0..512)
+        .map(|i| {
+            let mut data = vec![0u8; 128 * 1024];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/f{i:04}"),
+                data,
+            }
+        })
+        .collect();
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 4,
+            partitions: 8,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut vfs = cluster.client(0);
+    let t0 = Instant::now();
+    let mut bytes = 0u64;
+    for f in &files {
+        bytes += vfs
+            .read_all(&format!("/fanstore/user/{}", f.path))
+            .unwrap()
+            .len() as u64;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  single client: {:>12}, {:.0} files/s (75% remote)",
+        human_rate(bytes as f64 / secs),
+        files.len() as f64 / secs
+    );
+    cluster.shutdown();
+}
+
+fn main() {
+    println!("FanStore hot-path microbenchmarks");
+    bench_lzss();
+    bench_metadata();
+    bench_cache();
+    bench_partition();
+    bench_transport();
+    bench_read_path();
+}

@@ -1,0 +1,13 @@
+//! Bench: regenerate the §6.3 data-preparation cost table (real packing
+//! of scaled Table 2 datasets, ± LZSS, with full-scale extrapolation).
+
+fn main() {
+    let files = std::env::var("FANSTORE_PREP_FILES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(3000);
+    let t0 = std::time::Instant::now();
+    let rows = fanstore::experiments::prep::run(files, 16).expect("prep");
+    fanstore::experiments::prep::report(&rows);
+    println!("[bench prep_cost done in {:.2}s]", t0.elapsed().as_secs_f64());
+}

@@ -1,0 +1,200 @@
+//! The refcounted file cache (paper §5.4).
+//!
+//! "FanStore implements an easier caching mechanism: a file is cached in
+//! memory until the file descriptor is released. ... FanStore maintains a
+//! file counter table in memory with file path as the key and the number of
+//! processes that are currently accessing it as the value. ... If the
+//! counter is zero, the file content is evicted from cache."
+//!
+//! The design goal is minimal RAM (training processes are memory hungry),
+//! not hit rate — uniform-random access defeats LRU anyway (§5.4).
+
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// Cache statistics for the experiment reports.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    pub resident_bytes: u64,
+    pub peak_bytes: u64,
+}
+
+struct Entry {
+    data: Arc<Vec<u8>>,
+    refcount: u32,
+}
+
+/// Refcount cache: entries live exactly while at least one fd references
+/// them.  Shared decompressed content is handed out as `Arc` so simultaneous
+/// readers on the same node share one buffer ("multiple training processes
+/// on the same node can access the same file simultaneously").
+#[derive(Default)]
+pub struct RefCountCache {
+    entries: HashMap<String, Entry>,
+    stats: CacheStats,
+}
+
+impl RefCountCache {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Try to pin `path`; on hit the refcount rises and the content is
+    /// returned.  On miss the caller must fetch and call [`insert`].
+    pub fn acquire(&mut self, path: &str) -> Option<Arc<Vec<u8>>> {
+        match self.entries.get_mut(path) {
+            Some(e) => {
+                e.refcount += 1;
+                self.stats.hits += 1;
+                Some(Arc::clone(&e.data))
+            }
+            None => {
+                self.stats.misses += 1;
+                None
+            }
+        }
+    }
+
+    /// Insert freshly-fetched content with refcount 1 and return the shared
+    /// handle.  If another thread inserted in the meantime, the existing
+    /// entry wins (its refcount rises instead).
+    pub fn insert(&mut self, path: &str, data: Vec<u8>) -> Arc<Vec<u8>> {
+        if let Some(e) = self.entries.get_mut(path) {
+            e.refcount += 1;
+            return Arc::clone(&e.data);
+        }
+        let len = data.len() as u64;
+        let arc = Arc::new(data);
+        self.entries.insert(
+            path.to_string(),
+            Entry {
+                data: Arc::clone(&arc),
+                refcount: 1,
+            },
+        );
+        self.stats.resident_bytes += len;
+        self.stats.peak_bytes = self.stats.peak_bytes.max(self.stats.resident_bytes);
+        arc
+    }
+
+    /// Drop one reference; evicts the content at zero (fd release, §5.4).
+    pub fn release(&mut self, path: &str) {
+        let evict = match self.entries.get_mut(path) {
+            Some(e) => {
+                e.refcount = e.refcount.saturating_sub(1);
+                e.refcount == 0
+            }
+            None => false,
+        };
+        if evict {
+            if let Some(e) = self.entries.remove(path) {
+                self.stats.resident_bytes -= e.data.len() as u64;
+                self.stats.evictions += 1;
+            }
+        }
+    }
+
+    pub fn refcount(&self, path: &str) -> u32 {
+        self.entries.get(path).map(|e| e.refcount).unwrap_or(0)
+    }
+
+    pub fn resident_files(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn stats(&self) -> CacheStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miss_then_insert_then_hit() {
+        let mut c = RefCountCache::new();
+        assert!(c.acquire("/f").is_none());
+        c.insert("/f", vec![1, 2, 3]);
+        let d = c.acquire("/f").expect("hit");
+        assert_eq!(*d, vec![1, 2, 3]);
+        assert_eq!(c.refcount("/f"), 2);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses), (1, 1));
+    }
+
+    #[test]
+    fn eviction_at_zero_refcount_only() {
+        let mut c = RefCountCache::new();
+        c.insert("/f", vec![0; 100]);
+        c.acquire("/f").unwrap(); // rc = 2
+        c.release("/f"); // rc = 1, still resident
+        assert_eq!(c.resident_files(), 1);
+        c.release("/f"); // rc = 0 -> evicted
+        assert_eq!(c.resident_files(), 0);
+        assert_eq!(c.stats().evictions, 1);
+        assert_eq!(c.stats().resident_bytes, 0);
+        assert!(c.acquire("/f").is_none());
+    }
+
+    #[test]
+    fn concurrent_insert_coalesces() {
+        let mut c = RefCountCache::new();
+        let a = c.insert("/f", vec![1]);
+        let b = c.insert("/f", vec![9, 9, 9]); // loser: existing entry wins
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(*b, vec![1]);
+        assert_eq!(c.refcount("/f"), 2);
+    }
+
+    #[test]
+    fn peak_bytes_tracks_high_water() {
+        let mut c = RefCountCache::new();
+        c.insert("/a", vec![0; 1000]);
+        c.insert("/b", vec![0; 500]);
+        c.release("/a");
+        assert_eq!(c.stats().resident_bytes, 500);
+        assert_eq!(c.stats().peak_bytes, 1500);
+    }
+
+    #[test]
+    fn release_unknown_is_noop() {
+        let mut c = RefCountCache::new();
+        c.release("/nope");
+        assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn property_refcount_never_leaks() {
+        crate::util::proptest_lite::check("cache refcount", 0xCACE, 30, |rng| {
+            let mut c = RefCountCache::new();
+            let paths = ["/a", "/b", "/c", "/d"];
+            let mut live: Vec<&str> = Vec::new();
+            for _ in 0..200 {
+                let p = paths[rng.index(paths.len())];
+                if rng.chance(0.55) {
+                    if c.acquire(p).is_none() {
+                        c.insert(p, vec![0; rng.index(64)]);
+                    }
+                    live.push(p);
+                } else if let Some(pos) = live.iter().position(|&q| q == p) {
+                    live.remove(pos);
+                    c.release(p);
+                }
+            }
+            // drain: after releasing everything, cache must be empty
+            for p in live.drain(..) {
+                c.release(p);
+            }
+            crate::prop_assert!(
+                c.resident_files() == 0,
+                "cache retained {} files after all releases",
+                c.resident_files()
+            );
+            Ok(())
+        });
+    }
+}

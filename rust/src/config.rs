@@ -1,0 +1,172 @@
+//! Cluster / workload configuration.
+//!
+//! A real deployment of this repo is driven either programmatically (the
+//! examples) or from the CLI (`fanstore --nodes 4 ...`).  Options map 1:1 to
+//! the knobs the paper exposes: node count, partition count, replication
+//! factor, compression on/off + level, and the replicated-directory list.
+
+use crate::compress::Codec;
+use crate::error::{FanError, Result};
+
+/// In-process cluster bring-up options (paper §5.2/§5.4 knobs).
+#[derive(Clone, Debug)]
+pub struct ClusterConfig {
+    /// Number of FanStore nodes (one worker thread each).
+    pub nodes: u32,
+    /// Number of partitions the dataset is packed into; the paper uses 48
+    /// (GPU cluster) and 512 (CPU cluster).
+    pub partitions: u32,
+    /// Input replication factor N: each node hosts N different partitions
+    /// (§5.4); `nodes` = broadcast.
+    pub replication: u32,
+    /// Compression codec applied at prep time.
+    pub codec: Codec,
+    /// Mount-point prefix of the global namespace (§5.2).
+    pub mount: String,
+    /// Dataset-relative directories replicated to every node (§5.4 — the
+    /// test set, read completely by each process at validation).
+    pub replicate_dirs: Vec<String>,
+    /// Spill partitions to this directory (real file I/O) instead of RAM.
+    pub spill_dir: Option<String>,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        ClusterConfig {
+            nodes: 4,
+            partitions: 8,
+            replication: 1,
+            codec: Codec::None,
+            mount: "/fanstore/user".into(),
+            replicate_dirs: Vec::new(),
+            spill_dir: None,
+        }
+    }
+}
+
+impl ClusterConfig {
+    pub fn validate(&self) -> Result<()> {
+        if self.nodes == 0 {
+            return Err(FanError::Config("nodes must be > 0".into()));
+        }
+        if self.partitions == 0 {
+            return Err(FanError::Config("partitions must be > 0".into()));
+        }
+        if self.replication == 0 || self.replication > self.nodes {
+            return Err(FanError::Config(format!(
+                "replication must be in 1..={}",
+                self.nodes
+            )));
+        }
+        if !self.mount.starts_with('/') {
+            return Err(FanError::Config("mount must be absolute".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Tiny `key=value` argument parser for the CLI (no clap in the vendor set).
+pub struct ArgMap {
+    pairs: Vec<(String, String)>,
+    pub positional: Vec<String>,
+}
+
+impl ArgMap {
+    pub fn parse(args: &[String]) -> Self {
+        let mut pairs = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(rest) = a.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    pairs.push((k.to_string(), v.to_string()));
+                } else if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                    pairs.push((rest.to_string(), args[i + 1].clone()));
+                    i += 1;
+                } else {
+                    pairs.push((rest.to_string(), "true".to_string()));
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        ArgMap { pairs, positional }
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.pairs
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .map(|(_, v)| v.as_str())
+    }
+
+    pub fn get_u32(&self, key: &str, default: u32) -> Result<u32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| FanError::Config(format!("--{key} expects an integer, got {v}"))),
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| FanError::Config(format!("--{key} expects an integer, got {v}"))),
+        }
+    }
+
+    pub fn get_flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn default_config_is_valid() {
+        ClusterConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn bad_replication_rejected() {
+        let cfg = ClusterConfig {
+            replication: 9,
+            nodes: 4,
+            ..Default::default()
+        };
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn argmap_forms() {
+        let m = ArgMap::parse(&sv(&[
+            "bench", "--nodes=8", "--codec", "lzss", "--verbose", "--level", "5",
+        ]));
+        assert_eq!(m.positional, vec!["bench"]);
+        assert_eq!(m.get("nodes"), Some("8"));
+        assert_eq!(m.get("codec"), Some("lzss"));
+        assert_eq!(m.get("level"), Some("5"));
+        assert!(m.get_flag("verbose"));
+        assert_eq!(m.get_u32("nodes", 1).unwrap(), 8);
+        assert_eq!(m.get_u32("missing", 3).unwrap(), 3);
+        assert!(m.get_u32("codec", 0).is_err());
+    }
+
+    #[test]
+    fn last_value_wins() {
+        let m = ArgMap::parse(&sv(&["--n=1", "--n=2"]));
+        assert_eq!(m.get("n"), Some("2"));
+    }
+}

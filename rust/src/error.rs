@@ -1,0 +1,70 @@
+//! Crate-wide error type.
+//!
+//! FanStore surfaces POSIX-shaped errors (`ENOENT`, `EBADF`, …) through the
+//! VFS layer — the paper's function-interception design returns glibc error
+//! codes to the unmodified application — plus internal error classes for the
+//! partition format, codec, transport and PJRT runtime.
+
+use thiserror::Error;
+
+/// Result alias used across the crate.
+pub type Result<T> = std::result::Result<T, FanError>;
+
+/// All FanStore failure modes.
+#[derive(Error, Debug)]
+pub enum FanError {
+    /// POSIX `ENOENT`: path not present in the global namespace.
+    #[error("no such file or directory: {0}")]
+    NotFound(String),
+    /// POSIX `EBADF`: unknown or already-closed descriptor.
+    #[error("bad file descriptor: {0}")]
+    BadFd(u64),
+    /// POSIX `EEXIST`.
+    #[error("file exists: {0}")]
+    Exists(String),
+    /// POSIX `EISDIR` / `ENOTDIR` mismatches.
+    #[error("is a directory: {0}")]
+    IsDirectory(String),
+    #[error("not a directory: {0}")]
+    NotDirectory(String),
+    /// Multi-read single-write violation (paper §3.5): re-opening an output
+    /// file for write, or writing an input file.
+    #[error("consistency violation: {0}")]
+    Consistency(String),
+    /// Partition file is malformed (bad magic, truncated entry, …).
+    #[error("partition format error: {0}")]
+    Format(String),
+    /// LZSS bitstream is corrupt.
+    #[error("decompression error: {0}")]
+    Codec(String),
+    /// Simulated-transport failure (peer gone, message too large, …).
+    #[error("transport error: {0}")]
+    Transport(String),
+    /// PJRT/XLA runtime failure.
+    #[error("runtime error: {0}")]
+    Runtime(String),
+    /// Artifact manifest problems.
+    #[error("manifest error: {0}")]
+    Manifest(String),
+    /// Configuration problems (bad CLI flags, invalid cluster spec).
+    #[error("config error: {0}")]
+    Config(String),
+    #[error(transparent)]
+    Io(#[from] std::io::Error),
+}
+
+impl FanError {
+    /// The errno the interception layer would return to the application.
+    pub fn errno(&self) -> i32 {
+        match self {
+            FanError::NotFound(_) => libc::ENOENT,
+            FanError::BadFd(_) => libc::EBADF,
+            FanError::Exists(_) => libc::EEXIST,
+            FanError::IsDirectory(_) => libc::EISDIR,
+            FanError::NotDirectory(_) => libc::ENOTDIR,
+            FanError::Consistency(_) => libc::EPERM,
+            FanError::Io(e) => e.raw_os_error().unwrap_or(libc::EIO),
+            _ => libc::EIO,
+        }
+    }
+}

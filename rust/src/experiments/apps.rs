@@ -1,0 +1,125 @@
+//! Fig 4: application training throughput (files/s) on the four storage
+//! options, single node.
+
+use crate::experiments::apps_scaling::{run_app, AppBackend, AppProfile, AppRunOpts};
+use crate::experiments::report::{f1, shape_check, Table};
+
+pub struct AppRow {
+    pub app: &'static str,
+    pub per_backend: Vec<(&'static str, f64)>,
+}
+
+pub fn run() -> Vec<AppRow> {
+    let backends = [
+        AppBackend::FanStore,
+        AppBackend::Ssd,
+        AppBackend::SsdFuse,
+        AppBackend::Sfs,
+    ];
+    let profiles = [
+        AppProfile::resnet_gpu(),
+        AppProfile::srgan_init(),
+        AppProfile::srgan_train(),
+        AppProfile::frnn(),
+    ];
+    profiles
+        .iter()
+        .map(|p| AppRow {
+            app: p.kind.name(),
+            per_backend: backends
+                .iter()
+                .map(|&b| {
+                    let opts = AppRunOpts::for_app(p.kind, 1);
+                    (b.name(), run_app(b, p, &opts).files_per_sec)
+                })
+                .collect(),
+        })
+        .collect()
+}
+
+pub fn report(rows: &[AppRow]) {
+    let mut t = Table::new(
+        "Fig 4 — training throughput (files/s) by storage backend, 1 node",
+        &["app", "FanStore", "SSD", "SSD-fuse", "SFS"],
+    );
+    for row in rows {
+        let mut cells = vec![row.app.to_string()];
+        for (_, v) in &row.per_backend {
+            cells.push(f1(*v));
+        }
+        t.row(&cells);
+    }
+    t.print();
+
+    let get = |app: &str, backend: &str| {
+        rows.iter()
+            .find(|r| r.app == app)
+            .unwrap()
+            .per_backend
+            .iter()
+            .find(|(b, _)| *b == backend)
+            .unwrap()
+            .1
+    };
+    println!("shape checks vs paper §6.4.2:");
+    shape_check(
+        "ResNet-50 FanStore files/s (paper 544)",
+        get("ResNet-50", "FanStore"),
+        450.0,
+        650.0,
+    );
+    shape_check(
+        "ResNet-50 FanStore/SSD (paper 1.053)",
+        get("ResNet-50", "FanStore") / get("ResNet-50", "SSD"),
+        1.0,
+        1.2,
+    );
+    shape_check(
+        "ResNet-50 FanStore/SFS (paper 2.0)",
+        get("ResNet-50", "FanStore") / get("ResNet-50", "SFS"),
+        1.5,
+        3.0,
+    );
+    shape_check(
+        "SRGAN-Init FanStore files/s (paper 102)",
+        get("SRGAN-Init", "FanStore"),
+        85.0,
+        120.0,
+    );
+    shape_check(
+        "SRGAN-Train FanStore files/s (paper 49)",
+        get("SRGAN-Train", "FanStore"),
+        40.0,
+        60.0,
+    );
+    for app in ["SRGAN-Init", "SRGAN-Train", "FRNN"] {
+        let fan = get(app, "FanStore");
+        let worst = ["SSD", "SSD-fuse"]
+            .iter()
+            .map(|b| get(app, b))
+            .fold(f64::INFINITY, f64::min);
+        shape_check(
+            &format!("{app} storage-insensitive (local opts within 15%)"),
+            fan / worst,
+            0.85,
+            1.18,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig4_rows_complete() {
+        let rows = run();
+        assert_eq!(rows.len(), 4);
+        for r in &rows {
+            assert_eq!(r.per_backend.len(), 4);
+            for (b, v) in &r.per_backend {
+                assert!(*v > 0.0, "{} on {b} produced zero throughput", r.app);
+            }
+        }
+    }
+}

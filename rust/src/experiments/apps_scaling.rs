@@ -1,0 +1,565 @@
+//! App-level simulation: Fig 7 (ResNet-50), Fig 8 (SRGAN), Fig 9 (FRNN)
+//! weak scaling, plus the single-node backend comparison reused by Fig 4.
+//!
+//! Model of one training iteration (paper §3.1/§3.4): the node's 4 I/O
+//! threads prefetch the next mini-batch while the accelerator computes; the
+//! sustained iteration time is `max(compute, io_span)` (async I/O pipeline,
+//! steady state).  Compute times per iteration are calibrated from the
+//! paper's own single-node sustained files/s (Fig 4) and held constant
+//! across storage backends — storage only moves `io_span`.
+//!
+//! The SFS application profile is calibrated separately from the §6.2
+//! benchmark model: the paper's production Lustre served ResNet at half of
+//! FanStore's rate on one node (data-path bound, per-client share ~30 MB/s)
+//! while still riding ~7-10k metadata ops/s at 64 nodes (Fig 7) — see
+//! DESIGN.md §4 for the calibration notes.
+
+use std::collections::BinaryHeap;
+
+use crate::experiments::iosim::{FanStoreSim, FuseSim, IoSim, SimDataset, SimFile, SsdSim};
+use crate::net::fabric::Fabric;
+use crate::sim::clock::{transfer_ns, SimNs, MS, US};
+use crate::sim::Resource;
+use crate::util::prng::Prng;
+use crate::workload::datasets::{AppKind, DatasetSpec};
+
+/// Per-iteration application profile (calibrated, see module docs).
+#[derive(Clone, Copy, Debug)]
+pub struct AppProfile {
+    pub kind: AppKind,
+    /// Files consumed per node per iteration (mini-batch per node).
+    pub batch_per_node: u32,
+    /// Accelerator compute per iteration.
+    pub compute_ns: SimNs,
+    /// Startup metadata entries each process traverses (§3.3).
+    pub metadata_entries: u64,
+}
+
+impl AppProfile {
+    /// ResNet-50 on the GPU cluster: 4 GPUs × 64 batch, ~460 ms/iter ⇒
+    /// ~556 files/s sustained with ideal I/O (paper: 544).
+    pub fn resnet_gpu() -> Self {
+        AppProfile {
+            kind: AppKind::ResNet50,
+            batch_per_node: 256,
+            compute_ns: 460 * MS,
+            metadata_entries: 1_302_002,
+        }
+    }
+
+    /// ResNet-50 on the CPU cluster (2-socket SKX is ~4x slower/node).
+    pub fn resnet_cpu() -> Self {
+        AppProfile {
+            kind: AppKind::ResNet50,
+            batch_per_node: 128,
+            compute_ns: 900 * MS,
+            metadata_entries: 1_302_002,
+        }
+    }
+
+    /// SRGAN init stage: heavy conv compute, 102 files/s on one node.
+    pub fn srgan_init() -> Self {
+        AppProfile {
+            kind: AppKind::SrganInit,
+            batch_per_node: 16,
+            compute_ns: 157 * MS,
+            metadata_entries: 600_006,
+        }
+    }
+
+    /// SRGAN adversarial stage: 49 files/s on one node.
+    pub fn srgan_train() -> Self {
+        AppProfile {
+            kind: AppKind::SrganTrain,
+            batch_per_node: 16,
+            compute_ns: 326 * MS,
+            metadata_entries: 600_006,
+        }
+    }
+
+    /// FRNN on the CPU cluster (broadcast-replicated dataset, Fig 9).
+    pub fn frnn() -> Self {
+        AppProfile {
+            kind: AppKind::Frnn,
+            batch_per_node: 128,
+            compute_ns: 400 * MS,
+            metadata_entries: 171_265,
+        }
+    }
+
+    pub fn dataset_spec(&self) -> DatasetSpec {
+        DatasetSpec::for_app(self.kind)
+    }
+}
+
+/// Production-Lustre *application* data path (see module docs).
+///
+/// Calibrated jointly against the paper's two SFS observations:
+/// * ResNet-50 @1 GPU node: FanStore 2.0× faster ⇒ the per-*client* file
+///   read path costs ~3.6 ms per 108 KB file and does not parallelize
+///   across the node's reader threads (llite lock/RPC serialization);
+/// * ResNet-50 @64 CPU nodes: FanStore only 1.17× faster ⇒ the shared MDS
+///   still sustains ~8 k ops/s, so SFS scales per-client until the MDS
+///   queue becomes the residual ~15 % tail.
+pub struct SfsAppSim {
+    mds: Resource,
+    client: Vec<Resource>,
+    mds_op_ns: SimNs,
+    /// Per-file client-side fixed cost (lock + read RPC round trips).
+    client_file_ns: SimNs,
+    client_bw: u64,
+    rpc_ns: SimNs,
+}
+
+impl SfsAppSim {
+    pub fn new(nodes: u32) -> Self {
+        SfsAppSim {
+            mds: Resource::new(1),
+            client: (0..nodes).map(|_| Resource::new(1)).collect(),
+            mds_op_ns: 120 * US, // ~8.3k metadata ops/s sustained
+            client_file_ns: 2_600 * US,
+            client_bw: 110_000_000,
+            rpc_ns: 250 * US,
+        }
+    }
+}
+
+impl IoSim for SfsAppSim {
+    fn read(&mut self, now: SimNs, node: u32, file: &SimFile) -> SimNs {
+        let t1 = self.mds.serve(now, self.mds_op_ns) + self.rpc_ns;
+        self.client[node as usize].serve(
+            t1,
+            self.client_file_ns + transfer_ns(file.raw, self.client_bw),
+        )
+    }
+
+    fn metadata_scan(&mut self, now: SimNs, _node: u32, n_entries: u64) -> SimNs {
+        // bulk readdir with large (1024-entry) getdents RPCs + client-side
+        // dcache: far cheaper per entry than open()
+        let rpcs = n_entries.div_ceil(1024).max(1);
+        let mut t = now;
+        for _ in 0..rpcs {
+            t = self.mds.serve(t, self.mds_op_ns) + self.rpc_ns;
+        }
+        t
+    }
+
+    fn name(&self) -> &'static str {
+        "SFS"
+    }
+}
+
+/// Storage options for the app experiments.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum AppBackend {
+    FanStore,
+    Ssd,
+    SsdFuse,
+    Sfs,
+}
+
+impl AppBackend {
+    pub fn name(&self) -> &'static str {
+        match self {
+            AppBackend::FanStore => "FanStore",
+            AppBackend::Ssd => "SSD",
+            AppBackend::SsdFuse => "SSD-fuse",
+            AppBackend::Sfs => "SFS",
+        }
+    }
+}
+
+/// Weak-scaling run result.
+#[derive(Clone, Copy, Debug)]
+pub struct AppRunResult {
+    pub nodes: u32,
+    pub files_per_sec: f64,
+    pub io_bound_fraction: f64,
+}
+
+/// Options for one app-sim run.
+#[derive(Clone, Copy, Debug)]
+pub struct AppRunOpts {
+    pub nodes: u32,
+    pub iters: u32,
+    /// Input replication factor (nodes = broadcast, Fig 9).
+    pub replication: u32,
+    /// Dataset compression ratio (1.0 = off; Fig 10 uses 2.8).
+    pub ratio: f64,
+    pub fabric: Fabric,
+    /// Dataset size in files held by the sim (sampled working set).
+    pub dataset_files: u64,
+    pub seed: u64,
+}
+
+impl AppRunOpts {
+    pub fn gpu(nodes: u32) -> Self {
+        AppRunOpts {
+            nodes,
+            iters: 200,
+            replication: 1,
+            ratio: 1.0,
+            fabric: Fabric::fdr_infiniband(),
+            dataset_files: 20_000,
+            seed: 42,
+        }
+    }
+
+    pub fn cpu(nodes: u32) -> Self {
+        AppRunOpts {
+            fabric: Fabric::omni_path(),
+            ..Self::gpu(nodes)
+        }
+    }
+
+    /// Per-app measurement window matching how the paper reports sustained
+    /// throughput: SRGAN runs 100 init + 2000 training epochs, so startup
+    /// amortizes away; ResNet's window is one 90-epoch-job's steady slice.
+    pub fn for_app(kind: crate::workload::datasets::AppKind, nodes: u32) -> Self {
+        use crate::workload::datasets::AppKind;
+        match kind {
+            AppKind::ResNet50 => AppRunOpts::gpu(nodes),
+            AppKind::SrganInit | AppKind::SrganTrain => AppRunOpts {
+                iters: 600,
+                ..AppRunOpts::gpu(nodes)
+            },
+            AppKind::Frnn => AppRunOpts {
+                iters: 300,
+                ..AppRunOpts::cpu(nodes)
+            },
+        }
+    }
+}
+
+/// Run one app on one backend; returns sustained aggregated files/s.
+///
+/// Pipeline model (§3.4: "the I/O overlaps with computation"): each node's
+/// 4 prefetch threads stream the whole run's reads continuously while the
+/// accelerator consumes one batch per `compute_ns`.  The node finishes at
+/// `max(io_makespan, scan_end + iters·compute)` — the steady state of a
+/// two-stage pipeline.  Reads interleave in the global DES heap at *thread*
+/// granularity so shared-resource queueing stays causally ordered at any
+/// node count.
+pub fn run_app(backend: AppBackend, profile: &AppProfile, opts: &AppRunOpts) -> AppRunResult {
+    let spec = profile.dataset_spec();
+    let mut rng = Prng::new(opts.seed ^ profile.batch_per_node as u64);
+    let sizes: Vec<u64> = (0..opts.dataset_files)
+        .map(|_| spec.draw_size(&mut rng))
+        .collect();
+    let partitions = match backend {
+        AppBackend::FanStore => opts.nodes.max(1) * 4,
+        _ => 1,
+    };
+    let ds = SimDataset::from_sizes(&sizes, partitions, opts.ratio);
+
+    let mut sim: Box<dyn IoSim> = match backend {
+        AppBackend::FanStore => Box::new(FanStoreSim::new(
+            opts.nodes,
+            partitions,
+            opts.replication,
+            opts.fabric,
+        )),
+        AppBackend::Ssd => Box::new(SsdSim::new(opts.nodes)),
+        AppBackend::SsdFuse => Box::new(FuseSim::new(opts.nodes)),
+        AppBackend::Sfs => Box::new(SfsAppSim::new(opts.nodes)),
+    };
+
+    // startup metadata traversal, every node (§3.3); concurrent arrivals at
+    // t=0 serialize naturally on any shared metadata resource
+    let scan_end: Vec<SimNs> = (0..opts.nodes)
+        .map(|n| sim.metadata_scan(0, n, profile.metadata_entries))
+        .collect();
+
+    // stream all reads on nodes×4 prefetch threads
+    const THREADS: u64 = 4;
+    let total_reads_per_node = opts.iters as u64 * profile.batch_per_node as u64;
+    let nthreads = (opts.nodes as u64 * THREADS) as usize;
+    let mut remaining: Vec<u64> = (0..nthreads)
+        .map(|t| {
+            let tid = t as u64 % THREADS;
+            total_reads_per_node / THREADS
+                + if tid < total_reads_per_node % THREADS { 1 } else { 0 }
+        })
+        .collect();
+    let mut heap: BinaryHeap<std::cmp::Reverse<(SimNs, usize)>> = (0..nthreads)
+        .map(|t| std::cmp::Reverse((scan_end[t / THREADS as usize], t)))
+        .collect();
+    let mut rngs: Vec<Prng> = (0..nthreads)
+        .map(|t| Prng::new(opts.seed ^ (t as u64).wrapping_mul(0x9E3779B97F4A7C15)))
+        .collect();
+    let mut io_end: Vec<SimNs> = scan_end.clone();
+    while let Some(std::cmp::Reverse((now, t))) = heap.pop() {
+        let node = (t / THREADS as usize) as u32;
+        if remaining[t] == 0 {
+            io_end[node as usize] = io_end[node as usize].max(now);
+            continue;
+        }
+        let f = &ds.files[rngs[t].index(ds.files.len())];
+        let done = sim.read(now, node, f);
+        remaining[t] -= 1;
+        heap.push(std::cmp::Reverse((done, t)));
+    }
+
+    // node completion: pipeline of compute vs streaming I/O
+    let mut io_bound_nodes = 0u64;
+    let mut makespan = 1u64;
+    for n in 0..opts.nodes as usize {
+        let compute_end = scan_end[n] + opts.iters as u64 * profile.compute_ns;
+        if io_end[n] > compute_end {
+            io_bound_nodes += 1;
+        }
+        makespan = makespan.max(io_end[n].max(compute_end));
+    }
+
+    let total_files = opts.nodes as u64 * total_reads_per_node;
+    AppRunResult {
+        nodes: opts.nodes,
+        files_per_sec: total_files as f64 / crate::sim::clock::to_secs(makespan),
+        io_bound_fraction: io_bound_nodes as f64 / opts.nodes as f64,
+    }
+}
+
+/// Weak-scaling efficiency vs a base result.
+pub fn weak_efficiency(base: &AppRunResult, at: &AppRunResult) -> f64 {
+    (at.files_per_sec / base.files_per_sec) / (at.nodes as f64 / base.nodes as f64)
+}
+
+// ---------------------------------------------------------------------------
+// Figure drivers (7, 8, 9)
+// ---------------------------------------------------------------------------
+
+use crate::experiments::report::{f1, pct, shape_check, Table};
+
+pub struct ScalingSeries {
+    pub label: String,
+    pub results: Vec<AppRunResult>,
+}
+
+/// Fig 7: ResNet-50 weak scaling on both clusters + SFS reference points
+/// (4 nodes GPU, 64 nodes CPU — the paper could not run SFS larger).
+pub fn run_fig7() -> Vec<ScalingSeries> {
+    let mut series = Vec::new();
+    let gpu = AppProfile::resnet_gpu();
+    series.push(ScalingSeries {
+        label: "GPU/FanStore".into(),
+        results: [1u32, 4, 8, 16]
+            .iter()
+            .map(|&n| run_app(AppBackend::FanStore, &gpu, &AppRunOpts::gpu(n)))
+            .collect(),
+    });
+    series.push(ScalingSeries {
+        label: "GPU/SFS".into(),
+        results: vec![run_app(AppBackend::Sfs, &gpu, &AppRunOpts::gpu(4))],
+    });
+    let cpu = AppProfile::resnet_cpu();
+    series.push(ScalingSeries {
+        label: "CPU/FanStore".into(),
+        results: [1u32, 64, 128, 256, 512]
+            .iter()
+            .map(|&n| run_app(AppBackend::FanStore, &cpu, &AppRunOpts::cpu(n)))
+            .collect(),
+    });
+    series.push(ScalingSeries {
+        label: "CPU/SFS".into(),
+        results: vec![run_app(AppBackend::Sfs, &cpu, &AppRunOpts::cpu(64))],
+    });
+    series
+}
+
+/// Fig 8: SRGAN init + train on the GPU cluster.
+pub fn run_fig8() -> Vec<ScalingSeries> {
+    [
+        ("SRGAN-Init", AppProfile::srgan_init()),
+        ("SRGAN-Train", AppProfile::srgan_train()),
+    ]
+    .into_iter()
+    .map(|(label, p)| ScalingSeries {
+        label: label.into(),
+        results: [1u32, 4, 8, 16]
+            .iter()
+            .map(|&n| run_app(AppBackend::FanStore, &p, &AppRunOpts::gpu(n)))
+            .collect(),
+    })
+    .collect()
+}
+
+/// Fig 9: FRNN on the CPU cluster, broadcast replication, + SFS at 4 nodes.
+pub fn run_fig9() -> Vec<ScalingSeries> {
+    let p = AppProfile::frnn();
+    let fan = ScalingSeries {
+        label: "FRNN/FanStore(broadcast)".into(),
+        results: [1u32, 4, 16, 64]
+            .iter()
+            .map(|&n| {
+                let mut opts = AppRunOpts::cpu(n);
+                opts.replication = n; // whole dataset on every node (§6.5.2)
+                run_app(AppBackend::FanStore, &p, &opts)
+            })
+            .collect(),
+    };
+    let sfs = ScalingSeries {
+        label: "FRNN/SFS".into(),
+        results: vec![run_app(AppBackend::Sfs, &p, &AppRunOpts::cpu(4))],
+    };
+    vec![fan, sfs]
+}
+
+pub fn report_series(figure: &str, series: &[ScalingSeries]) {
+    let mut t = Table::new(
+        format!("{figure} — weak scaling, aggregated files/s"),
+        &["series", "nodes", "files/s", "per-node", "io-bound"],
+    );
+    for s in series {
+        for r in &s.results {
+            t.row(&[
+                s.label.clone(),
+                r.nodes.to_string(),
+                f1(r.files_per_sec),
+                f1(r.files_per_sec / r.nodes as f64),
+                pct(r.io_bound_fraction),
+            ]);
+        }
+    }
+    t.print();
+    for s in series {
+        if s.results.len() >= 2 {
+            let base = &s.results[if s.results.len() > 3 { 1 } else { 0 }];
+            let last = s.results.last().unwrap();
+            println!(
+                "  {}: efficiency {} at {} nodes (vs {}-node base)",
+                s.label,
+                pct(weak_efficiency(base, last)),
+                last.nodes,
+                base.nodes
+            );
+        }
+    }
+}
+
+/// The paper's headline shape checks for Figs 7-9.
+pub fn shape_checks_fig7(series: &[ScalingSeries]) {
+    let find = |l: &str| series.iter().find(|s| s.label == l).unwrap();
+    let gpu_fan = find("GPU/FanStore");
+    let gpu_sfs = find("GPU/SFS");
+    let cpu_fan = find("CPU/FanStore");
+    let cpu_sfs = find("CPU/SFS");
+    shape_check(
+        "GPU 16-node efficiency vs 4 (paper ~100%)",
+        weak_efficiency(&gpu_fan.results[1], &gpu_fan.results[3]),
+        0.9,
+        1.05,
+    );
+    shape_check(
+        "GPU FanStore/SFS @4 nodes (paper 1.761)",
+        gpu_fan.results[1].files_per_sec / gpu_sfs.results[0].files_per_sec,
+        1.4,
+        2.6,
+    );
+    shape_check(
+        "CPU 512-node efficiency vs 64 (paper 95.4%)",
+        weak_efficiency(&cpu_fan.results[1], &cpu_fan.results[4]),
+        0.85,
+        1.02,
+    );
+    shape_check(
+        "CPU FanStore/SFS @64 nodes (paper 1.171)",
+        cpu_fan.results[1].files_per_sec / cpu_sfs.results[0].files_per_sec,
+        1.05,
+        1.6,
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn resnet_single_node_rates_fig4() {
+        let p = AppProfile::resnet_gpu();
+        let fan = run_app(AppBackend::FanStore, &p, &AppRunOpts::gpu(1));
+        let ssd = run_app(AppBackend::Ssd, &p, &AppRunOpts::gpu(1));
+        let sfs = run_app(AppBackend::Sfs, &p, &AppRunOpts::gpu(1));
+        // paper: FanStore 544 files/s sustained
+        assert!(
+            (450.0..650.0).contains(&fan.files_per_sec),
+            "fanstore resnet {:.0} files/s",
+            fan.files_per_sec
+        );
+        // paper: 5.3% faster than SSD (metadata caching) — accept 0-15%
+        let vs_ssd = fan.files_per_sec / ssd.files_per_sec;
+        assert!((1.0..1.2).contains(&vs_ssd), "fan/ssd {vs_ssd:.3}");
+        // paper: 2.0x faster than SFS — accept 1.5-3x
+        let vs_sfs = fan.files_per_sec / sfs.files_per_sec;
+        assert!((1.5..3.0).contains(&vs_sfs), "fan/sfs {vs_sfs:.2}");
+    }
+
+    #[test]
+    fn srgan_storage_insensitive_fig4() {
+        for p in [AppProfile::srgan_init(), AppProfile::srgan_train()] {
+            let opts = AppRunOpts::for_app(p.kind, 1);
+            let fan = run_app(AppBackend::FanStore, &p, &opts);
+            let ssd = run_app(AppBackend::Ssd, &p, &opts);
+            let fuse = run_app(AppBackend::SsdFuse, &p, &opts);
+            // paper: "identical performance across all options" (compute-bound)
+            for other in [ssd, fuse] {
+                let rel = fan.files_per_sec / other.files_per_sec;
+                assert!(
+                    (0.9..1.15).contains(&rel),
+                    "{:?}: fan vs other {rel:.3}",
+                    p.kind
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn srgan_absolute_rates() {
+        let init = run_app(
+            AppBackend::FanStore,
+            &AppProfile::srgan_init(),
+            &AppRunOpts::for_app(crate::workload::datasets::AppKind::SrganInit, 1),
+        );
+        let train = run_app(
+            AppBackend::FanStore,
+            &AppProfile::srgan_train(),
+            &AppRunOpts::for_app(crate::workload::datasets::AppKind::SrganTrain, 1),
+        );
+        // paper: 102 and 49 files/s
+        assert!((85.0..120.0).contains(&init.files_per_sec), "{:.0}", init.files_per_sec);
+        assert!((40.0..60.0).contains(&train.files_per_sec), "{:.0}", train.files_per_sec);
+    }
+
+    #[test]
+    fn resnet_scales_to_16_nodes_fig7() {
+        let p = AppProfile::resnet_gpu();
+        let base = run_app(AppBackend::FanStore, &p, &AppRunOpts::gpu(4));
+        let at16 = run_app(AppBackend::FanStore, &p, &AppRunOpts::gpu(16));
+        let eff = weak_efficiency(&base, &at16);
+        // paper: "almost 100% on 16 nodes compared to that on four nodes"
+        assert!(eff > 0.93, "16-node efficiency {eff:.3}");
+    }
+
+    #[test]
+    fn frnn_broadcast_scaling_fig9() {
+        let p = AppProfile::frnn();
+        let mut opts1 = AppRunOpts::cpu(1);
+        opts1.replication = 1;
+        let base = run_app(AppBackend::FanStore, &p, &opts1);
+        let mut opts64 = AppRunOpts::cpu(64);
+        opts64.replication = 64; // broadcast: all I/O local (§6.5.2)
+        let at64 = run_app(AppBackend::FanStore, &p, &opts64);
+        let eff = weak_efficiency(&base, &at64);
+        // paper: 93.1% efficiency at 64 nodes
+        assert!(eff > 0.85, "frnn 64-node efficiency {eff:.3}");
+    }
+
+    #[test]
+    fn io_bound_fraction_reported() {
+        // SFS ResNet must be I/O bound; FanStore must not be.
+        let p = AppProfile::resnet_gpu();
+        let fan = run_app(AppBackend::FanStore, &p, &AppRunOpts::gpu(1));
+        let sfs = run_app(AppBackend::Sfs, &p, &AppRunOpts::gpu(1));
+        assert!(fan.io_bound_fraction < 0.1, "{}", fan.io_bound_fraction);
+        assert!(sfs.io_bound_fraction > 0.9, "{}", sfs.io_bound_fraction);
+    }
+}

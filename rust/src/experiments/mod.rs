@@ -1,0 +1,28 @@
+//! Experiment harness: one module per paper figure/table (§6).
+//!
+//! | module           | regenerates                                        |
+//! |------------------|----------------------------------------------------|
+//! | [`views`]        | Fig 1  — global vs partitioned test accuracy       |
+//! | [`single_node`]  | Fig 3  — single-node BW/throughput, 4 backends     |
+//! | [`apps`]         | Fig 4  — app throughput on 4 backends              |
+//! | [`scaling`]      | Fig 5/6 — benchmark scaling, GPU + CPU clusters    |
+//! | [`apps_scaling`] | Fig 7/8/9 — app weak scaling                       |
+//! | [`compression`]  | Fig 10/11 — compressed-data performance            |
+//! | [`prep`]         | §6.3 — data-preparation cost                       |
+//!
+//! All figures are regenerated on the virtual-time simulator ([`iosim`])
+//! except Fig 1 (real training through PJRT) and the prep table (real
+//! packing).  Numbers are *shape* targets (who wins, by what factor, where
+//! crossovers fall), not testbed-exact — see DESIGN.md §4.
+
+pub mod apps;
+pub mod apps_scaling;
+pub mod compression;
+pub mod iosim;
+pub mod prep;
+pub mod report;
+pub mod scaling;
+pub mod single_node;
+pub mod views;
+
+pub use report::Table;

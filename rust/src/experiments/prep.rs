@@ -1,0 +1,121 @@
+//! §6.3 — data-preparation cost (real packing, measured, then extrapolated
+//! to the paper's full-scale datasets).
+//!
+//! Paper: ImageNet-1k 13 min, SRGAN 11 min, FRNN 14 min on one Xeon node;
+//! compressing SRGAN takes 47 min (4.3× the compression-free prep).
+
+use crate::compress::Codec;
+use crate::error::Result;
+use crate::experiments::report::{f1, f2, shape_check, Table};
+use crate::partition::builder::build_partitions;
+use crate::workload::datasets::DatasetSpec;
+
+pub struct PrepRow {
+    pub dataset: &'static str,
+    pub files: usize,
+    pub raw_mb: f64,
+    pub plain_secs: f64,
+    pub compressed_secs: f64,
+    pub ratio: f64,
+}
+
+/// Pack scaled-down replicas of the three datasets with and without LZSS.
+/// `files`/`size_divisor` control the measured working set.
+pub fn run(files: usize, size_divisor: u64) -> Result<Vec<PrepRow>> {
+    let mut rows = Vec::new();
+    for spec in [
+        DatasetSpec::imagenet(),
+        DatasetSpec::srgan(),
+        DatasetSpec::frnn(),
+    ] {
+        let data = spec.generate(files, size_divisor, 99);
+        let (_, plain) = build_partitions(&data, 16, Codec::None)?;
+        let (_, compressed) = build_partitions(&data, 16, Codec::Lzss(5))?;
+        rows.push(PrepRow {
+            dataset: spec.name,
+            files,
+            raw_mb: plain.raw_bytes as f64 / 1e6,
+            plain_secs: plain.wall_seconds,
+            compressed_secs: compressed.wall_seconds,
+            ratio: compressed.ratio(),
+        });
+    }
+    Ok(rows)
+}
+
+pub fn report(rows: &[PrepRow]) {
+    let mut t = Table::new(
+        "§6.3 — data preparation cost (measured on scaled datasets)",
+        &[
+            "dataset",
+            "files",
+            "MB",
+            "pack (s)",
+            "pack+LZSS (s)",
+            "slowdown",
+            "ratio",
+        ],
+    );
+    for r in rows {
+        t.row(&[
+            r.dataset.to_string(),
+            r.files.to_string(),
+            f1(r.raw_mb),
+            format!("{:.3}", r.plain_secs),
+            format!("{:.3}", r.compressed_secs),
+            f2(r.compressed_secs / r.plain_secs.max(1e-9)),
+            f2(r.ratio),
+        ]);
+    }
+    t.print();
+    println!("shape checks vs paper §6.3/§6.6:");
+    let srgan = rows.iter().find(|r| r.dataset == "srgan-em").unwrap();
+    shape_check(
+        "SRGAN compression prep slowdown (paper 4.3x)",
+        srgan.compressed_secs / srgan.plain_secs.max(1e-9),
+        1.5,
+        8.0,
+    );
+    shape_check("SRGAN compression ratio (paper 2.8x)", srgan.ratio, 1.9, 4.5);
+    let imagenet = rows.iter().find(|r| r.dataset == "imagenet-1k").unwrap();
+    shape_check(
+        "ImageNet ratio ~1 (paper: no room)",
+        imagenet.ratio,
+        1.0,
+        1.3,
+    );
+    // extrapolate throughput to the paper's full datasets
+    println!("full-scale extrapolation (single core):");
+    for r in rows {
+        let bytes_per_sec = r.raw_mb * 1e6 / r.plain_secs.max(1e-9);
+        let spec = match r.dataset {
+            "imagenet-1k" => DatasetSpec::imagenet(),
+            "srgan-em" => DatasetSpec::srgan(),
+            _ => DatasetSpec::frnn(),
+        };
+        let full_min = spec.full_bytes as f64 / bytes_per_sec / 60.0;
+        println!(
+            "  {}: {:.1} min to pack {} (paper: 13/11/14 min on a 2680)",
+            r.dataset,
+            full_min,
+            crate::util::bytes::human_bytes(spec.full_bytes)
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prep_rows_and_compression_slowdown() {
+        let rows = run(200, 64).unwrap();
+        assert_eq!(rows.len(), 3);
+        let srgan = rows.iter().find(|r| r.dataset == "srgan-em").unwrap();
+        // compression must cost real extra time and deliver a real ratio
+        assert!(srgan.compressed_secs > srgan.plain_secs);
+        assert!(srgan.ratio > 1.9, "srgan ratio {}", srgan.ratio);
+        let im = rows.iter().find(|r| r.dataset == "imagenet-1k").unwrap();
+        assert!(im.ratio < 1.3, "imagenet ratio {}", im.ratio);
+    }
+}

@@ -1,0 +1,290 @@
+//! Fig 5 / Fig 6: benchmark scaling on the GPU cluster ({1,4,8,16} nodes,
+//! FDR InfiniBand) and the CPU cluster ({1,64,128,256,512} nodes,
+//! Omni-Path).  Single data copy; every node reads the whole directory.
+
+use crate::experiments::iosim::{run_benchmark, FanStoreSim, SimDataset};
+use crate::experiments::report::{f1, pct, shape_check, Table};
+use crate::net::fabric::Fabric;
+use crate::workload::bench::{BenchResult, BenchSpec, BENCH_FILE_SIZES};
+
+/// Which testbed of §6.1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ClusterKind {
+    Gpu,
+    Cpu,
+}
+
+impl ClusterKind {
+    pub fn fabric(&self) -> Fabric {
+        match self {
+            ClusterKind::Gpu => Fabric::fdr_infiniband(),
+            ClusterKind::Cpu => Fabric::omni_path(),
+        }
+    }
+
+    pub fn node_scales(&self) -> &'static [u32] {
+        match self {
+            ClusterKind::Gpu => &[1, 4, 8, 16],
+            ClusterKind::Cpu => &[1, 64, 128, 256, 512],
+        }
+    }
+
+    /// Partition count used at prep time (§6.5.2: 48 GPU / 512 CPU).
+    pub fn partitions(&self) -> u32 {
+        match self {
+            ClusterKind::Gpu => 48,
+            ClusterKind::Cpu => 512,
+        }
+    }
+
+    /// The baseline scale the paper computes efficiency against.
+    pub fn efficiency_base(&self) -> u32 {
+        match self {
+            ClusterKind::Gpu => 4,
+            ClusterKind::Cpu => 64,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ClusterKind::Gpu => "GPU cluster (FDR IB)",
+            ClusterKind::Cpu => "CPU cluster (OPA)",
+        }
+    }
+}
+
+/// results[size_idx][scale_idx]
+#[derive(Clone, Debug)]
+pub struct ScalingResults {
+    pub cluster: ClusterKind,
+    pub scales: Vec<u32>,
+    pub per_size: Vec<Vec<BenchResult>>,
+}
+
+/// Run the scaling benchmark. `count_scale` divides the paper's file counts.
+pub fn run(cluster: ClusterKind, count_scale: u64, compression_ratio: f64) -> ScalingResults {
+    let spec = BenchSpec::paper(count_scale);
+    let scales = cluster.node_scales().to_vec();
+    let mut per_size = Vec::new();
+    for point in &spec.points {
+        let mut row = Vec::new();
+        for &nodes in &scales {
+            let parts = cluster.partitions().max(nodes);
+            let ds = SimDataset::uniform(point.file_count, point.file_size, parts, compression_ratio);
+            let mut backend = FanStoreSim::new(nodes, parts, 1, cluster.fabric());
+            row.push(run_benchmark(&mut backend, &ds, nodes, 4));
+        }
+        per_size.push(row);
+    }
+    ScalingResults {
+        cluster,
+        scales,
+        per_size,
+    }
+}
+
+/// Weak-scaling efficiency of `r` at scale index `i` vs base index `b`:
+/// (BW_i / BW_b) / (N_i / N_b).
+pub fn efficiency(res: &ScalingResults, size_idx: usize, i: usize, b: usize) -> f64 {
+    let bw_i = res.per_size[size_idx][i].bandwidth_mbs();
+    let bw_b = res.per_size[size_idx][b].bandwidth_mbs();
+    (bw_i / bw_b) / (res.scales[i] as f64 / res.scales[b] as f64)
+}
+
+pub fn report(res: &ScalingResults) {
+    let figure = match res.cluster {
+        ClusterKind::Gpu => "Fig 5",
+        ClusterKind::Cpu => "Fig 6",
+    };
+    let mut headers: Vec<String> = vec!["file size".into()];
+    headers.extend(res.scales.iter().map(|n| format!("{n} nodes")));
+    let hdr_refs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+    let mut bw = Table::new(
+        format!("{figure}a — aggregated bandwidth (MB/s), {}", res.cluster.name()),
+        &hdr_refs,
+    );
+    let mut tp = Table::new(
+        format!("{figure}b — aggregated throughput (files/s), {}", res.cluster.name()),
+        &hdr_refs,
+    );
+    for (si, row) in res.per_size.iter().enumerate() {
+        let label = crate::util::bytes::human_bytes(BENCH_FILE_SIZES[si]);
+        let mut bw_cells = vec![label.clone()];
+        let mut tp_cells = vec![label];
+        for r in row {
+            bw_cells.push(f1(r.bandwidth_mbs()));
+            tp_cells.push(f1(r.files_per_sec()));
+        }
+        bw.row(&bw_cells);
+        tp.row(&tp_cells);
+    }
+    bw.print();
+    tp.print();
+
+    // efficiency vs the paper's baseline scale
+    let base_idx = res
+        .scales
+        .iter()
+        .position(|&n| n == res.cluster.efficiency_base())
+        .unwrap_or(0);
+    let last = res.scales.len() - 1;
+    println!("weak-scaling efficiency vs {}-node base:", res.scales[base_idx]);
+    for (si, _) in res.per_size.iter().enumerate() {
+        let eff = efficiency(res, si, last, base_idx);
+        println!(
+            "  {}: {} at {} nodes",
+            crate::util::bytes::human_bytes(BENCH_FILE_SIZES[si]),
+            pct(eff),
+            res.scales[last]
+        );
+    }
+    let band = match res.cluster {
+        ClusterKind::Gpu => (0.70, 1.02), // paper: 76.3%-83.1%
+        ClusterKind::Cpu => (0.75, 1.02), // paper: 81.4%-88.2%
+    };
+    for si in 0..res.per_size.len() {
+        // a size is only meaningful when every node holds a few files of it
+        let per_node = res.per_size[si][last].files_read
+            / (res.scales[last] as u64 * res.scales[last] as u64).max(1);
+        if per_node < 2 {
+            println!(
+                "  shape[SKIP] efficiency size[{si}]: only {} files for {} nodes at this --scale",
+                res.per_size[si][last].files_read / res.scales[last] as u64,
+                res.scales[last]
+            );
+            continue;
+        }
+        shape_check(
+            &format!("efficiency size[{si}]"),
+            efficiency(res, si, last, base_idx),
+            band.0,
+            band.1,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gpu_cluster_fig5_shape() {
+        let res = run(ClusterKind::Gpu, 64, 1.0);
+        // aggregated bandwidth grows with node count for every size
+        for row in &res.per_size {
+            for w in row.windows(2) {
+                assert!(
+                    w[1].bandwidth_mbs() > w[0].bandwidth_mbs() * 0.95,
+                    "aggregate bandwidth should not collapse"
+                );
+            }
+        }
+        // 16-node efficiency vs 4-node base lands in a sane band
+        let last = res.scales.len() - 1;
+        for si in 0..4 {
+            let eff = efficiency(&res, si, last, 1);
+            assert!(
+                (0.55..=1.05).contains(&eff),
+                "size {si}: 16-node efficiency {eff:.2} (paper 76.3-83.1%)"
+            );
+        }
+        // larger files scale no worse than the smallest (paper: "a larger
+        // file size produces better scaling performance")
+        let eff_small = efficiency(&res, 0, last, 1);
+        let eff_big = efficiency(&res, 3, last, 1);
+        assert!(eff_big >= eff_small * 0.9);
+    }
+
+    #[test]
+    fn cpu_cluster_fig6_shape() {
+        let res = run(ClusterKind::Cpu, 32, 1.0);
+        let last = res.scales.len() - 1;
+        let base = 1; // 64 nodes
+        // size 3 (8 MB) has only 64 files at this test scale — too few to
+        // spread over 512 nodes; check the sizes with real populations.
+        for si in 0..2 {
+            let eff = efficiency(&res, si, last, base);
+            assert!(
+                (0.75..=1.05).contains(&eff),
+                "size {si}: 512-node efficiency {eff:.2} (paper: 81.4-88.2%)"
+            );
+        }
+        // 1 -> 64 nodes speedup is sub-linear (5.8x-45.4x in the paper)
+        for si in 0..2 {
+            let s = res.per_size[si][1].bandwidth_mbs() / res.per_size[si][0].bandwidth_mbs();
+            assert!((2.0..=64.0).contains(&s), "size {si}: 64-node speedup {s:.1}");
+        }
+        // larger files speed up more from 1 to 64 (paper: 5.8x small vs 45.4x big)
+        let s_small = res.per_size[0][1].bandwidth_mbs() / res.per_size[0][0].bandwidth_mbs();
+        let s_big = res.per_size[1][1].bandwidth_mbs() / res.per_size[1][0].bandwidth_mbs();
+        // at this reduced test scale the two populated sizes are close;
+        // require "no worse" rather than strictly better
+        assert!(
+            s_big > s_small * 0.95,
+            "big {s_big:.1} should not trail small {s_small:.1}"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Ablation: input replication factor (paper §5.4 "each node can host N
+// different partitions") — how locality buys bandwidth at fixed node count.
+// ---------------------------------------------------------------------------
+
+/// Aggregated benchmark bandwidth at `nodes` for each replication factor.
+pub fn run_replication_ablation(
+    cluster: ClusterKind,
+    nodes: u32,
+    count: u64,
+    size: u64,
+) -> Vec<(u32, f64, f64)> {
+    let mut out = Vec::new();
+    let mut r = 1u32;
+    while r <= nodes {
+        let parts = cluster.partitions().max(nodes);
+        let ds = SimDataset::uniform(count, size, parts, 1.0);
+        let mut backend = FanStoreSim::new(nodes, parts, r, cluster.fabric());
+        let hit = backend.placement.local_hit_rate();
+        let res = run_benchmark(&mut backend, &ds, nodes, 4);
+        out.push((r, hit, res.bandwidth_mbs()));
+        r *= 2;
+    }
+    out
+}
+
+pub fn report_replication_ablation(rows: &[(u32, f64, f64)], nodes: u32) {
+    let mut t = Table::new(
+        format!("Ablation — replication factor at {nodes} nodes (128 KiB files)"),
+        &["replication", "local hit rate", "agg MB/s"],
+    );
+    for (r, hit, bw) in rows {
+        t.row(&[r.to_string(), pct(*hit), f1(*bw)]);
+    }
+    t.print();
+    // shape: bandwidth must increase monotonically with locality
+    let monotone = rows.windows(2).all(|w| w[1].2 >= w[0].2 * 0.98);
+    println!(
+        "  shape[{}] bandwidth monotone in replication factor",
+        if monotone { "PASS" } else { "WARN" }
+    );
+}
+
+#[cfg(test)]
+mod ablation_tests {
+    use super::*;
+
+    #[test]
+    fn replication_monotonically_buys_bandwidth() {
+        let rows = run_replication_ablation(ClusterKind::Gpu, 16, 2048, 128 << 10);
+        assert_eq!(rows.len(), 5); // r = 1,2,4,8,16
+        assert!(rows.last().unwrap().1 > 0.99, "full replication = all local");
+        assert!(
+            rows.last().unwrap().2 > rows.first().unwrap().2,
+            "broadcast must beat single copy: {:?}",
+            rows
+        );
+        for w in rows.windows(2) {
+            assert!(w[1].2 >= w[0].2 * 0.95, "non-monotone: {:?}", rows);
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Fig 3: single-node bandwidth (MB/s) and throughput (files/s) for
+//! FanStore vs SSD vs SSD-fuse vs SFS across the four benchmark file sizes.
+
+use crate::experiments::iosim::{
+    run_benchmark, FanStoreSim, FuseSim, IoSim, SharedFsSim, SimDataset, SsdSim,
+};
+use crate::experiments::report::{f1, shape_check, Table};
+use crate::net::fabric::Fabric;
+use crate::workload::bench::{BenchResult, BenchSpec};
+
+/// One backend's results across the four sizes.
+#[derive(Clone, Debug)]
+pub struct BackendRow {
+    pub backend: &'static str,
+    pub results: Vec<BenchResult>,
+}
+
+/// Run Fig 3. `scale` divides the paper's file counts (1 = full-scale
+/// virtual workload; benches use 8, tests use higher).
+pub fn run(scale: u64) -> Vec<BackendRow> {
+    let spec = BenchSpec::paper(scale);
+    let mut rows = Vec::new();
+    let backends: Vec<Box<dyn FnMut() -> Box<dyn IoSim>>> = vec![
+        Box::new(|| Box::new(FanStoreSim::new(1, 1, 1, Fabric::fdr_infiniband()))),
+        Box::new(|| Box::new(SsdSim::new(1))),
+        Box::new(|| Box::new(FuseSim::new(1))),
+        Box::new(|| Box::new(SharedFsSim::new(1))),
+    ];
+    for mut mk in backends {
+        let mut results = Vec::new();
+        let mut name = "";
+        for point in &spec.points {
+            let ds = SimDataset::uniform(point.file_count, point.file_size, 1, 1.0);
+            let mut backend = mk();
+            name = backend.name();
+            results.push(run_benchmark(backend.as_mut(), &ds, 1, 4));
+        }
+        rows.push(BackendRow {
+            backend: name,
+            results,
+        });
+    }
+    rows
+}
+
+/// Print the Fig 3 tables + the paper's shape checks.
+pub fn report(rows: &[BackendRow]) {
+    let sizes = ["128KB", "512KB", "2MB", "8MB"];
+    let mut bw = Table::new(
+        "Fig 3a — single-node bandwidth (MB/s)",
+        &["backend", sizes[0], sizes[1], sizes[2], sizes[3]],
+    );
+    let mut tp = Table::new(
+        "Fig 3b — single-node throughput (files/s)",
+        &["backend", sizes[0], sizes[1], sizes[2], sizes[3]],
+    );
+    for row in rows {
+        let mut bw_cells = vec![row.backend.to_string()];
+        let mut tp_cells = vec![row.backend.to_string()];
+        for r in &row.results {
+            bw_cells.push(f1(r.bandwidth_mbs()));
+            tp_cells.push(f1(r.files_per_sec()));
+        }
+        bw.row(&bw_cells);
+        tp.row(&tp_cells);
+    }
+    bw.print();
+    tp.print();
+
+    let get = |name: &str| rows.iter().find(|r| r.backend == name).unwrap();
+    let fan = get("FanStore");
+    let ssd = get("SSD");
+    let fuse = get("SSD-fuse");
+    let sfs = get("SFS");
+    println!("shape checks vs paper §6.4.1:");
+    for (i, _) in fan.results.iter().enumerate() {
+        shape_check(
+            &format!("FanStore/SSD bw frac @{}", sizes[i]),
+            fan.results[i].bandwidth_mbs() / ssd.results[i].bandwidth_mbs(),
+            0.71,
+            1.05,
+        );
+        shape_check(
+            &format!("FanStore/fuse speedup @{}", sizes[i]),
+            fan.results[i].bandwidth_mbs() / fuse.results[i].bandwidth_mbs(),
+            1.8,
+            6.0,
+        );
+        shape_check(
+            &format!("FanStore/SFS speedup @{}", sizes[i]),
+            fan.results[i].bandwidth_mbs() / sfs.results[i].bandwidth_mbs(),
+            2.0,
+            80.0,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_orderings_hold() {
+        let rows = run(256); // scaled down for test speed
+        let by = |name: &str| {
+            rows.iter()
+                .find(|r| r.backend == name)
+                .unwrap()
+                .results
+                .iter()
+                .map(|r| r.bandwidth_mbs())
+                .collect::<Vec<_>>()
+        };
+        let fan = by("FanStore");
+        let ssd = by("SSD");
+        let fuse = by("SSD-fuse");
+        let sfs = by("SFS");
+        for i in 0..4 {
+            assert!(fan[i] <= ssd[i] * 1.05, "FanStore bounded by raw SSD");
+            assert!(fan[i] > fuse[i], "FanStore beats FUSE @{i}");
+            assert!(fan[i] > sfs[i], "FanStore beats SFS @{i}");
+        }
+        // SFS is *worst* for the smallest files (metadata-bound)
+        let deficit_small = fan[0] / sfs[0];
+        let deficit_big = fan[3] / sfs[3];
+        assert!(deficit_small > deficit_big);
+    }
+}

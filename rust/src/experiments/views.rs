@@ -1,0 +1,130 @@
+//! Fig 1 — test accuracy with the global vs partitioned dataset view.
+//!
+//! This is the one experiment that must run *real training*: a CNN
+//! surrogate trained through the full FanStore read path + PJRT train step,
+//! once with every node sampling the whole dataset (global view) and once
+//! with each node locked to an exclusive shard (partitioned view).  The
+//! paper reports a ~4 % test-accuracy gap on ResNet-50/ImageNet; with the
+//! class-banded synthetic set the gap reproduces qualitatively (partitioned
+//! nodes overfit their shard's class mix and the averaged model
+//! underperforms).
+
+use crate::config::ClusterConfig;
+use crate::coordinator::Cluster;
+use crate::error::Result;
+use crate::experiments::report::{pct, Table};
+use crate::runtime::Engine;
+use crate::trainer::data::gen_classification_dataset;
+use crate::trainer::{train_cnn, DatasetView, TrainConfig, TrainLog};
+
+pub struct ViewRun {
+    pub view: DatasetView,
+    pub log: TrainLog,
+}
+
+/// Train twice (global, partitioned) on a fresh cluster each time.
+pub fn run(
+    engine: &Engine,
+    nodes: u32,
+    train_files: usize,
+    test_files: usize,
+    epochs: u32,
+    max_steps: Option<u32>,
+) -> Result<Vec<ViewRun>> {
+    let mut out = Vec::new();
+    for view in [DatasetView::Global, DatasetView::Partitioned] {
+        let mut files = gen_classification_dataset(train_files, "train", 11);
+        files.extend(gen_classification_dataset(test_files, "test", 23));
+        let cfg = ClusterConfig {
+            nodes,
+            partitions: nodes * 2,
+            replicate_dirs: vec!["test".into()],
+            ..Default::default()
+        };
+        let mount = cfg.mount.clone();
+        let cluster = Cluster::launch(&files, cfg)?;
+        let train_paths: Vec<String> = files
+            .iter()
+            .filter(|f| f.path.starts_with("train"))
+            .map(|f| format!("{mount}/{}", f.path))
+            .collect();
+        let test_paths: Vec<String> = files
+            .iter()
+            .filter(|f| f.path.starts_with("test"))
+            .map(|f| format!("{mount}/{}", f.path))
+            .collect();
+        let tc = TrainConfig {
+            epochs,
+            max_steps_per_epoch: max_steps,
+            view,
+            lr: 0.05,
+            seed: 7,
+            checkpoint: true,
+            flip_prob: 0.0,
+        };
+        let log = train_cnn(&cluster, engine, &train_paths, &test_paths, &tc)?;
+        cluster.shutdown();
+        out.push(ViewRun { view, log });
+    }
+    Ok(out)
+}
+
+pub fn report(runs: &[ViewRun]) {
+    let mut t = Table::new(
+        "Fig 1 — test accuracy: global vs partitioned dataset view",
+        &["view", "epoch", "mean loss", "train acc", "test acc"],
+    );
+    for r in runs {
+        for e in &r.log.epochs {
+            t.row(&[
+                format!("{:?}", r.view),
+                e.epoch.to_string(),
+                format!("{:.4}", e.mean_loss),
+                pct(e.train_acc as f64),
+                pct(e.test_acc as f64),
+            ]);
+        }
+    }
+    t.print();
+    let global = runs
+        .iter()
+        .find(|r| r.view == DatasetView::Global)
+        .map(|r| r.log.final_test_acc())
+        .unwrap_or(0.0);
+    let partitioned = runs
+        .iter()
+        .find(|r| r.view == DatasetView::Partitioned)
+        .map(|r| r.log.final_test_acc())
+        .unwrap_or(0.0);
+    println!(
+        "final test accuracy: global {} vs partitioned {} (gap {})",
+        pct(global as f64),
+        pct(partitioned as f64),
+        pct((global - partitioned) as f64)
+    );
+    // convergence-gap view: mean test accuracy across the run (the area
+    // under the accuracy curve the paper's Fig 1 plots per epoch)
+    let auc = |view: DatasetView| -> f64 {
+        runs.iter()
+            .find(|r| r.view == view)
+            .map(|r| {
+                r.log.epochs.iter().map(|e| e.test_acc as f64).sum::<f64>()
+                    / r.log.epochs.len().max(1) as f64
+            })
+            .unwrap_or(0.0)
+    };
+    let (g_auc, p_auc) = (auc(DatasetView::Global), auc(DatasetView::Partitioned));
+    println!(
+        "mean test accuracy over the run: global {} vs partitioned {} (gap {})",
+        pct(g_auc),
+        pct(p_auc),
+        pct(g_auc - p_auc)
+    );
+    println!(
+        "paper: partitioned view trails by ~4% on ResNet-50/ImageNet.  With the\n\
+         surrogate (plain synchronous SGD, no BatchNorm, linearly-separable toy\n\
+         task) the *asymptotic* gap closes once both saturate; the partitioned\n\
+         view's deficit shows as slower convergence (per-epoch gap above).\n\
+         Shape target: global >= partitioned at every epoch."
+    );
+}

@@ -1,0 +1,42 @@
+//! # FanStore — a transient runtime file system for distributed DL I/O
+//!
+//! Reproduction of *FanStore: Enabling Efficient and Scalable I/O for
+//! Distributed Deep Learning* (Zhang et al., 2018).  See `DESIGN.md` for the
+//! system inventory and the substitution table (the paper's clusters, MPI,
+//! Lustre and glibc interception are simulated/modelled — everything else is
+//! implemented for real).
+//!
+//! Layer map:
+//! * **L3 (this crate)** — the FanStore runtime FS: partitions, replicated /
+//!   consistent-hashed metadata, refcounted cache, transport, replication,
+//!   the cluster simulator, baseline storage models, workload generators, the
+//!   distributed-training driver and the experiment harness.
+//! * **L2/L1 (python/, build-time only)** — JAX training-step graphs with
+//!   Pallas kernels, AOT-lowered to `artifacts/*.hlo.txt`, executed from
+//!   [`runtime`] via PJRT.
+//!
+//! Quick tour: [`partition`] packs datasets (paper §5.2, Table 3);
+//! [`metadata`] is §5.3; [`cache`]+[`node`] are §5.4; [`vfs`] is the
+//! POSIX-compliant interface of §5.5; [`compress`] is the LZSS codec of
+//! §5.4/§6.6; [`sim`]+[`net`]+[`storage`] model the testbeds of §6.1;
+//! [`experiments`] regenerates every figure of §6.
+
+pub mod cache;
+pub mod compress;
+pub mod config;
+pub mod coordinator;
+pub mod error;
+pub mod experiments;
+pub mod metadata;
+pub mod net;
+pub mod node;
+pub mod partition;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod trainer;
+pub mod util;
+pub mod vfs;
+pub mod workload;
+
+pub use error::{FanError, Result};

@@ -1,0 +1,299 @@
+//! FanStore CLI — the leader entrypoint.
+//!
+//! ```text
+//! fanstore prepare   --files N --partitions P [--codec lzss --level L]
+//! fanstore bench-io  --nodes N [--cluster gpu|cpu] [--scale S] [--ratio R]
+//! fanstore train     --nodes N --epochs E [--view global|partitioned]
+//! fanstore experiment <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|prep-cost|all>
+//! ```
+
+use fanstore::compress::Codec;
+use fanstore::config::{ArgMap, ClusterConfig};
+use fanstore::coordinator::Cluster;
+use fanstore::error::Result;
+use fanstore::experiments as exp;
+use fanstore::runtime::Engine;
+use fanstore::trainer::{self, DatasetView, TrainConfig};
+use fanstore::workload::datasets::DatasetSpec;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = run(&args) {
+        eprintln!("fanstore: error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() {
+    eprintln!(
+        "usage: fanstore <prepare|bench-io|train|experiment> [--key value ...]\n\
+         \n\
+         prepare     pack a synthetic dataset into partitions (§5.2)\n\
+         bench-io    run the §6.2 benchmark on the in-proc cluster\n\
+         train       train the CNN surrogate through FanStore + PJRT\n\
+         experiment  regenerate a paper figure: fig1 fig3 fig4 fig5 fig6\n\
+                     fig7 fig8 fig9 fig10 fig11 prep-cost all"
+    );
+}
+
+fn codec_of(m: &ArgMap) -> Result<Codec> {
+    Ok(match m.get("codec") {
+        Some("lzss") => Codec::Lzss(m.get_u32("level", 5)? as u8),
+        Some("none") | None => Codec::None,
+        Some(other) => {
+            return Err(fanstore::FanError::Config(format!(
+                "unknown codec {other}"
+            )))
+        }
+    })
+}
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("FANSTORE_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| std::path::PathBuf::from("artifacts"))
+}
+
+fn run(args: &[String]) -> Result<()> {
+    let m = ArgMap::parse(args);
+    let Some(cmd) = m.positional.first().map(|s| s.as_str()) else {
+        usage();
+        return Ok(());
+    };
+    match cmd {
+        "prepare" => cmd_prepare(&m),
+        "bench-io" => cmd_bench_io(&m),
+        "train" => cmd_train(&m),
+        "experiment" => cmd_experiment(&m),
+        _ => {
+            usage();
+            Err(fanstore::FanError::Config(format!("unknown command {cmd}")))
+        }
+    }
+}
+
+fn cmd_prepare(m: &ArgMap) -> Result<()> {
+    let files = m.get_u64("files", 2000)? as usize;
+    let partitions = m.get_u32("partitions", 16)?;
+    let codec = codec_of(m)?;
+    let spec = match m.get("dataset").unwrap_or("imagenet") {
+        "srgan" => DatasetSpec::srgan(),
+        "frnn" => DatasetSpec::frnn(),
+        _ => DatasetSpec::imagenet(),
+    };
+    let divisor = m.get_u64("size-divisor", 64)?;
+    println!("generating {files} files ({} profile)...", spec.name);
+    let data = spec.generate(files, divisor, m.get_u64("seed", 1)?);
+    let (blobs, stats) =
+        fanstore::partition::builder::build_partitions(&data, partitions, codec)?;
+    println!(
+        "packed {} files ({}) into {} partitions in {:.2}s — stored {} (ratio {:.2}x)",
+        stats.files,
+        fanstore::util::human_bytes(stats.raw_bytes),
+        blobs.len(),
+        stats.wall_seconds,
+        fanstore::util::human_bytes(stats.stored_bytes),
+        stats.ratio(),
+    );
+    if let Some(dir) = m.get("out") {
+        std::fs::create_dir_all(dir)?;
+        for (i, b) in blobs.iter().enumerate() {
+            std::fs::write(format!("{dir}/partition_{i:05}.fan"), b)?;
+        }
+        println!("wrote {} blobs to {dir}", blobs.len());
+    }
+    Ok(())
+}
+
+fn cmd_bench_io(m: &ArgMap) -> Result<()> {
+    // real in-proc benchmark (wall clock) on this host
+    let nodes = m.get_u32("nodes", 4)?;
+    let files = m.get_u64("files", 512)? as usize;
+    let size = fanstore::util::bytes::parse_size(m.get("size").unwrap_or("128K"))
+        .ok_or_else(|| fanstore::FanError::Config("bad --size".into()))?;
+    let codec = codec_of(m)?;
+    let spec = fanstore::workload::bench::BenchSpec {
+        points: vec![fanstore::workload::bench::BenchPoint {
+            file_size: size,
+            file_count: files as u64,
+        }],
+        redundancy: if matches!(codec, Codec::Lzss(_)) { 0.72 } else { 0.0 },
+    };
+    let data = spec.generate_point(spec.points[0], 3);
+    let cfg = ClusterConfig {
+        nodes,
+        partitions: nodes * 2,
+        codec,
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(&data, cfg)?;
+    let paths: Vec<String> = data.iter().map(|f| format!("{mount}/{}", f.path)).collect();
+    let t0 = std::time::Instant::now();
+    let mut handles = Vec::new();
+    for node in 0..nodes {
+        let mut vfs = cluster.client(node);
+        let paths = paths.clone();
+        handles.push(std::thread::spawn(move || -> Result<u64> {
+            use fanstore::vfs::Vfs;
+            let mut bytes = 0u64;
+            for p in &paths {
+                bytes += vfs.read_all(p)?.len() as u64;
+            }
+            Ok(bytes)
+        }));
+    }
+    let mut total = 0u64;
+    for h in handles {
+        total += h.join().expect("bench thread")?;
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "in-proc: {nodes} nodes read {} in {secs:.3}s — {} aggregated, {:.0} files/s",
+        fanstore::util::human_bytes(total),
+        fanstore::util::human_rate(total as f64 / secs),
+        (files as u64 * nodes as u64) as f64 / secs,
+    );
+    let report = cluster.shutdown();
+    let remote: u64 = report.per_node.iter().map(|s| s.remote_reads_issued).sum();
+    println!(
+        "remote reads: {remote} / {} ({:.1}%)",
+        files as u64 * nodes as u64,
+        100.0 * remote as f64 / (files as u64 * nodes as u64) as f64
+    );
+    Ok(())
+}
+
+fn cmd_train(m: &ArgMap) -> Result<()> {
+    let nodes = m.get_u32("nodes", 4)?;
+    let epochs = m.get_u32("epochs", 3)?;
+    let train_files = m.get_u64("train-files", 640)? as usize;
+    let test_files = m.get_u64("test-files", 160)? as usize;
+    let view = match m.get("view").unwrap_or("global") {
+        "partitioned" => DatasetView::Partitioned,
+        _ => DatasetView::Global,
+    };
+    println!("loading PJRT engine from {:?}...", artifacts_dir());
+    let engine = Engine::load_subset(artifacts_dir(), &["cnn_train_step", "cnn_eval_step"])?;
+    let mut files = trainer::data::gen_classification_dataset(train_files, "train", 11);
+    files.extend(trainer::data::gen_classification_dataset(test_files, "test", 23));
+    let cfg = ClusterConfig {
+        nodes,
+        partitions: nodes * 2,
+        codec: codec_of(m)?,
+        replicate_dirs: vec!["test".into()],
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(&files, cfg)?;
+    let train_paths: Vec<String> = files
+        .iter()
+        .filter(|f| f.path.starts_with("train"))
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    let test_paths: Vec<String> = files
+        .iter()
+        .filter(|f| f.path.starts_with("test"))
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    let tc = TrainConfig {
+        epochs,
+        view,
+        max_steps_per_epoch: m.get("max-steps").map(|s| s.parse().unwrap()),
+        ..Default::default()
+    };
+    let log = trainer::train_cnn(&cluster, &engine, &train_paths, &test_paths, &tc)?;
+    for e in &log.epochs {
+        println!(
+            "epoch {:>2}: loss {:.4}  train-acc {:.1}%  test-acc {:.1}%  {} files in {:.2}s ({:.0} files/s)",
+            e.epoch,
+            e.mean_loss,
+            e.train_acc * 100.0,
+            e.test_acc * 100.0,
+            e.files_read,
+            e.seconds,
+            e.files_read as f64 / e.seconds
+        );
+    }
+    println!("final test accuracy: {:.1}%", log.final_test_acc() * 100.0);
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_experiment(m: &ArgMap) -> Result<()> {
+    let which = m
+        .positional
+        .get(1)
+        .map(|s| s.as_str())
+        .unwrap_or("all");
+    let scale = m.get_u64("scale", 8)?;
+    let run_one = |id: &str| -> Result<()> {
+        println!("\n###### experiment {id} ######");
+        match id {
+            "fig1" => {
+                let engine =
+                    Engine::load_subset(artifacts_dir(), &["cnn_train_step", "cnn_eval_step"])?;
+                let runs = exp::views::run(&engine, 4, 640, 160, 5, None)?;
+                exp::views::report(&runs);
+            }
+            "fig3" => {
+                let rows = exp::single_node::run(scale);
+                exp::single_node::report(&rows);
+            }
+            "fig4" => {
+                let rows = exp::apps::run();
+                exp::apps::report(&rows);
+            }
+            "fig5" => {
+                let res = exp::scaling::run(exp::scaling::ClusterKind::Gpu, scale, 1.0);
+                exp::scaling::report(&res);
+            }
+            "fig6" => {
+                let res = exp::scaling::run(exp::scaling::ClusterKind::Cpu, scale * 8, 1.0);
+                exp::scaling::report(&res);
+            }
+            "fig7" => {
+                let series = exp::apps_scaling::run_fig7();
+                exp::apps_scaling::report_series("Fig 7 (ResNet-50)", &series);
+                exp::apps_scaling::shape_checks_fig7(&series);
+            }
+            "fig8" => {
+                let series = exp::apps_scaling::run_fig8();
+                exp::apps_scaling::report_series("Fig 8 (SRGAN)", &series);
+            }
+            "fig9" => {
+                let series = exp::apps_scaling::run_fig9();
+                exp::apps_scaling::report_series("Fig 9 (FRNN)", &series);
+            }
+            "fig10" => {
+                let rows = exp::compression::run_fig10();
+                exp::compression::report_fig10(&rows);
+            }
+            "fig11" => {
+                let res = exp::compression::run_fig11(scale * 8);
+                exp::compression::report_fig11(&res);
+            }
+            "prep-cost" => {
+                let rows = exp::prep::run(1500, 32)?;
+                exp::prep::report(&rows);
+            }
+            other => {
+                return Err(fanstore::FanError::Config(format!(
+                    "unknown experiment {other}"
+                )))
+            }
+        }
+        Ok(())
+    };
+    if which == "all" {
+        for id in [
+            "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
+            "prep-cost", "fig1",
+        ] {
+            run_one(id)?;
+        }
+        Ok(())
+    } else {
+        run_one(which)
+    }
+}

@@ -1,0 +1,16 @@
+//! Metadata management (paper §5.3).
+//!
+//! Input-file metadata is **replicated** on every node: each node holds the
+//! full path → [`FileMeta`] hashtable plus a per-directory cache so
+//! `readdir()` returns immediately.  Output-file metadata is **distributed**
+//! by a consistent hash of the path (modulo node count in the paper); the
+//! entry lives only on its home node and becomes visible only after
+//! `close()` (visible-until-finish, §5.4).
+
+pub mod placement;
+pub mod record;
+pub mod table;
+
+pub use placement::Placement;
+pub use record::{FileLocation, FileMeta, FileStat, STAT_BYTES};
+pub use table::MetaTable;

@@ -1,0 +1,192 @@
+//! On-disk/in-RAM metadata records.
+//!
+//! [`FileStat`] is the 144-byte POSIX `struct stat` image stored verbatim in
+//! every partition entry (paper Table 3: bytes 260–403).  [`FileMeta`] is the
+//! RAM record: the stat plus FanStore's location fields (which node holds the
+//! bytes, at which partition offset, compressed or not).
+
+use crate::error::{FanError, Result};
+
+/// Size of the serialized stat record — matches x86-64 glibc `struct stat`.
+pub const STAT_BYTES: usize = 144;
+
+/// Sentinel partition id for files replicated on *every* node (the paper's
+/// user-specified replicated directory, §5.4 — typically the test set).
+pub const REPLICATED_PARTITION: u32 = u32::MAX - 1;
+
+/// POSIX-shaped stat, serialized little-endian into exactly 144 bytes.
+///
+/// Field layout (offsets in the 144-byte image):
+/// ```text
+///   0  dev        8  ino       16 nlink     24 mode(u32) 28 uid(u32)
+///  32  gid(u32)  36 pad(u32)  40 rdev      48 size      56 blksize
+///  64  blocks    72 atime     80 atime_ns  88 mtime     96 mtime_ns
+/// 104  ctime    112 ctime_ns 120..144 reserved (zeros)
+/// ```
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FileStat {
+    pub dev: u64,
+    pub ino: u64,
+    pub nlink: u64,
+    pub mode: u32,
+    pub uid: u32,
+    pub gid: u32,
+    pub rdev: u64,
+    pub size: u64,
+    pub blksize: u64,
+    pub blocks: u64,
+    pub atime: i64,
+    pub atime_ns: i64,
+    pub mtime: i64,
+    pub mtime_ns: i64,
+    pub ctime: i64,
+    pub ctime_ns: i64,
+}
+
+impl FileStat {
+    /// A regular file of `size` bytes with sensible defaults.
+    pub fn regular(ino: u64, size: u64) -> Self {
+        FileStat {
+            dev: 0xFA57,
+            ino,
+            nlink: 1,
+            mode: 0o100644, // S_IFREG | rw-r--r--
+            uid: 1000,
+            gid: 1000,
+            rdev: 0,
+            size,
+            blksize: 4096,
+            blocks: size.div_ceil(512),
+            atime: 1_530_000_000,
+            atime_ns: 0,
+            mtime: 1_530_000_000,
+            mtime_ns: 0,
+            ctime: 1_530_000_000,
+            ctime_ns: 0,
+        }
+    }
+
+    /// A directory entry.
+    pub fn directory(ino: u64) -> Self {
+        let mut s = Self::regular(ino, 4096);
+        s.mode = 0o040755; // S_IFDIR | rwxr-xr-x
+        s.nlink = 2;
+        s
+    }
+
+    pub fn is_dir(&self) -> bool {
+        self.mode & 0o170000 == 0o040000
+    }
+
+    /// Serialize into the 144-byte partition image.
+    pub fn encode(&self) -> [u8; STAT_BYTES] {
+        let mut b = [0u8; STAT_BYTES];
+        b[0..8].copy_from_slice(&self.dev.to_le_bytes());
+        b[8..16].copy_from_slice(&self.ino.to_le_bytes());
+        b[16..24].copy_from_slice(&self.nlink.to_le_bytes());
+        b[24..28].copy_from_slice(&self.mode.to_le_bytes());
+        b[28..32].copy_from_slice(&self.uid.to_le_bytes());
+        b[32..36].copy_from_slice(&self.gid.to_le_bytes());
+        // bytes 36..40: pad
+        b[40..48].copy_from_slice(&self.rdev.to_le_bytes());
+        b[48..56].copy_from_slice(&self.size.to_le_bytes());
+        b[56..64].copy_from_slice(&self.blksize.to_le_bytes());
+        b[64..72].copy_from_slice(&self.blocks.to_le_bytes());
+        b[72..80].copy_from_slice(&self.atime.to_le_bytes());
+        b[80..88].copy_from_slice(&self.atime_ns.to_le_bytes());
+        b[88..96].copy_from_slice(&self.mtime.to_le_bytes());
+        b[96..104].copy_from_slice(&self.mtime_ns.to_le_bytes());
+        b[104..112].copy_from_slice(&self.ctime.to_le_bytes());
+        b[112..120].copy_from_slice(&self.ctime_ns.to_le_bytes());
+        b
+    }
+
+    /// Parse the 144-byte partition image.
+    pub fn decode(b: &[u8]) -> Result<Self> {
+        if b.len() < STAT_BYTES {
+            return Err(FanError::Format(format!(
+                "stat record truncated: {} < {STAT_BYTES}",
+                b.len()
+            )));
+        }
+        let u64at = |o: usize| u64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        let u32at = |o: usize| u32::from_le_bytes(b[o..o + 4].try_into().unwrap());
+        let i64at = |o: usize| i64::from_le_bytes(b[o..o + 8].try_into().unwrap());
+        Ok(FileStat {
+            dev: u64at(0),
+            ino: u64at(8),
+            nlink: u64at(16),
+            mode: u32at(24),
+            uid: u32at(28),
+            gid: u32at(32),
+            rdev: u64at(40),
+            size: u64at(48),
+            blksize: u64at(56),
+            blocks: u64at(64),
+            atime: i64at(72),
+            atime_ns: i64at(80),
+            mtime: i64at(88),
+            mtime_ns: i64at(96),
+            ctime: i64at(104),
+            ctime_ns: i64at(112),
+        })
+    }
+}
+
+/// Where a file's bytes live.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FileLocation {
+    /// Node that stores the (primary copy of the) data.
+    pub node: u32,
+    /// Partition id on that node.
+    pub partition: u32,
+    /// Byte offset of the data inside the dumped partition blob.
+    pub offset: u64,
+    /// Stored length (== compressed length when `compressed`).
+    pub stored_len: u64,
+    /// Whether the stored bytes are LZSS-compressed.
+    pub compressed: bool,
+}
+
+/// RAM metadata record: POSIX stat + FanStore location (paper §5.3 "besides
+/// the POSIX-compliant information, each metadata record maintains the file
+/// location").
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct FileMeta {
+    pub stat: FileStat,
+    pub location: FileLocation,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stat_roundtrip() {
+        let s = FileStat::regular(42, 123_456);
+        let b = s.encode();
+        assert_eq!(b.len(), STAT_BYTES);
+        assert_eq!(FileStat::decode(&b).unwrap(), s);
+    }
+
+    #[test]
+    fn dir_roundtrip_and_flags() {
+        let d = FileStat::directory(7);
+        assert!(d.is_dir());
+        assert!(!FileStat::regular(1, 0).is_dir());
+        assert_eq!(FileStat::decode(&d.encode()).unwrap(), d);
+    }
+
+    #[test]
+    fn truncated_decode_fails() {
+        let s = FileStat::regular(1, 1);
+        let b = s.encode();
+        assert!(FileStat::decode(&b[..100]).is_err());
+    }
+
+    #[test]
+    fn blocks_match_size() {
+        let s = FileStat::regular(1, 1025);
+        assert_eq!(s.blocks, 3); // ceil(1025/512)
+    }
+}

@@ -1,0 +1,266 @@
+//! The in-RAM metadata hashtable + readdir cache (paper §5.3).
+//!
+//! One `MetaTable` lives on every node.  Input metadata is loaded identically
+//! everywhere (replication = broadcast at prep time); output metadata is
+//! inserted only on the path's home node after `close()`.  The directory
+//! cache is precomputed so `readdir()` "returns immediately" — the paper's
+//! answer to the 4·N simultaneous `readdir()/stat()` storms of §3.3.
+
+use std::collections::HashMap;
+
+use crate::error::{FanError, Result};
+use crate::metadata::record::{FileMeta, FileStat};
+
+/// Per-node metadata store.
+#[derive(Debug, Default)]
+pub struct MetaTable {
+    /// path -> record, for files.
+    files: HashMap<String, FileMeta>,
+    /// dir path -> sorted child names (files and subdirs).
+    dirs: HashMap<String, Vec<String>>,
+    /// dir path -> stat (directories carry their own stat records).
+    dir_stats: HashMap<String, FileStat>,
+    next_ino: u64,
+}
+
+/// Normalize `a/b/../c`-free paths: strip trailing '/', collapse "//".
+pub fn normalize(path: &str) -> String {
+    let mut out = String::with_capacity(path.len() + 1);
+    if !path.starts_with('/') {
+        out.push('/');
+    }
+    let mut prev_slash = false;
+    for ch in path.chars() {
+        if ch == '/' {
+            if prev_slash {
+                continue;
+            }
+            prev_slash = true;
+        } else {
+            prev_slash = false;
+        }
+        out.push(ch);
+    }
+    while out.len() > 1 && out.ends_with('/') {
+        out.pop();
+    }
+    out
+}
+
+/// Parent directory of a normalized path ("/a/b/c" -> "/a/b").
+pub fn parent(path: &str) -> &str {
+    match path.rfind('/') {
+        Some(0) => "/",
+        Some(i) => &path[..i],
+        None => "/",
+    }
+}
+
+/// Base name of a normalized path.
+pub fn basename(path: &str) -> &str {
+    path.rsplit('/').next().unwrap_or(path)
+}
+
+impl MetaTable {
+    pub fn new() -> Self {
+        let mut t = MetaTable {
+            next_ino: 2,
+            ..Default::default()
+        };
+        t.dirs.insert("/".into(), Vec::new());
+        t.dir_stats.insert("/".into(), FileStat::directory(1));
+        t
+    }
+
+    fn alloc_ino(&mut self) -> u64 {
+        self.next_ino += 1;
+        self.next_ino
+    }
+
+    /// Ensure every ancestor directory of `path` exists.
+    pub fn mkdirs(&mut self, dir: &str) {
+        let dir = normalize(dir);
+        if self.dirs.contains_key(&dir) {
+            return;
+        }
+        let mut cur = String::from("/");
+        for comp in dir.split('/').filter(|c| !c.is_empty()) {
+            let parent_path = cur.clone();
+            if cur.len() > 1 {
+                cur.push('/');
+            }
+            cur.push_str(comp);
+            if !self.dirs.contains_key(&cur) {
+                let ino = self.alloc_ino();
+                self.dirs.insert(cur.clone(), Vec::new());
+                self.dir_stats.insert(cur.clone(), FileStat::directory(ino));
+                let children = self.dirs.get_mut(&parent_path).expect("parent exists");
+                if let Err(pos) = children.binary_search(&comp.to_string()) {
+                    children.insert(pos, comp.to_string());
+                }
+            }
+        }
+    }
+
+    /// Insert (or replace) a file record, creating parent directories.
+    pub fn insert(&mut self, path: &str, meta: FileMeta) {
+        let path = normalize(path);
+        let dir = parent(&path).to_string();
+        self.mkdirs(&dir);
+        let name = basename(&path).to_string();
+        let children = self.dirs.get_mut(&dir).expect("mkdirs created it");
+        if let Err(pos) = children.binary_search(&name) {
+            children.insert(pos, name);
+        }
+        self.files.insert(path, meta);
+    }
+
+    /// Remove a file record (used by failure-injection tests and `unlink`).
+    pub fn remove(&mut self, path: &str) -> Result<FileMeta> {
+        let path = normalize(path);
+        let meta = self
+            .files
+            .remove(&path)
+            .ok_or_else(|| FanError::NotFound(path.clone()))?;
+        if let Some(children) = self.dirs.get_mut(parent(&path)) {
+            let name = basename(&path).to_string();
+            if let Ok(pos) = children.binary_search(&name) {
+                children.remove(pos);
+            }
+        }
+        Ok(meta)
+    }
+
+    /// Look up a file.
+    pub fn get(&self, path: &str) -> Option<&FileMeta> {
+        self.files.get(&normalize(path))
+    }
+
+    /// POSIX `stat()`: file or directory.
+    pub fn stat(&self, path: &str) -> Result<FileStat> {
+        let path = normalize(path);
+        if let Some(m) = self.files.get(&path) {
+            return Ok(m.stat);
+        }
+        if let Some(s) = self.dir_stats.get(&path) {
+            return Ok(*s);
+        }
+        Err(FanError::NotFound(path))
+    }
+
+    /// POSIX `readdir()`: sorted child names, served from the cache.
+    pub fn readdir(&self, dir: &str) -> Result<&[String]> {
+        let dir = normalize(dir);
+        if self.files.contains_key(&dir) {
+            return Err(FanError::NotDirectory(dir));
+        }
+        self.dirs
+            .get(&dir)
+            .map(|v| v.as_slice())
+            .ok_or(FanError::NotFound(dir))
+    }
+
+    pub fn is_dir(&self, path: &str) -> bool {
+        self.dirs.contains_key(&normalize(path))
+    }
+
+    pub fn file_count(&self) -> usize {
+        self.files.len()
+    }
+
+    pub fn dir_count(&self) -> usize {
+        self.dirs.len()
+    }
+
+    /// Iterate all file paths (deterministic order not guaranteed).
+    pub fn paths(&self) -> impl Iterator<Item = &String> {
+        self.files.keys()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::record::{FileLocation, FileStat};
+
+    fn meta(size: u64) -> FileMeta {
+        FileMeta {
+            stat: FileStat::regular(9, size),
+            location: FileLocation {
+                node: 0,
+                partition: 0,
+                offset: 0,
+                stored_len: size,
+                compressed: false,
+            },
+        }
+    }
+
+    #[test]
+    fn normalize_paths() {
+        assert_eq!(normalize("a/b"), "/a/b");
+        assert_eq!(normalize("/a//b/"), "/a/b");
+        assert_eq!(normalize("/"), "/");
+    }
+
+    #[test]
+    fn parent_and_basename() {
+        assert_eq!(parent("/a/b/c"), "/a/b");
+        assert_eq!(parent("/a"), "/");
+        assert_eq!(basename("/a/b/c"), "c");
+    }
+
+    #[test]
+    fn insert_creates_dirs_and_readdir_sorted() {
+        let mut t = MetaTable::new();
+        t.insert("/data/train/z.jpg", meta(10));
+        t.insert("/data/train/a.jpg", meta(10));
+        t.insert("/data/val/b.jpg", meta(10));
+        assert_eq!(t.readdir("/data/train").unwrap(), &["a.jpg", "z.jpg"]);
+        assert_eq!(t.readdir("/data").unwrap(), &["train", "val"]);
+        assert_eq!(t.readdir("/").unwrap(), &["data"]);
+        assert!(t.stat("/data/train").unwrap().is_dir());
+        assert!(!t.stat("/data/train/a.jpg").unwrap().is_dir());
+    }
+
+    #[test]
+    fn stat_missing_is_enoent() {
+        let t = MetaTable::new();
+        assert!(matches!(t.stat("/nope"), Err(FanError::NotFound(_))));
+    }
+
+    #[test]
+    fn readdir_on_file_is_enotdir() {
+        let mut t = MetaTable::new();
+        t.insert("/f", meta(1));
+        assert!(matches!(t.readdir("/f"), Err(FanError::NotDirectory(_))));
+    }
+
+    #[test]
+    fn remove_updates_listing() {
+        let mut t = MetaTable::new();
+        t.insert("/d/x", meta(1));
+        t.insert("/d/y", meta(1));
+        t.remove("/d/x").unwrap();
+        assert_eq!(t.readdir("/d").unwrap(), &["y"]);
+        assert!(t.remove("/d/x").is_err());
+    }
+
+    #[test]
+    fn counts() {
+        let mut t = MetaTable::new();
+        t.insert("/a/b/c1", meta(1));
+        t.insert("/a/b/c2", meta(1));
+        assert_eq!(t.file_count(), 2);
+        assert_eq!(t.dir_count(), 3); // /, /a, /a/b
+    }
+
+    #[test]
+    fn reinsert_replaces() {
+        let mut t = MetaTable::new();
+        t.insert("/f", meta(1));
+        t.insert("/f", meta(99));
+        assert_eq!(t.stat("/f").unwrap().size, 99);
+        assert_eq!(t.readdir("/").unwrap().len(), 1);
+    }
+}

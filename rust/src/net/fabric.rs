@@ -1,0 +1,104 @@
+//! Interconnect cost model (virtual time).
+//!
+//! A remote read is a round trip: tiny request out, file payload back.  Each
+//! node has one full-duplex NIC modelled as two FIFO `Resource` lanes (tx,
+//! rx).  The fabric itself is non-blocking fat-tree (both testbeds, §6.1), so
+//! contention happens at the endpoints — the standard assumption for these
+//! topologies and the reason the paper's scaling is endpoint-limited.
+
+use crate::sim::clock::{transfer_ns, SimNs};
+
+/// Link/NIC parameters for one cluster interconnect.
+#[derive(Clone, Copy, Debug)]
+pub struct Fabric {
+    /// One-way small-message latency.
+    pub latency_ns: SimNs,
+    /// Per-NIC bandwidth, bytes/s.
+    pub bw: u64,
+    /// Per-message software overhead (MPI stack, matching, registration).
+    pub sw_overhead_ns: SimNs,
+}
+
+impl Fabric {
+    /// Mellanox FDR InfiniBand: 56 Gb/s, sub-µs latency (GPU cluster).
+    pub fn fdr_infiniband() -> Self {
+        Fabric {
+            latency_ns: 700, // 0.7 µs
+            bw: 56_000_000_000 / 8,
+            sw_overhead_ns: 1_500,
+        }
+    }
+
+    /// Intel Omni-Path: 100 Gb/s, ~1 µs latency (CPU cluster).
+    pub fn omni_path() -> Self {
+        Fabric {
+            latency_ns: 1_000,
+            bw: 100_000_000_000 / 8,
+            sw_overhead_ns: 1_500,
+        }
+    }
+
+    /// Wire + software time to push `bytes` through one NIC.
+    pub fn tx_service(&self, bytes: u64) -> SimNs {
+        self.sw_overhead_ns + transfer_ns(bytes, self.bw)
+    }
+
+    /// End-to-end one-way time for `bytes`, endpoints uncontended.
+    pub fn oneway_ns(&self, bytes: u64) -> SimNs {
+        self.tx_service(bytes) + self.latency_ns
+    }
+
+    /// Uncontended request/response round trip: `req` bytes out, `resp` back.
+    pub fn roundtrip_ns(&self, req: u64, resp: u64) -> SimNs {
+        self.oneway_ns(req) + self.oneway_ns(resp)
+    }
+}
+
+/// Small-message size of a FanStore read request (path + header).
+pub const REQUEST_BYTES: u64 = 320;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::clock::{MS, NS_PER_SEC, US};
+
+    #[test]
+    fn fdr_large_message_hits_wire_rate() {
+        let f = Fabric::fdr_infiniband();
+        let bytes = 64u64 << 20;
+        let t = f.oneway_ns(bytes);
+        let gbps = bytes as f64 * 8.0 / (t as f64 / NS_PER_SEC as f64) / 1e9;
+        assert!(gbps > 54.0 && gbps <= 56.0, "gbps {gbps}");
+    }
+
+    #[test]
+    fn opa_faster_than_fdr_for_bulk() {
+        let bytes = 8u64 << 20;
+        assert!(
+            Fabric::omni_path().oneway_ns(bytes) < Fabric::fdr_infiniband().oneway_ns(bytes)
+        );
+    }
+
+    #[test]
+    fn small_message_latency_bound() {
+        let f = Fabric::fdr_infiniband();
+        let t = f.roundtrip_ns(REQUEST_BYTES, 4096);
+        assert!(t < 20 * US, "{t}"); // small files are latency, not bw, bound
+    }
+
+    #[test]
+    fn roundtrip_is_sum_of_oneways() {
+        let f = Fabric::omni_path();
+        assert_eq!(
+            f.roundtrip_ns(100, 1000),
+            f.oneway_ns(100) + f.oneway_ns(1000)
+        );
+    }
+
+    #[test]
+    fn bulk_transfer_sane_duration() {
+        // 128 KiB over FDR: ~19 µs wire + overheads; far under a ms.
+        let f = Fabric::fdr_infiniband();
+        assert!(f.oneway_ns(128 * 1024) < MS);
+    }
+}

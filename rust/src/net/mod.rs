@@ -1,0 +1,14 @@
+//! Interconnect models and the inter-node transport.
+//!
+//! The paper's remote file access is "a round-trip MPI message" (§1) over
+//! FDR InfiniBand (GPU cluster, 56 Gb/s, sub-µs latency) or Omni-Path
+//! (CPU cluster, 100 Gb/s).  [`fabric`] is the virtual-time cost model of
+//! those links; [`transport`] is the real message-passing layer used by the
+//! in-process cluster (std::sync::mpsc standing in for MPI point-to-point,
+//! same request/response protocol, real bytes).
+
+pub mod fabric;
+pub mod transport;
+
+pub use fabric::Fabric;
+pub use transport::{InProcTransport, Message, NodeEndpoint, Request, Response};

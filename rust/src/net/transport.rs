@@ -1,0 +1,214 @@
+//! Real inter-node message passing for the in-process cluster.
+//!
+//! Stands in for the paper's MPI point-to-point: each node runs a worker
+//! (service) thread draining a request queue; remote file access is a
+//! request/response round trip carrying the *stored* bytes (compressed data
+//! travels compressed — decompression happens on the reader, §5.4).
+//!
+//! `std::sync::mpsc` replaces `MPI_Send/Recv`; the protocol, message sizes
+//! and who-talks-to-whom are identical to the paper's design, which is what
+//! the experiments depend on (DESIGN.md substitution table).
+
+use std::sync::mpsc::{channel, Receiver, Sender};
+
+use crate::error::{FanError, Result};
+use crate::metadata::record::{FileMeta, FileStat};
+
+/// Requests a FanStore worker thread services (paper §5.1 "worker threads
+/// ... handle file system requests").
+#[derive(Debug)]
+pub enum Request {
+    /// Read the stored bytes of an input (or committed output) file.
+    ReadFile { path: String },
+    /// Stat a path this node is authoritative for (output files).
+    StatOutput { path: String },
+    /// Forward a finished output file's metadata to its home node
+    /// (visible-until-finish commit, §5.4).
+    CommitOutput { path: String, meta: FileMeta },
+    /// List output files homed on this node under a directory.
+    ListOutputs { dir: String },
+    /// Orderly shutdown of the worker thread.
+    Shutdown,
+}
+
+/// Worker replies.
+#[derive(Debug)]
+pub enum Response {
+    FileData {
+        stored: Vec<u8>,
+        raw_len: u64,
+        compressed: bool,
+    },
+    /// Output-file metadata: the stat plus the node that buffered the data
+    /// (the originating node, §5.4 — reads must go there, not to the home).
+    Meta {
+        stat: FileStat,
+        origin: u32,
+    },
+    Names(Vec<String>),
+    Ok,
+    Err(String),
+}
+
+/// An addressed request with its reply channel.
+pub struct Message {
+    pub from: u32,
+    pub req: Request,
+    pub reply: Sender<Response>,
+}
+
+/// Sender half bundle: lets any node address any other node.
+#[derive(Clone)]
+pub struct InProcTransport {
+    peers: Vec<Sender<Message>>,
+}
+
+/// The per-node receive side handed to its worker thread.
+pub struct NodeEndpoint {
+    pub node_id: u32,
+    pub inbox: Receiver<Message>,
+}
+
+impl InProcTransport {
+    /// Build a fully-connected transport for `n` nodes; returns the shared
+    /// sender bundle plus one endpoint per node.
+    pub fn fully_connected(n: u32) -> (InProcTransport, Vec<NodeEndpoint>) {
+        let mut peers = Vec::with_capacity(n as usize);
+        let mut endpoints = Vec::with_capacity(n as usize);
+        for node_id in 0..n {
+            let (tx, rx) = channel();
+            peers.push(tx);
+            endpoints.push(NodeEndpoint { node_id, inbox: rx });
+        }
+        (InProcTransport { peers }, endpoints)
+    }
+
+    pub fn node_count(&self) -> u32 {
+        self.peers.len() as u32
+    }
+
+    /// Round-trip request to `to`; blocks until the worker replies.
+    pub fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
+        let peer = self
+            .peers
+            .get(to as usize)
+            .ok_or_else(|| FanError::Transport(format!("no such node {to}")))?;
+        let (reply_tx, reply_rx) = channel();
+        peer.send(Message {
+            from,
+            req,
+            reply: reply_tx,
+        })
+        .map_err(|_| FanError::Transport(format!("node {to} is down")))?;
+        reply_rx
+            .recv()
+            .map_err(|_| FanError::Transport(format!("node {to} dropped the reply")))
+    }
+
+    /// Fire-and-forget shutdown to every node.
+    pub fn shutdown_all(&self) {
+        for (to, peer) in self.peers.iter().enumerate() {
+            let (reply_tx, _reply_rx) = channel();
+            let _ = peer.send(Message {
+                from: u32::MAX,
+                req: Request::Shutdown,
+                reply: reply_tx,
+            });
+            let _ = to;
+        }
+    }
+}
+
+impl Response {
+    /// Unwrap a `FileData` response.
+    pub fn into_file_data(self) -> Result<(Vec<u8>, u64, bool)> {
+        match self {
+            Response::FileData {
+                stored,
+                raw_len,
+                compressed,
+            } => Ok((stored, raw_len, compressed)),
+            Response::Err(e) => Err(FanError::Transport(e)),
+            other => Err(FanError::Transport(format!(
+                "expected FileData, got {other:?}"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::thread;
+
+    /// Minimal echo worker used to exercise the transport alone.
+    fn spawn_echo(ep: NodeEndpoint) -> thread::JoinHandle<u32> {
+        thread::spawn(move || {
+            let mut served = 0;
+            while let Ok(msg) = ep.inbox.recv() {
+                match msg.req {
+                    Request::Shutdown => break,
+                    Request::ReadFile { path } => {
+                        served += 1;
+                        let _ = msg.reply.send(Response::FileData {
+                            stored: path.into_bytes(),
+                            raw_len: 0,
+                            compressed: false,
+                        });
+                    }
+                    _ => {
+                        let _ = msg.reply.send(Response::Ok);
+                    }
+                }
+            }
+            served
+        })
+    }
+
+    #[test]
+    fn roundtrip_between_nodes() {
+        let (tp, eps) = InProcTransport::fully_connected(3);
+        let handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        let resp = tp
+            .call(0, 2, Request::ReadFile { path: "/x/y".into() })
+            .unwrap();
+        let (data, _, _) = resp.into_file_data().unwrap();
+        assert_eq!(data, b"/x/y");
+        tp.shutdown_all();
+        let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 1);
+    }
+
+    #[test]
+    fn unknown_node_is_error() {
+        let (tp, _eps) = InProcTransport::fully_connected(2);
+        assert!(tp.call(0, 9, Request::Shutdown).is_err());
+    }
+
+    #[test]
+    fn many_concurrent_callers() {
+        let (tp, eps) = InProcTransport::fully_connected(2);
+        let handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        let mut callers = Vec::new();
+        for i in 0..8 {
+            let tp = tp.clone();
+            callers.push(thread::spawn(move || {
+                for j in 0..50 {
+                    let r = tp
+                        .call(0, 1, Request::ReadFile {
+                            path: format!("/f/{i}_{j}"),
+                        })
+                        .unwrap();
+                    let (d, _, _) = r.into_file_data().unwrap();
+                    assert_eq!(d, format!("/f/{i}_{j}").into_bytes());
+                }
+            }));
+        }
+        for c in callers {
+            c.join().unwrap();
+        }
+        tp.shutdown_all();
+        let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 400);
+    }
+}

@@ -1,0 +1,323 @@
+//! A FanStore node: local partition store, replicated input metadata,
+//! homed output metadata, the refcount cache, and the worker thread that
+//! services peer requests (paper §5.1, Fig 2).
+//!
+//! In `InProc` mode every node is a worker thread plus a shared-state
+//! handle; "remote" reads between nodes are real request/response messages
+//! through [`crate::net::transport`] carrying the stored (possibly
+//! compressed) bytes.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::cache::RefCountCache;
+use crate::error::Result;
+use crate::metadata::placement::Placement;
+use crate::metadata::record::{FileLocation, FileMeta};
+use crate::metadata::table::MetaTable;
+use crate::net::transport::{NodeEndpoint, Request, Response};
+use crate::storage::disk::DiskStore;
+
+/// Per-node I/O accounting used by the experiment reports.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct NodeStats {
+    pub local_reads: u64,
+    pub remote_reads_served: u64,
+    pub remote_reads_issued: u64,
+    pub bytes_read_local: u64,
+    pub bytes_served_remote: u64,
+    pub bytes_fetched_remote: u64,
+    pub decompressions: u64,
+    pub outputs_committed: u64,
+    pub output_bytes: u64,
+}
+
+/// Mutable node state shared by the local VFS clients and the worker thread.
+pub struct NodeState {
+    pub id: u32,
+    /// Dumped input partitions + path index (paper §5.2).
+    pub store: DiskStore,
+    /// Replicated input metadata — identical on every node (§5.3).
+    pub input_meta: MetaTable,
+    /// Output metadata homed on this node by the consistent hash (§5.3).
+    pub output_meta: MetaTable,
+    /// Output file bytes kept on their originating node (§5.4: the data is
+    /// buffered locally; only the metadata entry is forwarded on close()).
+    pub output_data: HashMap<String, Arc<Vec<u8>>>,
+    /// Refcount cache of decompressed input content (§5.4).
+    pub cache: RefCountCache,
+    pub placement: Placement,
+    pub stats: NodeStats,
+}
+
+impl NodeState {
+    pub fn new(id: u32, store: DiskStore, placement: Placement) -> Self {
+        NodeState {
+            id,
+            store,
+            input_meta: MetaTable::new(),
+            output_meta: MetaTable::new(),
+            output_data: HashMap::new(),
+            cache: RefCountCache::new(),
+            placement,
+            stats: NodeStats::default(),
+        }
+    }
+
+    /// Serve a peer's request (also used directly for self-requests so the
+    /// local path does not pay a channel round trip).
+    pub fn serve(&mut self, req: &Request) -> Response {
+        match req {
+            Request::ReadFile { path } => match self.store.read_stored(path) {
+                Ok((stored, at)) => {
+                    self.stats.remote_reads_served += 1;
+                    self.stats.bytes_served_remote += stored.len() as u64;
+                    Response::FileData {
+                        stored,
+                        raw_len: at.raw_len,
+                        compressed: at.compressed,
+                    }
+                }
+                Err(_) => match self.output_data.get(path.as_str()) {
+                    Some(data) => Response::FileData {
+                        stored: data.as_ref().clone(),
+                        raw_len: data.len() as u64,
+                        compressed: false,
+                    },
+                    None => Response::Err(format!("ENOENT {path}")),
+                },
+            },
+            Request::StatOutput { path } => match self.output_meta.get(path) {
+                Some(m) => Response::Meta {
+                    stat: m.stat,
+                    origin: m.location.node,
+                },
+                None => Response::Err(format!("ENOENT {path}")),
+            },
+            Request::CommitOutput { path, meta } => {
+                self.output_meta.insert(path, meta.clone());
+                Response::Ok
+            }
+            Request::ListOutputs { dir } => match self.output_meta.readdir(dir) {
+                Ok(names) => Response::Names(names.to_vec()),
+                Err(_) => Response::Names(Vec::new()),
+            },
+            Request::Shutdown => Response::Ok,
+        }
+    }
+}
+
+/// Handle to a running node: shared state + its worker thread.
+pub struct FanStoreNode {
+    pub id: u32,
+    pub state: Arc<Mutex<NodeState>>,
+    worker: Option<JoinHandle<u64>>,
+}
+
+impl FanStoreNode {
+    /// Spawn the worker thread servicing `endpoint`.
+    pub fn spawn(state: Arc<Mutex<NodeState>>, endpoint: NodeEndpoint) -> Self {
+        let id = endpoint.node_id;
+        let thread_state = Arc::clone(&state);
+        let worker = std::thread::Builder::new()
+            .name(format!("fanstore-node-{id}"))
+            .spawn(move || {
+                let mut served = 0u64;
+                while let Ok(msg) = endpoint.inbox.recv() {
+                    if matches!(msg.req, Request::Shutdown) {
+                        let _ = msg.reply.send(Response::Ok);
+                        break;
+                    }
+                    let resp = thread_state.lock().unwrap().serve(&msg.req);
+                    served += 1;
+                    let _ = msg.reply.send(resp);
+                }
+                served
+            })
+            .expect("spawn node worker");
+        FanStoreNode {
+            id,
+            state,
+            worker: Some(worker),
+        }
+    }
+
+    /// Join the worker (after `Transport::shutdown_all`); returns requests
+    /// served.
+    pub fn join(mut self) -> u64 {
+        self.worker
+            .take()
+            .map(|h| h.join().unwrap_or(0))
+            .unwrap_or(0)
+    }
+}
+
+/// Load a set of partition blobs into a node's store under `mount`.
+pub fn load_partitions(
+    state: &mut NodeState,
+    parts: impl IntoIterator<Item = (u32, Vec<u8>)>,
+    mount: &str,
+) -> Result<u32> {
+    let mut n = 0;
+    for (pid, blob) in parts {
+        n += state.store.load_partition(pid, blob, mount)?;
+    }
+    Ok(n)
+}
+
+/// Build the replicated input-metadata table from partition blobs.
+/// Every node runs this over the *full* partition list (metadata broadcast,
+/// §5.3) even though it only dumps its own partitions' data.
+pub fn index_input_metadata(
+    table: &mut MetaTable,
+    blobs: &[(u32, Vec<u8>)],
+    mount: &str,
+    placement: &Placement,
+) -> Result<()> {
+    for (pid, blob) in blobs {
+        let mut reader = crate::partition::format::PartitionReader::new(blob)?;
+        while let Some((e, data_off)) = reader.next_entry()? {
+            let path = format!("{}/{}", mount.trim_end_matches('/'), e.name);
+            table.insert(
+                &path,
+                FileMeta {
+                    stat: e.stat,
+                    location: FileLocation {
+                        node: placement.partition_primary(*pid),
+                        partition: *pid,
+                        offset: data_off,
+                        stored_len: e.stored_len(),
+                        compressed: e.is_compressed(),
+                    },
+                },
+            );
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::metadata::record::FileStat;
+    use crate::net::transport::InProcTransport;
+    use crate::partition::builder::{build_partitions, InputFile};
+
+    fn files(n: usize) -> Vec<InputFile> {
+        (0..n)
+            .map(|i| InputFile {
+                path: format!("train/f{i}"),
+                data: vec![i as u8; 100 + i],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn serve_read_local_file() {
+        let fs = files(4);
+        let (blobs, _) = build_partitions(&fs, 1, Codec::None).unwrap();
+        let placement = Placement::new(1, 1, 1);
+        let mut st = NodeState::new(0, DiskStore::in_memory(), placement);
+        st.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        let resp = st.serve(&Request::ReadFile {
+            path: "/m/train/f2".into(),
+        });
+        match resp {
+            Response::FileData { stored, raw_len, compressed } => {
+                assert_eq!(stored, vec![2u8; 102]);
+                assert_eq!(raw_len, 102);
+                assert!(!compressed);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert_eq!(st.stats.remote_reads_served, 1);
+    }
+
+    #[test]
+    fn serve_missing_is_error() {
+        let placement = Placement::new(1, 1, 1);
+        let mut st = NodeState::new(0, DiskStore::in_memory(), placement);
+        assert!(matches!(
+            st.serve(&Request::ReadFile { path: "/nope".into() }),
+            Response::Err(_)
+        ));
+    }
+
+    #[test]
+    fn worker_thread_end_to_end() {
+        let fs = files(6);
+        let (blobs, _) = build_partitions(&fs, 2, Codec::None).unwrap();
+        let placement = Placement::new(2, 2, 1);
+        let (tp, mut eps) = InProcTransport::fully_connected(2);
+        let ep1 = eps.pop().unwrap();
+        let _ep0 = eps.pop().unwrap();
+
+        // node 1 holds partition 1 (files 1,3,5)
+        let mut st1 = NodeState::new(1, DiskStore::in_memory(), placement.clone());
+        st1.store.load_partition(1, blobs[1].clone(), "/m").unwrap();
+        let node1 = FanStoreNode::spawn(Arc::new(Mutex::new(st1)), ep1);
+
+        // node 0 fetches a remote file from node 1
+        let resp = tp
+            .call(0, 1, Request::ReadFile { path: "/m/train/f3".into() })
+            .unwrap();
+        let (stored, raw_len, compressed) = resp.into_file_data().unwrap();
+        assert_eq!(stored, vec![3u8; 103]);
+        assert_eq!(raw_len, 103);
+        assert!(!compressed);
+
+        tp.shutdown_all();
+        assert_eq!(node1.join(), 1);
+    }
+
+    #[test]
+    fn commit_and_stat_output() {
+        let placement = Placement::new(1, 1, 1);
+        let mut st = NodeState::new(0, DiskStore::in_memory(), placement);
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 42),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 42,
+                compressed: false,
+            },
+        };
+        st.serve(&Request::CommitOutput {
+            path: "/out/ckpt_1.h5".into(),
+            meta,
+        });
+        match st.serve(&Request::StatOutput {
+            path: "/out/ckpt_1.h5".into(),
+        }) {
+            Response::Meta { stat, origin } => {
+                assert_eq!(stat.size, 42);
+                assert_eq!(origin, 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        match st.serve(&Request::ListOutputs { dir: "/out".into() }) {
+            Response::Names(names) => assert_eq!(names, vec!["ckpt_1.h5"]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn index_metadata_covers_all_partitions() {
+        let fs = files(10);
+        let (blobs, _) = build_partitions(&fs, 4, Codec::None).unwrap();
+        let placement = Placement::new(4, 4, 1);
+        let blobs: Vec<(u32, Vec<u8>)> = blobs.into_iter().enumerate().map(|(i, b)| (i as u32, b)).collect();
+        let mut table = MetaTable::new();
+        index_input_metadata(&mut table, &blobs, "/m", &placement).unwrap();
+        assert_eq!(table.file_count(), 10);
+        for i in 0..10 {
+            let m = table.get(&format!("/m/train/f{i}")).unwrap();
+            assert_eq!(m.location.partition, (i % 4) as u32);
+            assert_eq!(m.location.node, (i % 4) as u32);
+        }
+    }
+}

@@ -1,0 +1,211 @@
+//! The data-preparation program (paper §5.2 / §6.3).
+//!
+//! "A user will have to pass into a preparation program a list of all files
+//! involved. Large datasets originally stored in the shared file system are
+//! then reorganized into partitions. Each partition contains an exclusive
+//! subset of the files."
+//!
+//! `build_partitions` packs an input list into `n_partitions` blobs
+//! round-robin (which balances both file count and — for i.i.d. sizes —
+//! bytes), optionally compressing each file.  It returns the blobs plus
+//! [`BuildStats`] used by the §6.3 prep-cost experiment.
+
+use std::time::Instant;
+
+use crate::compress::Codec;
+use crate::error::Result;
+use crate::metadata::record::FileStat;
+use crate::partition::format::PartitionWriter;
+
+/// One input file handed to the preparation program.
+#[derive(Clone, Debug)]
+pub struct InputFile {
+    /// Dataset-relative path.
+    pub path: String,
+    /// Raw contents.
+    pub data: Vec<u8>,
+}
+
+/// Prep-run accounting (paper §6.3 reports minutes per dataset ± compression).
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    pub files: usize,
+    pub raw_bytes: u64,
+    pub stored_bytes: u64,
+    pub compressed_files: usize,
+    pub wall_seconds: f64,
+}
+
+impl BuildStats {
+    /// Overall ratio (≥ 1.0; 1.0 when nothing compressed).
+    pub fn ratio(&self) -> f64 {
+        if self.stored_bytes == 0 {
+            1.0
+        } else {
+            self.raw_bytes as f64 / self.stored_bytes as f64
+        }
+    }
+}
+
+/// Pack `files` into `n_partitions` blobs.  File `i` goes to partition
+/// `i % n_partitions` (exclusive subsets).  Inode numbers are assigned
+/// sequentially, mirroring the prep program's single pass.
+pub fn build_partitions(
+    files: &[InputFile],
+    n_partitions: u32,
+    codec: Codec,
+) -> Result<(Vec<Vec<u8>>, BuildStats)> {
+    assert!(n_partitions > 0);
+    let start = Instant::now();
+    let mut writers: Vec<PartitionWriter> =
+        (0..n_partitions).map(|_| PartitionWriter::new()).collect();
+    let mut stats = BuildStats {
+        files: files.len(),
+        ..Default::default()
+    };
+    for (i, f) in files.iter().enumerate() {
+        let w = &mut writers[i % n_partitions as usize];
+        let stat = FileStat::regular(i as u64 + 1, f.data.len() as u64);
+        let before = w.len();
+        w.push(&f.path, stat, &f.data, codec)?;
+        stats.raw_bytes += f.data.len() as u64;
+        let entry_bytes = w.len() - before;
+        let stored = entry_bytes - super::format::ENTRY_FIXED_BYTES;
+        stats.stored_bytes += stored as u64;
+        if stored < f.data.len() {
+            stats.compressed_files += 1;
+        }
+    }
+    stats.wall_seconds = start.elapsed().as_secs_f64();
+    Ok((writers.into_iter().map(|w| w.finish()).collect(), stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::partition::format::PartitionReader;
+    use crate::util::prng::Prng;
+
+    fn gen_files(n: usize, size: usize, seed: u64) -> Vec<InputFile> {
+        let mut rng = Prng::new(seed);
+        (0..n)
+            .map(|i| {
+                let mut data = vec![0u8; size];
+                rng.fill_bytes(&mut data);
+                InputFile {
+                    path: format!("d{}/f{i}", i % 7),
+                    data,
+                }
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exclusive_round_robin_subsets() {
+        let files = gen_files(26, 100, 1);
+        let (blobs, stats) = build_partitions(&files, 4, Codec::None).unwrap();
+        assert_eq!(blobs.len(), 4);
+        assert_eq!(stats.files, 26);
+        let mut seen = std::collections::HashSet::new();
+        let mut counts = Vec::new();
+        for blob in &blobs {
+            let entries = PartitionReader::new(blob).unwrap().read_all().unwrap();
+            counts.push(entries.len());
+            for e in entries {
+                assert!(seen.insert(e.name.clone()), "duplicate {}", e.name);
+            }
+        }
+        assert_eq!(seen.len(), 26);
+        // round-robin balance: 26 files over 4 partitions = 7,7,6,6
+        counts.sort_unstable();
+        assert_eq!(counts, vec![6, 6, 7, 7]);
+    }
+
+    #[test]
+    fn stats_track_bytes() {
+        let files = gen_files(10, 500, 2);
+        let (_, stats) = build_partitions(&files, 2, Codec::None).unwrap();
+        assert_eq!(stats.raw_bytes, 5000);
+        assert_eq!(stats.stored_bytes, 5000);
+        assert_eq!(stats.compressed_files, 0);
+        assert!((stats.ratio() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn compression_reduces_stored_bytes() {
+        // compressible: constant blocks
+        let files: Vec<InputFile> = (0..8)
+            .map(|i| InputFile {
+                path: format!("c/f{i}"),
+                data: vec![i as u8; 4096],
+            })
+            .collect();
+        let (blobs, stats) = build_partitions(&files, 2, Codec::Lzss(5)).unwrap();
+        assert!(stats.ratio() > 10.0, "ratio {}", stats.ratio());
+        assert_eq!(stats.compressed_files, 8);
+        // and the blobs decode back to the originals
+        for blob in &blobs {
+            let mut r = PartitionReader::new(blob).unwrap();
+            while let Some((e, _)) = r.next_entry().unwrap() {
+                let raw = crate::compress::lzss::decompress(&e.data, e.stat.size as usize).unwrap();
+                assert!(raw.iter().all(|&b| b == raw[0]));
+                assert_eq!(raw.len(), 4096);
+            }
+        }
+    }
+
+    #[test]
+    fn property_partition_roundtrip() {
+        crate::util::proptest_lite::check("partition roundtrip", 0xBEEF, 25, |rng| {
+            let n = rng.index(40) + 1;
+            let parts = (rng.index(8) + 1) as u32;
+            let mut files = Vec::new();
+            for i in 0..n {
+                let len = rng.index(2048);
+                let mut data = vec![0u8; len];
+                if rng.chance(0.5) {
+                    rng.fill_bytes(&mut data);
+                } else {
+                    data.fill(rng.next_u64() as u8);
+                }
+                files.push(InputFile {
+                    path: format!("p/{i}"),
+                    data,
+                });
+            }
+            let codec = if rng.chance(0.5) {
+                Codec::Lzss((rng.index(9) + 1) as u8)
+            } else {
+                Codec::None
+            };
+            let (blobs, stats) = build_partitions(&files, parts, codec)
+                .map_err(|e| e.to_string())?;
+            crate::prop_assert!(blobs.len() == parts as usize, "blob count");
+            let mut total = 0usize;
+            for blob in &blobs {
+                let entries = PartitionReader::new(blob)
+                    .map_err(|e| e.to_string())?
+                    .read_all()
+                    .map_err(|e| e.to_string())?;
+                for e in &entries {
+                    let idx: usize = e.name[2..].parse().unwrap();
+                    let raw = if e.is_compressed() {
+                        crate::compress::lzss::decompress(&e.data, e.stat.size as usize)
+                            .map_err(|e| e.to_string())?
+                    } else {
+                        e.data.clone()
+                    };
+                    crate::prop_assert!(
+                        raw == files[idx].data,
+                        "content mismatch for {}",
+                        e.name
+                    );
+                }
+                total += entries.len();
+            }
+            crate::prop_assert!(total == n, "lost files: {total} != {n}");
+            crate::prop_assert!(stats.files == n, "stats.files");
+            Ok(())
+        });
+    }
+}

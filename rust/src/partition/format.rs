@@ -1,0 +1,310 @@
+//! Byte-exact Table 3 partition layout.
+//!
+//! ```text
+//! field      | num_files | file_name | stat      | compressed_size | data
+//! byte_range | 0 - 3     | 4 - 259   | 260 - 403 | 404 - 411       | 412 - 411+data.size
+//! ```
+//! `num_files` is a 4-byte LE count (Table 3's byte range; the prose says
+//! "eight bytes" — we follow the table and unit-test the exact offsets).
+//! Each entry is a 256-byte NUL-padded path, the 144-byte stat image, an
+//! 8-byte `compressed_size` (0 = stored raw; otherwise the stored length),
+//! then the data bytes.  Entries repeat back-to-back.
+
+use crate::compress::Codec;
+use crate::error::{FanError, Result};
+use crate::metadata::record::{FileStat, STAT_BYTES};
+
+/// Length of the fixed file-name field.
+pub const NAME_BYTES: usize = 256;
+/// Header length (the num_files field).
+pub const HEADER_BYTES: usize = 4;
+/// Per-entry fixed overhead before the data bytes.
+pub const ENTRY_FIXED_BYTES: usize = NAME_BYTES + STAT_BYTES + 8;
+
+/// One packed file.
+#[derive(Clone, Debug, PartialEq)]
+pub struct PartitionEntry {
+    /// Dataset-relative path (e.g. `ILSVRC2012_img_train/n015/x.JPEG`).
+    pub name: String,
+    /// POSIX stat of the *original* file (`stat.size` = raw length).
+    pub stat: FileStat,
+    /// 0 when `data` holds raw bytes; else the stored (compressed) length.
+    pub compressed_size: u64,
+    /// Stored bytes (compressed when `compressed_size != 0`).
+    pub data: Vec<u8>,
+}
+
+impl PartitionEntry {
+    pub fn is_compressed(&self) -> bool {
+        self.compressed_size != 0
+    }
+
+    /// Stored length on disk.
+    pub fn stored_len(&self) -> u64 {
+        if self.is_compressed() {
+            self.compressed_size
+        } else {
+            self.stat.size
+        }
+    }
+}
+
+/// Streaming writer for a partition blob.
+pub struct PartitionWriter {
+    buf: Vec<u8>,
+    count: u32,
+}
+
+impl PartitionWriter {
+    pub fn new() -> Self {
+        PartitionWriter {
+            buf: vec![0u8; HEADER_BYTES],
+            count: 0,
+        }
+    }
+
+    /// Append one file; `codec` decides whether data is stored compressed.
+    pub fn push(&mut self, name: &str, stat: FileStat, raw: &[u8], codec: Codec) -> Result<()> {
+        if name.len() > NAME_BYTES - 1 {
+            return Err(FanError::Format(format!(
+                "file name longer than {} bytes: {name}",
+                NAME_BYTES - 1
+            )));
+        }
+        debug_assert_eq!(stat.size as usize, raw.len(), "stat.size must match data");
+        let mut namebuf = [0u8; NAME_BYTES];
+        namebuf[..name.len()].copy_from_slice(name.as_bytes());
+        self.buf.extend_from_slice(&namebuf);
+        self.buf.extend_from_slice(&stat.encode());
+        match codec.compress(raw) {
+            Some(c) => {
+                self.buf.extend_from_slice(&(c.len() as u64).to_le_bytes());
+                self.buf.extend_from_slice(&c);
+            }
+            None => {
+                self.buf.extend_from_slice(&0u64.to_le_bytes());
+                self.buf.extend_from_slice(raw);
+            }
+        }
+        self.count += 1;
+        Ok(())
+    }
+
+    /// Finish: patch the header count and return the blob.
+    pub fn finish(mut self) -> Vec<u8> {
+        self.buf[0..4].copy_from_slice(&self.count.to_le_bytes());
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    pub fn count(&self) -> u32 {
+        self.count
+    }
+}
+
+impl Default for PartitionWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Reader over a partition blob; yields entries and their data offsets.
+pub struct PartitionReader<'a> {
+    blob: &'a [u8],
+    pos: usize,
+    remaining: u32,
+}
+
+impl<'a> PartitionReader<'a> {
+    pub fn new(blob: &'a [u8]) -> Result<Self> {
+        if blob.len() < HEADER_BYTES {
+            return Err(FanError::Format("partition shorter than header".into()));
+        }
+        let count = u32::from_le_bytes(blob[0..4].try_into().unwrap());
+        Ok(PartitionReader {
+            blob,
+            pos: HEADER_BYTES,
+            remaining: count,
+        })
+    }
+
+    pub fn count(&self) -> u32 {
+        self.remaining
+    }
+
+    /// Next entry plus the absolute byte offset of its data within the blob.
+    pub fn next_entry(&mut self) -> Result<Option<(PartitionEntry, u64)>> {
+        if self.remaining == 0 {
+            return Ok(None);
+        }
+        let b = self.blob;
+        if self.pos + ENTRY_FIXED_BYTES > b.len() {
+            return Err(FanError::Format(format!(
+                "entry header truncated at {}",
+                self.pos
+            )));
+        }
+        let name_raw = &b[self.pos..self.pos + NAME_BYTES];
+        let name_end = name_raw.iter().position(|&c| c == 0).unwrap_or(NAME_BYTES);
+        let name = std::str::from_utf8(&name_raw[..name_end])
+            .map_err(|_| FanError::Format("non-utf8 file name".into()))?
+            .to_string();
+        let stat = FileStat::decode(&b[self.pos + NAME_BYTES..self.pos + NAME_BYTES + STAT_BYTES])?;
+        let cs_off = self.pos + NAME_BYTES + STAT_BYTES;
+        let compressed_size = u64::from_le_bytes(b[cs_off..cs_off + 8].try_into().unwrap());
+        let data_off = cs_off + 8;
+        let stored = if compressed_size != 0 {
+            compressed_size
+        } else {
+            stat.size
+        } as usize;
+        if data_off + stored > b.len() {
+            return Err(FanError::Format(format!(
+                "entry data truncated: need {} at {}",
+                stored, data_off
+            )));
+        }
+        let data = b[data_off..data_off + stored].to_vec();
+        self.pos = data_off + stored;
+        self.remaining -= 1;
+        Ok(Some((
+            PartitionEntry {
+                name,
+                stat,
+                compressed_size,
+                data,
+            },
+            data_off as u64,
+        )))
+    }
+
+    /// Read all entries (convenience for tests / prep verification).
+    pub fn read_all(mut self) -> Result<Vec<PartitionEntry>> {
+        let mut v = Vec::new();
+        while let Some((e, _)) = self.next_entry()? {
+            v.push(e);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn entry_bytes(name: &str, data: &[u8]) -> Vec<u8> {
+        let mut w = PartitionWriter::new();
+        w.push(name, FileStat::regular(1, data.len() as u64), data, Codec::None)
+            .unwrap();
+        w.finish()
+    }
+
+    #[test]
+    fn table3_byte_offsets_exact() {
+        // Paper Table 3: num_files 0-3, file_name 4-259, stat 260-403,
+        // compressed_size 404-411, data 412-(411+size).
+        let blob = entry_bytes("train/a.jpg", b"PIXELDATA");
+        assert_eq!(&blob[0..4], &1u32.to_le_bytes());
+        assert_eq!(&blob[4..15], b"train/a.jpg");
+        assert!(blob[15..260].iter().all(|&b| b == 0));
+        let stat = FileStat::decode(&blob[260..404]).unwrap();
+        assert_eq!(stat.size, 9);
+        assert_eq!(&blob[404..412], &0u64.to_le_bytes());
+        assert_eq!(&blob[412..421], b"PIXELDATA");
+        assert_eq!(blob.len(), 421);
+    }
+
+    #[test]
+    fn roundtrip_multiple_files() {
+        let mut rng = Prng::new(1);
+        let mut w = PartitionWriter::new();
+        let mut originals = Vec::new();
+        for i in 0..50 {
+            let mut data = vec![0u8; rng.index(2000)];
+            rng.fill_bytes(&mut data);
+            let name = format!("dir{}/file_{i}.bin", i % 5);
+            w.push(&name, FileStat::regular(i as u64, data.len() as u64), &data, Codec::None)
+                .unwrap();
+            originals.push((name, data));
+        }
+        let blob = w.finish();
+        let entries = PartitionReader::new(&blob).unwrap().read_all().unwrap();
+        assert_eq!(entries.len(), 50);
+        for (e, (name, data)) in entries.iter().zip(&originals) {
+            assert_eq!(&e.name, name);
+            assert_eq!(&e.data, data);
+            assert!(!e.is_compressed());
+        }
+    }
+
+    #[test]
+    fn compressed_entry_roundtrip() {
+        let data: Vec<u8> = b"0123456789".iter().cycle().take(4096).copied().collect();
+        let mut w = PartitionWriter::new();
+        w.push("c.bin", FileStat::regular(1, 4096), &data, Codec::Lzss(5))
+            .unwrap();
+        let blob = w.finish();
+        let mut r = PartitionReader::new(&blob).unwrap();
+        let (e, _) = r.next_entry().unwrap().unwrap();
+        assert!(e.is_compressed());
+        assert!(e.stored_len() < 4096);
+        let raw = crate::compress::lzss::decompress(&e.data, 4096).unwrap();
+        assert_eq!(raw, data);
+    }
+
+    #[test]
+    fn incompressible_stored_raw() {
+        let mut rng = Prng::new(9);
+        let mut data = vec![0u8; 1024];
+        rng.fill_bytes(&mut data);
+        let mut w = PartitionWriter::new();
+        w.push("r.bin", FileStat::regular(1, 1024), &data, Codec::Lzss(9))
+            .unwrap();
+        let blob = w.finish();
+        let (e, _) = PartitionReader::new(&blob).unwrap().next_entry().unwrap().unwrap();
+        assert_eq!(e.compressed_size, 0, "random data must be stored raw");
+        assert_eq!(e.data, data);
+    }
+
+    #[test]
+    fn long_name_rejected() {
+        let mut w = PartitionWriter::new();
+        let name = "x".repeat(NAME_BYTES);
+        assert!(w
+            .push(&name, FileStat::regular(1, 0), b"", Codec::None)
+            .is_err());
+    }
+
+    #[test]
+    fn truncated_blob_rejected() {
+        let blob = entry_bytes("a", b"abcdef");
+        assert!(PartitionReader::new(&blob[..blob.len() - 2])
+            .unwrap()
+            .read_all()
+            .is_err());
+        assert!(PartitionReader::new(&blob[..2]).is_err());
+    }
+
+    #[test]
+    fn data_offset_reported_correctly() {
+        let blob = entry_bytes("a", b"XYZ");
+        let mut r = PartitionReader::new(&blob).unwrap();
+        let (_, off) = r.next_entry().unwrap().unwrap();
+        assert_eq!(&blob[off as usize..off as usize + 3], b"XYZ");
+    }
+
+    #[test]
+    fn empty_partition() {
+        let blob = PartitionWriter::new().finish();
+        let entries = PartitionReader::new(&blob).unwrap().read_all().unwrap();
+        assert!(entries.is_empty());
+    }
+}

@@ -1,0 +1,18 @@
+//! Dataset partitions (paper §5.2, Table 3).
+//!
+//! The data-preparation step reorganizes a dataset (millions of small files)
+//! into a handful of partition blobs — "the preprocessed dataset has a fixed
+//! number of files: 48 for the GPU cluster and 512 for the CPU cluster"
+//! (§6.5.2) — which is what turns the shared-FS workload into a constant,
+//! scale-independent cost.
+//!
+//! [`format`] is the byte-exact Table 3 layout; [`builder`] is the
+//! preparation program (pack + optional LZSS); [`PartitionIndex`] is the
+//! load-time index of file → (offset, length) built when a node dumps a
+//! partition to its local storage.
+
+pub mod builder;
+pub mod format;
+
+pub use builder::{build_partitions, BuildStats, InputFile};
+pub use format::{PartitionEntry, PartitionReader, PartitionWriter, NAME_BYTES};

@@ -1,0 +1,269 @@
+//! Parser for `artifacts/manifest.txt` (grammar in python/compile/aot.py).
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{FanError, Result};
+use crate::runtime::tensor::DType;
+
+/// What role an input plays.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ArgKind {
+    /// Trainable parameter (the step returns its new value positionally).
+    Param,
+    /// Per-iteration data (batch, labels, learning rate, ...).
+    Data,
+}
+
+/// One declared input/output tensor.
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub kind: ArgKind,
+}
+
+impl TensorSpec {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn byte_len(&self) -> usize {
+        self.element_count() * self.dtype.size()
+    }
+}
+
+/// One AOT-compiled graph.
+#[derive(Clone, Debug)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub hlo_path: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub params_path: Option<PathBuf>,
+}
+
+impl ArtifactSpec {
+    pub fn param_count(&self) -> usize {
+        self.inputs
+            .iter()
+            .filter(|t| t.kind == ArgKind::Param)
+            .count()
+    }
+
+    /// Load the initial parameters binary (f32 arrays, declared order).
+    pub fn load_params(&self) -> Result<Vec<crate::runtime::tensor::Tensor>> {
+        let path = self
+            .params_path
+            .as_ref()
+            .ok_or_else(|| FanError::Manifest(format!("{} has no params", self.name)))?;
+        let bytes = std::fs::read(path)?;
+        let mut out = Vec::new();
+        let mut off = 0usize;
+        for spec in self.inputs.iter().filter(|t| t.kind == ArgKind::Param) {
+            let len = spec.byte_len();
+            if off + len > bytes.len() {
+                return Err(FanError::Manifest(format!(
+                    "{}: params file too short",
+                    self.name
+                )));
+            }
+            out.push(crate::runtime::tensor::Tensor {
+                dtype: spec.dtype,
+                dims: spec.dims.clone(),
+                data: bytes[off..off + len].to_vec(),
+            });
+            off += len;
+        }
+        if off != bytes.len() {
+            return Err(FanError::Manifest(format!(
+                "{}: params file has {} trailing bytes",
+                self.name,
+                bytes.len() - off
+            )));
+        }
+        Ok(out)
+    }
+}
+
+/// The whole artifact set.
+#[derive(Clone, Debug, Default)]
+pub struct Manifest {
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+fn parse_dims(s: &str) -> Result<Vec<usize>> {
+    if s == "scalar" {
+        return Ok(Vec::new());
+    }
+    s.split('x')
+        .map(|d| {
+            d.parse()
+                .map_err(|_| FanError::Manifest(format!("bad dim {d}")))
+        })
+        .collect()
+}
+
+impl Manifest {
+    /// Parse `dir/manifest.txt`; paths are resolved relative to `dir`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref();
+        let text = std::fs::read_to_string(dir.join("manifest.txt")).map_err(|e| {
+            FanError::Manifest(format!(
+                "cannot read {}/manifest.txt (run `make artifacts`): {e}",
+                dir.display()
+            ))
+        })?;
+        let mut artifacts = Vec::new();
+        let mut cur: Option<ArtifactSpec> = None;
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let toks: Vec<&str> = line.split_whitespace().collect();
+            let err = |msg: &str| {
+                FanError::Manifest(format!("manifest line {}: {msg}", lineno + 1))
+            };
+            match toks[0] {
+                "artifact" => {
+                    if cur.is_some() {
+                        return Err(err("nested artifact"));
+                    }
+                    cur = Some(ArtifactSpec {
+                        name: toks.get(1).ok_or_else(|| err("missing name"))?.to_string(),
+                        hlo_path: PathBuf::new(),
+                        inputs: Vec::new(),
+                        outputs: Vec::new(),
+                        params_path: None,
+                    });
+                }
+                "hlo" => {
+                    let a = cur.as_mut().ok_or_else(|| err("hlo outside artifact"))?;
+                    a.hlo_path = dir.join(toks.get(1).ok_or_else(|| err("missing path"))?);
+                }
+                "in" | "out" => {
+                    let a = cur.as_mut().ok_or_else(|| err("field outside artifact"))?;
+                    if toks.len() < 4 {
+                        return Err(err("short tensor line"));
+                    }
+                    let kind = if toks[0] == "in" {
+                        match *toks.get(4).unwrap_or(&"data") {
+                            "param" => ArgKind::Param,
+                            _ => ArgKind::Data,
+                        }
+                    } else {
+                        ArgKind::Data
+                    };
+                    let spec = TensorSpec {
+                        name: toks[1].to_string(),
+                        dtype: DType::parse(toks[2])?,
+                        dims: parse_dims(toks[3])?,
+                        kind,
+                    };
+                    if toks[0] == "in" {
+                        a.inputs.push(spec);
+                    } else {
+                        a.outputs.push(spec);
+                    }
+                }
+                "params" => {
+                    let a = cur.as_mut().ok_or_else(|| err("params outside artifact"))?;
+                    a.params_path =
+                        Some(dir.join(toks.get(1).ok_or_else(|| err("missing path"))?));
+                }
+                "end" => {
+                    artifacts.push(cur.take().ok_or_else(|| err("end without artifact"))?);
+                }
+                other => return Err(err(&format!("unknown token {other}"))),
+            }
+        }
+        if cur.is_some() {
+            return Err(FanError::Manifest("unterminated artifact".into()));
+        }
+        Ok(Manifest { artifacts })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| FanError::Manifest(format!("no artifact named {name}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(body: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "fanstore_manifest_{}_{}",
+            std::process::id(),
+            body.len()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.txt"), body).unwrap();
+        dir
+    }
+
+    #[test]
+    fn parse_minimal() {
+        let dir = write_manifest(
+            "# comment\nartifact step\nhlo step.hlo.txt\nin w f32 2x3 param\nin x u8 4 data\nout out0 f32 scalar\nparams step.params.bin\nend\n",
+        );
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.get("step").unwrap();
+        assert_eq!(a.inputs.len(), 2);
+        assert_eq!(a.inputs[0].kind, ArgKind::Param);
+        assert_eq!(a.inputs[0].dims, vec![2, 3]);
+        assert_eq!(a.inputs[1].dtype, DType::U8);
+        assert_eq!(a.outputs[0].dims, Vec::<usize>::new());
+        assert_eq!(a.param_count(), 1);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unknown_token_rejected() {
+        let dir = write_manifest("artifact a\nbogus x\nend\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unterminated_rejected() {
+        let dir = write_manifest("artifact a\nhlo a.hlo.txt\n");
+        assert!(Manifest::load(&dir).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn params_loading_checks_length() {
+        let dir = write_manifest(
+            "artifact s\nhlo s.hlo.txt\nin w f32 2 param\nout o f32 scalar\nparams p.bin\nend\n",
+        );
+        std::fs::write(dir.join("p.bin"), [0u8; 8]).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let params = m.get("s").unwrap().load_params().unwrap();
+        assert_eq!(params.len(), 1);
+        assert_eq!(params[0].data.len(), 8);
+        // wrong size
+        std::fs::write(dir.join("p.bin"), [0u8; 9]).unwrap();
+        assert!(m.get("s").unwrap().load_params().is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn real_artifacts_manifest_parses_if_built() {
+        // integration-ish: only runs when `make artifacts` has been run
+        let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.txt").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.get("cnn_train_step").is_ok());
+            assert_eq!(m.artifacts.len(), 5);
+            let params = m.get("cnn_train_step").unwrap().load_params().unwrap();
+            assert_eq!(params.len(), 7);
+        }
+    }
+}

@@ -1,0 +1,14 @@
+//! PJRT runtime: load AOT artifacts and execute them from the hot path.
+//!
+//! Python runs once (`make artifacts`); afterwards the Rust binary is
+//! self-contained — [`manifest`] parses `artifacts/manifest.txt`, [`pjrt`]
+//! compiles each HLO-text module on the PJRT CPU client and exposes a typed
+//! `execute` for the trainer.
+
+pub mod manifest;
+pub mod pjrt;
+pub mod tensor;
+
+pub use manifest::{ArtifactSpec, Manifest, TensorSpec};
+pub use pjrt::Engine;
+pub use tensor::{DType, Tensor};

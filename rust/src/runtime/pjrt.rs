@@ -1,0 +1,272 @@
+//! PJRT execution engine (adapts /opt/xla-example/load_hlo).
+//!
+//! `Engine::load` compiles every artifact once on the PJRT CPU client;
+//! `execute` runs a compiled step with host [`Tensor`]s.  HLO *text* is the
+//! interchange format — see python/compile/aot.py for why.
+
+use std::collections::HashMap;
+
+use crate::error::{FanError, Result};
+use crate::runtime::manifest::{ArtifactSpec, Manifest};
+use crate::runtime::tensor::{DType, Tensor};
+
+fn xe(e: xla::Error) -> FanError {
+    FanError::Runtime(e.to_string())
+}
+
+fn element_type(dt: DType) -> xla::ElementType {
+    match dt {
+        DType::U8 => xla::ElementType::U8,
+        DType::I32 => xla::ElementType::S32,
+        DType::F32 => xla::ElementType::F32,
+    }
+}
+
+fn to_literal(t: &Tensor) -> Result<xla::Literal> {
+    xla::Literal::create_from_shape_and_untyped_data(element_type(t.dtype), &t.dims, &t.data)
+        .map_err(xe)
+}
+
+fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().map_err(xe)?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let ty = lit.ty().map_err(xe)?;
+    let dtype = match ty {
+        xla::ElementType::U8 => DType::U8,
+        xla::ElementType::S32 => DType::I32,
+        xla::ElementType::F32 => DType::F32,
+        other => {
+            return Err(FanError::Runtime(format!(
+                "unsupported output element type {other:?}"
+            )))
+        }
+    };
+    let mut data = vec![0u8; lit.size_bytes()];
+    match dtype {
+        DType::U8 => lit.copy_raw_to::<u8>(&mut data).map_err(xe)?,
+        DType::I32 => {
+            let mut tmp = vec![0i32; lit.element_count()];
+            lit.copy_raw_to::<i32>(&mut tmp).map_err(xe)?;
+            data.clear();
+            for v in tmp {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        DType::F32 => {
+            let mut tmp = vec![0f32; lit.element_count()];
+            lit.copy_raw_to::<f32>(&mut tmp).map_err(xe)?;
+            data.clear();
+            for v in tmp {
+                data.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    Ok(Tensor { dtype, dims, data })
+}
+
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// All compiled artifacts + the PJRT client.
+pub struct Engine {
+    #[allow(dead_code)]
+    client: xla::PjRtClient,
+    compiled: HashMap<String, Compiled>,
+    pub manifest: Manifest,
+}
+
+impl Engine {
+    /// Load + compile every artifact under `dir` (usually `artifacts/`).
+    pub fn load(dir: impl AsRef<std::path::Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        let mut compiled = HashMap::new();
+        for spec in &manifest.artifacts {
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .ok_or_else(|| FanError::Manifest("non-utf8 path".into()))?,
+            )
+            .map_err(xe)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xe)?;
+            compiled.insert(
+                spec.name.clone(),
+                Compiled {
+                    exe,
+                    spec: spec.clone(),
+                },
+            );
+        }
+        Ok(Engine {
+            client,
+            compiled,
+            manifest,
+        })
+    }
+
+    /// Load only the named artifacts (faster startup for examples).
+    pub fn load_subset(dir: impl AsRef<std::path::Path>, names: &[&str]) -> Result<Engine> {
+        let manifest = Manifest::load(&dir)?;
+        let client = xla::PjRtClient::cpu().map_err(xe)?;
+        let mut compiled = HashMap::new();
+        for name in names {
+            let spec = manifest.get(name)?.clone();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.hlo_path
+                    .to_str()
+                    .ok_or_else(|| FanError::Manifest("non-utf8 path".into()))?,
+            )
+            .map_err(xe)?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp).map_err(xe)?;
+            compiled.insert(spec.name.clone(), Compiled { exe, spec });
+        }
+        Ok(Engine {
+            client,
+            compiled,
+            manifest,
+        })
+    }
+
+    pub fn spec(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.compiled
+            .get(name)
+            .map(|c| &c.spec)
+            .ok_or_else(|| FanError::Manifest(format!("artifact {name} not loaded")))
+    }
+
+    /// Execute `name` with `inputs` (declared order), returning the output
+    /// tuple as host tensors.
+    pub fn execute(&self, name: &str, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        let c = self
+            .compiled
+            .get(name)
+            .ok_or_else(|| FanError::Manifest(format!("artifact {name} not loaded")))?;
+        if inputs.len() != c.spec.inputs.len() {
+            return Err(FanError::Runtime(format!(
+                "{name}: expected {} inputs, got {}",
+                c.spec.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (t, spec) in inputs.iter().zip(&c.spec.inputs) {
+            if t.dims != spec.dims || t.dtype != spec.dtype {
+                return Err(FanError::Runtime(format!(
+                    "{name}: input {} expects {:?}{:?}, got {:?}{:?}",
+                    spec.name, spec.dtype, spec.dims, t.dtype, t.dims
+                )));
+            }
+        }
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(to_literal)
+            .collect::<Result<Vec<_>>>()?;
+        let result = c.exe.execute::<xla::Literal>(&literals).map_err(xe)?;
+        let out_lit = result[0][0].to_literal_sync().map_err(xe)?;
+        // aot.py lowers with return_tuple=True: always a tuple
+        let parts = out_lit.to_tuple().map_err(xe)?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in &parts {
+            out.push(from_literal(p)?);
+        }
+        if out.len() != c.spec.outputs.len() {
+            return Err(FanError::Runtime(format!(
+                "{name}: manifest declares {} outputs, got {}",
+                c.spec.outputs.len(),
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> std::path::PathBuf {
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.txt").exists()
+    }
+
+    #[test]
+    fn preprocess_batch_executes() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::load_subset(artifacts_dir(), &["preprocess_batch"]).unwrap();
+        let spec = engine.spec("preprocess_batch").unwrap().clone();
+        let imgs = Tensor::from_u8(&spec.inputs[0].dims, vec![128u8; spec.inputs[0].element_count()]);
+        let flip = Tensor::zeros(DType::I32, &spec.inputs[1].dims);
+        let out = engine.execute("preprocess_batch", &[imgs, flip]).unwrap();
+        assert_eq!(out.len(), 1);
+        let vals = out[0].as_f32().unwrap();
+        // (128 - mean)/std for channel 0: (128-125.3)/63.0 ≈ 0.0429
+        assert!((vals[0] - 0.04285).abs() < 1e-3, "got {}", vals[0]);
+    }
+
+    #[test]
+    fn cnn_train_step_reduces_loss() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let engine = Engine::load_subset(artifacts_dir(), &["cnn_train_step"]).unwrap();
+        let spec = engine.spec("cnn_train_step").unwrap().clone();
+        let mut params = spec.load_params().unwrap();
+        let n = params.len();
+        // learnable batch: label = bright band position
+        let b = spec.inputs[n].dims[0];
+        let hw = spec.inputs[n].dims[1];
+        let mut img = vec![30u8; spec.inputs[n].element_count()];
+        let mut labels = vec![0i32; b];
+        for i in 0..b {
+            let lbl = (i % 10) as i32;
+            labels[i] = lbl;
+            // brighten a vertical band
+            let band = hw / 10;
+            for y in 0..hw {
+                for x in (lbl as usize * band)..((lbl as usize + 1) * band) {
+                    for ch in 0..3 {
+                        img[((i * hw + y) * hw + x) * 3 + ch] = 220;
+                    }
+                }
+            }
+        }
+        let images = Tensor::from_u8(&spec.inputs[n].dims, img);
+        let labels_t = Tensor::from_i32(&spec.inputs[n + 1].dims, &labels);
+        let flip = Tensor::zeros(DType::I32, &spec.inputs[n + 2].dims);
+        let mean = Tensor::from_f32(&[3], &[125.3, 123.0, 113.9]);
+        let std = Tensor::from_f32(&[3], &[63.0, 62.1, 66.7]);
+        let lr = Tensor::scalar_f32(0.05);
+        let mut first = None;
+        let mut last = 0.0;
+        for _ in 0..12 {
+            let mut inputs = params.clone();
+            inputs.push(images.clone());
+            inputs.push(labels_t.clone());
+            inputs.push(flip.clone());
+            inputs.push(mean.clone());
+            inputs.push(std.clone());
+            inputs.push(lr.clone());
+            let out = engine.execute("cnn_train_step", &inputs).unwrap();
+            params = out[..n].to_vec();
+            last = out[n].scalar_value().unwrap();
+            if first.is_none() {
+                first = Some(last);
+            }
+        }
+        let first = first.unwrap();
+        assert!(
+            last < first * 0.8,
+            "loss did not drop through PJRT: {first} -> {last}"
+        );
+    }
+}

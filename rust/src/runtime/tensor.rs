@@ -1,0 +1,143 @@
+//! Host tensors crossing the PJRT boundary.
+
+use crate::error::{FanError, Result};
+
+/// Element types used by the artifacts (manifest vocabulary).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    U8,
+    I32,
+    F32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Result<DType> {
+        match s {
+            "u8" => Ok(DType::U8),
+            "i32" => Ok(DType::I32),
+            "f32" => Ok(DType::F32),
+            other => Err(FanError::Manifest(format!("unknown dtype {other}"))),
+        }
+    }
+
+    pub fn size(&self) -> usize {
+        match self {
+            DType::U8 => 1,
+            DType::I32 => 4,
+            DType::F32 => 4,
+        }
+    }
+}
+
+/// A host-side dense tensor (row-major bytes).
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub dtype: DType,
+    pub dims: Vec<usize>,
+    pub data: Vec<u8>,
+}
+
+impl Tensor {
+    pub fn element_count(&self) -> usize {
+        self.dims.iter().product()
+    }
+
+    pub fn zeros(dtype: DType, dims: &[usize]) -> Tensor {
+        let n: usize = dims.iter().product();
+        Tensor {
+            dtype,
+            dims: dims.to_vec(),
+            data: vec![0u8; n * dtype.size()],
+        }
+    }
+
+    pub fn from_f32(dims: &[usize], values: &[f32]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::F32,
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i32(dims: &[usize], values: &[i32]) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), values.len());
+        let mut data = Vec::with_capacity(values.len() * 4);
+        for v in values {
+            data.extend_from_slice(&v.to_le_bytes());
+        }
+        Tensor {
+            dtype: DType::I32,
+            dims: dims.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_u8(dims: &[usize], values: Vec<u8>) -> Tensor {
+        assert_eq!(dims.iter().product::<usize>(), values.len());
+        Tensor {
+            dtype: DType::U8,
+            dims: dims.to_vec(),
+            data: values,
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::from_f32(&[], &[v])
+    }
+
+    pub fn as_f32(&self) -> Result<Vec<f32>> {
+        if self.dtype != DType::F32 {
+            return Err(FanError::Runtime("tensor is not f32".into()));
+        }
+        Ok(self
+            .data
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+
+    pub fn scalar_value(&self) -> Result<f32> {
+        let v = self.as_f32()?;
+        v.first()
+            .copied()
+            .ok_or_else(|| FanError::Runtime("empty tensor".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f32_roundtrip() {
+        let t = Tensor::from_f32(&[2, 2], &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(t.element_count(), 4);
+        assert_eq!(t.as_f32().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn scalar() {
+        let t = Tensor::scalar_f32(3.5);
+        assert_eq!(t.dims, Vec::<usize>::new());
+        assert_eq!(t.scalar_value().unwrap(), 3.5);
+    }
+
+    #[test]
+    fn zeros_size() {
+        let t = Tensor::zeros(DType::I32, &[3, 5]);
+        assert_eq!(t.data.len(), 60);
+        let u = Tensor::zeros(DType::U8, &[7]);
+        assert_eq!(u.data.len(), 7);
+    }
+
+    #[test]
+    #[should_panic]
+    fn mismatched_dims_panics() {
+        Tensor::from_f32(&[3], &[1.0]);
+    }
+}

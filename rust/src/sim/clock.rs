@@ -1,0 +1,49 @@
+//! Virtual time units.
+
+/// Virtual nanoseconds since simulation start.
+pub type SimNs = u64;
+
+pub const NS_PER_SEC: u64 = 1_000_000_000;
+pub const SEC: u64 = NS_PER_SEC;
+pub const MS: u64 = 1_000_000;
+pub const US: u64 = 1_000;
+
+/// Service time for moving `bytes` at `bytes_per_sec`.
+#[inline]
+pub fn transfer_ns(bytes: u64, bytes_per_sec: u64) -> SimNs {
+    if bytes_per_sec == 0 {
+        return 0;
+    }
+    // round up: a transfer always costs at least 1 ns
+    ((bytes as u128 * NS_PER_SEC as u128).div_ceil(bytes_per_sec as u128)) as SimNs
+}
+
+/// Seconds as f64 for reporting.
+#[inline]
+pub fn to_secs(ns: SimNs) -> f64 {
+    ns as f64 / NS_PER_SEC as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn transfer_scales() {
+        assert_eq!(transfer_ns(1_000_000_000, 1_000_000_000), NS_PER_SEC);
+        assert_eq!(transfer_ns(500, 1000), NS_PER_SEC / 2);
+        assert_eq!(transfer_ns(0, 1000), 0);
+        assert_eq!(transfer_ns(100, 0), 0);
+    }
+
+    #[test]
+    fn rounds_up() {
+        assert_eq!(transfer_ns(1, 1_000_000_000), 1);
+        assert_eq!(transfer_ns(3, 2_000_000_000), 2);
+    }
+
+    #[test]
+    fn to_secs_works() {
+        assert!((to_secs(1_500_000_000) - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,22 @@
+//! Discrete-event-lite simulation substrate.
+//!
+//! The paper's evaluation runs on clusters (24 GPU nodes, 512 CPU nodes) we
+//! do not have; the scaling figures (5, 6, 7, 8, 9, 11) are regenerated on a
+//! virtual-time simulator instead.  The model is deliberately simple and
+//! deterministic:
+//!
+//! * every simulated I/O thread carries its own virtual clock,
+//! * every contended device (a node's SSD, a node's NIC, the shared file
+//!   system's metadata server and OSTs) is a FIFO [`Resource`] timeline,
+//! * the [`ThreadSet`] scheduler always advances the globally-earliest
+//!   thread, so resource queueing is causally consistent.
+//!
+//! The FanStore logic running *on top* of the clock is the real thing — real
+//! metadata tables, real placement, real partition indexes — only device
+//! timings are modelled (DESIGN.md §1).
+
+pub mod clock;
+pub mod resource;
+
+pub use clock::{SimNs, MS, NS_PER_SEC, SEC, US};
+pub use resource::{Resource, ThreadSet};

@@ -1,0 +1,13 @@
+//! Storage backends: device timing models for the simulator and a real
+//! byte store for the in-process cluster.
+//!
+//! The §6.4 comparison (Fig 3/4) is FanStore vs **SSD** vs **SSD-fuse** vs
+//! **SFS (Lustre)**.  [`models`] parameterizes those devices from the paper's
+//! own single-node envelope; [`disk`] is the real local store a FanStore node
+//! dumps partitions into in `InProc` mode.
+
+pub mod disk;
+pub mod models;
+
+pub use disk::DiskStore;
+pub use models::{DeviceProfile, FuseModel, SharedFsModel, SsdModel};

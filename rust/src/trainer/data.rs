@@ -1,0 +1,182 @@
+//! Classification dataset for the end-to-end training path.
+//!
+//! Each dataset file is one raw 32×32×3 u8 image (3072 bytes) whose class
+//! is encoded in its directory name (`train/class07/img123.raw`), mirroring
+//! the ImageNet directory-per-class layout of §2.  Images are Gaussian
+//! noise plus a class-dependent bright vertical band — learnable by the CNN
+//! surrogate, and class-separable enough that the Fig 1 global-vs-
+//! partitioned gap reproduces.
+
+use crate::error::{FanError, Result};
+use crate::partition::builder::InputFile;
+use crate::runtime::tensor::Tensor;
+use crate::util::prng::Prng;
+use crate::vfs::Vfs;
+
+pub const IMG_HW: usize = 32;
+pub const IMG_BYTES: usize = IMG_HW * IMG_HW * 3;
+pub const CLASSES: usize = 10;
+
+/// Generate `n` labelled image files (`prefix/classCC/imgNNNN.raw`).
+///
+/// Files are emitted in *class-directory order* (all of class 0, then all
+/// of class 1, …), matching how a real dataset traversal enumerates
+/// ImageNet's per-class directories.  On top of the class band, every image
+/// carries an exposure (brightness) factor.
+///
+/// * `ordered_exposure = true` (training data): exposure drifts with file
+///   order — the acquisition-drift artifact real instrument datasets have.
+///   Combined with class-directory order this is what makes the Fig 1
+///   partitioned view lose accuracy: an exclusive contiguous shard sees
+///   each class under a *narrow* exposure range, so the averaged model has
+///   never seen e.g. class 0 at high exposure.
+/// * `ordered_exposure = false` (test data): exposure is i.i.d.
+pub fn gen_classification_dataset_ex(
+    n: usize,
+    prefix: &str,
+    seed: u64,
+    ordered_exposure: bool,
+) -> Vec<InputFile> {
+    let mut rng = Prng::new(seed ^ 0xC1A55);
+    (0..n)
+        .map(|i| {
+            let label = i * CLASSES / n.max(1);
+            // exposure factor in [0.45, 1.40]
+            let u = if ordered_exposure {
+                // drift across the *within-class* file order so every class
+                // spans the full exposure range across the dataset
+                (i % (n / CLASSES).max(1)) as f64 / ((n / CLASSES).max(1) as f64)
+            } else {
+                rng.f64()
+            };
+            let m = 0.45 + 0.95 * u;
+            let px = |base: u32, rng: &mut Prng, spread: u64| -> u8 {
+                ((base + rng.below(spread) as u32) as f64 * m).min(255.0) as u8
+            };
+            let mut img = vec![0u8; IMG_BYTES];
+            for b in img.iter_mut() {
+                *b = px(20, &mut rng, 40); // dim noise
+            }
+            // bright band for class k at columns [k*3, k*3+3)
+            let band = IMG_HW / CLASSES;
+            for y in 0..IMG_HW {
+                for x in (label * band)..((label + 1) * band) {
+                    for c in 0..3 {
+                        img[(y * IMG_HW + x) * 3 + c] = px(170, &mut rng, 55);
+                    }
+                }
+            }
+            InputFile {
+                path: format!("{prefix}/class{label:02}/img{i:05}.raw"),
+                data: img,
+            }
+        })
+        .collect()
+}
+
+/// Training-data defaults: class-directory order + exposure drift.
+pub fn gen_classification_dataset(n: usize, prefix: &str, seed: u64) -> Vec<InputFile> {
+    gen_classification_dataset_ex(n, prefix, seed, true)
+}
+
+/// Parse the label out of a dataset path.
+pub fn label_of(path: &str) -> Result<i32> {
+    path.split('/')
+        .find_map(|c| c.strip_prefix("class"))
+        .and_then(|s| s.parse::<i32>().ok())
+        .ok_or_else(|| FanError::Config(format!("no class label in path {path}")))
+}
+
+/// Read a mini-batch through the VFS into (images u8 [B,32,32,3], labels).
+/// Short batches are padded by replicating the last sample (the runtime's
+/// shapes are static).
+pub fn read_batch(
+    vfs: &mut dyn Vfs,
+    paths: &[String],
+    idx: &[u32],
+    batch: usize,
+) -> Result<(Tensor, Vec<i32>)> {
+    assert!(!idx.is_empty());
+    let mut data = Vec::with_capacity(batch * IMG_BYTES);
+    let mut labels = Vec::with_capacity(batch);
+    for k in 0..batch {
+        let i = idx[k.min(idx.len() - 1)] as usize; // pad by repeating last
+        let path = &paths[i];
+        let bytes = vfs.read_all(path)?;
+        if bytes.len() != IMG_BYTES {
+            return Err(FanError::Format(format!(
+                "{path}: expected {IMG_BYTES} bytes, got {}",
+                bytes.len()
+            )));
+        }
+        data.extend_from_slice(&bytes);
+        labels.push(label_of(path)?);
+    }
+    Ok((
+        Tensor::from_u8(&[batch, IMG_HW, IMG_HW, 3], data),
+        labels,
+    ))
+}
+
+/// Serialize parameters for checkpointing (raw LE f32 concat, as the AOT
+/// params.bin format).
+pub fn serialize_params(params: &[Tensor]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for p in params {
+        out.extend_from_slice(&p.data);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_shape_and_labels() {
+        let files = gen_classification_dataset(25, "train", 1);
+        assert_eq!(files.len(), 25);
+        for (i, f) in files.iter().enumerate() {
+            assert_eq!(f.data.len(), IMG_BYTES);
+            assert_eq!(label_of(&f.path).unwrap(), (i * CLASSES / 25) as i32);
+        }
+        // class-directory order: labels are non-decreasing and cover 0..9
+        let labels: Vec<i32> = files.iter().map(|f| label_of(&f.path).unwrap()).collect();
+        assert!(labels.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*labels.last().unwrap(), 9);
+    }
+
+    #[test]
+    fn band_brighter_than_noise() {
+        // exposure varies per file, so assert *contrast*, not absolutes
+        let files = gen_classification_dataset(10, "t", 2);
+        let f = &files[3]; // 10 files -> file 3 is class 3: columns 9..12 bright
+        let y = 16;
+        let bright = f.data[(y * IMG_HW + 10) * 3] as u32;
+        let dim = f.data[(y * IMG_HW + 20) * 3] as u32;
+        assert!(bright > 2 * dim, "bright={bright} dim={dim}");
+    }
+
+    #[test]
+    fn exposure_drifts_within_class_for_training_data() {
+        let files = gen_classification_dataset_ex(100, "t", 3, true);
+        // first and last file of class 0 differ in overall brightness
+        let lum = |f: &InputFile| f.data.iter().map(|&b| b as u64).sum::<u64>();
+        assert!(lum(&files[9]) > lum(&files[0]) * 3 / 2);
+    }
+
+    #[test]
+    fn label_parse_failures() {
+        assert!(label_of("/x/y/z.raw").is_err());
+        assert_eq!(label_of("/m/train/class07/a.raw").unwrap(), 7);
+    }
+
+    #[test]
+    fn serialize_concats() {
+        let p = vec![
+            Tensor::from_f32(&[1], &[1.0]),
+            Tensor::from_f32(&[2], &[2.0, 3.0]),
+        ];
+        assert_eq!(serialize_params(&p).len(), 12);
+    }
+}

@@ -1,0 +1,357 @@
+//! Distributed training driver (paper §3.1's loop, implemented over the
+//! FanStore VFS + the PJRT runtime).
+//!
+//! Data-parallel synchronous SGD: every node holds a replica of the
+//! parameters, draws its own mini-batch *through the FanStore read path*
+//! (open → cache → decompress → decode), executes the AOT train-step
+//! (which embeds the Pallas preprocess kernel: decode+normalize+augment+
+//! fwd+bwd+SGD in one PJRT call), then an Allreduce averages the updated
+//! replicas — algebraically identical to gradient averaging for SGD:
+//! `avg(p - lr·g_i) = p - lr·avg(g_i)`.
+//!
+//! Checkpoints are written back through the VFS (visible-until-close), and
+//! validation sweeps the replicated test directory, exactly the I/O pattern
+//! of §3.4.
+
+pub mod data;
+
+use crate::coordinator::Cluster;
+use crate::error::{FanError, Result};
+use crate::runtime::tensor::{DType, Tensor};
+use crate::runtime::Engine;
+use crate::util::prng::Prng;
+use crate::vfs::Vfs;
+use crate::workload::access::EpochSampler;
+
+/// Global vs partitioned dataset view (the Fig 1 ablation, §3.2).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DatasetView {
+    Global,
+    Partitioned,
+}
+
+/// Training options.
+#[derive(Clone, Debug)]
+pub struct TrainConfig {
+    pub epochs: u32,
+    /// Steps per epoch cap (None = full epoch).
+    pub max_steps_per_epoch: Option<u32>,
+    pub lr: f32,
+    pub view: DatasetView,
+    pub seed: u64,
+    /// Write a checkpoint at each epoch end (through the VFS).
+    pub checkpoint: bool,
+    /// Horizontal-flip augmentation probability.  Defaults to 0 because the
+    /// synthetic classification set encodes the label in band *position*, so
+    /// flipping destroys it; the flip path itself is covered by the Pallas
+    /// kernel tests and the preprocess_batch artifact.
+    pub flip_prob: f64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> Self {
+        TrainConfig {
+            epochs: 3,
+            max_steps_per_epoch: None,
+            lr: 0.05,
+            view: DatasetView::Global,
+            seed: 7,
+            checkpoint: true,
+            flip_prob: 0.0,
+        }
+    }
+}
+
+/// Per-epoch record.
+#[derive(Clone, Copy, Debug)]
+pub struct EpochLog {
+    pub epoch: u32,
+    pub mean_loss: f32,
+    pub train_acc: f32,
+    pub test_acc: f32,
+    pub files_read: u64,
+    pub seconds: f64,
+}
+
+/// Full run record.
+#[derive(Clone, Debug, Default)]
+pub struct TrainLog {
+    pub epochs: Vec<EpochLog>,
+    pub step_losses: Vec<f32>,
+}
+
+impl TrainLog {
+    pub fn final_test_acc(&self) -> f32 {
+        self.epochs.last().map(|e| e.test_acc).unwrap_or(0.0)
+    }
+
+    pub fn files_per_sec(&self) -> f64 {
+        let files: u64 = self.epochs.iter().map(|e| e.files_read).sum();
+        let secs: f64 = self.epochs.iter().map(|e| e.seconds).sum();
+        if secs > 0.0 {
+            files as f64 / secs
+        } else {
+            0.0
+        }
+    }
+}
+
+/// Per-node running normalization statistics (the BatchNorm-like state).
+///
+/// Framework BN keeps running mean/variance as *buffers*, not parameters:
+/// Horovod allreduces gradients but NOT these, and the rank-0 copy is what
+/// checkpoints/evaluation use.  That asymmetry is exactly what the Fig 1
+/// partitioned view breaks — each node's statistics are estimated only from
+/// the data its view lets it sample.
+#[derive(Clone, Debug)]
+pub struct NormStats {
+    pub mean: [f32; 3],
+    pub std: [f32; 3],
+    batches: u32,
+}
+
+impl NormStats {
+    /// Start from the conventional ImageNet priors (matches model.py).
+    pub fn imagenet_prior() -> Self {
+        NormStats {
+            mean: [125.3, 123.0, 113.9],
+            std: [63.0, 62.1, 66.7],
+            batches: 0,
+        }
+    }
+
+    /// Fold one u8 image batch into the running estimate (momentum 0.9,
+    /// the framework default).
+    pub fn update(&mut self, images: &Tensor) {
+        debug_assert_eq!(images.dtype, DType::U8);
+        let mut sum = [0f64; 3];
+        let mut sum2 = [0f64; 3];
+        let n = images.data.len() / 3;
+        for px in images.data.chunks_exact(3) {
+            for c in 0..3 {
+                let v = px[c] as f64;
+                sum[c] += v;
+                sum2[c] += v * v;
+            }
+        }
+        let momentum = 0.9f32;
+        for c in 0..3 {
+            let m = (sum[c] / n as f64) as f32;
+            let var = (sum2[c] / n as f64 - (sum[c] / n as f64).powi(2)).max(1.0) as f32;
+            let s = var.sqrt();
+            if self.batches == 0 {
+                self.mean[c] = m;
+                self.std[c] = s;
+            } else {
+                self.mean[c] = momentum * self.mean[c] + (1.0 - momentum) * m;
+                self.std[c] = momentum * self.std[c] + (1.0 - momentum) * s;
+            }
+        }
+        self.batches += 1;
+    }
+
+    pub fn mean_tensor(&self) -> Tensor {
+        Tensor::from_f32(&[3], &self.mean)
+    }
+
+    pub fn std_tensor(&self) -> Tensor {
+        Tensor::from_f32(&[3], &self.std)
+    }
+}
+
+/// Elementwise mean of per-node parameter replicas (the Allreduce).
+pub fn allreduce_mean(replicas: &[Vec<Tensor>]) -> Result<Vec<Tensor>> {
+    let n = replicas.len();
+    if n == 0 {
+        return Err(FanError::Runtime("allreduce over zero replicas".into()));
+    }
+    let width = replicas[0].len();
+    let mut out = Vec::with_capacity(width);
+    for t in 0..width {
+        let mut acc = replicas[0][t].as_f32()?;
+        for replica in &replicas[1..] {
+            for (a, b) in acc.iter_mut().zip(replica[t].as_f32()?) {
+                *a += b;
+            }
+        }
+        let inv = 1.0 / n as f32;
+        for a in acc.iter_mut() {
+            *a *= inv;
+        }
+        out.push(Tensor::from_f32(&replicas[0][t].dims, &acc));
+    }
+    Ok(out)
+}
+
+/// Train the CNN surrogate on a classification dataset staged in `cluster`.
+///
+/// `train_paths`/`test_paths` are FanStore paths of the image files produced
+/// by [`data::gen_classification_dataset`] (label encoded in the path).
+pub fn train_cnn(
+    cluster: &Cluster,
+    engine: &Engine,
+    train_paths: &[String],
+    test_paths: &[String],
+    cfg: &TrainConfig,
+) -> Result<TrainLog> {
+    let spec = engine.spec("cnn_train_step")?.clone();
+    let n_params = spec.param_count();
+    let batch_spec = &spec.inputs[n_params]; // images input
+    let batch = batch_spec.dims[0];
+    let mut params = spec.load_params()?;
+
+    let nodes = cluster.node_count();
+    let mut clients: Vec<_> = (0..nodes).map(|n| cluster.client(n)).collect();
+    let mut samplers: Vec<EpochSampler> = (0..nodes)
+        .map(|n| match cfg.view {
+            DatasetView::Global => EpochSampler::new(train_paths.len(), cfg.seed + n as u64),
+            DatasetView::Partitioned => {
+                EpochSampler::partitioned(train_paths.len(), n, nodes, cfg.seed)
+            }
+        })
+        .collect();
+    let mut rng = Prng::new(cfg.seed ^ 0xF11F);
+    let mut log = TrainLog::default();
+    // per-node normalization state (BN-like buffers, never allreduced)
+    let mut norm: Vec<NormStats> = (0..nodes).map(|_| NormStats::imagenet_prior()).collect();
+
+    // steps per epoch: one epoch consumes the dataset once *across the
+    // cluster* (Horovod semantics) — each node contributes 1/N of it,
+    // whichever view it samples from.
+    let pop = train_paths.len().div_ceil(nodes as usize);
+    let full_steps = pop.div_ceil(batch) as u32;
+
+    for epoch in 0..cfg.epochs {
+        let t0 = std::time::Instant::now();
+        let mut losses = Vec::new();
+        let mut accs = Vec::new();
+        let mut files_read = 0u64;
+        let steps_this_epoch = cfg
+            .max_steps_per_epoch
+            .map(|c| c.min(full_steps))
+            .unwrap_or(full_steps);
+        for _ in 0..steps_this_epoch {
+            // each node draws + reads + steps; then allreduce
+            let mut replicas = Vec::with_capacity(nodes as usize);
+            for node in 0..nodes as usize {
+                let idx = match samplers[node].next_batch(batch) {
+                    Some(idx) => idx,
+                    None => samplers[node]
+                        .next_batch(batch)
+                        .expect("reshuffled epoch is non-empty"),
+                };
+                let (images, labels) =
+                    data::read_batch(&mut clients[node], train_paths, &idx, batch)?;
+                files_read += idx.len() as u64;
+                norm[node].update(&images);
+                let flip: Vec<i32> = (0..batch)
+                    .map(|_| if rng.chance(cfg.flip_prob) { 1 } else { 0 })
+                    .collect();
+                let mut inputs = params.clone();
+                inputs.push(images);
+                inputs.push(Tensor::from_i32(&[batch], &labels));
+                inputs.push(Tensor::from_i32(&[batch], &flip));
+                inputs.push(norm[node].mean_tensor());
+                inputs.push(norm[node].std_tensor());
+                inputs.push(Tensor::scalar_f32(cfg.lr));
+                let out = engine.execute("cnn_train_step", &inputs)?;
+                losses.push(out[n_params].scalar_value()?);
+                accs.push(out[n_params + 1].scalar_value()?);
+                replicas.push(out[..n_params].to_vec());
+            }
+            params = allreduce_mean(&replicas)?;
+            log.step_losses.push(*losses.last().unwrap());
+        }
+
+        // validation: rank 0 sweeps the (replicated) test set using ITS
+        // normalization buffers — exactly what a Horovod+BN checkpoint does.
+        let test_acc = evaluate_cnn(&mut clients[0], engine, test_paths, &params, &norm[0])?;
+        let mean_loss = losses.iter().sum::<f32>() / losses.len().max(1) as f32;
+        let train_acc = accs.iter().sum::<f32>() / accs.len().max(1) as f32;
+
+        if cfg.checkpoint {
+            // rank-0 checkpoint, epoch-labelled file (§3.4 / note 2)
+            let blob = data::serialize_params(&params);
+            clients[0].write_file(
+                &format!("/ckpt/model_epoch{epoch:03}_{:?}.bin", cfg.view),
+                &blob,
+            )?;
+        }
+
+        log.epochs.push(EpochLog {
+            epoch,
+            mean_loss,
+            train_acc,
+            test_acc,
+            files_read,
+            seconds: t0.elapsed().as_secs_f64(),
+        });
+    }
+    Ok(log)
+}
+
+/// Accuracy of `params` over the test set, read through the VFS,
+/// normalized with `norm` (the evaluating rank's buffers).
+pub fn evaluate_cnn(
+    vfs: &mut dyn Vfs,
+    engine: &Engine,
+    test_paths: &[String],
+    params: &[Tensor],
+    norm: &NormStats,
+) -> Result<f32> {
+    let spec = engine.spec("cnn_eval_step")?.clone();
+    let img_input = &spec.inputs[params.len()];
+    let batch = img_input.dims[0];
+    let mut correct = 0.0f32;
+    let mut total = 0usize;
+    let mut i = 0;
+    while i < test_paths.len() {
+        let end = (i + batch).min(test_paths.len());
+        let idx: Vec<u32> = (i as u32..end as u32).collect();
+        let (images, labels) = data::read_batch(vfs, test_paths, &idx, batch)?;
+        let mut inputs: Vec<Tensor> = params.to_vec();
+        inputs.push(images);
+        inputs.push(Tensor::from_i32(&[batch], &labels));
+        inputs.push(norm.mean_tensor());
+        inputs.push(norm.std_tensor());
+        let out = engine.execute("cnn_eval_step", &inputs)?;
+        // out1 counts correct over the padded batch; subtract padding wins
+        let batch_correct = out[1].scalar_value()?;
+        // padded entries replicate the last real sample; count only real
+        let real = (end - i) as f32;
+        correct += batch_correct * real / batch as f32;
+        total += end - i;
+        i = end;
+    }
+    Ok(if total == 0 { 0.0 } else { correct / total as f32 })
+}
+
+/// Make a flip vector deterministically (exposed for tests).
+pub fn flips(rng: &mut Prng, n: usize) -> Vec<i32> {
+    (0..n).map(|_| if rng.chance(0.5) { 1 } else { 0 }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allreduce_mean_averages() {
+        let a = vec![Tensor::from_f32(&[2], &[1.0, 2.0])];
+        let b = vec![Tensor::from_f32(&[2], &[3.0, 6.0])];
+        let m = allreduce_mean(&[a, b]).unwrap();
+        assert_eq!(m[0].as_f32().unwrap(), vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn allreduce_identity_for_single_replica() {
+        let a = vec![Tensor::from_f32(&[3], &[1.0, 2.0, 3.0])];
+        let m = allreduce_mean(&[a.clone()]).unwrap();
+        assert_eq!(m[0].as_f32().unwrap(), a[0].as_f32().unwrap());
+    }
+
+    #[test]
+    fn allreduce_empty_errors() {
+        assert!(allreduce_mean(&[]).is_err());
+    }
+}

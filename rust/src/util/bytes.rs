@@ -1,0 +1,73 @@
+//! Human-readable byte counts and rates for experiment tables.
+
+/// `1536 -> "1.5 KiB"`, `3<<20 -> "3.0 MiB"`.
+pub fn human_bytes(n: u64) -> String {
+    const UNITS: [&str; 6] = ["B", "KiB", "MiB", "GiB", "TiB", "PiB"];
+    let mut v = n as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{n} B")
+    } else {
+        format!("{v:.1} {}", UNITS[u])
+    }
+}
+
+/// Bytes/second with MB/s units matching the paper's figures (decimal MB).
+pub fn human_rate(bytes_per_sec: f64) -> String {
+    if bytes_per_sec >= 1e9 {
+        format!("{:.2} GB/s", bytes_per_sec / 1e9)
+    } else if bytes_per_sec >= 1e6 {
+        format!("{:.1} MB/s", bytes_per_sec / 1e6)
+    } else if bytes_per_sec >= 1e3 {
+        format!("{:.1} KB/s", bytes_per_sec / 1e3)
+    } else {
+        format!("{bytes_per_sec:.0} B/s")
+    }
+}
+
+/// Parse sizes like "128K", "2M", "8M", "512", "1G" (binary multipliers,
+/// matching the benchmark file sizes of paper §6.2).
+pub fn parse_size(s: &str) -> Option<u64> {
+    let s = s.trim();
+    if s.is_empty() {
+        return None;
+    }
+    let (num, mult) = match s.chars().last().unwrap().to_ascii_uppercase() {
+        'K' => (&s[..s.len() - 1], 1024u64),
+        'M' => (&s[..s.len() - 1], 1024 * 1024),
+        'G' => (&s[..s.len() - 1], 1024 * 1024 * 1024),
+        _ => (s, 1),
+    };
+    num.trim().parse::<u64>().ok().map(|n| n * mult)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_formatting() {
+        assert_eq!(human_bytes(512), "512 B");
+        assert_eq!(human_bytes(1536), "1.5 KiB");
+        assert_eq!(human_bytes(3 << 20), "3.0 MiB");
+    }
+
+    #[test]
+    fn rate_formatting() {
+        assert_eq!(human_rate(2.5e6), "2.5 MB/s");
+        assert_eq!(human_rate(3.2e9), "3.20 GB/s");
+    }
+
+    #[test]
+    fn size_parsing() {
+        assert_eq!(parse_size("128K"), Some(128 * 1024));
+        assert_eq!(parse_size("8M"), Some(8 << 20));
+        assert_eq!(parse_size("512"), Some(512));
+        assert_eq!(parse_size("1G"), Some(1 << 30));
+        assert_eq!(parse_size("x"), None);
+    }
+}

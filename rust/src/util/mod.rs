@@ -1,0 +1,11 @@
+//! Small shared utilities: deterministic PRNG, summary statistics, byte/time
+//! formatting, and a minimal property-testing harness (`proptest_lite`).
+
+pub mod bytes;
+pub mod prng;
+pub mod proptest_lite;
+pub mod stats;
+
+pub use bytes::{human_bytes, human_rate};
+pub use prng::Prng;
+pub use stats::Summary;

@@ -1,0 +1,85 @@
+//! Minimal property-testing harness (no external deps are vendored for
+//! proptest, so we roll the 5% of it we need).
+//!
+//! A property runs against `iters` deterministic random cases; on failure it
+//! performs greedy input shrinking via the case seed's bit-halving and
+//! reports the smallest failing seed.  Coordinator invariants (routing,
+//! batching, cache state, partition round-trips) use this.
+
+use crate::util::prng::Prng;
+
+/// Run `prop(case_rng)` for `iters` cases derived from `seed`.
+/// Panics with the failing case seed on first violation.
+pub fn check<F>(name: &str, seed: u64, iters: u32, mut prop: F)
+where
+    F: FnMut(&mut Prng) -> Result<(), String>,
+{
+    for i in 0..iters {
+        let case_seed = seed
+            .wrapping_mul(0x9E3779B97F4A7C15)
+            .wrapping_add(i as u64);
+        let mut rng = Prng::new(case_seed);
+        if let Err(msg) = prop(&mut rng) {
+            // Greedy shrink: try seeds with progressively fewer set bits to
+            // find a "smaller" reproduction (smaller draws downstream).
+            let mut best = (case_seed, msg.clone());
+            let mut cand = case_seed;
+            for _ in 0..16 {
+                cand >>= 1;
+                if cand == 0 {
+                    break;
+                }
+                let mut r = Prng::new(cand);
+                if let Err(m) = prop(&mut r) {
+                    best = (cand, m);
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {i}, seed {:#x}): {}",
+                best.0, best.1
+            );
+        }
+    }
+}
+
+/// Convenience: assert-style helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_iters() {
+        let mut count = 0;
+        check("trivial", 1, 50, |rng| {
+            count += 1;
+            let x = rng.below(100);
+            if x < 100 {
+                Ok(())
+            } else {
+                Err("impossible".into())
+            }
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics() {
+        check("fails", 1, 10, |rng| {
+            if rng.below(4) != 0 {
+                Ok(())
+            } else {
+                Err("hit zero".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,380 @@
+//! FanStore VFS client: the user-space logic behind the intercepted calls.
+//!
+//! One `FanStoreVfs` per training process.  It shares its node's state
+//! (store, caches, metadata) with the node's worker thread, and reaches
+//! other nodes through the transport — a remote `open()` is the round-trip
+//! message of paper §5.4.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+use crate::error::{FanError, Result};
+use crate::metadata::record::{FileLocation, FileMeta, FileStat};
+use crate::metadata::table::normalize;
+use crate::net::transport::{InProcTransport, Request};
+use crate::node::NodeState;
+use crate::vfs::{Fd, OpenFlags, Vfs};
+
+enum OpenFile {
+    Read {
+        path: String,
+        data: Arc<Vec<u8>>,
+        pos: usize,
+    },
+    Write {
+        path: String,
+        buf: Vec<u8>,
+    },
+}
+
+/// Client handle bound to one node.
+pub struct FanStoreVfs {
+    node_id: u32,
+    state: Arc<Mutex<NodeState>>,
+    transport: InProcTransport,
+    fds: HashMap<Fd, OpenFile>,
+    next_fd: Fd,
+}
+
+impl FanStoreVfs {
+    pub fn new(node_id: u32, state: Arc<Mutex<NodeState>>, transport: InProcTransport) -> Self {
+        FanStoreVfs {
+            node_id,
+            state,
+            transport,
+            fds: HashMap::new(),
+            next_fd: 3, // 0,1,2 are stdio, as tradition demands
+        }
+    }
+
+    fn alloc_fd(&mut self) -> Fd {
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        fd
+    }
+
+    /// Fetch + decompress an input file's content, going through the node's
+    /// refcount cache.  Returns a pinned Arc (caller must `release` on
+    /// close — handled by [`Vfs::close`]).
+    fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Arc<Vec<u8>>> {
+        // 1) cache hit on this node?
+        {
+            let mut st = self.state.lock().unwrap();
+            if let Some(data) = st.cache.acquire(path) {
+                return Ok(data);
+            }
+        }
+        // 2) local partition?  (replicated directories — the test-set
+        //    broadcast of §5.4 — are always local)
+        let holder = if loc.partition == crate::metadata::record::REPLICATED_PARTITION {
+            self.node_id
+        } else {
+            let st = self.state.lock().unwrap();
+            st.placement.choose_holder(loc.partition, self.node_id)
+        };
+        let (stored, raw_len, compressed) = if holder == self.node_id {
+            let mut st = self.state.lock().unwrap();
+            let (stored, at) = st.store.read_stored(path)?;
+            st.stats.local_reads += 1;
+            st.stats.bytes_read_local += stored.len() as u64;
+            (stored, at.raw_len, at.compressed)
+        } else {
+            // 3) remote round trip (paper §5.4)
+            let resp = self.transport.call(
+                self.node_id,
+                holder,
+                Request::ReadFile {
+                    path: path.to_string(),
+                },
+            )?;
+            let (stored, raw_len, compressed) = resp.into_file_data()?;
+            let mut st = self.state.lock().unwrap();
+            st.stats.remote_reads_issued += 1;
+            st.stats.bytes_fetched_remote += stored.len() as u64;
+            (stored, raw_len, compressed)
+        };
+        // 4) decompress on the reading node (§5.4)
+        let raw = if compressed {
+            let out = crate::compress::lzss::decompress(&stored, raw_len as usize)?;
+            self.state.lock().unwrap().stats.decompressions += 1;
+            out
+        } else {
+            stored
+        };
+        Ok(self.state.lock().unwrap().cache.insert(path, raw))
+    }
+
+    /// Read an already-committed output file (checkpoint resume path).
+    fn fetch_output(&mut self, path: &str, meta: &FileMeta) -> Result<Arc<Vec<u8>>> {
+        let origin = meta.location.node;
+        if origin == self.node_id {
+            let st = self.state.lock().unwrap();
+            return st
+                .output_data
+                .get(path)
+                .cloned()
+                .ok_or_else(|| FanError::NotFound(path.to_string()));
+        }
+        let resp = self.transport.call(
+            self.node_id,
+            origin,
+            Request::ReadFile {
+                path: path.to_string(),
+            },
+        )?;
+        let (stored, _, _) = resp.into_file_data()?;
+        Ok(Arc::new(stored))
+    }
+
+    /// Locate output metadata: local home table, else ask the home node.
+    fn stat_output(&mut self, path: &str) -> Result<FileMeta> {
+        let home = {
+            let st = self.state.lock().unwrap();
+            st.placement.output_home(path)
+        };
+        if home == self.node_id {
+            let st = self.state.lock().unwrap();
+            return st
+                .output_meta
+                .get(path)
+                .cloned()
+                .ok_or_else(|| FanError::NotFound(path.to_string()));
+        }
+        match self.transport.call(
+            self.node_id,
+            home,
+            Request::StatOutput {
+                path: path.to_string(),
+            },
+        )? {
+            crate::net::transport::Response::Meta { stat, origin } => Ok(FileMeta {
+                stat,
+                location: FileLocation {
+                    node: origin,
+                    partition: u32::MAX,
+                    offset: 0,
+                    stored_len: stat.size,
+                    compressed: false,
+                },
+            }),
+            crate::net::transport::Response::Err(_) => {
+                Err(FanError::NotFound(path.to_string()))
+            }
+            other => Err(FanError::Transport(format!("unexpected {other:?}"))),
+        }
+    }
+}
+
+impl Vfs for FanStoreVfs {
+    fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd> {
+        let path = normalize(path);
+        match flags {
+            OpenFlags::Read => {
+                let loc = {
+                    let st = self.state.lock().unwrap();
+                    st.input_meta.get(&path).map(|m| m.location)
+                };
+                let data = match loc {
+                    Some(loc) => self.fetch_input(&path, loc)?,
+                    None => {
+                        // not an input: maybe a committed output file
+                        let meta = self.stat_output(&path)?;
+                        self.fetch_output(&path, &meta)?
+                    }
+                };
+                let fd = self.alloc_fd();
+                self.fds.insert(
+                    fd,
+                    OpenFile::Read {
+                        path,
+                        data,
+                        pos: 0,
+                    },
+                );
+                Ok(fd)
+            }
+            OpenFlags::Write => {
+                {
+                    let st = self.state.lock().unwrap();
+                    if st.input_meta.get(&path).is_some() {
+                        return Err(FanError::Consistency(format!(
+                            "input files are immutable: {path}"
+                        )));
+                    }
+                }
+                if self.stat_output(&path).is_ok() {
+                    return Err(FanError::Consistency(format!(
+                        "output files are single-write: {path}"
+                    )));
+                }
+                let fd = self.alloc_fd();
+                self.fds.insert(fd, OpenFile::Write { path, buf: Vec::new() });
+                Ok(fd)
+            }
+        }
+    }
+
+    fn read(&mut self, fd: Fd, buf: &mut [u8]) -> Result<usize> {
+        match self.fds.get_mut(&fd) {
+            Some(OpenFile::Read { data, pos, .. }) => {
+                let n = buf.len().min(data.len() - *pos);
+                buf[..n].copy_from_slice(&data[*pos..*pos + n]);
+                *pos += n;
+                Ok(n)
+            }
+            Some(OpenFile::Write { .. }) => Err(FanError::Consistency(
+                "descriptor is write-only".into(),
+            )),
+            None => Err(FanError::BadFd(fd)),
+        }
+    }
+
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize> {
+        match self.fds.get_mut(&fd) {
+            Some(OpenFile::Write { buf, .. }) => {
+                // §5.4: "the data written is concatenated to a buffer"
+                buf.extend_from_slice(data);
+                Ok(data.len())
+            }
+            Some(OpenFile::Read { .. }) => Err(FanError::Consistency(
+                "descriptor is read-only".into(),
+            )),
+            None => Err(FanError::BadFd(fd)),
+        }
+    }
+
+    fn close(&mut self, fd: Fd) -> Result<()> {
+        match self.fds.remove(&fd) {
+            Some(OpenFile::Read { path, data, .. }) => {
+                drop(data);
+                self.state.lock().unwrap().cache.release(&path);
+                Ok(())
+            }
+            Some(OpenFile::Write { path, buf }) => {
+                // visible-until-finish commit (§5.4): store data on the
+                // originating node, forward metadata to the home node.
+                let size = buf.len() as u64;
+                let meta = FileMeta {
+                    stat: FileStat::regular(crate::metadata::placement::path_hash(&path), size),
+                    location: FileLocation {
+                        node: self.node_id,
+                        partition: u32::MAX,
+                        offset: 0,
+                        stored_len: size,
+                        compressed: false,
+                    },
+                };
+                let home = {
+                    let mut st = self.state.lock().unwrap();
+                    st.output_data.insert(path.clone(), Arc::new(buf));
+                    st.stats.outputs_committed += 1;
+                    st.stats.output_bytes += size;
+                    st.placement.output_home(&path)
+                };
+                if home == self.node_id {
+                    self.state
+                        .lock()
+                        .unwrap()
+                        .serve(&Request::CommitOutput { path, meta });
+                } else {
+                    self.transport
+                        .call(self.node_id, home, Request::CommitOutput { path, meta })?;
+                }
+                Ok(())
+            }
+            None => Err(FanError::BadFd(fd)),
+        }
+    }
+
+    fn stat(&mut self, path: &str) -> Result<FileStat> {
+        let path = normalize(path);
+        {
+            let st = self.state.lock().unwrap();
+            if let Ok(s) = st.input_meta.stat(&path) {
+                return Ok(s);
+            }
+        }
+        self.stat_output(&path).map(|m| m.stat)
+    }
+
+    fn readdir(&mut self, dir: &str) -> Result<Vec<String>> {
+        let dir = normalize(dir);
+        let mut names: Vec<String> = {
+            let st = self.state.lock().unwrap();
+            match st.input_meta.readdir(&dir) {
+                Ok(v) => v.to_vec(),
+                Err(FanError::NotFound(_)) => Vec::new(),
+                Err(e) => return Err(e),
+            }
+        };
+        // Output metadata is spread over all nodes — a full listing is a
+        // gather, the §4 critique of distributed metadata made concrete.
+        let n = self.transport.node_count();
+        for node in 0..n {
+            let extra = if node == self.node_id {
+                match self.state.lock().unwrap().serve(&Request::ListOutputs { dir: dir.clone() }) {
+                    crate::net::transport::Response::Names(v) => v,
+                    _ => Vec::new(),
+                }
+            } else {
+                match self.transport.call(
+                    self.node_id,
+                    node,
+                    Request::ListOutputs { dir: dir.clone() },
+                )? {
+                    crate::net::transport::Response::Names(v) => v,
+                    _ => Vec::new(),
+                }
+            };
+            names.extend(extra);
+        }
+        names.sort();
+        names.dedup();
+        if names.is_empty() {
+            // distinguish empty dir from missing dir via input table
+            let st = self.state.lock().unwrap();
+            if !st.input_meta.is_dir(&dir) {
+                return Err(FanError::NotFound(dir));
+            }
+        }
+        Ok(names)
+    }
+
+    fn unlink(&mut self, path: &str) -> Result<()> {
+        let path = normalize(path);
+        {
+            let st = self.state.lock().unwrap();
+            if st.input_meta.get(&path).is_some() {
+                return Err(FanError::Consistency(format!(
+                    "input files are immutable: {path}"
+                )));
+            }
+        }
+        let home = {
+            let st = self.state.lock().unwrap();
+            st.placement.output_home(&path)
+        };
+        if home == self.node_id {
+            let mut st = self.state.lock().unwrap();
+            st.output_meta.remove(&path)?;
+            st.output_data.remove(&path);
+            Ok(())
+        } else {
+            // remove metadata at home; data GC at origin is lazy
+            match self.transport.call(
+                self.node_id,
+                home,
+                Request::StatOutput { path: path.clone() },
+            )? {
+                crate::net::transport::Response::Meta { .. } => {
+                    // Note: full remote unlink protocol elided — the DL
+                    // pattern never unlinks (§3.4); this path serves tests.
+                    Err(FanError::Consistency(
+                        "remote unlink not supported by the DL I/O pattern".into(),
+                    ))
+                }
+                _ => Err(FanError::NotFound(path)),
+            }
+        }
+    }
+}

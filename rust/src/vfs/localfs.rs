@@ -1,0 +1,168 @@
+//! Plain local-filesystem VFS (the "SSD" baseline of Fig 3/4 in `InProc`
+//! mode, and a utility for staging datasets in tests/examples).
+//!
+//! Paths are rooted at a directory; the descriptor table mirrors
+//! [`FanStoreVfs`] so workloads behave identically against both.
+
+use std::collections::HashMap;
+use std::fs;
+use std::io::{Read, Write as _};
+use std::path::PathBuf;
+
+use crate::error::{FanError, Result};
+use crate::metadata::record::FileStat;
+use crate::metadata::table::normalize;
+use crate::vfs::{Fd, OpenFlags, Vfs};
+
+enum OpenFile {
+    Read(fs::File),
+    Write(fs::File),
+}
+
+/// VFS over a real directory tree.
+pub struct LocalVfs {
+    root: PathBuf,
+    fds: HashMap<Fd, OpenFile>,
+    next_fd: Fd,
+}
+
+impl LocalVfs {
+    pub fn new(root: impl Into<PathBuf>) -> Result<Self> {
+        let root = root.into();
+        fs::create_dir_all(&root)?;
+        Ok(LocalVfs {
+            root,
+            fds: HashMap::new(),
+            next_fd: 3,
+        })
+    }
+
+    fn resolve(&self, path: &str) -> PathBuf {
+        let norm = normalize(path);
+        self.root.join(norm.trim_start_matches('/'))
+    }
+}
+
+impl Vfs for LocalVfs {
+    fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd> {
+        let p = self.resolve(path);
+        let file = match flags {
+            OpenFlags::Read => OpenFile::Read(
+                fs::File::open(&p).map_err(|_| FanError::NotFound(path.to_string()))?,
+            ),
+            OpenFlags::Write => {
+                if let Some(parent) = p.parent() {
+                    fs::create_dir_all(parent)?;
+                }
+                if p.exists() {
+                    return Err(FanError::Exists(path.to_string()));
+                }
+                OpenFile::Write(fs::File::create(&p)?)
+            }
+        };
+        let fd = self.next_fd;
+        self.next_fd += 1;
+        self.fds.insert(fd, file);
+        Ok(fd)
+    }
+
+    fn read(&mut self, fd: Fd, buf: &mut [u8]) -> Result<usize> {
+        match self.fds.get_mut(&fd) {
+            Some(OpenFile::Read(f)) => Ok(f.read(buf)?),
+            Some(OpenFile::Write(_)) => {
+                Err(FanError::Consistency("descriptor is write-only".into()))
+            }
+            None => Err(FanError::BadFd(fd)),
+        }
+    }
+
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize> {
+        match self.fds.get_mut(&fd) {
+            Some(OpenFile::Write(f)) => Ok(f.write(data)?),
+            Some(OpenFile::Read(_)) => {
+                Err(FanError::Consistency("descriptor is read-only".into()))
+            }
+            None => Err(FanError::BadFd(fd)),
+        }
+    }
+
+    fn close(&mut self, fd: Fd) -> Result<()> {
+        self.fds.remove(&fd).map(|_| ()).ok_or(FanError::BadFd(fd))
+    }
+
+    fn stat(&mut self, path: &str) -> Result<FileStat> {
+        let p = self.resolve(path);
+        let md = fs::metadata(&p).map_err(|_| FanError::NotFound(path.to_string()))?;
+        let mut s = if md.is_dir() {
+            FileStat::directory(1)
+        } else {
+            FileStat::regular(1, md.len())
+        };
+        s.size = if md.is_dir() { 4096 } else { md.len() };
+        Ok(s)
+    }
+
+    fn readdir(&mut self, dir: &str) -> Result<Vec<String>> {
+        let p = self.resolve(dir);
+        let rd = fs::read_dir(&p).map_err(|_| FanError::NotFound(dir.to_string()))?;
+        let mut names: Vec<String> = rd
+            .filter_map(|e| e.ok())
+            .map(|e| e.file_name().to_string_lossy().into_owned())
+            .collect();
+        names.sort();
+        Ok(names)
+    }
+
+    fn unlink(&mut self, path: &str) -> Result<()> {
+        let p = self.resolve(path);
+        fs::remove_file(&p).map_err(|_| FanError::NotFound(path.to_string()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_vfs(tag: &str) -> (LocalVfs, PathBuf) {
+        let dir = std::env::temp_dir().join(format!("fanstore_local_{tag}_{}", std::process::id()));
+        let _ = fs::remove_dir_all(&dir);
+        (LocalVfs::new(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn write_then_read_roundtrip() {
+        let (mut v, dir) = tmp_vfs("rw");
+        v.write_file("/d/hello.bin", b"hello world").unwrap();
+        assert_eq!(v.read_all("/d/hello.bin").unwrap(), b"hello world");
+        assert_eq!(v.stat("/d/hello.bin").unwrap().size, 11);
+        assert_eq!(v.readdir("/d").unwrap(), vec!["hello.bin"]);
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn exclusive_create() {
+        let (mut v, dir) = tmp_vfs("excl");
+        v.write_file("/x", b"1").unwrap();
+        assert!(matches!(
+            v.open("/x", OpenFlags::Write),
+            Err(FanError::Exists(_))
+        ));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_file_enoent() {
+        let (mut v, dir) = tmp_vfs("missing");
+        assert!(matches!(v.read_all("/nope"), Err(FanError::NotFound(_))));
+        fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn unlink_removes() {
+        let (mut v, dir) = tmp_vfs("unlink");
+        v.write_file("/z", b"z").unwrap();
+        v.unlink("/z").unwrap();
+        assert!(v.read_all("/z").is_err());
+        fs::remove_dir_all(dir).ok();
+    }
+}

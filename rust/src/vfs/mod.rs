@@ -1,0 +1,80 @@
+//! The POSIX-compliant interface (paper §5.5).
+//!
+//! On the real system FanStore patches glibc's `open/read/write/close/stat/
+//! readdir` in user space (function interception, no FUSE kernel crossing).
+//! Here the same dispatch boundary is the [`Vfs`] trait: the training code
+//! and workload generators are written against POSIX-shaped calls and can be
+//! pointed at FanStore, raw local storage, or any modelled backend without
+//! change — exactly the no-code-changes property the paper claims for its
+//! interception layer.
+//!
+//! Consistency contract (paper §3.5): multi-read single-write.  Input files
+//! are immutable; output files are written by exactly one descriptor and
+//! become visible only after `close()`.
+
+pub mod fanstore;
+pub mod localfs;
+
+pub use fanstore::FanStoreVfs;
+pub use localfs::LocalVfs;
+
+use crate::error::Result;
+use crate::metadata::record::FileStat;
+
+/// Descriptor handed out by `open`.
+pub type Fd = u64;
+
+/// Open mode (subset POSIX flags the DL I/O pattern uses, §3.4).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OpenFlags {
+    /// `O_RDONLY` — whole-file sequential read.
+    Read,
+    /// `O_WRONLY | O_CREAT | O_EXCL` — write a fresh output file.
+    Write,
+}
+
+/// POSIX-shaped file API.  All methods are `&mut self` — one `Vfs` value is
+/// one "process" (its own descriptor table), matching the per-process
+/// interception state of the paper.
+pub trait Vfs: Send {
+    fn open(&mut self, path: &str, flags: OpenFlags) -> Result<Fd>;
+    /// Sequential read into `buf`; returns bytes read (0 = EOF).
+    fn read(&mut self, fd: Fd, buf: &mut [u8]) -> Result<usize>;
+    /// Append `data` to an output descriptor.
+    fn write(&mut self, fd: Fd, data: &[u8]) -> Result<usize>;
+    fn close(&mut self, fd: Fd) -> Result<()>;
+    fn stat(&mut self, path: &str) -> Result<FileStat>;
+    fn readdir(&mut self, dir: &str) -> Result<Vec<String>>;
+    fn unlink(&mut self, path: &str) -> Result<()>;
+
+    /// Convenience: open+read-to-end+close (the DL input pattern, §3.4:
+    /// "when a file is read, it is read sequentially and completely").
+    fn read_all(&mut self, path: &str) -> Result<Vec<u8>> {
+        let fd = self.open(path, OpenFlags::Read)?;
+        let size = {
+            // read in 1 MiB slabs; files are small (KB–MB, Table 2)
+            let mut out = Vec::new();
+            let mut buf = vec![0u8; 1 << 20];
+            loop {
+                let n = self.read(fd, &mut buf)?;
+                if n == 0 {
+                    break;
+                }
+                out.extend_from_slice(&buf[..n]);
+            }
+            out
+        };
+        self.close(fd)?;
+        Ok(size)
+    }
+
+    /// Convenience: create+write+close one output file (checkpoint pattern).
+    fn write_file(&mut self, path: &str, data: &[u8]) -> Result<()> {
+        let fd = self.open(path, OpenFlags::Write)?;
+        let mut off = 0;
+        while off < data.len() {
+            off += self.write(fd, &data[off..])?;
+        }
+        self.close(fd)
+    }
+}

@@ -1,0 +1,144 @@
+//! The §6.2 synthetic read benchmark.
+//!
+//! "This benchmark has four file sizes: 128 KB, 512 KB, 2 MB, and 8 MB.
+//! Each file size has {128K, 32K, 8K, 2K} file count, respectively.  At
+//! each scale, each node reads all files in the directory, and reports
+//! time-to-solution and bandwidth."
+
+use crate::partition::builder::InputFile;
+use crate::util::prng::Prng;
+use crate::workload::datasets::synth_content;
+
+/// The paper's four benchmark file sizes (bytes).
+pub const BENCH_FILE_SIZES: [u64; 4] = [128 << 10, 512 << 10, 2 << 20, 8 << 20];
+
+/// Full-scale file counts paired with [`BENCH_FILE_SIZES`].
+pub const BENCH_FILE_COUNTS: [u64; 4] = [128 << 10, 32 << 10, 8 << 10, 2 << 10];
+
+/// One benchmark configuration point.
+#[derive(Clone, Copy, Debug)]
+pub struct BenchPoint {
+    pub file_size: u64,
+    pub file_count: u64,
+}
+
+/// Benchmark workload description.
+#[derive(Clone, Debug)]
+pub struct BenchSpec {
+    pub points: Vec<BenchPoint>,
+    /// Redundancy of generated content (0 = incompressible; §6.6 uses a
+    /// corpus "sampled from the SRGAN dataset" at 2.8×).
+    pub redundancy: f64,
+}
+
+impl BenchSpec {
+    /// The paper's four points, file counts divided by `scale` (≥1) so the
+    /// in-proc runs stay tractable; the simulator uses `scale = 1`.
+    pub fn paper(scale: u64) -> Self {
+        let points = BENCH_FILE_SIZES
+            .iter()
+            .zip(BENCH_FILE_COUNTS.iter())
+            .map(|(&s, &c)| BenchPoint {
+                file_size: s,
+                file_count: (c / scale.max(1)).max(1),
+            })
+            .collect();
+        BenchSpec {
+            points,
+            redundancy: 0.0,
+        }
+    }
+
+    /// §6.6 variant: same sizes, SRGAN-like compressibility.
+    pub fn paper_compressible(scale: u64) -> Self {
+        let mut s = Self::paper(scale);
+        s.redundancy = 0.72;
+        s
+    }
+
+    /// Materialize the files for one point (`/bench/<size>/f_<i>`).
+    pub fn generate_point(&self, point: BenchPoint, seed: u64) -> Vec<InputFile> {
+        let mut rng = Prng::new(seed ^ point.file_size);
+        (0..point.file_count)
+            .map(|i| {
+                let data = if self.redundancy == 0.0 {
+                    let mut d = vec![0u8; point.file_size as usize];
+                    rng.fill_bytes(&mut d);
+                    d
+                } else {
+                    synth_content(&mut rng, point.file_size as usize, self.redundancy)
+                };
+                InputFile {
+                    path: format!("bench/s{}/f_{i:06}", point.file_size),
+                    data,
+                }
+            })
+            .collect()
+    }
+}
+
+/// Result row of one benchmark point (matches the paper's reporting:
+/// aggregated bandwidth MB/s + throughput files/s).
+#[derive(Clone, Copy, Debug)]
+pub struct BenchResult {
+    pub file_size: u64,
+    pub files_read: u64,
+    pub seconds: f64,
+}
+
+impl BenchResult {
+    pub fn bandwidth_mbs(&self) -> f64 {
+        (self.files_read * self.file_size) as f64 / 1e6 / self.seconds
+    }
+
+    pub fn files_per_sec(&self) -> f64 {
+        self.files_read as f64 / self.seconds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_points_match_section_6_2() {
+        let spec = BenchSpec::paper(1);
+        assert_eq!(spec.points.len(), 4);
+        assert_eq!(spec.points[0].file_size, 128 << 10);
+        assert_eq!(spec.points[0].file_count, 128 << 10);
+        assert_eq!(spec.points[3].file_size, 8 << 20);
+        assert_eq!(spec.points[3].file_count, 2 << 10);
+        // total bytes per point is constant (16 GiB) by design of the paper
+        for p in &spec.points {
+            assert_eq!(p.file_size * p.file_count, 16 << 30);
+        }
+    }
+
+    #[test]
+    fn scaling_divides_counts() {
+        let spec = BenchSpec::paper(1024);
+        assert_eq!(spec.points[0].file_count, 128);
+        assert_eq!(spec.points[3].file_count, 2);
+    }
+
+    #[test]
+    fn generate_point_sizes() {
+        let spec = BenchSpec::paper(16 << 10);
+        let files = spec.generate_point(spec.points[0], 1);
+        assert_eq!(files.len(), 8);
+        for f in &files {
+            assert_eq!(f.data.len(), 128 << 10);
+        }
+    }
+
+    #[test]
+    fn result_math() {
+        let r = BenchResult {
+            file_size: 1 << 20,
+            files_read: 100,
+            seconds: 2.0,
+        };
+        assert!((r.bandwidth_mbs() - 52.4288).abs() < 1e-3);
+        assert!((r.files_per_sec() - 50.0).abs() < 1e-9);
+    }
+}

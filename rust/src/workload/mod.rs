@@ -1,0 +1,10 @@
+//! Workload generation: synthetic datasets with the paper's Table 2
+//! statistics, the §6.2 read benchmark, and the DL access patterns of §3.
+
+pub mod access;
+pub mod bench;
+pub mod datasets;
+
+pub use access::{EpochSampler, TestSweep};
+pub use bench::{BenchPoint, BenchSpec, BENCH_FILE_SIZES};
+pub use datasets::{AppKind, DatasetSpec};

@@ -1,0 +1,127 @@
+//! Integration: the full three-layer path — FanStore reads feeding
+//! AOT-compiled JAX/Pallas train steps via PJRT.  Skips cleanly when
+//! `make artifacts` has not been run.
+
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::runtime::Engine;
+use fanstore::trainer::data::gen_classification_dataset;
+use fanstore::trainer::{train_cnn, DatasetView, TrainConfig};
+use fanstore::vfs::Vfs;
+
+fn artifacts_dir() -> std::path::PathBuf {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn have_artifacts() -> bool {
+    artifacts_dir().join("manifest.txt").exists()
+}
+
+fn launch(train: usize, test: usize, nodes: u32) -> (Cluster, Vec<String>, Vec<String>) {
+    let mut files = gen_classification_dataset(train, "train", 31);
+    files.extend(gen_classification_dataset(test, "test", 41));
+    let cfg = ClusterConfig {
+        nodes,
+        partitions: nodes * 2,
+        replicate_dirs: vec!["test".into()],
+        ..Default::default()
+    };
+    let mount = cfg.mount.clone();
+    let cluster = Cluster::launch(&files, cfg).unwrap();
+    let train_paths = files
+        .iter()
+        .filter(|f| f.path.starts_with("train"))
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    let test_paths = files
+        .iter()
+        .filter(|f| f.path.starts_with("test"))
+        .map(|f| format!("{mount}/{}", f.path))
+        .collect();
+    (cluster, train_paths, test_paths)
+}
+
+#[test]
+fn train_through_fanstore_reduces_loss_and_checkpoints() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine =
+        Engine::load_subset(artifacts_dir(), &["cnn_train_step", "cnn_eval_step"]).unwrap();
+    let (cluster, train_paths, test_paths) = launch(320, 96, 2);
+    let tc = TrainConfig {
+        epochs: 2,
+        ..Default::default()
+    };
+    let log = train_cnn(&cluster, &engine, &train_paths, &test_paths, &tc).unwrap();
+    assert_eq!(log.epochs.len(), 2);
+    let first = log.step_losses.first().copied().unwrap();
+    let last = log.step_losses.last().copied().unwrap();
+    assert!(last < first, "loss must drop: {first} -> {last}");
+    assert!(log.final_test_acc() > 0.3, "acc {}", log.final_test_acc());
+
+    // the checkpoints are real output files in the global namespace
+    let mut vfs = cluster.client(1);
+    let names = vfs.readdir("/ckpt").unwrap();
+    assert_eq!(names.len(), 2, "one checkpoint per epoch: {names:?}");
+    let blob = vfs.read_all(&format!("/ckpt/{}", names[0])).unwrap();
+    // CNN surrogate has 277,802 f32 params = 1,111,208 bytes
+    assert_eq!(blob.len() % 4, 0);
+    assert!(blob.len() > 1_000_000);
+    cluster.shutdown();
+}
+
+#[test]
+fn global_view_no_worse_than_partitioned_per_epoch() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine =
+        Engine::load_subset(artifacts_dir(), &["cnn_train_step", "cnn_eval_step"]).unwrap();
+    let mut accs = Vec::new();
+    for view in [DatasetView::Global, DatasetView::Partitioned] {
+        let (cluster, train_paths, test_paths) = launch(320, 96, 4);
+        let tc = TrainConfig {
+            epochs: 2,
+            view,
+            checkpoint: false,
+            ..Default::default()
+        };
+        let log = train_cnn(&cluster, &engine, &train_paths, &test_paths, &tc).unwrap();
+        accs.push(
+            log.epochs.iter().map(|e| e.test_acc).sum::<f32>() / log.epochs.len() as f32,
+        );
+        cluster.shutdown();
+    }
+    // Fig 1 shape: the global view converges at least as fast (mean
+    // per-epoch test accuracy over the run).
+    assert!(
+        accs[0] >= accs[1] - 0.05,
+        "global {} vs partitioned {}",
+        accs[0],
+        accs[1]
+    );
+}
+
+#[test]
+fn preprocess_artifact_matches_manifest_contract() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    }
+    let engine = Engine::load_subset(artifacts_dir(), &["preprocess_batch"]).unwrap();
+    let spec = engine.spec("preprocess_batch").unwrap().clone();
+    use fanstore::runtime::tensor::{DType, Tensor};
+    let imgs = Tensor::from_u8(
+        &spec.inputs[0].dims,
+        vec![200u8; spec.inputs[0].element_count()],
+    );
+    let flip = Tensor::zeros(DType::I32, &spec.inputs[1].dims);
+    let out = engine.execute("preprocess_batch", &[imgs, flip]).unwrap();
+    assert_eq!(out[0].dims, spec.outputs[0].dims);
+    let vals = out[0].as_f32().unwrap();
+    // all channels normalized: (200 - mean)/std stays within (0, 2.2)
+    assert!(vals.iter().all(|v| *v > 0.0 && *v < 2.2));
+}

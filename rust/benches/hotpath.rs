@@ -4,14 +4,22 @@
 //!   * LZSS compress/decompress rates per level (compressible + random)
 //!     — the decompress rate here calibrates `FanStoreSim::decompress_bw`;
 //!   * metadata hashtable lookup/stat/readdir throughput;
-//!   * refcount-cache acquire/release;
+//!   * refcount-cache acquire/release (single-shard and sharded);
 //!   * partition pack/scan throughput;
 //!   * transport round-trip latency (the in-proc "MPI" path);
-//!   * end-to-end in-proc read_all on a 4-node cluster.
+//!   * end-to-end in-proc read_all on a 4-node cluster;
+//!   * aggregate same-node cached-read throughput vs. trainer thread count
+//!     (the lock-decomposition scaling check: a node-global lock pins this
+//!     at ~1×; the sharded/zero-copy hot path must scale).
+//!
+//! Besides the human-readable log, emits `BENCH_hotpath.json`
+//! (section → ops/s and bytes/s) so the perf trajectory is tracked across
+//! PRs.
 
+use std::sync::Arc;
 use std::time::Instant;
 
-use fanstore::cache::RefCountCache;
+use fanstore::cache::{RefCountCache, ShardedCache};
 use fanstore::compress::lzss;
 use fanstore::config::ClusterConfig;
 use fanstore::coordinator::Cluster;
@@ -21,8 +29,11 @@ use fanstore::net::transport::{InProcTransport, Request};
 use fanstore::partition::builder::{build_partitions, InputFile};
 use fanstore::util::human_rate;
 use fanstore::util::prng::Prng;
-use fanstore::vfs::Vfs;
+use fanstore::vfs::{OpenFlags, Vfs};
 use fanstore::workload::datasets::synth_content;
+
+/// (section, ops/s, bytes/s) — 0.0 where a rate does not apply.
+type Entries = Vec<(String, f64, f64)>;
 
 fn time<F: FnMut()>(mut f: F, iters: u32) -> f64 {
     let t0 = Instant::now();
@@ -32,7 +43,7 @@ fn time<F: FnMut()>(mut f: F, iters: u32) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
-fn bench_lzss() {
+fn bench_lzss(out: &mut Entries) {
     println!("== LZSS codec ==");
     let mut rng = Prng::new(42);
     let srgan_like = synth_content(&mut rng, 4 << 20, 0.72);
@@ -47,11 +58,13 @@ fn bench_lzss() {
             3,
         );
         let c = lzss::compress(&srgan_like, level);
+        let rate = srgan_like.len() as f64 / secs;
         println!(
             "  compress  level {level}: {:>12}  ratio {:.2}x (srgan-like 4 MiB)",
-            human_rate(srgan_like.len() as f64 / secs),
+            human_rate(rate),
             srgan_like.len() as f64 / c.len() as f64
         );
+        out.push((format!("lzss/compress_l{level}"), 0.0, rate));
     }
     let c5 = lzss::compress(&srgan_like, 5);
     let secs = time(
@@ -60,23 +73,27 @@ fn bench_lzss() {
         },
         10,
     );
+    let rate = srgan_like.len() as f64 / secs;
     println!(
         "  decompress        : {:>12}  (raw-output rate; calibrates FanStoreSim::decompress_bw)",
-        human_rate(srgan_like.len() as f64 / secs)
+        human_rate(rate)
     );
+    out.push(("lzss/decompress".into(), 0.0, rate));
     let secs = time(
         || {
             std::hint::black_box(lzss::compress(&random, 5));
         },
         3,
     );
+    let rate = random.len() as f64 / secs;
     println!(
         "  compress  random  : {:>12}  (incompressible reject path)",
-        human_rate(random.len() as f64 / secs)
+        human_rate(rate)
     );
+    out.push(("lzss/compress_random".into(), 0.0, rate));
 }
 
-fn bench_metadata() {
+fn bench_metadata(out: &mut Entries) {
     println!("== metadata table ==");
     let mut t = MetaTable::new();
     let n = 200_000u64;
@@ -96,10 +113,9 @@ fn bench_metadata() {
             },
         );
     }
-    println!(
-        "  insert: {:.0} entries/s ({n} files)",
-        n as f64 / t0.elapsed().as_secs_f64()
-    );
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    println!("  insert: {rate:.0} entries/s ({n} files)");
+    out.push(("metadata/insert".into(), rate, 0.0));
     let t0 = Instant::now();
     let mut found = 0u64;
     for i in 0..n {
@@ -107,40 +123,65 @@ fn bench_metadata() {
             found += 1;
         }
     }
-    println!(
-        "  stat:   {:.0} ops/s (hit {found})",
-        n as f64 / t0.elapsed().as_secs_f64()
-    );
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    println!("  stat:   {rate:.0} ops/s (hit {found})");
+    out.push(("metadata/stat".into(), rate, 0.0));
     let t0 = Instant::now();
     let mut listed = 0usize;
     for d in 0..500 {
         listed += t.readdir(&format!("/data/d{d:03}")).unwrap().len();
     }
-    println!(
-        "  readdir: {:.0} dirs/s ({listed} entries total, cached)",
-        500.0 / t0.elapsed().as_secs_f64()
-    );
+    let rate = 500.0 / t0.elapsed().as_secs_f64();
+    println!("  readdir: {rate:.0} dirs/s ({listed} entries total, cached)");
+    out.push(("metadata/readdir".into(), rate, 0.0));
 }
 
-fn bench_cache() {
+fn bench_cache(out: &mut Entries) {
     println!("== refcount cache ==");
     let mut c = RefCountCache::new();
     let n = 500_000u64;
     let t0 = Instant::now();
     for i in 0..n {
         let path = format!("/f{}", i % 1000);
-        if c.acquire(&path).is_none() {
-            c.insert(&path, vec![0u8; 64]);
-        }
-        c.release(&path);
+        let pin = match c.acquire(&path) {
+            Some(d) => d,
+            None => c.insert(&path, vec![0u8; 64].into()),
+        };
+        c.release(&path, &pin);
     }
-    println!(
-        "  acquire+release: {:.0} ops/s",
-        n as f64 / t0.elapsed().as_secs_f64()
-    );
+    let rate = n as f64 / t0.elapsed().as_secs_f64();
+    println!("  acquire+release: {rate:.0} ops/s");
+    out.push(("cache/acquire_release".into(), rate, 0.0));
+
+    // sharded cache, 8 concurrent threads (the node-wide configuration)
+    let c = Arc::new(ShardedCache::new());
+    const THREADS: u64 = 8;
+    let per_thread = n / THREADS;
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..THREADS)
+        .map(|t| {
+            let c = Arc::clone(&c);
+            std::thread::spawn(move || {
+                for i in 0..per_thread {
+                    let path = format!("/f{}", (t * 7 + i) % 1000);
+                    let pin = match c.acquire(&path) {
+                        Some(d) => d,
+                        None => c.insert(&path, vec![0u8; 64].into()),
+                    };
+                    c.release(&path, &pin);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let rate = (THREADS * per_thread) as f64 / t0.elapsed().as_secs_f64();
+    println!("  sharded acquire+release ({THREADS} threads): {rate:.0} ops/s");
+    out.push(("cache/sharded_acquire_release_8t".into(), rate, 0.0));
 }
 
-fn bench_partition() {
+fn bench_partition(out: &mut Entries) {
     println!("== partition pack/scan ==");
     let mut rng = Prng::new(7);
     let files: Vec<InputFile> = (0..2000)
@@ -156,11 +197,9 @@ fn bench_partition() {
     let total: usize = files.iter().map(|f| f.data.len()).sum();
     let t0 = Instant::now();
     let (blobs, _) = build_partitions(&files, 8, fanstore::compress::Codec::None).unwrap();
-    println!(
-        "  pack: {:>12} ({} files)",
-        human_rate(total as f64 / t0.elapsed().as_secs_f64()),
-        files.len()
-    );
+    let rate = total as f64 / t0.elapsed().as_secs_f64();
+    println!("  pack: {:>12} ({} files)", human_rate(rate), files.len());
+    out.push(("partition/pack".into(), 0.0, rate));
     let t0 = Instant::now();
     let mut n = 0;
     for b in &blobs {
@@ -170,19 +209,21 @@ fn bench_partition() {
             .unwrap()
             .len();
     }
-    println!(
-        "  scan: {:>12} ({n} entries)",
-        human_rate(total as f64 / t0.elapsed().as_secs_f64())
-    );
+    let rate = total as f64 / t0.elapsed().as_secs_f64();
+    println!("  scan: {:>12} ({n} entries)", human_rate(rate));
+    out.push(("partition/scan".into(), 0.0, rate));
 }
 
-fn bench_transport() {
+fn bench_transport(out: &mut Entries) {
     println!("== transport round trip ==");
     let (tp, eps) = InProcTransport::fully_connected(2);
     let mut eps = eps.into_iter();
     let _e0 = eps.next().unwrap();
     let e1 = eps.next().unwrap();
     let handle = std::thread::spawn(move || {
+        // one shared payload, cloned per reply: the Arc moves through the
+        // channel, the 128 KiB buffer never does
+        let payload: Arc<[u8]> = vec![0u8; 128 * 1024].into();
         while let Ok(msg) = e1.inbox.recv() {
             if matches!(msg.req, Request::Shutdown) {
                 let _ = msg.reply.send(fanstore::net::transport::Response::Ok);
@@ -191,7 +232,7 @@ fn bench_transport() {
             let _ = msg
                 .reply
                 .send(fanstore::net::transport::Response::FileData {
-                    stored: vec![0u8; 128 * 1024],
+                    stored: Arc::clone(&payload),
                     raw_len: 128 * 1024,
                     compressed: false,
                 });
@@ -217,11 +258,12 @@ fn bench_transport() {
         per * 1e6,
         1.0 / per
     );
+    out.push(("transport/roundtrip_128k".into(), 1.0 / per, 128.0 * 1024.0 / per));
     tp.shutdown_all();
     handle.join().unwrap();
 }
 
-fn bench_read_path() {
+fn bench_read_path(out: &mut Entries) {
     println!("== in-proc end-to-end read_all (4 nodes) ==");
     let mut rng = Prng::new(9);
     let files: Vec<InputFile> = (0..512)
@@ -258,15 +300,125 @@ fn bench_read_path() {
         human_rate(bytes as f64 / secs),
         files.len() as f64 / secs
     );
+    out.push((
+        "read_path/single_client_4nodes".into(),
+        files.len() as f64 / secs,
+        bytes as f64 / secs,
+    ));
     cluster.shutdown();
+}
+
+/// Aggregate cached-read throughput on ONE node as trainer threads grow.
+///
+/// All files are pinned in the node cache by a "pinner" client holding
+/// open descriptors, so every read is a cache hit: this isolates the
+/// node-local synchronization (sharded cache + atomic stats + zero-copy
+/// Arc hand-off).  Under the old `Arc<Mutex<NodeState>>` the aggregate is
+/// flat (~1×) regardless of thread count; the decomposed hot path must
+/// scale.
+fn bench_multithread_reads(out: &mut Entries) {
+    println!("== same-node cached reads vs trainer threads (1 node) ==");
+    const FILE_KB: usize = 128;
+    const N_FILES: usize = 64;
+    const READS_PER_THREAD: usize = 512;
+    let mut rng = Prng::new(11);
+    let files: Vec<InputFile> = (0..N_FILES)
+        .map(|i| {
+            let mut data = vec![0u8; FILE_KB * 1024];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/f{i:04}"),
+                data,
+            }
+        })
+        .collect();
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 1,
+            partitions: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("/fanstore/user/{}", f.path))
+        .collect();
+
+    // pin everything so the measured loop is pure cache-hit traffic
+    let mut pinner = cluster.client(0);
+    let pins: Vec<_> = paths
+        .iter()
+        .map(|p| pinner.open(p, OpenFlags::Read).unwrap())
+        .collect();
+
+    let mut base = 0.0f64;
+    for k in [1usize, 2, 4, 8, 16] {
+        let paths = Arc::new(paths.clone());
+        let t0 = Instant::now();
+        let mut handles = Vec::new();
+        for t in 0..k {
+            let mut vfs = cluster.client(0);
+            let paths = Arc::clone(&paths);
+            handles.push(std::thread::spawn(move || {
+                let mut bytes = 0u64;
+                for i in 0..READS_PER_THREAD {
+                    let p = &paths[(t * 17 + i) % paths.len()];
+                    bytes += vfs.read_all(p).unwrap().len() as u64;
+                }
+                bytes
+            }));
+        }
+        let mut bytes = 0u64;
+        for h in handles {
+            bytes += h.join().unwrap();
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let ops = (k * READS_PER_THREAD) as f64 / secs;
+        let rate = bytes as f64 / secs;
+        if k == 1 {
+            base = rate;
+        }
+        println!(
+            "  {k:>2} threads: {:>12} aggregate, {ops:.0} reads/s ({:.2}x vs 1 thread)",
+            human_rate(rate),
+            rate / base
+        );
+        out.push((format!("mt_cached_read/{k}_threads"), ops, rate));
+    }
+
+    for fd in pins {
+        pinner.close(fd).unwrap();
+    }
+    cluster.shutdown();
+}
+
+/// Write `BENCH_hotpath.json`: {"section": {"ops_per_sec": x, "bytes_per_sec": y}, ...}
+fn write_json(entries: &Entries) {
+    let mut s = String::from("{\n");
+    for (i, (name, ops, bytes)) in entries.iter().enumerate() {
+        let comma = if i + 1 == entries.len() { "" } else { "," };
+        s.push_str(&format!(
+            "  \"{name}\": {{\"ops_per_sec\": {ops:.1}, \"bytes_per_sec\": {bytes:.1}}}{comma}\n"
+        ));
+    }
+    s.push_str("}\n");
+    match std::fs::write("BENCH_hotpath.json", &s) {
+        Ok(()) => println!("wrote BENCH_hotpath.json ({} sections)", entries.len()),
+        Err(e) => eprintln!("could not write BENCH_hotpath.json: {e}"),
+    }
 }
 
 fn main() {
     println!("FanStore hot-path microbenchmarks");
-    bench_lzss();
-    bench_metadata();
-    bench_cache();
-    bench_partition();
-    bench_transport();
-    bench_read_path();
+    let mut entries = Entries::new();
+    bench_lzss(&mut entries);
+    bench_metadata(&mut entries);
+    bench_cache(&mut entries);
+    bench_partition(&mut entries);
+    bench_transport(&mut entries);
+    bench_read_path(&mut entries);
+    bench_multithread_reads(&mut entries);
+    write_json(&entries);
 }

@@ -8,9 +8,20 @@
 //!
 //! The design goal is minimal RAM (training processes are memory hungry),
 //! not hit rate — uniform-random access defeats LRU anyway (§5.4).
+//!
+//! Two layers live here:
+//!
+//! * [`RefCountCache`] — the single-lock-domain refcount table.  Payloads
+//!   are `Arc<[u8]>` so a hit hands back a shared view of one buffer with
+//!   no copy ("multiple training processes on the same node can access the
+//!   same file simultaneously").
+//! * [`ShardedCache`] — N independent `Mutex<RefCountCache>` shards keyed
+//!   by a path hash.  Concurrent trainers on one node acquire/release
+//!   different files without serializing on a single node-global lock;
+//!   same-file accesses only contend with each other.
 
 use std::collections::HashMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 /// Cache statistics for the experiment reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -23,14 +34,20 @@ pub struct CacheStats {
 }
 
 struct Entry {
-    data: Arc<Vec<u8>>,
+    data: Arc<[u8]>,
     refcount: u32,
 }
 
 /// Refcount cache: entries live exactly while at least one fd references
-/// them.  Shared decompressed content is handed out as `Arc` so simultaneous
-/// readers on the same node share one buffer ("multiple training processes
-/// on the same node can access the same file simultaneously").
+/// them.  Shared decompressed content is handed out as `Arc<[u8]>` so
+/// simultaneous readers on the same node share one buffer.
+///
+/// Releases are generation-aware: a pin is the `Arc` handed out by
+/// `acquire`/`insert`, and [`Self::release`] only decrements the entry
+/// whose buffer is pointer-identical to that pin.  A release presented
+/// against a retired generation (the entry was [`Self::invalidate`]d or
+/// [`Self::retire`]d and possibly replaced) is a no-op, so stale
+/// descriptors can never evict a newer entry that reuses the path.
 #[derive(Default)]
 pub struct RefCountCache {
     entries: HashMap<String, Entry>,
@@ -43,8 +60,8 @@ impl RefCountCache {
     }
 
     /// Try to pin `path`; on hit the refcount rises and the content is
-    /// returned.  On miss the caller must fetch and call [`insert`].
-    pub fn acquire(&mut self, path: &str) -> Option<Arc<Vec<u8>>> {
+    /// returned.  On miss the caller must fetch and call [`Self::insert`].
+    pub fn acquire(&mut self, path: &str) -> Option<Arc<[u8]>> {
         match self.entries.get_mut(path) {
             Some(e) => {
                 e.refcount += 1;
@@ -61,39 +78,66 @@ impl RefCountCache {
     /// Insert freshly-fetched content with refcount 1 and return the shared
     /// handle.  If another thread inserted in the meantime, the existing
     /// entry wins (its refcount rises instead).
-    pub fn insert(&mut self, path: &str, data: Vec<u8>) -> Arc<Vec<u8>> {
+    pub fn insert(&mut self, path: &str, data: Arc<[u8]>) -> Arc<[u8]> {
         if let Some(e) = self.entries.get_mut(path) {
             e.refcount += 1;
             return Arc::clone(&e.data);
         }
         let len = data.len() as u64;
-        let arc = Arc::new(data);
         self.entries.insert(
             path.to_string(),
             Entry {
-                data: Arc::clone(&arc),
+                data: Arc::clone(&data),
                 refcount: 1,
             },
         );
         self.stats.resident_bytes += len;
         self.stats.peak_bytes = self.stats.peak_bytes.max(self.stats.resident_bytes);
-        arc
+        data
     }
 
-    /// Drop one reference; evicts the content at zero (fd release, §5.4).
-    pub fn release(&mut self, path: &str) {
+    /// Drop one reference — `pin` is the `Arc` this pinner got from
+    /// `acquire`/`insert`; evicts the content at zero (fd release, §5.4).
+    /// A pin from a retired generation matches nothing and is a no-op.
+    pub fn release(&mut self, path: &str, pin: &Arc<[u8]>) {
         let evict = match self.entries.get_mut(path) {
-            Some(e) => {
+            Some(e) if Arc::ptr_eq(&e.data, pin) => {
                 e.refcount = e.refcount.saturating_sub(1);
                 e.refcount == 0
             }
-            None => false,
+            _ => false,
         };
         if evict {
             if let Some(e) = self.entries.remove(path) {
                 self.stats.resident_bytes -= e.data.len() as u64;
                 self.stats.evictions += 1;
             }
+        }
+    }
+
+    /// Drop the entry regardless of refcount (`unlink` invalidation).
+    /// Outstanding `Arc` handles stay valid; their eventual releases
+    /// mismatch the (gone or replaced) entry and are no-ops.
+    pub fn invalidate(&mut self, path: &str) {
+        if let Some(e) = self.entries.remove(path) {
+            self.stats.resident_bytes -= e.data.len() as u64;
+            self.stats.evictions += 1;
+        }
+    }
+
+    /// Atomic stale-refresh step: drop our pin on `stale` and remove the
+    /// entry only if it still holds that generation.  If another thread
+    /// already refreshed the path (entry absent or newer), both our pin and
+    /// the removal are moot — a single call under one lock, so concurrent
+    /// refreshers can't clobber each other's fresh inserts.
+    pub fn retire(&mut self, path: &str, stale: &Arc<[u8]>) {
+        let matches = self
+            .entries
+            .get(path)
+            .map(|e| Arc::ptr_eq(&e.data, stale))
+            .unwrap_or(false);
+        if matches {
+            self.invalidate(path);
         }
     }
 
@@ -110,6 +154,91 @@ impl RefCountCache {
     }
 }
 
+/// Number of lock shards.  Chosen to exceed the trainer-thread counts the
+/// paper runs per node (up to 68 processes/node on KNL, but 8–16 active
+/// readers is typical) while keeping the merge cost of `stats()` trivial.
+pub const CACHE_SHARDS: usize = 16;
+
+/// Hash-sharded refcount cache: the node-wide cache used by [`crate::node`].
+///
+/// Each shard is an independent lock domain, so acquire/release traffic
+/// from K trainer threads only serializes when two threads touch paths in
+/// the same shard (1/16 of the time under uniform access).
+pub struct ShardedCache {
+    shards: [Mutex<RefCountCache>; CACHE_SHARDS],
+}
+
+impl Default for ShardedCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Shard index by the crate's stable FNV-1a path hash — good enough to
+/// spread realistic dataset paths across [`CACHE_SHARDS`] shards.
+fn shard_of(path: &str) -> usize {
+    (crate::metadata::placement::path_hash(path) % CACHE_SHARDS as u64) as usize
+}
+
+impl ShardedCache {
+    pub fn new() -> Self {
+        ShardedCache {
+            shards: std::array::from_fn(|_| Mutex::new(RefCountCache::new())),
+        }
+    }
+
+    fn shard(&self, path: &str) -> std::sync::MutexGuard<'_, RefCountCache> {
+        self.shards[shard_of(path)].lock().unwrap()
+    }
+
+    pub fn acquire(&self, path: &str) -> Option<Arc<[u8]>> {
+        self.shard(path).acquire(path)
+    }
+
+    pub fn insert(&self, path: &str, data: Arc<[u8]>) -> Arc<[u8]> {
+        self.shard(path).insert(path, data)
+    }
+
+    pub fn release(&self, path: &str, pin: &Arc<[u8]>) {
+        self.shard(path).release(path, pin)
+    }
+
+    pub fn invalidate(&self, path: &str) {
+        self.shard(path).invalidate(path)
+    }
+
+    pub fn retire(&self, path: &str, stale: &Arc<[u8]>) {
+        self.shard(path).retire(path, stale)
+    }
+
+    pub fn refcount(&self, path: &str) -> u32 {
+        self.shard(path).refcount(path)
+    }
+
+    pub fn resident_files(&self) -> usize {
+        self.shards
+            .iter()
+            .map(|s| s.lock().unwrap().resident_files())
+            .sum()
+    }
+
+    /// Merged statistics across shards.  `peak_bytes` is the sum of the
+    /// per-shard peaks — an upper bound on the true node-wide peak (shards
+    /// need not peak simultaneously).
+    pub fn stats(&self) -> CacheStats {
+        let mut out = CacheStats::default();
+        for s in &self.shards {
+            let st = s.lock().unwrap().stats();
+            out.hits += st.hits;
+            out.misses += st.misses;
+            out.evictions += st.evictions;
+            out.resident_bytes += st.resident_bytes;
+            out.peak_bytes += st.peak_bytes;
+        }
+        out
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -118,9 +247,9 @@ mod tests {
     fn miss_then_insert_then_hit() {
         let mut c = RefCountCache::new();
         assert!(c.acquire("/f").is_none());
-        c.insert("/f", vec![1, 2, 3]);
+        c.insert("/f", vec![1, 2, 3].into());
         let d = c.acquire("/f").expect("hit");
-        assert_eq!(*d, vec![1, 2, 3]);
+        assert_eq!(&d[..], &[1, 2, 3]);
         assert_eq!(c.refcount("/f"), 2);
         let s = c.stats();
         assert_eq!((s.hits, s.misses), (1, 1));
@@ -129,11 +258,11 @@ mod tests {
     #[test]
     fn eviction_at_zero_refcount_only() {
         let mut c = RefCountCache::new();
-        c.insert("/f", vec![0; 100]);
+        let pin = c.insert("/f", vec![0; 100].into());
         c.acquire("/f").unwrap(); // rc = 2
-        c.release("/f"); // rc = 1, still resident
+        c.release("/f", &pin); // rc = 1, still resident
         assert_eq!(c.resident_files(), 1);
-        c.release("/f"); // rc = 0 -> evicted
+        c.release("/f", &pin); // rc = 0 -> evicted
         assert_eq!(c.resident_files(), 0);
         assert_eq!(c.stats().evictions, 1);
         assert_eq!(c.stats().resident_bytes, 0);
@@ -143,19 +272,19 @@ mod tests {
     #[test]
     fn concurrent_insert_coalesces() {
         let mut c = RefCountCache::new();
-        let a = c.insert("/f", vec![1]);
-        let b = c.insert("/f", vec![9, 9, 9]); // loser: existing entry wins
+        let a = c.insert("/f", vec![1].into());
+        let b = c.insert("/f", vec![9, 9, 9].into()); // loser: existing entry wins
         assert!(Arc::ptr_eq(&a, &b));
-        assert_eq!(*b, vec![1]);
+        assert_eq!(&b[..], &[1]);
         assert_eq!(c.refcount("/f"), 2);
     }
 
     #[test]
     fn peak_bytes_tracks_high_water() {
         let mut c = RefCountCache::new();
-        c.insert("/a", vec![0; 1000]);
-        c.insert("/b", vec![0; 500]);
-        c.release("/a");
+        let a = c.insert("/a", vec![0; 1000].into());
+        c.insert("/b", vec![0; 500].into());
+        c.release("/a", &a);
         assert_eq!(c.stats().resident_bytes, 500);
         assert_eq!(c.stats().peak_bytes, 1500);
     }
@@ -163,8 +292,57 @@ mod tests {
     #[test]
     fn release_unknown_is_noop() {
         let mut c = RefCountCache::new();
-        c.release("/nope");
+        let stray: Arc<[u8]> = vec![1u8].into();
+        c.release("/nope", &stray);
         assert_eq!(c.stats().evictions, 0);
+    }
+
+    #[test]
+    fn invalidate_drops_pinned_entry() {
+        let mut c = RefCountCache::new();
+        let d = c.insert("/f", vec![7; 10].into());
+        c.invalidate("/f");
+        assert_eq!(c.resident_files(), 0);
+        assert_eq!(c.stats().resident_bytes, 0);
+        // outstanding handle still readable; its release mismatches
+        // (generation gone) and is a no-op
+        assert_eq!(&d[..], &[7; 10][..]);
+        c.release("/f", &d);
+        assert_eq!(c.stats().evictions, 1);
+    }
+
+    #[test]
+    fn stale_release_cannot_evict_newer_generation() {
+        let mut c = RefCountCache::new();
+        // fd1 pins the first generation of /f, which is then invalidated
+        let old = c.insert("/f", vec![1; 8].into());
+        c.invalidate("/f");
+        // a new generation of /f is written and pinned by fd2
+        let new = c.insert("/f", vec![2; 8].into());
+        // fd1 closes: its pin is from the retired generation -> no-op
+        c.release("/f", &old);
+        assert_eq!(c.refcount("/f"), 1, "fd2 still pins the new entry");
+        let again = c.acquire("/f").expect("new entry resident");
+        assert!(Arc::ptr_eq(&new, &again));
+        c.release("/f", &new);
+        c.release("/f", &again); // fd2 + the acquire above
+        assert_eq!(c.resident_files(), 0);
+    }
+
+    #[test]
+    fn retire_is_generation_aware() {
+        let mut c = RefCountCache::new();
+        let stale = c.insert("/f", vec![1; 8].into());
+        // refresher A retires the stale generation and inserts fresh data
+        c.retire("/f", &stale);
+        assert_eq!(c.resident_files(), 0);
+        let fresh = c.insert("/f", vec![2; 8].into());
+        // refresher B, still holding the stale pin, retires after A: the
+        // entry no longer matches, so A's fresh insert survives
+        c.retire("/f", &stale);
+        assert_eq!(c.refcount("/f"), 1, "fresh entry untouched");
+        c.release("/f", &fresh);
+        assert_eq!(c.resident_files(), 0);
     }
 
     #[test]
@@ -172,22 +350,23 @@ mod tests {
         crate::util::proptest_lite::check("cache refcount", 0xCACE, 30, |rng| {
             let mut c = RefCountCache::new();
             let paths = ["/a", "/b", "/c", "/d"];
-            let mut live: Vec<&str> = Vec::new();
+            let mut live: Vec<(&str, Arc<[u8]>)> = Vec::new();
             for _ in 0..200 {
                 let p = paths[rng.index(paths.len())];
                 if rng.chance(0.55) {
-                    if c.acquire(p).is_none() {
-                        c.insert(p, vec![0; rng.index(64)]);
-                    }
-                    live.push(p);
-                } else if let Some(pos) = live.iter().position(|&q| q == p) {
-                    live.remove(pos);
-                    c.release(p);
+                    let pin = match c.acquire(p) {
+                        Some(d) => d,
+                        None => c.insert(p, vec![0; rng.index(64)].into()),
+                    };
+                    live.push((p, pin));
+                } else if let Some(pos) = live.iter().position(|(q, _)| *q == p) {
+                    let (p, pin) = live.remove(pos);
+                    c.release(p, &pin);
                 }
             }
             // drain: after releasing everything, cache must be empty
-            for p in live.drain(..) {
-                c.release(p);
+            for (p, pin) in live.drain(..) {
+                c.release(p, &pin);
             }
             crate::prop_assert!(
                 c.resident_files() == 0,
@@ -196,5 +375,50 @@ mod tests {
             );
             Ok(())
         });
+    }
+
+    #[test]
+    fn sharded_cache_shares_entries_across_handles() {
+        let c = ShardedCache::new();
+        assert!(c.acquire("/x").is_none());
+        let a = c.insert("/x", vec![5; 32].into());
+        let b = c.acquire("/x").expect("hit");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(c.refcount("/x"), 2);
+        c.release("/x", &a);
+        c.release("/x", &b);
+        assert_eq!(c.resident_files(), 0);
+        let s = c.stats();
+        assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 1));
+    }
+
+    #[test]
+    fn sharded_cache_concurrent_acquire_release() {
+        let c = Arc::new(ShardedCache::new());
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let c = Arc::clone(&c);
+            handles.push(std::thread::spawn(move || {
+                let mut rng = crate::util::prng::Prng::new(t + 1);
+                for i in 0..2000u64 {
+                    let path = format!("/f{}", (t * 7 + i) % 64);
+                    let pin = match c.acquire(&path) {
+                        Some(d) => {
+                            assert!(d.iter().all(|&b| b == 9));
+                            d
+                        }
+                        None => c.insert(&path, vec![9u8; 16 + rng.index(16)].into()),
+                    };
+                    c.release(&path, &pin);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(c.resident_files(), 0, "all refs released");
+        let s = c.stats();
+        assert_eq!(s.hits + s.misses, 8 * 2000);
+        assert_eq!(s.resident_bytes, 0);
     }
 }

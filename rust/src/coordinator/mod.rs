@@ -6,13 +6,13 @@
 //! broadcast, and worker-thread startup.  The result serves POSIX-shaped
 //! traffic from any number of [`FanStoreVfs`] clients per node.
 
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
 use crate::config::ClusterConfig;
 use crate::error::Result;
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta, REPLICATED_PARTITION};
-use crate::node::{FanStoreNode, NodeState, NodeStats};
+use crate::node::{FanStoreNode, NodeBuilder, NodeShared, NodeStats};
 use crate::net::transport::InProcTransport;
 use crate::partition::builder::{build_partitions, BuildStats, InputFile};
 use crate::partition::format::PartitionReader;
@@ -92,6 +92,12 @@ impl Cluster {
             }
         }
 
+        // metadata broadcast: every node gets the full table.  Built once,
+        // sealed immutable, and shared as one Arc — in-proc, a single RAM
+        // copy stands in for the N identical replicas of the real wire
+        // broadcast (§5.3).
+        let global_meta = Arc::new(global_meta);
+
         let mut nodes = Vec::with_capacity(config.nodes as usize);
         for ep in endpoints {
             let id = ep.node_id;
@@ -99,21 +105,22 @@ impl Cluster {
                 Some(dir) => DiskStore::on_disk(format!("{dir}/node{id:03}"))?,
                 None => DiskStore::in_memory(),
             };
-            let mut state = NodeState::new(id, store, placement.clone());
+            let mut builder = NodeBuilder::new(id, store, placement.clone());
             // dump the partitions this node hosts
             for (pid, blob) in &blobs {
                 if placement.is_local(*pid, id) {
-                    state.store.load_partition(*pid, blob.clone(), &config.mount)?;
+                    builder
+                        .store
+                        .load_partition(*pid, blob.clone(), &config.mount)?;
                 }
             }
             if let Some(rb) = &repl_blob {
-                state
+                builder
                     .store
                     .load_partition(REPLICATED_PARTITION, rb.clone(), &config.mount)?;
             }
-            // metadata broadcast: every node gets the full table
-            state.input_meta = clone_table(&global_meta);
-            nodes.push(FanStoreNode::spawn(Arc::new(Mutex::new(state)), ep));
+            builder.input_meta = Arc::clone(&global_meta);
+            nodes.push(FanStoreNode::spawn(builder.seal(), ep));
         }
 
         Ok(Cluster {
@@ -133,14 +140,15 @@ impl Cluster {
     pub fn client(&self, node: u32) -> FanStoreVfs {
         FanStoreVfs::new(
             node,
-            Arc::clone(&self.nodes[node as usize].state),
+            Arc::clone(&self.nodes[node as usize].shared),
             self.transport.clone(),
         )
     }
 
-    /// Shared state handle (tests / stats).
-    pub fn node_state(&self, node: u32) -> Arc<Mutex<NodeState>> {
-        Arc::clone(&self.nodes[node as usize].state)
+    /// Shared state handle (tests / stats).  No lock: components of
+    /// [`NodeShared`] synchronize individually.
+    pub fn node_state(&self, node: u32) -> Arc<NodeShared> {
+        Arc::clone(&self.nodes[node as usize].shared)
     }
 
     /// Orderly shutdown; returns per-node stats.
@@ -148,7 +156,7 @@ impl Cluster {
         let per_node: Vec<NodeStats> = self
             .nodes
             .iter()
-            .map(|n| n.state.lock().unwrap().stats)
+            .map(|n| n.shared.stats.snapshot())
             .collect();
         self.transport.shutdown_all();
         let requests_served = self.nodes.into_iter().map(|n| n.join()).sum();
@@ -157,18 +165,6 @@ impl Cluster {
             requests_served,
         }
     }
-}
-
-/// MetaTable has no Clone (it owns hashtables); rebuilding from iteration
-/// keeps the broadcast-cost explicit, mirroring the real wire broadcast.
-fn clone_table(src: &crate::metadata::table::MetaTable) -> crate::metadata::table::MetaTable {
-    let mut dst = crate::metadata::table::MetaTable::new();
-    for path in src.paths() {
-        if let Some(m) = src.get(path) {
-            dst.insert(path, m.clone());
-        }
-    }
-    dst
 }
 
 #[cfg(test)]

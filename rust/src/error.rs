@@ -4,67 +4,104 @@
 //! VFS layer — the paper's function-interception design returns glibc error
 //! codes to the unmodified application — plus internal error classes for the
 //! partition format, codec, transport and PJRT runtime.
+//!
+//! Implemented against std only (no `thiserror`/`libc`): the build
+//! environment is air-gapped, so the Display/Error impls and the errno
+//! constants are written out by hand.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Result alias used across the crate.
 pub type Result<T> = std::result::Result<T, FanError>;
 
+/// Linux x86-64 errno values returned through the interception layer.
+pub mod errno {
+    pub const EPERM: i32 = 1;
+    pub const ENOENT: i32 = 2;
+    pub const EIO: i32 = 5;
+    pub const EBADF: i32 = 9;
+    pub const EEXIST: i32 = 17;
+    pub const ENOTDIR: i32 = 20;
+    pub const EISDIR: i32 = 21;
+}
+
 /// All FanStore failure modes.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum FanError {
     /// POSIX `ENOENT`: path not present in the global namespace.
-    #[error("no such file or directory: {0}")]
     NotFound(String),
     /// POSIX `EBADF`: unknown or already-closed descriptor.
-    #[error("bad file descriptor: {0}")]
     BadFd(u64),
     /// POSIX `EEXIST`.
-    #[error("file exists: {0}")]
     Exists(String),
     /// POSIX `EISDIR` / `ENOTDIR` mismatches.
-    #[error("is a directory: {0}")]
     IsDirectory(String),
-    #[error("not a directory: {0}")]
     NotDirectory(String),
     /// Multi-read single-write violation (paper §3.5): re-opening an output
     /// file for write, or writing an input file.
-    #[error("consistency violation: {0}")]
     Consistency(String),
     /// Partition file is malformed (bad magic, truncated entry, …).
-    #[error("partition format error: {0}")]
     Format(String),
     /// LZSS bitstream is corrupt.
-    #[error("decompression error: {0}")]
     Codec(String),
     /// Simulated-transport failure (peer gone, message too large, …).
-    #[error("transport error: {0}")]
     Transport(String),
     /// PJRT/XLA runtime failure.
-    #[error("runtime error: {0}")]
     Runtime(String),
     /// Artifact manifest problems.
-    #[error("manifest error: {0}")]
     Manifest(String),
     /// Configuration problems (bad CLI flags, invalid cluster spec).
-    #[error("config error: {0}")]
     Config(String),
-    #[error(transparent)]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for FanError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FanError::NotFound(p) => write!(f, "no such file or directory: {p}"),
+            FanError::BadFd(fd) => write!(f, "bad file descriptor: {fd}"),
+            FanError::Exists(p) => write!(f, "file exists: {p}"),
+            FanError::IsDirectory(p) => write!(f, "is a directory: {p}"),
+            FanError::NotDirectory(p) => write!(f, "not a directory: {p}"),
+            FanError::Consistency(m) => write!(f, "consistency violation: {m}"),
+            FanError::Format(m) => write!(f, "partition format error: {m}"),
+            FanError::Codec(m) => write!(f, "decompression error: {m}"),
+            FanError::Transport(m) => write!(f, "transport error: {m}"),
+            FanError::Runtime(m) => write!(f, "runtime error: {m}"),
+            FanError::Manifest(m) => write!(f, "manifest error: {m}"),
+            FanError::Config(m) => write!(f, "config error: {m}"),
+            FanError::Io(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for FanError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            FanError::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for FanError {
+    fn from(e: std::io::Error) -> Self {
+        FanError::Io(e)
+    }
 }
 
 impl FanError {
     /// The errno the interception layer would return to the application.
     pub fn errno(&self) -> i32 {
         match self {
-            FanError::NotFound(_) => libc::ENOENT,
-            FanError::BadFd(_) => libc::EBADF,
-            FanError::Exists(_) => libc::EEXIST,
-            FanError::IsDirectory(_) => libc::EISDIR,
-            FanError::NotDirectory(_) => libc::ENOTDIR,
-            FanError::Consistency(_) => libc::EPERM,
-            FanError::Io(e) => e.raw_os_error().unwrap_or(libc::EIO),
-            _ => libc::EIO,
+            FanError::NotFound(_) => errno::ENOENT,
+            FanError::BadFd(_) => errno::EBADF,
+            FanError::Exists(_) => errno::EEXIST,
+            FanError::IsDirectory(_) => errno::EISDIR,
+            FanError::NotDirectory(_) => errno::ENOTDIR,
+            FanError::Consistency(_) => errno::EPERM,
+            FanError::Io(e) => e.raw_os_error().unwrap_or(errno::EIO),
+            _ => errno::EIO,
         }
     }
 }

@@ -8,8 +8,16 @@
 //! `std::sync::mpsc` replaces `MPI_Send/Recv`; the protocol, message sizes
 //! and who-talks-to-whom are identical to the paper's design, which is what
 //! the experiments depend on (DESIGN.md substitution table).
+//!
+//! Payloads travel as `Arc<[u8]>`: the worker serves a shared view of its
+//! store/output buffer and the reply channel moves the Arc, so a remote
+//! read never copies the stored bytes end to end.  [`InProcTransport::send`]
+//! exposes the asynchronous half of a round trip so gather patterns
+//! (e.g. `readdir` collecting `ListOutputs` from every node) can issue all
+//! requests first and overlap the waits.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileMeta, FileStat};
@@ -35,7 +43,7 @@ pub enum Request {
 #[derive(Debug)]
 pub enum Response {
     FileData {
-        stored: Vec<u8>,
+        stored: Arc<[u8]>,
         raw_len: u64,
         compressed: bool,
     },
@@ -69,6 +77,22 @@ pub struct NodeEndpoint {
     pub inbox: Receiver<Message>,
 }
 
+/// An in-flight request: the reply side of a round trip started with
+/// [`InProcTransport::send`].  Dropping it abandons the reply.
+pub struct PendingReply {
+    to: u32,
+    rx: Receiver<Response>,
+}
+
+impl PendingReply {
+    /// Block until the worker replies.
+    pub fn wait(self) -> Result<Response> {
+        self.rx
+            .recv()
+            .map_err(|_| FanError::Transport(format!("node {} dropped the reply", self.to)))
+    }
+}
+
 impl InProcTransport {
     /// Build a fully-connected transport for `n` nodes; returns the shared
     /// sender bundle plus one endpoint per node.
@@ -87,8 +111,9 @@ impl InProcTransport {
         self.peers.len() as u32
     }
 
-    /// Round-trip request to `to`; blocks until the worker replies.
-    pub fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
+    /// Enqueue a request at `to` and return the pending reply without
+    /// blocking — the building block for overlapped gathers.
+    pub fn send(&self, from: u32, to: u32, req: Request) -> Result<PendingReply> {
         let peer = self
             .peers
             .get(to as usize)
@@ -100,28 +125,30 @@ impl InProcTransport {
             reply: reply_tx,
         })
         .map_err(|_| FanError::Transport(format!("node {to} is down")))?;
-        reply_rx
-            .recv()
-            .map_err(|_| FanError::Transport(format!("node {to} dropped the reply")))
+        Ok(PendingReply { to, rx: reply_rx })
+    }
+
+    /// Round-trip request to `to`; blocks until the worker replies.
+    pub fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
+        self.send(from, to, req)?.wait()
     }
 
     /// Fire-and-forget shutdown to every node.
     pub fn shutdown_all(&self) {
-        for (to, peer) in self.peers.iter().enumerate() {
+        for peer in self.peers.iter() {
             let (reply_tx, _reply_rx) = channel();
             let _ = peer.send(Message {
                 from: u32::MAX,
                 req: Request::Shutdown,
                 reply: reply_tx,
             });
-            let _ = to;
         }
     }
 }
 
 impl Response {
     /// Unwrap a `FileData` response.
-    pub fn into_file_data(self) -> Result<(Vec<u8>, u64, bool)> {
+    pub fn into_file_data(self) -> Result<(Arc<[u8]>, u64, bool)> {
         match self {
             Response::FileData {
                 stored,
@@ -151,7 +178,7 @@ mod tests {
                     Request::ReadFile { path } => {
                         served += 1;
                         let _ = msg.reply.send(Response::FileData {
-                            stored: path.into_bytes(),
+                            stored: path.into_bytes().into(),
                             raw_len: 0,
                             compressed: false,
                         });
@@ -173,7 +200,7 @@ mod tests {
             .call(0, 2, Request::ReadFile { path: "/x/y".into() })
             .unwrap();
         let (data, _, _) = resp.into_file_data().unwrap();
-        assert_eq!(data, b"/x/y");
+        assert_eq!(&data[..], &b"/x/y"[..]);
         tp.shutdown_all();
         let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(served, 1);
@@ -183,6 +210,26 @@ mod tests {
     fn unknown_node_is_error() {
         let (tp, _eps) = InProcTransport::fully_connected(2);
         assert!(tp.call(0, 9, Request::Shutdown).is_err());
+    }
+
+    #[test]
+    fn overlapped_sends_collect_in_any_order() {
+        let (tp, eps) = InProcTransport::fully_connected(4);
+        let handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        // issue to all peers first, then collect — the gather pattern
+        let pending: Vec<PendingReply> = (1..4)
+            .map(|to| {
+                tp.send(0, to, Request::ReadFile { path: format!("/p{to}") })
+                    .unwrap()
+            })
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let (data, _, _) = p.wait().unwrap().into_file_data().unwrap();
+            assert_eq!(&data[..], format!("/p{}", i + 1).as_bytes());
+        }
+        tp.shutdown_all();
+        let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 3);
     }
 
     #[test]
@@ -200,7 +247,7 @@ mod tests {
                         })
                         .unwrap();
                     let (d, _, _) = r.into_file_data().unwrap();
-                    assert_eq!(d, format!("/f/{i}_{j}").into_bytes());
+                    assert_eq!(&d[..], format!("/f/{i}_{j}").as_bytes());
                 }
             }));
         }

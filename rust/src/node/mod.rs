@@ -6,12 +6,32 @@
 //! handle; "remote" reads between nodes are real request/response messages
 //! through [`crate::net::transport`] carrying the stored (possibly
 //! compressed) bytes.
+//!
+//! # Concurrency architecture
+//!
+//! Node state is a [`NodeShared`] with per-component synchronization matched
+//! to each component's access pattern (see DESIGN.md "Node concurrency"):
+//!
+//! | component     | primitive            | why |
+//! |---------------|----------------------|-----|
+//! | `store`       | none (sealed)        | partitions are dumped at launch, immutable after |
+//! | `input_meta`  | `Arc<MetaTable>`     | replicated broadcast, immutable after launch |
+//! | `placement`   | none (sealed)        | pure function of the cluster shape |
+//! | `cache`       | 16-way sharded locks | hot acquire/release from K trainer threads |
+//! | `output_meta` | `RwLock`             | rare writes (close), frequent cheap reads |
+//! | `output_data` | `RwLock`             | rare writes (close), reads on checkpoint resume |
+//! | `stats`       | `AtomicU64` per ctr  | incremented on every op, read only at shutdown |
+//!
+//! The mutable-by-construction parts (store loading, metadata indexing) live
+//! on [`NodeBuilder`]; [`NodeBuilder::seal`] freezes them into the shared,
+//! lock-free `NodeShared`.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 
-use crate::cache::RefCountCache;
+use crate::cache::ShardedCache;
 use crate::error::Result;
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta};
@@ -19,7 +39,7 @@ use crate::metadata::table::MetaTable;
 use crate::net::transport::{NodeEndpoint, Request, Response};
 use crate::storage::disk::DiskStore;
 
-/// Per-node I/O accounting used by the experiment reports.
+/// Per-node I/O accounting snapshot used by the experiment reports.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct NodeStats {
     pub local_reads: u64,
@@ -33,76 +53,169 @@ pub struct NodeStats {
     pub output_bytes: u64,
 }
 
-/// Mutable node state shared by the local VFS clients and the worker thread.
-pub struct NodeState {
-    pub id: u32,
-    /// Dumped input partitions + path index (paper §5.2).
-    pub store: DiskStore,
-    /// Replicated input metadata — identical on every node (§5.3).
-    pub input_meta: MetaTable,
-    /// Output metadata homed on this node by the consistent hash (§5.3).
-    pub output_meta: MetaTable,
-    /// Output file bytes kept on their originating node (§5.4: the data is
-    /// buffered locally; only the metadata entry is forwarded on close()).
-    pub output_data: HashMap<String, Arc<Vec<u8>>>,
-    /// Refcount cache of decompressed input content (§5.4).
-    pub cache: RefCountCache,
-    pub placement: Placement,
-    pub stats: NodeStats,
+/// Lock-free accounting: every counter is a relaxed `AtomicU64`, updated on
+/// the hot path without taking any lock and snapshotted at shutdown.
+#[derive(Debug, Default)]
+pub struct AtomicNodeStats {
+    pub local_reads: AtomicU64,
+    pub remote_reads_served: AtomicU64,
+    pub remote_reads_issued: AtomicU64,
+    pub bytes_read_local: AtomicU64,
+    pub bytes_served_remote: AtomicU64,
+    pub bytes_fetched_remote: AtomicU64,
+    pub decompressions: AtomicU64,
+    pub outputs_committed: AtomicU64,
+    pub output_bytes: AtomicU64,
 }
 
-impl NodeState {
+impl AtomicNodeStats {
+    /// Consistent-enough snapshot for reports (individual counters are
+    /// exact; cross-counter skew is possible while traffic is in flight).
+    pub fn snapshot(&self) -> NodeStats {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        NodeStats {
+            local_reads: ld(&self.local_reads),
+            remote_reads_served: ld(&self.remote_reads_served),
+            remote_reads_issued: ld(&self.remote_reads_issued),
+            bytes_read_local: ld(&self.bytes_read_local),
+            bytes_served_remote: ld(&self.bytes_served_remote),
+            bytes_fetched_remote: ld(&self.bytes_fetched_remote),
+            decompressions: ld(&self.decompressions),
+            outputs_committed: ld(&self.outputs_committed),
+            output_bytes: ld(&self.output_bytes),
+        }
+    }
+}
+
+/// Mutable launch-time state: partitions are dumped and input metadata
+/// attached here, then [`NodeBuilder::seal`] freezes everything immutable
+/// into a [`NodeShared`].
+///
+/// `input_meta` is an `Arc` so the coordinator can build the broadcast
+/// table once and hand every node the same sealed replica (in-proc, one
+/// RAM copy stands in for the N identical per-node copies a real
+/// deployment would hold).
+pub struct NodeBuilder {
+    pub id: u32,
+    pub store: DiskStore,
+    pub input_meta: Arc<MetaTable>,
+    pub placement: Placement,
+}
+
+impl NodeBuilder {
     pub fn new(id: u32, store: DiskStore, placement: Placement) -> Self {
-        NodeState {
+        NodeBuilder {
             id,
             store,
-            input_meta: MetaTable::new(),
-            output_meta: MetaTable::new(),
-            output_data: HashMap::new(),
-            cache: RefCountCache::new(),
+            input_meta: Arc::new(MetaTable::new()),
             placement,
-            stats: NodeStats::default(),
         }
     }
 
+    /// Freeze the launch-time state into the shared node handle.
+    pub fn seal(self) -> Arc<NodeShared> {
+        Arc::new(NodeShared {
+            id: self.id,
+            store: self.store,
+            input_meta: self.input_meta,
+            placement: self.placement,
+            cache: ShardedCache::new(),
+            output_meta: RwLock::new(MetaTable::new()),
+            output_data: RwLock::new(HashMap::new()),
+            stats: AtomicNodeStats::default(),
+        })
+    }
+}
+
+/// Node state shared by the local VFS clients and the worker thread.
+///
+/// There is no node-global lock: each component synchronizes (or is sealed
+/// immutable) on its own, so K trainer threads plus the worker thread
+/// proceed in parallel except where they genuinely touch the same data.
+pub struct NodeShared {
+    pub id: u32,
+    /// Dumped input partitions + path index (paper §5.2).  Immutable after
+    /// [`NodeBuilder::seal`] — reads need no lock.
+    pub store: DiskStore,
+    /// Replicated input metadata — identical on every node (§5.3),
+    /// immutable after launch, shared lock-free.
+    pub input_meta: Arc<MetaTable>,
+    pub placement: Placement,
+    /// Refcount cache of decompressed input content (§5.4), sharded 16 ways.
+    pub cache: ShardedCache,
+    /// Output metadata homed on this node by the consistent hash (§5.3).
+    pub output_meta: RwLock<MetaTable>,
+    /// Output file bytes kept on their originating node (§5.4: the data is
+    /// buffered locally; only the metadata entry is forwarded on close()).
+    pub output_data: RwLock<HashMap<String, Arc<[u8]>>>,
+    pub stats: AtomicNodeStats,
+}
+
+impl NodeShared {
     /// Serve a peer's request (also used directly for self-requests so the
-    /// local path does not pay a channel round trip).
-    pub fn serve(&mut self, req: &Request) -> Response {
+    /// local path does not pay a channel round trip).  Takes `&self`: the
+    /// worker thread and any number of VFS clients call this concurrently.
+    pub fn serve(&self, req: &Request) -> Response {
         match req {
             Request::ReadFile { path } => match self.store.read_stored(path) {
                 Ok((stored, at)) => {
-                    self.stats.remote_reads_served += 1;
-                    self.stats.bytes_served_remote += stored.len() as u64;
+                    self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
+                    self.stats
+                        .bytes_served_remote
+                        .fetch_add(stored.len() as u64, Ordering::Relaxed);
                     Response::FileData {
                         stored,
                         raw_len: at.raw_len,
                         compressed: at.compressed,
                     }
                 }
-                Err(_) => match self.output_data.get(path.as_str()) {
-                    Some(data) => Response::FileData {
-                        stored: data.as_ref().clone(),
-                        raw_len: data.len() as u64,
-                        compressed: false,
+                // not in the store: maybe an output buffered on this node
+                Err(crate::error::FanError::NotFound(_)) => {
+                    let data = self.output_data.read().unwrap().get(path.as_str()).cloned();
+                    match data {
+                        Some(data) => {
+                            self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
+                            self.stats
+                                .bytes_served_remote
+                                .fetch_add(data.len() as u64, Ordering::Relaxed);
+                            let raw_len = data.len() as u64;
+                            Response::FileData {
+                                stored: data,
+                                raw_len,
+                                compressed: false,
+                            }
+                        }
+                        None => Response::Err(format!("ENOENT {path}")),
+                    }
+                }
+                // real I/O / format faults must not masquerade as ENOENT —
+                // spilled-file reads can fail transiently under concurrency
+                Err(e) => Response::Err(format!("EIO {path}: {e}")),
+            },
+            Request::StatOutput { path } => {
+                let meta = self.output_meta.read().unwrap().get(path).cloned();
+                match meta {
+                    Some(m) => Response::Meta {
+                        stat: m.stat,
+                        origin: m.location.node,
                     },
                     None => Response::Err(format!("ENOENT {path}")),
-                },
-            },
-            Request::StatOutput { path } => match self.output_meta.get(path) {
-                Some(m) => Response::Meta {
-                    stat: m.stat,
-                    origin: m.location.node,
-                },
-                None => Response::Err(format!("ENOENT {path}")),
-            },
+                }
+            }
             Request::CommitOutput { path, meta } => {
-                self.output_meta.insert(path, meta.clone());
+                self.output_meta.write().unwrap().insert(path, meta.clone());
                 Response::Ok
             }
-            Request::ListOutputs { dir } => match self.output_meta.readdir(dir) {
-                Ok(names) => Response::Names(names.to_vec()),
-                Err(_) => Response::Names(Vec::new()),
-            },
+            Request::ListOutputs { dir } => {
+                let names = self
+                    .output_meta
+                    .read()
+                    .unwrap()
+                    .readdir(dir)
+                    .map(|n| n.to_vec())
+                    .unwrap_or_default();
+                Response::Names(names)
+            }
             Request::Shutdown => Response::Ok,
         }
     }
@@ -111,15 +224,15 @@ impl NodeState {
 /// Handle to a running node: shared state + its worker thread.
 pub struct FanStoreNode {
     pub id: u32,
-    pub state: Arc<Mutex<NodeState>>,
+    pub shared: Arc<NodeShared>,
     worker: Option<JoinHandle<u64>>,
 }
 
 impl FanStoreNode {
     /// Spawn the worker thread servicing `endpoint`.
-    pub fn spawn(state: Arc<Mutex<NodeState>>, endpoint: NodeEndpoint) -> Self {
+    pub fn spawn(shared: Arc<NodeShared>, endpoint: NodeEndpoint) -> Self {
         let id = endpoint.node_id;
-        let thread_state = Arc::clone(&state);
+        let thread_shared = Arc::clone(&shared);
         let worker = std::thread::Builder::new()
             .name(format!("fanstore-node-{id}"))
             .spawn(move || {
@@ -129,7 +242,7 @@ impl FanStoreNode {
                         let _ = msg.reply.send(Response::Ok);
                         break;
                     }
-                    let resp = thread_state.lock().unwrap().serve(&msg.req);
+                    let resp = thread_shared.serve(&msg.req);
                     served += 1;
                     let _ = msg.reply.send(resp);
                 }
@@ -138,7 +251,7 @@ impl FanStoreNode {
             .expect("spawn node worker");
         FanStoreNode {
             id,
-            state,
+            shared,
             worker: Some(worker),
         }
     }
@@ -153,15 +266,16 @@ impl FanStoreNode {
     }
 }
 
-/// Load a set of partition blobs into a node's store under `mount`.
+/// Load a set of partition blobs into a node's store under `mount`
+/// (launch-time only, before the builder is sealed).
 pub fn load_partitions(
-    state: &mut NodeState,
+    builder: &mut NodeBuilder,
     parts: impl IntoIterator<Item = (u32, Vec<u8>)>,
     mount: &str,
 ) -> Result<u32> {
     let mut n = 0;
     for (pid, blob) in parts {
-        n += state.store.load_partition(pid, blob, mount)?;
+        n += builder.store.load_partition(pid, blob, mount)?;
     }
     Ok(n)
 }
@@ -219,30 +333,63 @@ mod tests {
         let fs = files(4);
         let (blobs, _) = build_partitions(&fs, 1, Codec::None).unwrap();
         let placement = Placement::new(1, 1, 1);
-        let mut st = NodeState::new(0, DiskStore::in_memory(), placement);
-        st.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
-        let resp = st.serve(&Request::ReadFile {
+        let mut b = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        let node = b.seal();
+        let resp = node.serve(&Request::ReadFile {
             path: "/m/train/f2".into(),
         });
         match resp {
             Response::FileData { stored, raw_len, compressed } => {
-                assert_eq!(stored, vec![2u8; 102]);
+                assert_eq!(&stored[..], &vec![2u8; 102][..]);
                 assert_eq!(raw_len, 102);
                 assert!(!compressed);
             }
             other => panic!("unexpected {other:?}"),
         }
-        assert_eq!(st.stats.remote_reads_served, 1);
+        assert_eq!(node.stats.snapshot().remote_reads_served, 1);
     }
 
     #[test]
     fn serve_missing_is_error() {
         let placement = Placement::new(1, 1, 1);
-        let mut st = NodeState::new(0, DiskStore::in_memory(), placement);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
         assert!(matches!(
-            st.serve(&Request::ReadFile { path: "/nope".into() }),
+            node.serve(&Request::ReadFile { path: "/nope".into() }),
             Response::Err(_)
         ));
+    }
+
+    #[test]
+    fn serve_is_lock_free_across_threads() {
+        let fs = files(8);
+        let (blobs, _) = build_partitions(&fs, 1, Codec::None).unwrap();
+        let placement = Placement::new(1, 1, 1);
+        let mut b = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        let node = b.seal();
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let node = Arc::clone(&node);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..200usize {
+                    let f = (t + i) % 8;
+                    let resp = node.serve(&Request::ReadFile {
+                        path: format!("/m/train/f{f}"),
+                    });
+                    match resp {
+                        Response::FileData { stored, .. } => {
+                            assert_eq!(&stored[..], &vec![f as u8; 100 + f][..]);
+                        }
+                        other => panic!("unexpected {other:?}"),
+                    }
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(node.stats.snapshot().remote_reads_served, 8 * 200);
     }
 
     #[test]
@@ -255,16 +402,16 @@ mod tests {
         let _ep0 = eps.pop().unwrap();
 
         // node 1 holds partition 1 (files 1,3,5)
-        let mut st1 = NodeState::new(1, DiskStore::in_memory(), placement.clone());
-        st1.store.load_partition(1, blobs[1].clone(), "/m").unwrap();
-        let node1 = FanStoreNode::spawn(Arc::new(Mutex::new(st1)), ep1);
+        let mut b1 = NodeBuilder::new(1, DiskStore::in_memory(), placement.clone());
+        b1.store.load_partition(1, blobs[1].clone(), "/m").unwrap();
+        let node1 = FanStoreNode::spawn(b1.seal(), ep1);
 
         // node 0 fetches a remote file from node 1
         let resp = tp
             .call(0, 1, Request::ReadFile { path: "/m/train/f3".into() })
             .unwrap();
         let (stored, raw_len, compressed) = resp.into_file_data().unwrap();
-        assert_eq!(stored, vec![3u8; 103]);
+        assert_eq!(&stored[..], &vec![3u8; 103][..]);
         assert_eq!(raw_len, 103);
         assert!(!compressed);
 
@@ -275,7 +422,7 @@ mod tests {
     #[test]
     fn commit_and_stat_output() {
         let placement = Placement::new(1, 1, 1);
-        let mut st = NodeState::new(0, DiskStore::in_memory(), placement);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
         let meta = FileMeta {
             stat: FileStat::regular(1, 42),
             location: FileLocation {
@@ -286,11 +433,11 @@ mod tests {
                 compressed: false,
             },
         };
-        st.serve(&Request::CommitOutput {
+        node.serve(&Request::CommitOutput {
             path: "/out/ckpt_1.h5".into(),
             meta,
         });
-        match st.serve(&Request::StatOutput {
+        match node.serve(&Request::StatOutput {
             path: "/out/ckpt_1.h5".into(),
         }) {
             Response::Meta { stat, origin } => {
@@ -299,7 +446,7 @@ mod tests {
             }
             other => panic!("unexpected {other:?}"),
         }
-        match st.serve(&Request::ListOutputs { dir: "/out".into() }) {
+        match node.serve(&Request::ListOutputs { dir: "/out".into() }) {
             Response::Names(names) => assert_eq!(names, vec!["ckpt_1.h5"]),
             other => panic!("unexpected {other:?}"),
         }

@@ -10,6 +10,7 @@
 use std::collections::HashMap;
 use std::fs;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::FileStat;
@@ -119,9 +120,8 @@ impl DiskStore {
         self.stats.get(path)
     }
 
-    /// Read the *stored* bytes of `path` (compressed bytes when compressed —
-    /// decompression happens on the reading node, §5.4).
-    pub fn read_stored(&self, path: &str) -> Result<(Vec<u8>, StoredAt)> {
+    /// Index lookup + backing handle for one stored file.
+    fn backing_of(&self, path: &str) -> Result<(StoredAt, &Backing)> {
         let at = *self
             .index
             .get(path)
@@ -130,25 +130,46 @@ impl DiskStore {
             .partitions
             .get(&at.partition)
             .ok_or_else(|| FanError::Format(format!("missing partition {}", at.partition)))?;
-        let bytes = match backing {
+        Ok((at, backing))
+    }
+
+    /// Read one stored range out of a spilled partition file.
+    fn read_spilled(p: &std::path::Path, at: &StoredAt) -> Result<Vec<u8>> {
+        use std::io::{Read, Seek, SeekFrom};
+        let mut f = fs::File::open(p)?;
+        f.seek(SeekFrom::Start(at.offset))?;
+        let mut buf = vec![0u8; at.stored_len as usize];
+        f.read_exact(&mut buf)?;
+        Ok(buf)
+    }
+
+    /// Read the *stored* bytes of `path` (compressed bytes when compressed —
+    /// decompression happens on the reading node, §5.4).
+    ///
+    /// Returns a shared `Arc<[u8]>` buffer materialized in one copy (that
+    /// *is* the disk read); everything downstream (worker serve path,
+    /// transport response, refcount cache, VFS descriptors) clones the Arc,
+    /// never the payload.
+    pub fn read_stored(&self, path: &str) -> Result<(Arc<[u8]>, StoredAt)> {
+        let (at, backing) = self.backing_of(path)?;
+        let bytes: Arc<[u8]> = match backing {
             Backing::Ram(blob) => {
-                blob[at.offset as usize..(at.offset + at.stored_len) as usize].to_vec()
+                Arc::from(&blob[at.offset as usize..(at.offset + at.stored_len) as usize])
             }
-            Backing::File(p) => {
-                use std::io::{Read, Seek, SeekFrom};
-                let mut f = fs::File::open(p)?;
-                f.seek(SeekFrom::Start(at.offset))?;
-                let mut buf = vec![0u8; at.stored_len as usize];
-                f.read_exact(&mut buf)?;
-                buf
-            }
+            Backing::File(p) => Self::read_spilled(p, &at)?.into(),
         };
         Ok((bytes, at))
     }
 
     /// Read + decompress to raw file contents.
     pub fn read_raw(&self, path: &str) -> Result<Vec<u8>> {
-        let (stored, at) = self.read_stored(path)?;
+        let (at, backing) = self.backing_of(path)?;
+        let stored = match backing {
+            Backing::Ram(blob) => {
+                blob[at.offset as usize..(at.offset + at.stored_len) as usize].to_vec()
+            }
+            Backing::File(p) => Self::read_spilled(p, &at)?,
+        };
         if at.compressed {
             crate::compress::lzss::decompress(&stored, at.raw_len as usize)
         } else {

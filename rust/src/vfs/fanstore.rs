@@ -1,24 +1,31 @@
 //! FanStore VFS client: the user-space logic behind the intercepted calls.
 //!
-//! One `FanStoreVfs` per training process.  It shares its node's state
-//! (store, caches, metadata) with the node's worker thread, and reaches
-//! other nodes through the transport — a remote `open()` is the round-trip
-//! message of paper §5.4.
+//! One `FanStoreVfs` per training process.  It shares its node's
+//! [`NodeShared`] (store, caches, metadata) with the node's worker thread
+//! and every other client on the node, and reaches other nodes through the
+//! transport — a remote `open()` is the round-trip message of paper §5.4.
+//!
+//! There is no node-global lock on this path: input metadata and the
+//! partition store are sealed immutable, the refcount cache is sharded, and
+//! stats are atomics — so K clients on one node proceed in parallel.  File
+//! content moves as `Arc<[u8]>` end to end; `read()` copies into the
+//! caller's buffer (the POSIX contract) but nothing else copies payloads.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileLocation, FileMeta, FileStat};
 use crate::metadata::table::normalize;
-use crate::net::transport::{InProcTransport, Request};
-use crate::node::NodeState;
+use crate::net::transport::{InProcTransport, PendingReply, Request, Response};
+use crate::node::NodeShared;
 use crate::vfs::{Fd, OpenFlags, Vfs};
 
 enum OpenFile {
     Read {
         path: String,
-        data: Arc<Vec<u8>>,
+        data: Arc<[u8]>,
         pos: usize,
     },
     Write {
@@ -30,17 +37,17 @@ enum OpenFile {
 /// Client handle bound to one node.
 pub struct FanStoreVfs {
     node_id: u32,
-    state: Arc<Mutex<NodeState>>,
+    shared: Arc<NodeShared>,
     transport: InProcTransport,
     fds: HashMap<Fd, OpenFile>,
     next_fd: Fd,
 }
 
 impl FanStoreVfs {
-    pub fn new(node_id: u32, state: Arc<Mutex<NodeState>>, transport: InProcTransport) -> Self {
+    pub fn new(node_id: u32, shared: Arc<NodeShared>, transport: InProcTransport) -> Self {
         FanStoreVfs {
             node_id,
-            state,
+            shared,
             transport,
             fds: HashMap::new(),
             next_fd: 3, // 0,1,2 are stdio, as tradition demands
@@ -56,27 +63,25 @@ impl FanStoreVfs {
     /// Fetch + decompress an input file's content, going through the node's
     /// refcount cache.  Returns a pinned Arc (caller must `release` on
     /// close — handled by [`Vfs::close`]).
-    fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Arc<Vec<u8>>> {
+    fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Arc<[u8]>> {
         // 1) cache hit on this node?
-        {
-            let mut st = self.state.lock().unwrap();
-            if let Some(data) = st.cache.acquire(path) {
-                return Ok(data);
-            }
+        if let Some(data) = self.shared.cache.acquire(path) {
+            return Ok(data);
         }
         // 2) local partition?  (replicated directories — the test-set
         //    broadcast of §5.4 — are always local)
         let holder = if loc.partition == crate::metadata::record::REPLICATED_PARTITION {
             self.node_id
         } else {
-            let st = self.state.lock().unwrap();
-            st.placement.choose_holder(loc.partition, self.node_id)
+            self.shared.placement.choose_holder(loc.partition, self.node_id)
         };
+        let stats = &self.shared.stats;
         let (stored, raw_len, compressed) = if holder == self.node_id {
-            let mut st = self.state.lock().unwrap();
-            let (stored, at) = st.store.read_stored(path)?;
-            st.stats.local_reads += 1;
-            st.stats.bytes_read_local += stored.len() as u64;
+            let (stored, at) = self.shared.store.read_stored(path)?;
+            stats.local_reads.fetch_add(1, Ordering::Relaxed);
+            stats
+                .bytes_read_local
+                .fetch_add(stored.len() as u64, Ordering::Relaxed);
             (stored, at.raw_len, at.compressed)
         } else {
             // 3) remote round trip (paper §5.4)
@@ -88,54 +93,83 @@ impl FanStoreVfs {
                 },
             )?;
             let (stored, raw_len, compressed) = resp.into_file_data()?;
-            let mut st = self.state.lock().unwrap();
-            st.stats.remote_reads_issued += 1;
-            st.stats.bytes_fetched_remote += stored.len() as u64;
+            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+            stats
+                .bytes_fetched_remote
+                .fetch_add(stored.len() as u64, Ordering::Relaxed);
             (stored, raw_len, compressed)
         };
         // 4) decompress on the reading node (§5.4)
-        let raw = if compressed {
+        let raw: Arc<[u8]> = if compressed {
             let out = crate::compress::lzss::decompress(&stored, raw_len as usize)?;
-            self.state.lock().unwrap().stats.decompressions += 1;
-            out
+            stats.decompressions.fetch_add(1, Ordering::Relaxed);
+            out.into()
         } else {
             stored
         };
-        Ok(self.state.lock().unwrap().cache.insert(path, raw))
+        Ok(self.shared.cache.insert(path, raw))
     }
 
-    /// Read an already-committed output file (checkpoint resume path).
-    fn fetch_output(&mut self, path: &str, meta: &FileMeta) -> Result<Arc<Vec<u8>>> {
+    /// Read an already-committed output file (checkpoint resume path),
+    /// going through the refcount cache exactly like inputs do — repeated
+    /// resume `open()`s on one node fetch from the origin once.
+    fn fetch_output(&mut self, path: &str, meta: &FileMeta) -> Result<Arc<[u8]>> {
+        if let Some(data) = self.shared.cache.acquire(path) {
+            // Guard against a cached generation that predates an
+            // unlink+rewrite on the home node (only the home invalidates
+            // its own cache): the authoritative stat is the referee.  A
+            // same-size rewrite slips through — acceptable for the DL
+            // pattern, which never unlinks (§3.4).
+            if data.len() as u64 == meta.stat.size {
+                return Ok(data);
+            }
+            // single-lock, generation-aware refresh: drops our pin and
+            // removes the entry only if it still holds this stale data
+            self.shared.cache.retire(path, &data);
+        }
+        let stats = &self.shared.stats;
         let origin = meta.location.node;
-        if origin == self.node_id {
-            let st = self.state.lock().unwrap();
-            return st
+        let data: Arc<[u8]> = if origin == self.node_id {
+            let data = self
+                .shared
                 .output_data
+                .read()
+                .unwrap()
                 .get(path)
                 .cloned()
-                .ok_or_else(|| FanError::NotFound(path.to_string()));
-        }
-        let resp = self.transport.call(
-            self.node_id,
-            origin,
-            Request::ReadFile {
-                path: path.to_string(),
-            },
-        )?;
-        let (stored, _, _) = resp.into_file_data()?;
-        Ok(Arc::new(stored))
+                .ok_or_else(|| FanError::NotFound(path.to_string()))?;
+            stats.local_reads.fetch_add(1, Ordering::Relaxed);
+            stats
+                .bytes_read_local
+                .fetch_add(data.len() as u64, Ordering::Relaxed);
+            data
+        } else {
+            let resp = self.transport.call(
+                self.node_id,
+                origin,
+                Request::ReadFile {
+                    path: path.to_string(),
+                },
+            )?;
+            let (stored, _, _) = resp.into_file_data()?;
+            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+            stats
+                .bytes_fetched_remote
+                .fetch_add(stored.len() as u64, Ordering::Relaxed);
+            stored
+        };
+        Ok(self.shared.cache.insert(path, data))
     }
 
     /// Locate output metadata: local home table, else ask the home node.
     fn stat_output(&mut self, path: &str) -> Result<FileMeta> {
-        let home = {
-            let st = self.state.lock().unwrap();
-            st.placement.output_home(path)
-        };
+        let home = self.shared.placement.output_home(path);
         if home == self.node_id {
-            let st = self.state.lock().unwrap();
-            return st
+            return self
+                .shared
                 .output_meta
+                .read()
+                .unwrap()
                 .get(path)
                 .cloned()
                 .ok_or_else(|| FanError::NotFound(path.to_string()));
@@ -147,7 +181,7 @@ impl FanStoreVfs {
                 path: path.to_string(),
             },
         )? {
-            crate::net::transport::Response::Meta { stat, origin } => Ok(FileMeta {
+            Response::Meta { stat, origin } => Ok(FileMeta {
                 stat,
                 location: FileLocation {
                     node: origin,
@@ -157,9 +191,7 @@ impl FanStoreVfs {
                     compressed: false,
                 },
             }),
-            crate::net::transport::Response::Err(_) => {
-                Err(FanError::NotFound(path.to_string()))
-            }
+            Response::Err(_) => Err(FanError::NotFound(path.to_string())),
             other => Err(FanError::Transport(format!("unexpected {other:?}"))),
         }
     }
@@ -170,10 +202,7 @@ impl Vfs for FanStoreVfs {
         let path = normalize(path);
         match flags {
             OpenFlags::Read => {
-                let loc = {
-                    let st = self.state.lock().unwrap();
-                    st.input_meta.get(&path).map(|m| m.location)
-                };
+                let loc = self.shared.input_meta.get(&path).map(|m| m.location);
                 let data = match loc {
                     Some(loc) => self.fetch_input(&path, loc)?,
                     None => {
@@ -183,24 +212,14 @@ impl Vfs for FanStoreVfs {
                     }
                 };
                 let fd = self.alloc_fd();
-                self.fds.insert(
-                    fd,
-                    OpenFile::Read {
-                        path,
-                        data,
-                        pos: 0,
-                    },
-                );
+                self.fds.insert(fd, OpenFile::Read { path, data, pos: 0 });
                 Ok(fd)
             }
             OpenFlags::Write => {
-                {
-                    let st = self.state.lock().unwrap();
-                    if st.input_meta.get(&path).is_some() {
-                        return Err(FanError::Consistency(format!(
-                            "input files are immutable: {path}"
-                        )));
-                    }
+                if self.shared.input_meta.get(&path).is_some() {
+                    return Err(FanError::Consistency(format!(
+                        "input files are immutable: {path}"
+                    )));
                 }
                 if self.stat_output(&path).is_ok() {
                     return Err(FanError::Consistency(format!(
@@ -246,8 +265,7 @@ impl Vfs for FanStoreVfs {
     fn close(&mut self, fd: Fd) -> Result<()> {
         match self.fds.remove(&fd) {
             Some(OpenFile::Read { path, data, .. }) => {
-                drop(data);
-                self.state.lock().unwrap().cache.release(&path);
+                self.shared.cache.release(&path, &data);
                 Ok(())
             }
             Some(OpenFile::Write { path, buf }) => {
@@ -264,22 +282,31 @@ impl Vfs for FanStoreVfs {
                         compressed: false,
                     },
                 };
-                let home = {
-                    let mut st = self.state.lock().unwrap();
-                    st.output_data.insert(path.clone(), Arc::new(buf));
-                    st.stats.outputs_committed += 1;
-                    st.stats.output_bytes += size;
-                    st.placement.output_home(&path)
-                };
+                // data first, then the metadata commit: once the name is
+                // discoverable at the home node, the bytes must already be
+                // servable from here.
+                self.shared
+                    .output_data
+                    .write()
+                    .unwrap()
+                    .insert(path.clone(), buf.into());
+                let home = self.shared.placement.output_home(&path);
                 if home == self.node_id {
-                    self.state
-                        .lock()
-                        .unwrap()
-                        .serve(&Request::CommitOutput { path, meta });
+                    self.shared.serve(&Request::CommitOutput { path, meta });
                 } else {
                     self.transport
                         .call(self.node_id, home, Request::CommitOutput { path, meta })?;
                 }
+                // count only once the commit actually landed — a dead home
+                // node must not inflate the committed totals
+                self.shared
+                    .stats
+                    .outputs_committed
+                    .fetch_add(1, Ordering::Relaxed);
+                self.shared
+                    .stats
+                    .output_bytes
+                    .fetch_add(size, Ordering::Relaxed);
                 Ok(())
             }
             None => Err(FanError::BadFd(fd)),
@@ -288,52 +315,48 @@ impl Vfs for FanStoreVfs {
 
     fn stat(&mut self, path: &str) -> Result<FileStat> {
         let path = normalize(path);
-        {
-            let st = self.state.lock().unwrap();
-            if let Ok(s) = st.input_meta.stat(&path) {
-                return Ok(s);
-            }
+        if let Ok(s) = self.shared.input_meta.stat(&path) {
+            return Ok(s);
         }
         self.stat_output(&path).map(|m| m.stat)
     }
 
     fn readdir(&mut self, dir: &str) -> Result<Vec<String>> {
         let dir = normalize(dir);
-        let mut names: Vec<String> = {
-            let st = self.state.lock().unwrap();
-            match st.input_meta.readdir(&dir) {
-                Ok(v) => v.to_vec(),
-                Err(FanError::NotFound(_)) => Vec::new(),
-                Err(e) => return Err(e),
-            }
+        let mut names: Vec<String> = match self.shared.input_meta.readdir(&dir) {
+            Ok(v) => v.to_vec(),
+            Err(FanError::NotFound(_)) => Vec::new(),
+            Err(e) => return Err(e),
         };
         // Output metadata is spread over all nodes — a full listing is a
         // gather, the §4 critique of distributed metadata made concrete.
+        // Issue the request to every peer first, then collect: the N-1
+        // round trips overlap instead of serializing.
         let n = self.transport.node_count();
+        let mut pending: Vec<PendingReply> = Vec::with_capacity(n as usize);
         for node in 0..n {
-            let extra = if node == self.node_id {
-                match self.state.lock().unwrap().serve(&Request::ListOutputs { dir: dir.clone() }) {
-                    crate::net::transport::Response::Names(v) => v,
-                    _ => Vec::new(),
-                }
-            } else {
-                match self.transport.call(
+            if node != self.node_id {
+                pending.push(self.transport.send(
                     self.node_id,
                     node,
                     Request::ListOutputs { dir: dir.clone() },
-                )? {
-                    crate::net::transport::Response::Names(v) => v,
-                    _ => Vec::new(),
-                }
-            };
-            names.extend(extra);
+                )?);
+            }
+        }
+        // serve the local share while the peers work
+        if let Response::Names(v) = self.shared.serve(&Request::ListOutputs { dir: dir.clone() }) {
+            names.extend(v);
+        }
+        for p in pending {
+            if let Response::Names(v) = p.wait()? {
+                names.extend(v);
+            }
         }
         names.sort();
         names.dedup();
         if names.is_empty() {
             // distinguish empty dir from missing dir via input table
-            let st = self.state.lock().unwrap();
-            if !st.input_meta.is_dir(&dir) {
+            if !self.shared.input_meta.is_dir(&dir) {
                 return Err(FanError::NotFound(dir));
             }
         }
@@ -342,22 +365,18 @@ impl Vfs for FanStoreVfs {
 
     fn unlink(&mut self, path: &str) -> Result<()> {
         let path = normalize(path);
-        {
-            let st = self.state.lock().unwrap();
-            if st.input_meta.get(&path).is_some() {
-                return Err(FanError::Consistency(format!(
-                    "input files are immutable: {path}"
-                )));
-            }
+        if self.shared.input_meta.get(&path).is_some() {
+            return Err(FanError::Consistency(format!(
+                "input files are immutable: {path}"
+            )));
         }
-        let home = {
-            let st = self.state.lock().unwrap();
-            st.placement.output_home(&path)
-        };
+        let home = self.shared.placement.output_home(&path);
         if home == self.node_id {
-            let mut st = self.state.lock().unwrap();
-            st.output_meta.remove(&path)?;
-            st.output_data.remove(&path);
+            self.shared.output_meta.write().unwrap().remove(&path)?;
+            self.shared.output_data.write().unwrap().remove(&path);
+            // drop any cached copy so a later same-name output can't serve
+            // stale bytes (outstanding readers keep their pinned Arc)
+            self.shared.cache.invalidate(&path);
             Ok(())
         } else {
             // remove metadata at home; data GC at origin is lazy
@@ -366,7 +385,7 @@ impl Vfs for FanStoreVfs {
                 home,
                 Request::StatOutput { path: path.clone() },
             )? {
-                crate::net::transport::Response::Meta { .. } => {
+                Response::Meta { .. } => {
                     // Note: full remote unlink protocol elided — the DL
                     // pattern never unlinks (§3.4); this path serves tests.
                     Err(FanError::Consistency(

@@ -226,25 +226,60 @@ fn cache_is_shared_between_clients_on_a_node() {
     let mut b = cluster.client(0); // second "process" on the same node
     let fd_a = a.open(&path, OpenFlags::Read).unwrap();
     let fd_b = b.open(&path, OpenFlags::Read).unwrap();
-    {
-        let st = cluster.node_state(0);
-        let st = st.lock().unwrap();
-        assert_eq!(st.cache.refcount(&path), 2, "both fds pin one entry");
-    }
+    let st = cluster.node_state(0);
+    assert_eq!(st.cache.refcount(&path), 2, "both fds pin one entry");
     a.close(fd_a).unwrap();
-    {
-        let st = cluster.node_state(0);
-        let st = st.lock().unwrap();
-        assert_eq!(st.cache.refcount(&path), 1, "entry survives first close");
-    }
+    assert_eq!(st.cache.refcount(&path), 1, "entry survives first close");
     b.close(fd_b).unwrap();
-    {
-        let st = cluster.node_state(0);
-        let st = st.lock().unwrap();
-        assert_eq!(st.cache.refcount(&path), 0, "evicted at zero (§5.4)");
-        assert_eq!(st.cache.resident_files(), 0);
-    }
+    assert_eq!(st.cache.refcount(&path), 0, "evicted at zero (§5.4)");
+    assert_eq!(st.cache.resident_files(), 0);
+    drop(st);
     cluster.shutdown();
+}
+
+#[test]
+fn committed_output_reads_are_cached_per_node() {
+    let files = dataset(8, 11);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 2,
+            partitions: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // checkpoint written on node 1, resumed from node 0 by two "processes"
+    let mut w = cluster.client(1);
+    let ckpt = vec![7u8; 4096];
+    w.write_file("/ckpt/big.bin", &ckpt).unwrap();
+    let mut a = cluster.client(0);
+    let mut b = cluster.client(0);
+    let fd_a = a.open("/ckpt/big.bin", OpenFlags::Read).unwrap();
+    let fd_b = b.open("/ckpt/big.bin", OpenFlags::Read).unwrap();
+    let st = cluster.node_state(0);
+    assert_eq!(
+        st.cache.refcount("/ckpt/big.bin"),
+        2,
+        "output content pinned in the node cache like inputs"
+    );
+    let mut out = vec![0u8; 4096];
+    let mut got = 0;
+    while got < out.len() {
+        let n = a.read(fd_a, &mut out[got..]).unwrap();
+        assert!(n > 0);
+        got += n;
+    }
+    assert_eq!(out, ckpt);
+    a.close(fd_a).unwrap();
+    b.close(fd_b).unwrap();
+    drop(st);
+    let report = cluster.shutdown();
+    assert_eq!(
+        report.per_node[0].remote_reads_issued, 1,
+        "second same-node open must hit the cache, not re-fetch the origin"
+    );
+    assert_eq!(report.per_node[0].bytes_fetched_remote, 4096);
 }
 
 #[test]

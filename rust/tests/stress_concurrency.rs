@@ -1,0 +1,172 @@
+//! Concurrency stress: many trainer threads per node hammering one cluster
+//! with mixed open/read/close/stat/readdir/write traffic.
+//!
+//! The decomposed `NodeShared` has no node-global lock, so this exercises
+//! the sharded cache, the sealed metadata/store, the output `RwLock`s and
+//! the atomic stats all at once.  Asserts:
+//!
+//! * no deadlock (the test completes and the cluster shuts down),
+//! * byte-exact contents for every read under concurrency,
+//! * the per-node atomic counters sum to exactly the totals the threads
+//!   report: every read-open is one cache acquire (hit or miss), every
+//!   cache miss is exactly one fetch (local or remote), every write is one
+//!   committed output.
+
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::partition::builder::InputFile;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::{OpenFlags, Vfs};
+
+const NODES: u32 = 3;
+const THREADS_PER_NODE: u32 = 6;
+const ITERS: usize = 60;
+
+fn inputs(n: usize) -> Vec<InputFile> {
+    (0..n)
+        .map(|i| InputFile {
+            path: format!("train/class{}/img{i:03}.raw", i % 4),
+            data: vec![(i % 251) as u8; 300 + 7 * i],
+        })
+        .collect()
+}
+
+/// What one trainer thread did, for the global accounting.
+#[derive(Default)]
+struct ThreadTally {
+    read_opens: u64,
+    writes: u64,
+    bytes_written: u64,
+}
+
+#[test]
+fn stress_mixed_ops_many_threads_per_node() {
+    let files = inputs(36);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: NODES,
+            partitions: 6,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+
+    let paths: Vec<(String, Vec<u8>)> = files
+        .iter()
+        .map(|f| (format!("/fanstore/user/{}", f.path), f.data.clone()))
+        .collect();
+
+    let mut handles = Vec::new();
+    for node in 0..NODES {
+        for t in 0..THREADS_PER_NODE {
+            let gtid = node * THREADS_PER_NODE + t;
+            let mut vfs = cluster.client(node);
+            let paths = paths.clone();
+            handles.push(std::thread::spawn(move || -> ThreadTally {
+                let mut rng = Prng::new(0x57E55 + gtid as u64);
+                let mut tally = ThreadTally::default();
+                let mut last_output: Option<(String, Vec<u8>)> = None;
+                for i in 0..ITERS {
+                    // whole-file read of a random input, byte-exact
+                    let (p, want) = &paths[rng.index(paths.len())];
+                    let got = vfs.read_all(p).expect("input read");
+                    assert_eq!(&got, want, "{p}");
+                    tally.read_opens += 1;
+
+                    // stat a random input (metadata only, no cache traffic)
+                    let (p, want) = &paths[rng.index(paths.len())];
+                    assert_eq!(vfs.stat(p).expect("stat").size as usize, want.len());
+
+                    // partial read through the descriptor API
+                    if i % 5 == 0 {
+                        let (p, want) = &paths[rng.index(paths.len())];
+                        let fd = vfs.open(p, OpenFlags::Read).expect("open");
+                        tally.read_opens += 1;
+                        let mut buf = vec![0u8; 17];
+                        let n = vfs.read(fd, &mut buf).expect("read");
+                        assert!(n > 0);
+                        assert_eq!(&buf[..n], &want[..n]);
+                        vfs.close(fd).expect("close");
+                    }
+
+                    // directory listings under churn
+                    if i % 7 == 0 {
+                        let names = vfs.readdir("/fanstore/user/train").expect("readdir");
+                        assert_eq!(names.len(), 4, "class0..class3");
+                        // output dir listing may be empty early on; must
+                        // never error once outputs exist, and stays sorted
+                        if let Ok(outs) = vfs.readdir("/stress/out") {
+                            assert!(outs.windows(2).all(|w| w[0] < w[1]), "sorted, deduped");
+                        }
+                    }
+
+                    // write a unique output file (checkpoint pattern)
+                    if i % 8 == 0 {
+                        let path = format!("/stress/out/t{gtid:02}_{i:03}.bin");
+                        let data = vec![(gtid % 251) as u8; 64 + (i % 128)];
+                        vfs.write_file(&path, &data).expect("write output");
+                        tally.writes += 1;
+                        tally.bytes_written += data.len() as u64;
+                        last_output = Some((path, data));
+                    }
+
+                    // resume-read our own latest checkpoint
+                    if i % 8 == 4 {
+                        if let Some((p, want)) = &last_output {
+                            let got = vfs.read_all(p).expect("output read");
+                            assert_eq!(&got, want, "{p}");
+                            tally.read_opens += 1;
+                        }
+                    }
+                }
+                tally
+            }));
+        }
+    }
+
+    let mut total = ThreadTally::default();
+    for h in handles {
+        let t = h.join().expect("no thread panicked/deadlocked");
+        total.read_opens += t.read_opens;
+        total.writes += t.writes;
+        total.bytes_written += t.bytes_written;
+    }
+
+    // full output listing visible from any node
+    let mut vfs = cluster.client(0);
+    let outs = vfs.readdir("/stress/out").unwrap();
+    assert_eq!(outs.len() as u64, total.writes, "every commit listed");
+
+    // cache + stats algebra across all nodes
+    let mut hits = 0u64;
+    let mut misses = 0u64;
+    for node in 0..NODES {
+        let st = cluster.node_state(node);
+        let cs = st.cache.stats();
+        hits += cs.hits;
+        misses += cs.misses;
+        assert_eq!(
+            st.cache.resident_files(),
+            0,
+            "all descriptors closed -> empty cache on node {node}"
+        );
+    }
+    assert_eq!(
+        hits + misses,
+        total.read_opens,
+        "one cache acquire per read-open"
+    );
+
+    let report = cluster.shutdown();
+    let fetches: u64 = report
+        .per_node
+        .iter()
+        .map(|s| s.local_reads + s.remote_reads_issued)
+        .sum();
+    assert_eq!(fetches, misses, "every cache miss is exactly one fetch");
+    let committed: u64 = report.per_node.iter().map(|s| s.outputs_committed).sum();
+    let out_bytes: u64 = report.per_node.iter().map(|s| s.output_bytes).sum();
+    assert_eq!(committed, total.writes);
+    assert_eq!(out_bytes, total.bytes_written);
+}

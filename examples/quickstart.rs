@@ -66,6 +66,7 @@ fn main() -> fanstore::Result<()> {
         seed: 7,
         checkpoint: true,
         flip_prob: 0.0,
+        prefetch: true,
     };
     let log = train_cnn(&cluster, &engine, &train_paths, &test_paths, &tc)?;
     println!("      loss curve (every 8th step):");

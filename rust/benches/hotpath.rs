@@ -10,11 +10,14 @@
 //!   * end-to-end in-proc read_all on a 4-node cluster;
 //!   * aggregate same-node cached-read throughput vs. trainer thread count
 //!     (the lock-decomposition scaling check: a node-global lock pins this
-//!     at ~1×; the sharded/zero-copy hot path must scale).
+//!     at ~1×; the sharded/zero-copy hot path must scale);
+//!   * remote-read pipeline: sync-per-file vs batched `ReadFiles` vs
+//!     batched+background-prefetch on the same shuffled workload (the
+//!     §5.4 overlap claim, end to end).
 //!
 //! Besides the human-readable log, emits `BENCH_hotpath.json`
 //! (section → ops/s and bytes/s) so the perf trajectory is tracked across
-//! PRs.
+//! PRs.  Pass `--smoke` (CI) for reduced sizes with the same sections.
 
 use std::sync::Arc;
 use std::time::Instant;
@@ -43,11 +46,12 @@ fn time<F: FnMut()>(mut f: F, iters: u32) -> f64 {
     t0.elapsed().as_secs_f64() / iters as f64
 }
 
-fn bench_lzss(out: &mut Entries) {
+fn bench_lzss(out: &mut Entries, smoke: bool) {
     println!("== LZSS codec ==");
+    let buf = if smoke { 1 << 20 } else { 4 << 20 };
     let mut rng = Prng::new(42);
-    let srgan_like = synth_content(&mut rng, 4 << 20, 0.72);
-    let mut random = vec![0u8; 4 << 20];
+    let srgan_like = synth_content(&mut rng, buf, 0.72);
+    let mut random = vec![0u8; buf];
     rng.fill_bytes(&mut random);
 
     for level in [1u8, 3, 5, 9] {
@@ -93,10 +97,10 @@ fn bench_lzss(out: &mut Entries) {
     out.push(("lzss/compress_random".into(), 0.0, rate));
 }
 
-fn bench_metadata(out: &mut Entries) {
+fn bench_metadata(out: &mut Entries, smoke: bool) {
     println!("== metadata table ==");
     let mut t = MetaTable::new();
-    let n = 200_000u64;
+    let n = if smoke { 50_000u64 } else { 200_000u64 };
     let t0 = Instant::now();
     for i in 0..n {
         t.insert(
@@ -136,10 +140,10 @@ fn bench_metadata(out: &mut Entries) {
     out.push(("metadata/readdir".into(), rate, 0.0));
 }
 
-fn bench_cache(out: &mut Entries) {
+fn bench_cache(out: &mut Entries, smoke: bool) {
     println!("== refcount cache ==");
     let mut c = RefCountCache::new();
-    let n = 500_000u64;
+    let n = if smoke { 100_000u64 } else { 500_000u64 };
     let t0 = Instant::now();
     for i in 0..n {
         let path = format!("/f{}", i % 1000);
@@ -181,10 +185,10 @@ fn bench_cache(out: &mut Entries) {
     out.push(("cache/sharded_acquire_release_8t".into(), rate, 0.0));
 }
 
-fn bench_partition(out: &mut Entries) {
+fn bench_partition(out: &mut Entries, smoke: bool) {
     println!("== partition pack/scan ==");
     let mut rng = Prng::new(7);
-    let files: Vec<InputFile> = (0..2000)
+    let files: Vec<InputFile> = (0..if smoke { 400 } else { 2000 })
         .map(|i| {
             let mut data = vec![0u8; 32 * 1024];
             rng.fill_bytes(&mut data);
@@ -214,7 +218,7 @@ fn bench_partition(out: &mut Entries) {
     out.push(("partition/scan".into(), 0.0, rate));
 }
 
-fn bench_transport(out: &mut Entries) {
+fn bench_transport(out: &mut Entries, smoke: bool) {
     println!("== transport round trip ==");
     let (tp, eps) = InProcTransport::fully_connected(2);
     let mut eps = eps.into_iter();
@@ -238,7 +242,7 @@ fn bench_transport(out: &mut Entries) {
                 });
         }
     });
-    let iters = 20_000;
+    let iters = if smoke { 4_000 } else { 20_000 };
     let t0 = Instant::now();
     for i in 0..iters {
         let r = tp
@@ -263,12 +267,13 @@ fn bench_transport(out: &mut Entries) {
     handle.join().unwrap();
 }
 
-fn bench_read_path(out: &mut Entries) {
+fn bench_read_path(out: &mut Entries, smoke: bool) {
     println!("== in-proc end-to-end read_all (4 nodes) ==");
+    let (n_files, size) = if smoke { (128, 32 * 1024) } else { (512, 128 * 1024) };
     let mut rng = Prng::new(9);
-    let files: Vec<InputFile> = (0..512)
+    let files: Vec<InputFile> = (0..n_files)
         .map(|i| {
-            let mut data = vec![0u8; 128 * 1024];
+            let mut data = vec![0u8; size];
             rng.fill_bytes(&mut data);
             InputFile {
                 path: format!("train/f{i:04}"),
@@ -316,11 +321,11 @@ fn bench_read_path(out: &mut Entries) {
 /// Arc hand-off).  Under the old `Arc<Mutex<NodeState>>` the aggregate is
 /// flat (~1×) regardless of thread count; the decomposed hot path must
 /// scale.
-fn bench_multithread_reads(out: &mut Entries) {
+fn bench_multithread_reads(out: &mut Entries, smoke: bool) {
     println!("== same-node cached reads vs trainer threads (1 node) ==");
     const FILE_KB: usize = 128;
     const N_FILES: usize = 64;
-    const READS_PER_THREAD: usize = 512;
+    let reads_per_thread: usize = if smoke { 128 } else { 512 };
     let mut rng = Prng::new(11);
     let files: Vec<InputFile> = (0..N_FILES)
         .map(|i| {
@@ -363,7 +368,7 @@ fn bench_multithread_reads(out: &mut Entries) {
             let paths = Arc::clone(&paths);
             handles.push(std::thread::spawn(move || {
                 let mut bytes = 0u64;
-                for i in 0..READS_PER_THREAD {
+                for i in 0..reads_per_thread {
                     let p = &paths[(t * 17 + i) % paths.len()];
                     bytes += vfs.read_all(p).unwrap().len() as u64;
                 }
@@ -375,7 +380,7 @@ fn bench_multithread_reads(out: &mut Entries) {
             bytes += h.join().unwrap();
         }
         let secs = t0.elapsed().as_secs_f64();
-        let ops = (k * READS_PER_THREAD) as f64 / secs;
+        let ops = (k * reads_per_thread) as f64 / secs;
         let rate = bytes as f64 / secs;
         if k == 1 {
             base = rate;
@@ -392,6 +397,37 @@ fn bench_multithread_reads(out: &mut Entries) {
         pinner.close(fd).unwrap();
     }
     cluster.shutdown();
+}
+
+/// Remote-read pipeline on a real 4-node cluster: the same shuffled
+/// full-dataset read from node 0 (75% remote) three ways.  This is the
+/// acceptance gauge for the batched+prefetch read path: amortized round
+/// trips plus fetch/compute overlap must beat one synchronous round trip
+/// per file.
+fn bench_remote_pipeline(out: &mut Entries, smoke: bool) {
+    println!("== remote read pipeline: sync vs batched vs batched+prefetch (4 nodes) ==");
+    let (n_files, size, batch) = if smoke {
+        (128usize, 32 << 10, 16usize)
+    } else {
+        (512usize, 128 << 10, 16usize)
+    };
+    let rows = fanstore::experiments::scaling::run_inproc_pipeline(4, n_files, size, batch)
+        .expect("pipeline bench");
+    let mut base = 0.0f64;
+    for r in &rows {
+        let fps = r.files_per_sec();
+        if r.key == "sync_per_file" {
+            base = fps;
+        }
+        println!(
+            "  {:>17}: {:>12}, {fps:.0} files/s ({:.2}x vs sync), {} transport requests",
+            r.mode,
+            human_rate(r.bytes_per_sec()),
+            fps / base.max(1e-9),
+            r.requests_served
+        );
+        out.push((format!("remote_read/{}", r.key), fps, r.bytes_per_sec()));
+    }
 }
 
 /// Write `BENCH_hotpath.json`: {"section": {"ops_per_sec": x, "bytes_per_sec": y}, ...}
@@ -411,14 +447,19 @@ fn write_json(entries: &Entries) {
 }
 
 fn main() {
-    println!("FanStore hot-path microbenchmarks");
+    let smoke = std::env::args().any(|a| a == "--smoke");
+    println!(
+        "FanStore hot-path microbenchmarks{}",
+        if smoke { " (smoke mode: reduced sizes)" } else { "" }
+    );
     let mut entries = Entries::new();
-    bench_lzss(&mut entries);
-    bench_metadata(&mut entries);
-    bench_cache(&mut entries);
-    bench_partition(&mut entries);
-    bench_transport(&mut entries);
-    bench_read_path(&mut entries);
-    bench_multithread_reads(&mut entries);
+    bench_lzss(&mut entries, smoke);
+    bench_metadata(&mut entries, smoke);
+    bench_cache(&mut entries, smoke);
+    bench_partition(&mut entries, smoke);
+    bench_transport(&mut entries, smoke);
+    bench_read_path(&mut entries, smoke);
+    bench_multithread_reads(&mut entries, smoke);
+    bench_remote_pipeline(&mut entries, smoke);
     write_json(&entries);
 }

@@ -145,6 +145,11 @@ impl RefCountCache {
         self.entries.get(path).map(|e| e.refcount).unwrap_or(0)
     }
 
+    /// Residency peek without pinning (no hit/miss accounting).
+    pub fn contains(&self, path: &str) -> bool {
+        self.entries.contains_key(path)
+    }
+
     pub fn resident_files(&self) -> usize {
         self.entries.len()
     }
@@ -154,18 +159,20 @@ impl RefCountCache {
     }
 }
 
-/// Number of lock shards.  Chosen to exceed the trainer-thread counts the
-/// paper runs per node (up to 68 processes/node on KNL, but 8–16 active
-/// readers is typical) while keeping the merge cost of `stats()` trivial.
+/// Default number of lock shards.  Chosen to exceed the trainer-thread
+/// counts the paper runs per node (up to 68 processes/node on KNL, but 8–16
+/// active readers is typical) while keeping the merge cost of `stats()`
+/// trivial.  Tunable per cluster via
+/// [`crate::config::ClusterConfig::cache_shards`].
 pub const CACHE_SHARDS: usize = 16;
 
 /// Hash-sharded refcount cache: the node-wide cache used by [`crate::node`].
 ///
 /// Each shard is an independent lock domain, so acquire/release traffic
 /// from K trainer threads only serializes when two threads touch paths in
-/// the same shard (1/16 of the time under uniform access).
+/// the same shard (1/shards of the time under uniform access).
 pub struct ShardedCache {
-    shards: [Mutex<RefCountCache>; CACHE_SHARDS],
+    shards: Vec<Mutex<RefCountCache>>,
 }
 
 impl Default for ShardedCache {
@@ -174,21 +181,30 @@ impl Default for ShardedCache {
     }
 }
 
-/// Shard index by the crate's stable FNV-1a path hash — good enough to
-/// spread realistic dataset paths across [`CACHE_SHARDS`] shards.
-fn shard_of(path: &str) -> usize {
-    (crate::metadata::placement::path_hash(path) % CACHE_SHARDS as u64) as usize
-}
-
 impl ShardedCache {
+    /// Cache with the default [`CACHE_SHARDS`] lock domains.
     pub fn new() -> Self {
+        Self::with_shards(CACHE_SHARDS)
+    }
+
+    /// Cache with `n` lock domains (validated at cluster build time; any
+    /// n ≥ 1 is correct — it only changes contention, never semantics).
+    pub fn with_shards(n: usize) -> Self {
+        assert!(n > 0, "cache needs at least one shard");
         ShardedCache {
-            shards: std::array::from_fn(|_| Mutex::new(RefCountCache::new())),
+            shards: (0..n).map(|_| Mutex::new(RefCountCache::new())).collect(),
         }
     }
 
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Shard index by the crate's stable FNV-1a path hash — good enough to
+    /// spread realistic dataset paths across the shards.
     fn shard(&self, path: &str) -> std::sync::MutexGuard<'_, RefCountCache> {
-        self.shards[shard_of(path)].lock().unwrap()
+        let i = (crate::metadata::placement::path_hash(path) % self.shards.len() as u64) as usize;
+        self.shards[i].lock().unwrap()
     }
 
     pub fn acquire(&self, path: &str) -> Option<Arc<[u8]>> {
@@ -213,6 +229,11 @@ impl ShardedCache {
 
     pub fn refcount(&self, path: &str) -> u32 {
         self.shard(path).refcount(path)
+    }
+
+    /// Residency peek without pinning (no hit/miss accounting).
+    pub fn contains(&self, path: &str) -> bool {
+        self.shard(path).contains(path)
     }
 
     pub fn resident_files(&self) -> usize {
@@ -390,6 +411,33 @@ mod tests {
         assert_eq!(c.resident_files(), 0);
         let s = c.stats();
         assert_eq!((s.hits, s.misses, s.evictions), (1, 1, 1));
+    }
+
+    #[test]
+    fn sharded_cache_any_shard_count_is_correct() {
+        for n in [1usize, 3, 16, 64] {
+            let c = ShardedCache::with_shards(n);
+            assert_eq!(c.shard_count(), n);
+            let pins: Vec<_> = (0..40)
+                .map(|i| {
+                    let p = format!("/s{i}");
+                    (p.clone(), c.insert(&p, vec![i as u8; 8].into()))
+                })
+                .collect();
+            assert_eq!(c.resident_files(), 40);
+            for (p, pin) in &pins {
+                assert!(c.acquire(p).is_some());
+                c.release(p, pin);
+                c.release(p, pin);
+            }
+            assert_eq!(c.resident_files(), 0, "{n} shards must drain");
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn zero_shards_rejected() {
+        let _ = ShardedCache::with_shards(0);
     }
 
     #[test]

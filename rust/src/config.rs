@@ -28,6 +28,15 @@ pub struct ClusterConfig {
     pub replicate_dirs: Vec<String>,
     /// Spill partitions to this directory (real file I/O) instead of RAM.
     pub spill_dir: Option<String>,
+    /// Lock-shard count of each node's refcount cache (contention knob,
+    /// never semantics; see `cache::ShardedCache`).
+    pub cache_shards: usize,
+    /// Per-node prefetch engine: how many fetched-but-unclaimed files may
+    /// be pinned in the cache at once (the in-flight window / pin budget).
+    pub prefetch_window: usize,
+    /// Per-node prefetch engine: background fetcher-thread count (the
+    /// paper's §5.4 worker threads that overlap fetch with compute).
+    pub prefetch_fetchers: usize,
 }
 
 impl Default for ClusterConfig {
@@ -40,6 +49,9 @@ impl Default for ClusterConfig {
             mount: "/fanstore/user".into(),
             replicate_dirs: Vec::new(),
             spill_dir: None,
+            cache_shards: crate::cache::CACHE_SHARDS,
+            prefetch_window: 64,
+            prefetch_fetchers: 4,
         }
     }
 }
@@ -60,6 +72,25 @@ impl ClusterConfig {
         }
         if !self.mount.starts_with('/') {
             return Err(FanError::Config("mount must be absolute".into()));
+        }
+        if self.cache_shards == 0 || self.cache_shards > 4096 {
+            return Err(FanError::Config(format!(
+                "cache_shards must be in 1..=4096, got {}",
+                self.cache_shards
+            )));
+        }
+        if self.prefetch_fetchers == 0 || self.prefetch_fetchers > 128 {
+            return Err(FanError::Config(format!(
+                "prefetch_fetchers must be in 1..=128, got {}",
+                self.prefetch_fetchers
+            )));
+        }
+        if self.prefetch_window < self.prefetch_fetchers {
+            return Err(FanError::Config(format!(
+                "prefetch_window ({}) must be >= prefetch_fetchers ({}) or the \
+                 extra fetcher threads can never hold work",
+                self.prefetch_window, self.prefetch_fetchers
+            )));
         }
         Ok(())
     }
@@ -147,6 +178,38 @@ mod tests {
             ..Default::default()
         };
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn prefetch_and_shard_knobs_validated() {
+        for bad in [
+            ClusterConfig {
+                cache_shards: 0,
+                ..Default::default()
+            },
+            ClusterConfig {
+                cache_shards: 5000,
+                ..Default::default()
+            },
+            ClusterConfig {
+                prefetch_fetchers: 0,
+                ..Default::default()
+            },
+            ClusterConfig {
+                prefetch_window: 2,
+                prefetch_fetchers: 8,
+                ..Default::default()
+            },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?} must be rejected");
+        }
+        let ok = ClusterConfig {
+            cache_shards: 1,
+            prefetch_window: 8,
+            prefetch_fetchers: 8,
+            ..Default::default()
+        };
+        ok.validate().unwrap();
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! broadcast, and worker-thread startup.  The result serves POSIX-shaped
 //! traffic from any number of [`FanStoreVfs`] clients per node.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::config::ClusterConfig;
 use crate::error::Result;
@@ -16,6 +16,7 @@ use crate::node::{FanStoreNode, NodeBuilder, NodeShared, NodeStats};
 use crate::net::transport::InProcTransport;
 use crate::partition::builder::{build_partitions, BuildStats, InputFile};
 use crate::partition::format::PartitionReader;
+use crate::prefetch::{PrefetchConfig, PrefetchHandle, PrefetchStats, Prefetcher};
 use crate::storage::disk::DiskStore;
 use crate::vfs::FanStoreVfs;
 
@@ -26,6 +27,9 @@ pub struct Cluster {
     pub config: ClusterConfig,
     pub prep_stats: BuildStats,
     nodes: Vec<FanStoreNode>,
+    /// Per-node background prefetch engines, started on first use and
+    /// stopped (pins released) before the workers shut down.
+    prefetchers: Mutex<Vec<Option<Arc<Prefetcher>>>>,
 }
 
 /// Post-shutdown accounting.
@@ -106,6 +110,7 @@ impl Cluster {
                 None => DiskStore::in_memory(),
             };
             let mut builder = NodeBuilder::new(id, store, placement.clone());
+            builder.cache_shards = config.cache_shards;
             // dump the partitions this node hosts
             for (pid, blob) in &blobs {
                 if placement.is_local(*pid, id) {
@@ -123,12 +128,14 @@ impl Cluster {
             nodes.push(FanStoreNode::spawn(builder.seal(), ep));
         }
 
+        let prefetchers = Mutex::new((0..config.nodes).map(|_| None).collect());
         Ok(Cluster {
             transport,
             placement,
             config,
             prep_stats,
             nodes,
+            prefetchers,
         })
     }
 
@@ -145,6 +152,51 @@ impl Cluster {
         )
     }
 
+    /// New VFS client with the node's background prefetch engine attached:
+    /// input opens claim prefetched content instead of fetching inline.
+    pub fn prefetching_client(&self, node: u32) -> FanStoreVfs {
+        let mut c = self.client(node);
+        c.attach_prefetcher(self.prefetch_handle(node));
+        c
+    }
+
+    /// Handle to `node`'s prefetch engine, starting it on first use with
+    /// the cluster's `prefetch_window` / `prefetch_fetchers` settings.
+    pub fn prefetch_handle(&self, node: u32) -> PrefetchHandle {
+        let mut engines = self.prefetchers.lock().unwrap();
+        let slot = &mut engines[node as usize];
+        if slot.is_none() {
+            *slot = Some(Arc::new(Prefetcher::spawn(
+                node,
+                Arc::clone(&self.nodes[node as usize].shared),
+                self.transport.clone(),
+                PrefetchConfig {
+                    window: self.config.prefetch_window,
+                    fetchers: self.config.prefetch_fetchers,
+                },
+            )));
+        }
+        slot.as_ref().expect("just created").handle()
+    }
+
+    /// Prefetch accounting for `node` (zeros if its engine never started).
+    pub fn prefetch_stats(&self, node: u32) -> PrefetchStats {
+        self.prefetchers.lock().unwrap()[node as usize]
+            .as_ref()
+            .map(|p| p.stats())
+            .unwrap_or_default()
+    }
+
+    /// Stop every prefetch engine, releasing unclaimed cache pins.  Called
+    /// by [`Cluster::shutdown`]; also useful for draining mid-run (a later
+    /// `prefetch_handle` starts a fresh engine).
+    pub fn stop_prefetchers(&self) {
+        let mut engines = self.prefetchers.lock().unwrap();
+        for slot in engines.iter_mut() {
+            *slot = None;
+        }
+    }
+
     /// Shared state handle (tests / stats).  No lock: components of
     /// [`NodeShared`] synchronize individually.
     pub fn node_state(&self, node: u32) -> Arc<NodeShared> {
@@ -153,6 +205,9 @@ impl Cluster {
 
     /// Orderly shutdown; returns per-node stats.
     pub fn shutdown(self) -> ClusterReport {
+        // prefetch engines first: their fetcher threads talk to the node
+        // workers, and their unclaimed pins must drain before stats settle
+        self.stop_prefetchers();
         let per_node: Vec<NodeStats> = self
             .nodes
             .iter()
@@ -313,6 +368,68 @@ mod tests {
         }
         // single-write: re-creating the same output must fail
         assert!(writer.write_file("/ckpt/model_epoch01.bin", b"x").is_err());
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn prefetching_client_reads_everything_and_drains() {
+        let files = dataset(48, 512, 21);
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 4,
+                partitions: 8,
+                prefetch_window: 8,
+                prefetch_fetchers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let handle = cluster.prefetch_handle(0);
+        let paths: Vec<String> = files
+            .iter()
+            .map(|f| format!("/fanstore/user/{}", f.path))
+            .collect();
+        handle.schedule(paths.iter().cloned());
+        let mut vfs = cluster.prefetching_client(0);
+        for (f, p) in files.iter().zip(&paths) {
+            assert_eq!(vfs.read_all(p).unwrap(), f.data, "{p}");
+        }
+        let pf = cluster.prefetch_stats(0);
+        assert_eq!(pf.scheduled, 48);
+        assert_eq!(
+            pf.claimed + pf.stolen,
+            48,
+            "every read claims or steals its path: {pf:?}"
+        );
+        cluster.stop_prefetchers();
+        let st = cluster.node_state(0);
+        assert_eq!(st.cache.resident_files(), 0, "pins drained");
+        drop(st);
+        cluster.shutdown();
+    }
+
+    #[test]
+    fn custom_cache_shards_are_applied() {
+        let files = dataset(10, 128, 22);
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 2,
+                partitions: 2,
+                cache_shards: 3,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        assert_eq!(cluster.node_state(0).cache.shard_count(), 3);
+        let mut vfs = cluster.client(1);
+        for f in &files {
+            assert_eq!(
+                vfs.read_all(&format!("/fanstore/user/{}", f.path)).unwrap(),
+                f.data
+            );
+        }
         cluster.shutdown();
     }
 

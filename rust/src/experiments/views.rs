@@ -61,6 +61,7 @@ pub fn run(
             seed: 7,
             checkpoint: true,
             flip_prob: 0.0,
+            prefetch: true,
         };
         let log = train_cnn(&cluster, engine, &train_paths, &test_paths, &tc)?;
         cluster.shutdown();

@@ -16,7 +16,9 @@
 //!   [`runtime`] via PJRT.
 //!
 //! Quick tour: [`partition`] packs datasets (paper §5.2, Table 3);
-//! [`metadata`] is §5.3; [`cache`]+[`node`] are §5.4; [`vfs`] is the
+//! [`metadata`] is §5.3; [`cache`]+[`node`]+[`prefetch`] are §5.4 (the
+//! latter being the background worker threads that overlap fetch with
+//! compute, via batched per-peer reads); [`vfs`] is the
 //! POSIX-compliant interface of §5.5; [`compress`] is the LZSS codec of
 //! §5.4/§6.6; [`sim`]+[`net`]+[`storage`] model the testbeds of §6.1;
 //! [`experiments`] regenerates every figure of §6.
@@ -31,6 +33,7 @@ pub mod metadata;
 pub mod net;
 pub mod node;
 pub mod partition;
+pub mod prefetch;
 pub mod runtime;
 pub mod sim;
 pub mod storage;

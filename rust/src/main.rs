@@ -32,7 +32,7 @@ fn usage() {
          bench-io    run the §6.2 benchmark on the in-proc cluster\n\
          train       train the CNN surrogate through FanStore + PJRT\n\
          experiment  regenerate a paper figure: fig1 fig3 fig4 fig5 fig6\n\
-                     fig7 fig8 fig9 fig10 fig11 prep-cost all"
+                     fig7 fig8 fig9 fig10 fig11 prep-cost pipeline all"
     );
 }
 
@@ -277,6 +277,12 @@ fn cmd_experiment(m: &ArgMap) -> Result<()> {
                 let rows = exp::prep::run(1500, 32)?;
                 exp::prep::report(&rows);
             }
+            "pipeline" => {
+                // real-cluster remote-read strategies (not a figure in the
+                // paper — measures the §5.4 overlap/batching machinery)
+                let rows = exp::scaling::run_inproc_pipeline(4, 512, 64 << 10, 16)?;
+                exp::scaling::report_inproc_pipeline(&rows);
+            }
             other => {
                 return Err(fanstore::FanError::Config(format!(
                     "unknown experiment {other}"
@@ -288,7 +294,7 @@ fn cmd_experiment(m: &ArgMap) -> Result<()> {
     if which == "all" {
         for id in [
             "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-            "prep-cost", "fig1",
+            "prep-cost", "pipeline", "fig1",
         ] {
             run_one(id)?;
         }

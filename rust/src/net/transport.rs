@@ -28,6 +28,10 @@ use crate::metadata::record::{FileMeta, FileStat};
 pub enum Request {
     /// Read the stored bytes of an input (or committed output) file.
     ReadFile { path: String },
+    /// Read a whole mini-batch's stored bytes in one round trip.  The reply
+    /// carries one [`FileFetch`] per requested path (same order), so a
+    /// missing or faulted file never poisons the rest of the batch.
+    ReadFiles { paths: Vec<String> },
     /// Stat a path this node is authoritative for (output files).
     StatOutput { path: String },
     /// Forward a finished output file's metadata to its home node
@@ -35,8 +39,50 @@ pub enum Request {
     CommitOutput { path: String, meta: FileMeta },
     /// List output files homed on this node under a directory.
     ListOutputs { dir: String },
+    /// Remove an output file's metadata at its home node; the reply names
+    /// the originating node so the caller can GC the buffered bytes there.
+    UnlinkOutput { path: String },
+    /// Drop the buffered bytes of an unlinked output at its originating
+    /// node (idempotent — a second drop is a no-op).
+    DropOutput { path: String },
     /// Orderly shutdown of the worker thread.
     Shutdown,
+}
+
+/// Per-file outcome inside a batched [`Response::FilesData`] reply.  Keeps
+/// the ENOENT vs. real-I/O-fault distinction the single-file path has, per
+/// file, so callers can retry or surface exactly the right errno.
+#[derive(Debug)]
+pub enum FileFetch {
+    Data {
+        stored: Arc<[u8]>,
+        raw_len: u64,
+        compressed: bool,
+    },
+    /// The path is not stored (and not buffered) on the serving node.
+    NotFound,
+    /// The path exists but reading it failed (spilled-file I/O error,
+    /// partition format fault, ...) — must not masquerade as ENOENT.
+    Fault(String),
+}
+
+impl FileFetch {
+    /// Caller-facing conversion preserving the errno distinction.
+    pub fn into_result(self, path: &str) -> Result<(Arc<[u8]>, u64, bool)> {
+        match self {
+            FileFetch::Data {
+                stored,
+                raw_len,
+                compressed,
+            } => Ok((stored, raw_len, compressed)),
+            FileFetch::NotFound => Err(FanError::NotFound(path.to_string())),
+            FileFetch::Fault(e) => Err(FanError::Transport(format!("EIO {path}: {e}"))),
+        }
+    }
+
+    pub fn is_data(&self) -> bool {
+        matches!(self, FileFetch::Data { .. })
+    }
 }
 
 /// Worker replies.
@@ -47,6 +93,8 @@ pub enum Response {
         raw_len: u64,
         compressed: bool,
     },
+    /// Batched read reply: one entry per requested path, request order.
+    FilesData(Vec<(String, FileFetch)>),
     /// Output-file metadata: the stat plus the node that buffered the data
     /// (the originating node, §5.4 — reads must go there, not to the home).
     Meta {
@@ -161,6 +209,17 @@ impl Response {
             ))),
         }
     }
+
+    /// Unwrap a `FilesData` (batched read) response.
+    pub fn into_files_data(self) -> Result<Vec<(String, FileFetch)>> {
+        match self {
+            Response::FilesData(files) => Ok(files),
+            Response::Err(e) => Err(FanError::Transport(e)),
+            other => Err(FanError::Transport(format!(
+                "expected FilesData, got {other:?}"
+            ))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -183,6 +242,25 @@ mod tests {
                             compressed: false,
                         });
                     }
+                    Request::ReadFiles { paths } => {
+                        served += 1;
+                        let files = paths
+                            .into_iter()
+                            .map(|p| {
+                                let fetch = if p.contains("missing") {
+                                    FileFetch::NotFound
+                                } else {
+                                    FileFetch::Data {
+                                        stored: p.clone().into_bytes().into(),
+                                        raw_len: 0,
+                                        compressed: false,
+                                    }
+                                };
+                                (p, fetch)
+                            })
+                            .collect();
+                        let _ = msg.reply.send(Response::FilesData(files));
+                    }
                     _ => {
                         let _ = msg.reply.send(Response::Ok);
                     }
@@ -204,6 +282,44 @@ mod tests {
         tp.shutdown_all();
         let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(served, 1);
+    }
+
+    #[test]
+    fn batched_roundtrip_preserves_order_and_per_file_results() {
+        let (tp, eps) = InProcTransport::fully_connected(2);
+        let handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        let resp = tp
+            .call(
+                0,
+                1,
+                Request::ReadFiles {
+                    paths: vec!["/a".into(), "/missing/x".into(), "/b".into()],
+                },
+            )
+            .unwrap();
+        let files = resp.into_files_data().unwrap();
+        assert_eq!(files.len(), 3);
+        assert_eq!(files[0].0, "/a");
+        assert!(files[0].1.is_data());
+        assert_eq!(files[1].0, "/missing/x");
+        assert!(matches!(files[1].1, FileFetch::NotFound));
+        // one missing file does not poison the rest of the batch
+        let (path, fetch) = files.into_iter().nth(2).unwrap();
+        assert_eq!(path, "/b");
+        let (data, _, _) = fetch.into_result(&path).unwrap();
+        assert_eq!(&data[..], b"/b");
+        // ENOENT maps to NotFound, not a transport fault
+        assert!(matches!(
+            FileFetch::NotFound.into_result("/missing/x"),
+            Err(FanError::NotFound(_))
+        ));
+        assert!(matches!(
+            FileFetch::Fault("disk on fire".into()).into_result("/a"),
+            Err(FanError::Transport(_))
+        ));
+        tp.shutdown_all();
+        let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 1, "one round trip served the whole batch");
     }
 
     #[test]

@@ -36,7 +36,7 @@ use crate::error::Result;
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta};
 use crate::metadata::table::MetaTable;
-use crate::net::transport::{NodeEndpoint, Request, Response};
+use crate::net::transport::{FileFetch, NodeEndpoint, Request, Response};
 use crate::storage::disk::DiskStore;
 
 /// Per-node I/O accounting snapshot used by the experiment reports.
@@ -45,6 +45,12 @@ pub struct NodeStats {
     pub local_reads: u64,
     pub remote_reads_served: u64,
     pub remote_reads_issued: u64,
+    /// `ReadFiles` batches served by this node's worker (each also counts
+    /// its per-file serves in `remote_reads_served`).
+    pub batched_reads_served: u64,
+    /// `StatOutput` round trips avoided by the committed-output metadata
+    /// cache on this (reading) node.
+    pub output_meta_hits: u64,
     pub bytes_read_local: u64,
     pub bytes_served_remote: u64,
     pub bytes_fetched_remote: u64,
@@ -60,6 +66,8 @@ pub struct AtomicNodeStats {
     pub local_reads: AtomicU64,
     pub remote_reads_served: AtomicU64,
     pub remote_reads_issued: AtomicU64,
+    pub batched_reads_served: AtomicU64,
+    pub output_meta_hits: AtomicU64,
     pub bytes_read_local: AtomicU64,
     pub bytes_served_remote: AtomicU64,
     pub bytes_fetched_remote: AtomicU64,
@@ -77,6 +85,8 @@ impl AtomicNodeStats {
             local_reads: ld(&self.local_reads),
             remote_reads_served: ld(&self.remote_reads_served),
             remote_reads_issued: ld(&self.remote_reads_issued),
+            batched_reads_served: ld(&self.batched_reads_served),
+            output_meta_hits: ld(&self.output_meta_hits),
             bytes_read_local: ld(&self.bytes_read_local),
             bytes_served_remote: ld(&self.bytes_served_remote),
             bytes_fetched_remote: ld(&self.bytes_fetched_remote),
@@ -100,6 +110,9 @@ pub struct NodeBuilder {
     pub store: DiskStore,
     pub input_meta: Arc<MetaTable>,
     pub placement: Placement,
+    /// Refcount-cache shard count (lock domains); tunable per cluster via
+    /// [`crate::config::ClusterConfig::cache_shards`].
+    pub cache_shards: usize,
 }
 
 impl NodeBuilder {
@@ -109,6 +122,7 @@ impl NodeBuilder {
             store,
             input_meta: Arc::new(MetaTable::new()),
             placement,
+            cache_shards: crate::cache::CACHE_SHARDS,
         }
     }
 
@@ -119,9 +133,10 @@ impl NodeBuilder {
             store: self.store,
             input_meta: self.input_meta,
             placement: self.placement,
-            cache: ShardedCache::new(),
+            cache: ShardedCache::with_shards(self.cache_shards),
             output_meta: RwLock::new(MetaTable::new()),
             output_data: RwLock::new(HashMap::new()),
+            output_meta_cache: RwLock::new(HashMap::new()),
             stats: AtomicNodeStats::default(),
         })
     }
@@ -148,6 +163,12 @@ pub struct NodeShared {
     /// Output file bytes kept on their originating node (§5.4: the data is
     /// buffered locally; only the metadata entry is forwarded on close()).
     pub output_data: RwLock<HashMap<String, Arc<[u8]>>>,
+    /// Reader-side cache of committed-output metadata fetched from remote
+    /// home nodes, so a repeat `open()` skips the `StatOutput` round trip.
+    /// Invalidated on any local unlink / `DropOutput`; a cross-node
+    /// unlink+rewrite is corrected lazily when the stale origin read comes
+    /// back ENOENT (see `FanStoreVfs::open`).
+    pub output_meta_cache: RwLock<HashMap<String, FileMeta>>,
     pub stats: AtomicNodeStats,
 }
 
@@ -157,41 +178,28 @@ impl NodeShared {
     /// worker thread and any number of VFS clients call this concurrently.
     pub fn serve(&self, req: &Request) -> Response {
         match req {
-            Request::ReadFile { path } => match self.store.read_stored(path) {
-                Ok((stored, at)) => {
-                    self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
-                    self.stats
-                        .bytes_served_remote
-                        .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                    Response::FileData {
-                        stored,
-                        raw_len: at.raw_len,
-                        compressed: at.compressed,
-                    }
-                }
-                // not in the store: maybe an output buffered on this node
-                Err(crate::error::FanError::NotFound(_)) => {
-                    let data = self.output_data.read().unwrap().get(path.as_str()).cloned();
-                    match data {
-                        Some(data) => {
-                            self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
-                            self.stats
-                                .bytes_served_remote
-                                .fetch_add(data.len() as u64, Ordering::Relaxed);
-                            let raw_len = data.len() as u64;
-                            Response::FileData {
-                                stored: data,
-                                raw_len,
-                                compressed: false,
-                            }
-                        }
-                        None => Response::Err(format!("ENOENT {path}")),
-                    }
-                }
-                // real I/O / format faults must not masquerade as ENOENT —
-                // spilled-file reads can fail transiently under concurrency
-                Err(e) => Response::Err(format!("EIO {path}: {e}")),
+            Request::ReadFile { path } => match self.fetch_stored(path) {
+                FileFetch::Data {
+                    stored,
+                    raw_len,
+                    compressed,
+                } => Response::FileData {
+                    stored,
+                    raw_len,
+                    compressed,
+                },
+                FileFetch::NotFound => Response::Err(format!("ENOENT {path}")),
+                FileFetch::Fault(e) => Response::Err(format!("EIO {path}: {e}")),
             },
+            Request::ReadFiles { paths } => {
+                self.stats.batched_reads_served.fetch_add(1, Ordering::Relaxed);
+                Response::FilesData(
+                    paths
+                        .iter()
+                        .map(|p| (p.clone(), self.fetch_stored(p)))
+                        .collect(),
+                )
+            }
             Request::StatOutput { path } => {
                 let meta = self.output_meta.read().unwrap().get(path).cloned();
                 match meta {
@@ -216,8 +224,99 @@ impl NodeShared {
                     .unwrap_or_default();
                 Response::Names(names)
             }
+            Request::UnlinkOutput { path } => {
+                let removed = self.output_meta.write().unwrap().remove(path);
+                match removed {
+                    Ok(meta) => {
+                        // this generation can no longer be served from here
+                        self.cache.invalidate(path);
+                        self.output_meta_cache.write().unwrap().remove(path.as_str());
+                        Response::Meta {
+                            stat: meta.stat,
+                            origin: meta.location.node,
+                        }
+                    }
+                    Err(_) => Response::Err(format!("ENOENT {path}")),
+                }
+            }
+            Request::DropOutput { path } => {
+                // origin-side GC of an unlinked output's buffered bytes;
+                // idempotent so a re-delivered drop is harmless
+                self.output_data.write().unwrap().remove(path.as_str());
+                self.cache.invalidate(path);
+                self.output_meta_cache.write().unwrap().remove(path.as_str());
+                Response::Ok
+            }
             Request::Shutdown => Response::Ok,
         }
+    }
+
+    /// Read one stored (or output-buffered) file for a peer, reporting the
+    /// outcome per file.  Shared by the single and batched serve paths.
+    pub fn fetch_stored(&self, path: &str) -> FileFetch {
+        match self.store.read_stored(path) {
+            Ok((stored, at)) => {
+                self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .bytes_served_remote
+                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                FileFetch::Data {
+                    stored,
+                    raw_len: at.raw_len,
+                    compressed: at.compressed,
+                }
+            }
+            // not in the store: maybe an output buffered on this node
+            Err(crate::error::FanError::NotFound(_)) => {
+                let data = self.output_data.read().unwrap().get(path).cloned();
+                match data {
+                    Some(data) => {
+                        self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
+                        self.stats
+                            .bytes_served_remote
+                            .fetch_add(data.len() as u64, Ordering::Relaxed);
+                        let raw_len = data.len() as u64;
+                        FileFetch::Data {
+                            stored: data,
+                            raw_len,
+                            compressed: false,
+                        }
+                    }
+                    None => FileFetch::NotFound,
+                }
+            }
+            // real I/O / format faults must not masquerade as ENOENT —
+            // spilled-file reads can fail transiently under concurrency
+            Err(e) => FileFetch::Fault(e.to_string()),
+        }
+    }
+
+    /// Which node this node should fetch an input's bytes from: itself for
+    /// replicated directories (§5.4 test-set broadcast — always local),
+    /// else the placement's nearest holder.  Shared by every read path so
+    /// a placement-policy change lands exactly once.
+    pub fn holder_of(&self, loc: &FileLocation) -> u32 {
+        if loc.partition == crate::metadata::record::REPLICATED_PARTITION {
+            self.id
+        } else {
+            self.placement.choose_holder(loc.partition, self.id)
+        }
+    }
+
+    /// Decompress a fetched payload on the reading node if needed (§5.4),
+    /// counting the decompression.  Shared by the VFS and the prefetcher.
+    pub fn decode_stored(
+        &self,
+        stored: Arc<[u8]>,
+        raw_len: u64,
+        compressed: bool,
+    ) -> Result<Arc<[u8]>> {
+        if !compressed {
+            return Ok(stored);
+        }
+        let out = crate::compress::lzss::decompress(&stored, raw_len as usize)?;
+        self.stats.decompressions.fetch_add(1, Ordering::Relaxed);
+        Ok(out.into())
     }
 }
 
@@ -450,6 +549,99 @@ mod tests {
             Response::Names(names) => assert_eq!(names, vec!["ckpt_1.h5"]),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn serve_batched_mixed_outcomes_with_duplicates() {
+        let fs = files(4);
+        let (blobs, _) = build_partitions(&fs, 1, Codec::None).unwrap();
+        let placement = Placement::new(1, 1, 1);
+        let mut b = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        let node = b.seal();
+        let resp = node.serve(&Request::ReadFiles {
+            paths: vec![
+                "/m/train/f1".into(),
+                "/nope".into(),
+                "/m/train/f1".into(), // duplicate in one batch
+                "/m/train/f3".into(),
+            ],
+        });
+        let files = match resp {
+            Response::FilesData(v) => v,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert_eq!(files.len(), 4);
+        assert!(matches!(files[1].1, FileFetch::NotFound));
+        for i in [0usize, 2] {
+            match &files[i].1 {
+                FileFetch::Data { stored, .. } => {
+                    assert_eq!(&stored[..], &vec![1u8; 101][..])
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        match &files[3].1 {
+            FileFetch::Data { stored, .. } => assert_eq!(&stored[..], &vec![3u8; 103][..]),
+            other => panic!("unexpected {other:?}"),
+        }
+        let st = node.stats.snapshot();
+        assert_eq!(st.remote_reads_served, 3, "the ENOENT entry is not a serve");
+        assert_eq!(st.batched_reads_served, 1);
+    }
+
+    #[test]
+    fn serve_batched_empty_is_empty() {
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        match node.serve(&Request::ReadFiles { paths: vec![] }) {
+            Response::FilesData(v) => assert!(v.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn unlink_and_drop_output_requests() {
+        // home removes the metadata and names the origin; the origin drops
+        // its buffered bytes — both idempotence edges covered
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 5),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 5,
+                compressed: false,
+            },
+        };
+        node.serve(&Request::CommitOutput {
+            path: "/o/x".into(),
+            meta,
+        });
+        node.output_data
+            .write()
+            .unwrap()
+            .insert("/o/x".into(), vec![9u8; 5].into());
+        match node.serve(&Request::UnlinkOutput { path: "/o/x".into() }) {
+            Response::Meta { origin, stat } => {
+                assert_eq!(origin, 0);
+                assert_eq!(stat.size, 5);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        node.serve(&Request::DropOutput { path: "/o/x".into() });
+        assert!(node.output_data.read().unwrap().is_empty(), "buffer GC'd");
+        // second unlink is ENOENT; second drop is a no-op
+        assert!(matches!(
+            node.serve(&Request::UnlinkOutput { path: "/o/x".into() }),
+            Response::Err(_)
+        ));
+        assert!(matches!(
+            node.serve(&Request::DropOutput { path: "/o/x".into() }),
+            Response::Ok
+        ));
     }
 
     #[test]

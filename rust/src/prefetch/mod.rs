@@ -1,0 +1,698 @@
+//! Asynchronous prefetch pipeline (paper §5.4: worker threads fetch the
+//! next mini-batches in the background while the trainer computes).
+//!
+//! A [`Prefetcher`] runs per node: N fetcher threads drain a queue of
+//! scheduled paths (the epoch's shuffled access sequence from
+//! [`crate::workload::access::EpochSampler`]), group each pickup by owner
+//! node, and issue **one batched `ReadFiles` round trip per peer** with the
+//! per-peer requests overlapped through `InProcTransport::send`.  Fetched
+//! content lands in the node's sharded refcount cache with the pin held by
+//! the prefetcher until a reader claims it, so `FanStoreVfs::open` is a
+//! cache hit in steady state.
+//!
+//! # Backpressure
+//!
+//! The engine never holds more than `window` unclaimed pins: `inflight`
+//! counts Pending + Ready slots, fetchers block on `work_cv` while the
+//! window is full, and every claim frees a slot.  This bounds the cache
+//! memory the pipeline can pin regardless of how far the schedule runs
+//! ahead of the trainer cursor.
+//!
+//! # Claim protocol (deadlock-free by construction)
+//!
+//! [`PrefetchHandle::wait`] resolves a path in exactly one of four ways:
+//!
+//! * **Ready** — transfer the cache pin to the caller (no cache traffic).
+//! * **Pending** — block until the in-flight fetch resolves.  Fetchers
+//!   never block while holding Pending slots, so this always terminates.
+//! * **Queued** — the reader got there before any fetcher: steal the entry
+//!   back (the fetcher will skip it) and return `None`; the caller fetches
+//!   synchronously.  A reader can therefore never wait on a path that no
+//!   fetcher is working on.
+//! * **Unknown / Failed** — return `None`; the caller falls back to the
+//!   ordinary synchronous read path, which surfaces the real error.
+//!
+//! # Counter algebra
+//!
+//! Each picked path performs exactly one cache `acquire` (hit → Ready
+//! immediately; miss → one fetch).  Claims transfer pins without touching
+//! the cache.  So the node-wide invariants the stress tests assert stay
+//! exact even with the pipeline running:
+//!
+//! ```text
+//! local_reads + remote_reads_issued == cache misses          (fault-free)
+//! read_opens == claims + cache hits + cache misses - picked
+//! picked == prehits + fetched_local + fetched_remote + failed
+//! ```
+
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::net::transport::{FileFetch, InProcTransport, PendingReply, Request};
+use crate::node::NodeShared;
+
+/// Engine sizing (validated upstream by `ClusterConfig::validate`).
+#[derive(Clone, Copy, Debug)]
+pub struct PrefetchConfig {
+    /// Max fetched-but-unclaimed files pinned in the cache (pin budget).
+    pub window: usize,
+    /// Background fetcher threads.
+    pub fetchers: usize,
+}
+
+impl Default for PrefetchConfig {
+    fn default() -> Self {
+        PrefetchConfig {
+            window: 64,
+            fetchers: 4,
+        }
+    }
+}
+
+/// Accounting snapshot (see the module-level algebra).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct PrefetchStats {
+    /// Paths handed to `schedule`.
+    pub scheduled: u64,
+    /// Paths a fetcher picked up (each does exactly one cache acquire).
+    pub picked: u64,
+    /// Picked paths already resident in the cache (acquire hit → Ready).
+    pub prehits: u64,
+    /// Picked paths fetched from this node's own store.
+    pub fetched_local: u64,
+    /// Picked paths fetched from a peer via a batched `ReadFiles`.
+    pub fetched_remote: u64,
+    /// Batched `ReadFiles` requests issued to peers.
+    pub batches_issued: u64,
+    /// Ready pins transferred to readers.
+    pub claimed: u64,
+    /// Queued paths claimed back by a reader before any fetcher got there.
+    pub stolen: u64,
+    /// Queue entries skipped because the path already had a live slot.
+    pub coalesced: u64,
+    /// Picked paths that could not be fetched (reader falls back and
+    /// surfaces the real error on its own synchronous read).
+    pub failed: u64,
+}
+
+#[derive(Default)]
+struct AtomicPrefetchStats {
+    scheduled: AtomicU64,
+    picked: AtomicU64,
+    prehits: AtomicU64,
+    fetched_local: AtomicU64,
+    fetched_remote: AtomicU64,
+    batches_issued: AtomicU64,
+    claimed: AtomicU64,
+    stolen: AtomicU64,
+    coalesced: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl AtomicPrefetchStats {
+    fn snapshot(&self) -> PrefetchStats {
+        let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        PrefetchStats {
+            scheduled: ld(&self.scheduled),
+            picked: ld(&self.picked),
+            prehits: ld(&self.prehits),
+            fetched_local: ld(&self.fetched_local),
+            fetched_remote: ld(&self.fetched_remote),
+            batches_issued: ld(&self.batches_issued),
+            claimed: ld(&self.claimed),
+            stolen: ld(&self.stolen),
+            coalesced: ld(&self.coalesced),
+            failed: ld(&self.failed),
+        }
+    }
+}
+
+/// A picked path's lifecycle entry.
+enum Slot {
+    /// A fetcher is working on it right now.
+    Pending,
+    /// Fetched; the `Arc` is the cache pin held for the eventual claimer.
+    Ready(Arc<[u8]>),
+    /// Fetch failed; the claimer falls back to the synchronous path.
+    Failed,
+}
+
+#[derive(Default)]
+struct PfState {
+    /// Scheduled, not yet picked up (FIFO = the trainer's access order).
+    queue: VecDeque<String>,
+    /// Multiset view of `queue` for O(1) membership on the claim path.
+    queued: HashMap<String, u32>,
+    /// Queue entries a reader stole back; fetchers skip them on pop.
+    stolen: HashMap<String, u32>,
+    /// Picked paths: in flight, ready, or failed.
+    slots: HashMap<String, Slot>,
+    /// Pending + Ready slots — the pins/window currently held.
+    inflight: usize,
+    shutdown: bool,
+}
+
+/// State shared by the fetcher threads and every handle.
+struct Inner {
+    node_id: u32,
+    shared: Arc<NodeShared>,
+    transport: InProcTransport,
+    window: usize,
+    max_batch: usize,
+    state: Mutex<PfState>,
+    /// Fetchers wait here for work/window; claims and schedules notify.
+    work_cv: Condvar,
+    /// Claimers wait here for Pending → Ready/Failed transitions.
+    ready_cv: Condvar,
+    stats: AtomicPrefetchStats,
+}
+
+/// Per-node prefetch engine.  Dropping it stops the fetcher threads and
+/// releases every unclaimed cache pin, so the refcount cache drains to
+/// zero once all descriptors close.
+pub struct Prefetcher {
+    inner: Arc<Inner>,
+    fetchers: Vec<JoinHandle<()>>,
+}
+
+/// Cheap cloneable handle for schedulers and readers.  Outlives the
+/// engine safely: after shutdown every `wait` returns `None` (callers
+/// fall back to synchronous reads).
+#[derive(Clone)]
+pub struct PrefetchHandle {
+    inner: Arc<Inner>,
+}
+
+impl Prefetcher {
+    /// Start `cfg.fetchers` background threads for `node_id`.
+    pub fn spawn(
+        node_id: u32,
+        shared: Arc<NodeShared>,
+        transport: InProcTransport,
+        cfg: PrefetchConfig,
+    ) -> Prefetcher {
+        let window = cfg.window.max(1);
+        let nfetchers = cfg.fetchers.max(1);
+        // one pickup should neither starve sibling fetchers nor exceed a
+        // sensible per-request payload count
+        let max_batch = (window / nfetchers).clamp(1, 16);
+        let inner = Arc::new(Inner {
+            node_id,
+            shared,
+            transport,
+            window,
+            max_batch,
+            state: Mutex::new(PfState::default()),
+            work_cv: Condvar::new(),
+            ready_cv: Condvar::new(),
+            stats: AtomicPrefetchStats::default(),
+        });
+        let fetchers = (0..nfetchers)
+            .map(|i| {
+                let inner = Arc::clone(&inner);
+                std::thread::Builder::new()
+                    .name(format!("fanstore-prefetch-{node_id}-{i}"))
+                    .spawn(move || fetch_loop(&inner))
+                    .expect("spawn prefetch fetcher")
+            })
+            .collect();
+        Prefetcher { inner, fetchers }
+    }
+
+    pub fn handle(&self) -> PrefetchHandle {
+        PrefetchHandle {
+            inner: Arc::clone(&self.inner),
+        }
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        self.inner.stats.snapshot()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.work_cv.notify_all();
+        self.inner.ready_cv.notify_all();
+        for h in self.fetchers.drain(..) {
+            let _ = h.join();
+        }
+        // fetchers are gone, so no slot can change under us: release every
+        // unclaimed pin and clear the backlog
+        let mut st = self.inner.state.lock().unwrap();
+        let slots = std::mem::take(&mut st.slots);
+        st.queue.clear();
+        st.queued.clear();
+        st.stolen.clear();
+        st.inflight = 0;
+        drop(st);
+        for (path, slot) in slots {
+            if let Slot::Ready(pin) = slot {
+                self.inner.shared.cache.release(&path, &pin);
+            }
+        }
+        // claimers blocked on a Pending slot must re-check and bail
+        self.inner.ready_cv.notify_all();
+    }
+}
+
+impl PrefetchHandle {
+    /// Append `paths` (the upcoming access sequence, in read order) to the
+    /// fetch queue.  Duplicates are legal; redundant fetches coalesce.
+    pub fn schedule<I>(&self, paths: I)
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let mut n = 0u64;
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            if st.shutdown {
+                return;
+            }
+            for p in paths {
+                *st.queued.entry(p.clone()).or_insert(0) += 1;
+                st.queue.push_back(p);
+                n += 1;
+            }
+        }
+        self.inner.stats.scheduled.fetch_add(n, Ordering::Relaxed);
+        self.inner.work_cv.notify_all();
+    }
+
+    /// Claim `path` from the pipeline (see the module-level protocol).
+    /// `Some(pin)` transfers the cache pin to the caller — it must be
+    /// `release`d like any other descriptor pin.  `None` means the caller
+    /// should read synchronously.
+    pub fn wait(&self, path: &str) -> Option<Arc<[u8]>> {
+        enum Act {
+            Block,
+            TakeReady,
+            TakeFailed,
+            TrySteal,
+        }
+        let mut st = self.inner.state.lock().unwrap();
+        loop {
+            let act = match st.slots.get(path) {
+                Some(Slot::Pending) => Act::Block,
+                Some(Slot::Ready(_)) => Act::TakeReady,
+                Some(Slot::Failed) => Act::TakeFailed,
+                None => Act::TrySteal,
+            };
+            match act {
+                Act::Block => {
+                    if st.shutdown {
+                        // the in-flight fetch may still resolve, but the
+                        // engine is going away — read synchronously
+                        return None;
+                    }
+                    st = self.inner.ready_cv.wait(st).unwrap();
+                }
+                Act::TakeReady => {
+                    if let Some(Slot::Ready(pin)) = st.slots.remove(path) {
+                        st.inflight -= 1;
+                        drop(st);
+                        self.inner.stats.claimed.fetch_add(1, Ordering::Relaxed);
+                        self.inner.work_cv.notify_all();
+                        return Some(pin);
+                    }
+                    unreachable!("slot type changed under the lock");
+                }
+                Act::TakeFailed => {
+                    st.slots.remove(path);
+                    return None;
+                }
+                Act::TrySteal => {
+                    let was_queued = match st.queued.get_mut(path) {
+                        Some(c) if *c > 0 => {
+                            *c -= 1;
+                            if *c == 0 {
+                                st.queued.remove(path);
+                            }
+                            true
+                        }
+                        _ => false,
+                    };
+                    if was_queued {
+                        *st.stolen.entry(path.to_string()).or_insert(0) += 1;
+                        self.inner.stats.stolen.fetch_add(1, Ordering::Relaxed);
+                    }
+                    return None;
+                }
+            }
+        }
+    }
+
+    pub fn stats(&self) -> PrefetchStats {
+        self.inner.stats.snapshot()
+    }
+}
+
+/// Fetcher thread body: pick up to `max_batch` paths within the window,
+/// fetch them (cache-aware, holder-grouped, batched per peer), mark the
+/// slots, repeat until shutdown.
+fn fetch_loop(inner: &Inner) {
+    loop {
+        let picked = {
+            let mut st = inner.state.lock().unwrap();
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if !st.queue.is_empty() && st.inflight < inner.window {
+                    break;
+                }
+                st = inner.work_cv.wait(st).unwrap();
+            }
+            let room = inner.window - st.inflight;
+            let take = room.min(inner.max_batch);
+            let mut picked = Vec::with_capacity(take);
+            while picked.len() < take {
+                let Some(p) = st.queue.pop_front() else { break };
+                // claimed back by a reader before we got here?
+                if let Some(c) = st.stolen.get_mut(&p) {
+                    *c -= 1;
+                    if *c == 0 {
+                        st.stolen.remove(&p);
+                    }
+                    continue;
+                }
+                if let Some(c) = st.queued.get_mut(&p) {
+                    *c -= 1;
+                    if *c == 0 {
+                        st.queued.remove(&p);
+                    }
+                }
+                if st.slots.contains_key(&p) {
+                    // an earlier schedule of the same path is in flight or
+                    // unclaimed — a second fetch buys nothing
+                    inner.stats.coalesced.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                st.slots.insert(p.clone(), Slot::Pending);
+                st.inflight += 1;
+                picked.push(p);
+            }
+            picked
+        };
+        if picked.is_empty() {
+            continue;
+        }
+        inner
+            .stats
+            .picked
+            .fetch_add(picked.len() as u64, Ordering::Relaxed);
+        fetch_batch(inner, picked);
+    }
+}
+
+/// Fetch one pickup: resolve each path against the cache, the local store,
+/// or a peer; peers get one batched request each, all issued before any
+/// reply is awaited so the round trips overlap.
+fn fetch_batch(inner: &Inner, picked: Vec<String>) {
+    let stats = &inner.shared.stats;
+    let mut done: Vec<(String, Option<Arc<[u8]>>)> = Vec::with_capacity(picked.len());
+    let mut local: Vec<String> = Vec::new();
+    let mut remote: HashMap<u32, Vec<String>> = HashMap::new();
+    for p in picked {
+        match inner.shared.input_meta.get(&p) {
+            // not an input file: fail WITHOUT touching the cache — the
+            // reader's fallback handles outputs, and a fetchless acquire
+            // here would skew the node-wide miss/fetch algebra
+            None => done.push((p, None)),
+            Some(m) => {
+                let loc = m.location;
+                // exactly one cache acquire per picked input (hit → Ready
+                // immediately; miss → exactly one fetch below)
+                if let Some(pin) = inner.shared.cache.acquire(&p) {
+                    inner.stats.prehits.fetch_add(1, Ordering::Relaxed);
+                    done.push((p, Some(pin)));
+                    continue;
+                }
+                let holder = inner.shared.holder_of(&loc);
+                if holder == inner.node_id {
+                    local.push(p);
+                } else {
+                    remote.entry(holder).or_default().push(p);
+                }
+            }
+        }
+    }
+
+    // all remote batches in flight first...
+    let pending: Vec<(Vec<String>, Option<PendingReply>)> = remote
+        .into_iter()
+        .map(|(holder, paths)| {
+            let reply = inner
+                .transport
+                .send(
+                    inner.node_id,
+                    holder,
+                    Request::ReadFiles {
+                        paths: paths.clone(),
+                    },
+                )
+                .ok();
+            (paths, reply)
+        })
+        .collect();
+    inner
+        .stats
+        .batches_issued
+        .fetch_add(pending.len() as u64, Ordering::Relaxed);
+
+    // ...then serve the local share while the peers work
+    for p in local {
+        let outcome = match inner.shared.store.read_stored(&p) {
+            Ok((stored, at)) => {
+                stats.local_reads.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .bytes_read_local
+                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                inner.stats.fetched_local.fetch_add(1, Ordering::Relaxed);
+                decode_and_insert(inner, &p, stored, at.raw_len, at.compressed)
+            }
+            Err(_) => None,
+        };
+        done.push((p, outcome));
+    }
+
+    // collect the batched replies
+    for (paths, reply) in pending {
+        let files = reply
+            .and_then(|r| r.wait().ok())
+            .and_then(|resp| resp.into_files_data().ok());
+        match files {
+            Some(files) => {
+                let mut by_path: HashMap<String, FileFetch> = files.into_iter().collect();
+                for p in paths {
+                    let outcome = match by_path.remove(&p) {
+                        Some(FileFetch::Data {
+                            stored,
+                            raw_len,
+                            compressed,
+                        }) => {
+                            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .bytes_fetched_remote
+                                .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                            inner.stats.fetched_remote.fetch_add(1, Ordering::Relaxed);
+                            decode_and_insert(inner, &p, stored, raw_len, compressed)
+                        }
+                        _ => None,
+                    };
+                    done.push((p, outcome));
+                }
+            }
+            None => {
+                // peer down / malformed reply: fail the whole pickup for
+                // this holder; readers fall back synchronously
+                for p in paths {
+                    done.push((p, None));
+                }
+            }
+        }
+    }
+
+    let mut st = inner.state.lock().unwrap();
+    for (p, outcome) in done {
+        match outcome {
+            Some(pin) => {
+                st.slots.insert(p, Slot::Ready(pin));
+            }
+            None => {
+                st.slots.insert(p, Slot::Failed);
+                // failed slots hold no pin, so they release window space now
+                st.inflight -= 1;
+                inner.stats.failed.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+    drop(st);
+    inner.ready_cv.notify_all();
+    inner.work_cv.notify_all();
+}
+
+/// Decompress (reader-side, §5.4) and park the content in the refcount
+/// cache; the returned pin belongs to the Ready slot until claimed.
+fn decode_and_insert(
+    inner: &Inner,
+    path: &str,
+    stored: Arc<[u8]>,
+    raw_len: u64,
+    compressed: bool,
+) -> Option<Arc<[u8]>> {
+    match inner.shared.decode_stored(stored, raw_len, compressed) {
+        Ok(raw) => Some(inner.shared.cache.insert(path, raw)),
+        Err(_) => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Codec;
+    use crate::metadata::placement::Placement;
+    use crate::node::NodeBuilder;
+    use crate::partition::builder::{build_partitions, InputFile};
+    use crate::storage::disk::DiskStore;
+
+    /// Single-node world: everything is a local fetch, which is all these
+    /// unit tests need (the remote/batched path is covered by the
+    /// integration tests over a full cluster).
+    fn one_node(n_files: usize) -> (Arc<NodeShared>, InProcTransport, Vec<String>) {
+        let files: Vec<InputFile> = (0..n_files)
+            .map(|i| InputFile {
+                path: format!("train/f{i}"),
+                data: vec![(i % 251) as u8; 64 + i],
+            })
+            .collect();
+        let (blobs, _) = build_partitions(&files, 1, Codec::None).unwrap();
+        let placement = Placement::new(1, 1, 1);
+        let mut b = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        // index the input metadata so the prefetcher can place paths
+        let mut table = crate::metadata::table::MetaTable::new();
+        let blobs: Vec<(u32, Vec<u8>)> = blobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, x)| (i as u32, x))
+            .collect();
+        crate::node::index_input_metadata(&mut table, &blobs, "/m", &b.placement).unwrap();
+        b.input_meta = Arc::new(table);
+        let shared = b.seal();
+        let (tp, _eps) = InProcTransport::fully_connected(1);
+        let paths = (0..n_files).map(|i| format!("/m/train/f{i}")).collect();
+        (shared, tp, paths)
+    }
+
+    fn poll_until(mut cond: impl FnMut() -> bool, ms: u64) -> bool {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed().as_millis() < ms as u128 {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(5));
+        }
+        cond()
+    }
+
+    #[test]
+    fn window_bounds_unclaimed_pins() {
+        let (shared, tp, paths) = one_node(32);
+        let pf = Prefetcher::spawn(
+            0,
+            Arc::clone(&shared),
+            tp,
+            PrefetchConfig {
+                window: 4,
+                fetchers: 2,
+            },
+        );
+        let h = pf.handle();
+        h.schedule(paths.iter().cloned());
+        // fetchers fill the window...
+        assert!(
+            poll_until(|| pf.stats().fetched_local == 4, 3000),
+            "window should fill: {:?}",
+            pf.stats()
+        );
+        // ...and then stall: no claims -> no further fetches
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let st = pf.stats();
+        assert_eq!(st.fetched_local, 4, "window must hold without claims");
+        assert!(shared.cache.resident_files() <= 4);
+
+        // claiming drains the queue end to end
+        let mut claimed = 0u64;
+        let mut stolen = 0u64;
+        for (i, p) in paths.iter().enumerate() {
+            match h.wait(p) {
+                Some(pin) => {
+                    assert_eq!(&pin[..], &vec![(i % 251) as u8; 64 + i][..]);
+                    shared.cache.release(p, &pin);
+                    claimed += 1;
+                }
+                None => stolen += 1, // reader beat the fetchers to it
+            }
+        }
+        assert_eq!(claimed + stolen, 32);
+        assert_eq!(pf.stats().claimed, claimed);
+        assert_eq!(pf.stats().stolen, stolen);
+        drop(pf);
+        assert_eq!(shared.cache.resident_files(), 0, "drop releases pins");
+    }
+
+    #[test]
+    fn duplicate_schedules_coalesce_and_unknown_wait_is_fallback() {
+        let (shared, tp, paths) = one_node(4);
+        let pf = Prefetcher::spawn(0, Arc::clone(&shared), tp, PrefetchConfig::default());
+        let h = pf.handle();
+        // schedule the same path three times
+        h.schedule(vec![paths[0].clone(), paths[0].clone(), paths[0].clone()]);
+        assert!(
+            poll_until(
+                || {
+                    let s = h.stats();
+                    s.fetched_local + s.prehits >= 1 && s.coalesced + s.stolen >= 2
+                },
+                3000
+            ),
+            "{:?}",
+            h.stats()
+        );
+        // a path that was never scheduled falls back immediately
+        assert!(h.wait("/m/train/f3").is_none());
+        // the single live slot is claimable exactly once
+        let pin = h.wait(&paths[0]).expect("ready slot");
+        shared.cache.release(&paths[0], &pin);
+        assert!(h.wait(&paths[0]).is_none(), "second claim falls back");
+        drop(pf);
+        assert_eq!(shared.cache.resident_files(), 0);
+    }
+
+    #[test]
+    fn wait_during_shutdown_returns_fallback() {
+        let (shared, tp, paths) = one_node(2);
+        let pf = Prefetcher::spawn(
+            0,
+            Arc::clone(&shared),
+            tp,
+            PrefetchConfig {
+                window: 2,
+                fetchers: 1,
+            },
+        );
+        let h = pf.handle();
+        drop(pf);
+        h.schedule(paths.iter().cloned()); // ignored after shutdown
+        assert!(h.wait(&paths[0]).is_none());
+        assert_eq!(h.stats().scheduled, 0);
+        assert_eq!(shared.cache.resident_files(), 0);
+    }
+}

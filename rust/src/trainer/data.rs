@@ -97,6 +97,11 @@ pub fn read_batch(
     batch: usize,
 ) -> Result<(Tensor, Vec<i32>)> {
     assert!(!idx.is_empty());
+    // batched read-ahead hint: FanStore turns this into one ReadFiles
+    // round trip per owner node (or a claim from the prefetch pipeline)
+    // instead of a synchronous round trip per file
+    let batch_paths: Vec<String> = idx.iter().map(|&i| paths[i as usize].clone()).collect();
+    vfs.prefetch(&batch_paths)?;
     let mut data = Vec::with_capacity(batch * IMG_BYTES);
     let mut labels = Vec::with_capacity(batch);
     for k in 0..batch {

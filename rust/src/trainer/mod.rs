@@ -46,6 +46,11 @@ pub struct TrainConfig {
     /// flipping destroys it; the flip path itself is covered by the Pallas
     /// kernel tests and the preprocess_batch artifact.
     pub flip_prob: f64,
+    /// Overlap remote reads with compute via each node's background
+    /// prefetch pipeline (the paper's §5.4 worker threads).  On by
+    /// default; correctness is identical either way — claims fall back to
+    /// the synchronous path whenever the pipeline doesn't hold a file.
+    pub prefetch: bool,
 }
 
 impl Default for TrainConfig {
@@ -58,6 +63,7 @@ impl Default for TrainConfig {
             seed: 7,
             checkpoint: true,
             flip_prob: 0.0,
+            prefetch: true,
         }
     }
 }
@@ -201,7 +207,20 @@ pub fn train_cnn(
     let mut params = spec.load_params()?;
 
     let nodes = cluster.node_count();
-    let mut clients: Vec<_> = (0..nodes).map(|n| cluster.client(n)).collect();
+    let mut clients: Vec<_> = (0..nodes)
+        .map(|n| {
+            if cfg.prefetch {
+                cluster.prefetching_client(n)
+            } else {
+                cluster.client(n)
+            }
+        })
+        .collect();
+    // per-node prefetch pipelines: each epoch's shuffled access sequence is
+    // scheduled ahead of the cursor, so fetchers overlap the train steps
+    let pf_handles: Vec<Option<crate::prefetch::PrefetchHandle>> = (0..nodes)
+        .map(|n| cfg.prefetch.then(|| cluster.prefetch_handle(n)))
+        .collect();
     let mut samplers: Vec<EpochSampler> = (0..nodes)
         .map(|n| match cfg.view {
             DatasetView::Global => EpochSampler::new(train_paths.len(), cfg.seed + n as u64),
@@ -230,10 +249,31 @@ pub fn train_cnn(
             .max_steps_per_epoch
             .map(|c| c.min(full_steps))
             .unwrap_or(full_steps);
+        // schedule exactly this epoch's consumption window; anything the
+        // sampler draws beyond it (an epoch wrap mid-loop) just falls back
+        // to the synchronous read path
+        let horizon = steps_this_epoch as usize * batch;
+        for (node, handle) in pf_handles.iter().enumerate() {
+            if let Some(h) = handle {
+                h.schedule(
+                    samplers[node]
+                        .upcoming()
+                        .iter()
+                        .take(horizon)
+                        .map(|&i| train_paths[i as usize].clone()),
+                );
+            }
+        }
         for _ in 0..steps_this_epoch {
             // each node draws + reads + steps; then allreduce
             let mut replicas = Vec::with_capacity(nodes as usize);
             for node in 0..nodes as usize {
+                // Note: when the sampler wraps (None -> reshuffle) mid-epoch,
+                // the post-wrap stretch reads synchronously until the next
+                // epoch's schedule.  Re-scheduling here would double-enqueue
+                // paths the top-of-epoch schedule also covers and slowly
+                // wedge the window with unclaimed pins; see ROADMAP
+                // "Cross-epoch prefetch" for the principled fix.
                 let idx = match samplers[node].next_batch(batch) {
                     Some(idx) => idx,
                     None => samplers[node]

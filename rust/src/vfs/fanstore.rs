@@ -18,8 +18,9 @@ use std::sync::Arc;
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileLocation, FileMeta, FileStat};
 use crate::metadata::table::normalize;
-use crate::net::transport::{InProcTransport, PendingReply, Request, Response};
+use crate::net::transport::{FileFetch, InProcTransport, PendingReply, Request, Response};
 use crate::node::NodeShared;
+use crate::prefetch::PrefetchHandle;
 use crate::vfs::{Fd, OpenFlags, Vfs};
 
 enum OpenFile {
@@ -41,6 +42,13 @@ pub struct FanStoreVfs {
     transport: InProcTransport,
     fds: HashMap<Fd, OpenFile>,
     next_fd: Fd,
+    /// Node prefetch engine, when attached: `fetch_input` claims fetched
+    /// pins from it before touching the cache or the network.
+    prefetcher: Option<PrefetchHandle>,
+    /// Pins warmed by [`Vfs::prefetch`] (the batched mini-batch hint),
+    /// consumed by the subsequent `open`s.  Leftovers are released on the
+    /// next hint or on drop.
+    warm: HashMap<String, Arc<[u8]>>,
 }
 
 impl FanStoreVfs {
@@ -51,7 +59,15 @@ impl FanStoreVfs {
             transport,
             fds: HashMap::new(),
             next_fd: 3, // 0,1,2 are stdio, as tradition demands
+            prefetcher: None,
+            warm: HashMap::new(),
         }
+    }
+
+    /// Attach the node's background prefetch engine; subsequent input
+    /// opens claim prefetched content instead of fetching synchronously.
+    pub fn attach_prefetcher(&mut self, handle: PrefetchHandle) {
+        self.prefetcher = Some(handle);
     }
 
     fn alloc_fd(&mut self) -> Fd {
@@ -60,21 +76,35 @@ impl FanStoreVfs {
         fd
     }
 
+    /// Release every unconsumed warm pin (stale batch hint).
+    fn drain_warm(&mut self) {
+        for (path, pin) in self.warm.drain() {
+            self.shared.cache.release(&path, &pin);
+        }
+    }
+
     /// Fetch + decompress an input file's content, going through the node's
     /// refcount cache.  Returns a pinned Arc (caller must `release` on
     /// close — handled by [`Vfs::close`]).
     fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Arc<[u8]>> {
-        // 1) cache hit on this node?
+        // 0) pin warmed by a batched prefetch() hint: already ours
+        if let Some(pin) = self.warm.remove(path) {
+            return Ok(pin);
+        }
+        // 1) background prefetch pipeline owns it?  The claim transfers the
+        //    engine's cache pin to this descriptor (steady-state hot path).
+        if let Some(pf) = &self.prefetcher {
+            if let Some(pin) = pf.wait(path) {
+                return Ok(pin);
+            }
+        }
+        // 2) cache hit on this node?
         if let Some(data) = self.shared.cache.acquire(path) {
             return Ok(data);
         }
-        // 2) local partition?  (replicated directories — the test-set
+        // 3) local partition?  (replicated directories — the test-set
         //    broadcast of §5.4 — are always local)
-        let holder = if loc.partition == crate::metadata::record::REPLICATED_PARTITION {
-            self.node_id
-        } else {
-            self.shared.placement.choose_holder(loc.partition, self.node_id)
-        };
+        let holder = self.shared.holder_of(&loc);
         let stats = &self.shared.stats;
         let (stored, raw_len, compressed) = if holder == self.node_id {
             let (stored, at) = self.shared.store.read_stored(path)?;
@@ -84,7 +114,7 @@ impl FanStoreVfs {
                 .fetch_add(stored.len() as u64, Ordering::Relaxed);
             (stored, at.raw_len, at.compressed)
         } else {
-            // 3) remote round trip (paper §5.4)
+            // 4) remote round trip (paper §5.4)
             let resp = self.transport.call(
                 self.node_id,
                 holder,
@@ -99,14 +129,8 @@ impl FanStoreVfs {
                 .fetch_add(stored.len() as u64, Ordering::Relaxed);
             (stored, raw_len, compressed)
         };
-        // 4) decompress on the reading node (§5.4)
-        let raw: Arc<[u8]> = if compressed {
-            let out = crate::compress::lzss::decompress(&stored, raw_len as usize)?;
-            stats.decompressions.fetch_add(1, Ordering::Relaxed);
-            out.into()
-        } else {
-            stored
-        };
+        // 5) decompress on the reading node (§5.4)
+        let raw = self.shared.decode_stored(stored, raw_len, compressed)?;
         Ok(self.shared.cache.insert(path, raw))
     }
 
@@ -144,14 +168,24 @@ impl FanStoreVfs {
                 .fetch_add(data.len() as u64, Ordering::Relaxed);
             data
         } else {
+            // batched-read request even for one file: its per-file result
+            // keeps a gone-at-origin file distinguishable (ENOENT) from a
+            // transport fault, which the stale-metadata retry in `open`
+            // depends on
             let resp = self.transport.call(
                 self.node_id,
                 origin,
-                Request::ReadFile {
-                    path: path.to_string(),
+                Request::ReadFiles {
+                    paths: vec![path.to_string()],
                 },
             )?;
-            let (stored, _, _) = resp.into_file_data()?;
+            let fetch = resp
+                .into_files_data()?
+                .into_iter()
+                .next()
+                .map(|(_, f)| f)
+                .unwrap_or(FileFetch::NotFound);
+            let (stored, _, _) = fetch.into_result(path)?;
             stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
             stats
                 .bytes_fetched_remote
@@ -161,8 +195,14 @@ impl FanStoreVfs {
         Ok(self.shared.cache.insert(path, data))
     }
 
-    /// Locate output metadata: local home table, else ask the home node.
+    /// Locate output metadata: local home table, else the node's metadata
+    /// cache (saving the `StatOutput` round trip), else ask the home node
+    /// and cache the answer next to the (eventually) cached bytes.
     fn stat_output(&mut self, path: &str) -> Result<FileMeta> {
+        self.stat_output_ex(path, false)
+    }
+
+    fn stat_output_ex(&mut self, path: &str, fresh: bool) -> Result<FileMeta> {
         let home = self.shared.placement.output_home(path);
         if home == self.node_id {
             return self
@@ -174,6 +214,22 @@ impl FanStoreVfs {
                 .cloned()
                 .ok_or_else(|| FanError::NotFound(path.to_string()));
         }
+        if !fresh {
+            let cached = self
+                .shared
+                .output_meta_cache
+                .read()
+                .unwrap()
+                .get(path)
+                .cloned();
+            if let Some(meta) = cached {
+                self.shared
+                    .stats
+                    .output_meta_hits
+                    .fetch_add(1, Ordering::Relaxed);
+                return Ok(meta);
+            }
+        }
         match self.transport.call(
             self.node_id,
             home,
@@ -181,16 +237,24 @@ impl FanStoreVfs {
                 path: path.to_string(),
             },
         )? {
-            Response::Meta { stat, origin } => Ok(FileMeta {
-                stat,
-                location: FileLocation {
-                    node: origin,
-                    partition: u32::MAX,
-                    offset: 0,
-                    stored_len: stat.size,
-                    compressed: false,
-                },
-            }),
+            Response::Meta { stat, origin } => {
+                let meta = FileMeta {
+                    stat,
+                    location: FileLocation {
+                        node: origin,
+                        partition: u32::MAX,
+                        offset: 0,
+                        stored_len: stat.size,
+                        compressed: false,
+                    },
+                };
+                self.shared
+                    .output_meta_cache
+                    .write()
+                    .unwrap()
+                    .insert(path.to_string(), meta.clone());
+                Ok(meta)
+            }
             Response::Err(_) => Err(FanError::NotFound(path.to_string())),
             other => Err(FanError::Transport(format!("unexpected {other:?}"))),
         }
@@ -206,9 +270,33 @@ impl Vfs for FanStoreVfs {
                 let data = match loc {
                     Some(loc) => self.fetch_input(&path, loc)?,
                     None => {
-                        // not an input: maybe a committed output file
-                        let meta = self.stat_output(&path)?;
-                        self.fetch_output(&path, &meta)?
+                        // Not an input: a committed output file.  When its
+                        // bytes are resident on this node, the stat must be
+                        // authoritative — it is the stale-generation referee
+                        // for the cached copy, and a cached stat would just
+                        // ratify its own generation.  The metadata cache only
+                        // short-circuits opens that must contact the origin
+                        // anyway, where a stale entry is corrected by the
+                        // origin's per-file ENOENT below.
+                        let resident = self.shared.cache.contains(&path);
+                        let meta = self.stat_output_ex(&path, resident)?;
+                        match self.fetch_output(&path, &meta) {
+                            Ok(data) => data,
+                            Err(FanError::NotFound(_)) => {
+                                // cached metadata can go stale after a
+                                // cross-node unlink(+rewrite): the origin
+                                // answered ENOENT, so drop the cached entry
+                                // and retry once against the home node
+                                self.shared
+                                    .output_meta_cache
+                                    .write()
+                                    .unwrap()
+                                    .remove(&path);
+                                let meta = self.stat_output_ex(&path, true)?;
+                                self.fetch_output(&path, &meta)?
+                            }
+                            Err(e) => return Err(e),
+                        }
                     }
                 };
                 let fd = self.alloc_fd();
@@ -221,7 +309,10 @@ impl Vfs for FanStoreVfs {
                         "input files are immutable: {path}"
                     )));
                 }
-                if self.stat_output(&path).is_ok() {
+                // single-write guard against the AUTHORITATIVE home, never
+                // the metadata cache: a stale cached entry surviving a
+                // cross-node unlink must not refuse the name forever
+                if self.stat_output_ex(&path, true).is_ok() {
                     return Err(FanError::Consistency(format!(
                         "output files are single-write: {path}"
                     )));
@@ -363,6 +454,107 @@ impl Vfs for FanStoreVfs {
         Ok(names)
     }
 
+    /// Batched mini-batch read-ahead: resolve every path against the warm
+    /// set / prefetcher / cache first, read the local share directly, and
+    /// fetch the rest with **one `ReadFiles` round trip per owner node**,
+    /// all issued before any reply is awaited.  Fetched pins park in the
+    /// warm set for the subsequent `open`s.  Purely advisory: per-file
+    /// failures (ENOENT, fault, dead peer) are skipped here and surface
+    /// with the right errno at `open` time.
+    fn prefetch(&mut self, paths: &[String]) -> Result<()> {
+        self.drain_warm();
+        let stats = &self.shared.stats;
+        let mut remote: HashMap<u32, Vec<String>> = HashMap::new();
+        // remote paths are not warmed until their reply arrives, so the
+        // warm-set check alone cannot dedup them — without this a
+        // duplicated (or alias-normalized) path would be fetched twice and
+        // its second cache pin leaked when warm.insert overwrote the first
+        let mut requested: std::collections::HashSet<String> = std::collections::HashSet::new();
+        for p in paths {
+            let path = normalize(p);
+            if self.warm.contains_key(&path) || requested.contains(&path) {
+                continue; // duplicate inside this batch
+            }
+            // only inputs are hintable (outputs keep the per-open path);
+            // resolving this BEFORE any cache acquire keeps the node-wide
+            // miss/fetch algebra exact for hints containing bad paths
+            let Some(loc) = self.shared.input_meta.get(&path).map(|m| m.location) else {
+                continue;
+            };
+            // the background pipeline may already hold it
+            if let Some(pf) = &self.prefetcher {
+                if let Some(pin) = pf.wait(&path) {
+                    self.warm.insert(path, pin);
+                    continue;
+                }
+            }
+            if let Some(pin) = self.shared.cache.acquire(&path) {
+                self.warm.insert(path, pin);
+                continue;
+            }
+            let holder = self.shared.holder_of(&loc);
+            if holder == self.node_id {
+                // local share: no round trip to amortize, read it now
+                let Ok((stored, at)) = self.shared.store.read_stored(&path) else {
+                    continue;
+                };
+                stats.local_reads.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .bytes_read_local
+                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                let Ok(raw) = self.shared.decode_stored(stored, at.raw_len, at.compressed)
+                else {
+                    continue;
+                };
+                let pin = self.shared.cache.insert(&path, raw);
+                self.warm.insert(path, pin);
+            } else {
+                requested.insert(path.clone());
+                remote.entry(holder).or_default().push(path);
+            }
+        }
+        // every batch in flight before any wait: the per-peer round trips
+        // overlap instead of serializing (send/PendingReply split)
+        let mut pending: Vec<PendingReply> = Vec::with_capacity(remote.len());
+        for (holder, batch) in remote {
+            if let Ok(reply) =
+                self.transport
+                    .send(self.node_id, holder, Request::ReadFiles { paths: batch })
+            {
+                pending.push(reply);
+            }
+        }
+        for reply in pending {
+            let Ok(resp) = reply.wait() else { continue };
+            let Ok(files) = resp.into_files_data() else { continue };
+            for (path, fetch) in files {
+                let FileFetch::Data {
+                    stored,
+                    raw_len,
+                    compressed,
+                } = fetch
+                else {
+                    continue;
+                };
+                stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+                stats
+                    .bytes_fetched_remote
+                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                let Ok(raw) = self.shared.decode_stored(stored, raw_len, compressed) else {
+                    continue;
+                };
+                let pin = self.shared.cache.insert(&path, raw);
+                if let Some(extra) = self.warm.insert(path.clone(), pin) {
+                    // defensive: a duplicated reply entry bumped the
+                    // refcount twice — drop the superseded pin so the
+                    // entry still drains to zero
+                    self.shared.cache.release(&path, &extra);
+                }
+            }
+        }
+        Ok(())
+    }
+
     fn unlink(&mut self, path: &str) -> Result<()> {
         let path = normalize(path);
         if self.shared.input_meta.get(&path).is_some() {
@@ -370,30 +562,47 @@ impl Vfs for FanStoreVfs {
                 "input files are immutable: {path}"
             )));
         }
+        // 1) remove the authoritative metadata at the home node; the
+        //    answer names the originating node holding the bytes
         let home = self.shared.placement.output_home(&path);
-        if home == self.node_id {
-            self.shared.output_meta.write().unwrap().remove(&path)?;
-            self.shared.output_data.write().unwrap().remove(&path);
-            // drop any cached copy so a later same-name output can't serve
-            // stale bytes (outstanding readers keep their pinned Arc)
-            self.shared.cache.invalidate(&path);
-            Ok(())
+        let origin = if home == self.node_id {
+            let meta = self.shared.output_meta.write().unwrap().remove(&path)?;
+            meta.location.node
         } else {
-            // remove metadata at home; data GC at origin is lazy
             match self.transport.call(
                 self.node_id,
                 home,
-                Request::StatOutput { path: path.clone() },
+                Request::UnlinkOutput { path: path.clone() },
             )? {
-                Response::Meta { .. } => {
-                    // Note: full remote unlink protocol elided — the DL
-                    // pattern never unlinks (§3.4); this path serves tests.
-                    Err(FanError::Consistency(
-                        "remote unlink not supported by the DL I/O pattern".into(),
-                    ))
-                }
-                _ => Err(FanError::NotFound(path)),
+                Response::Meta { origin, .. } => origin,
+                Response::Err(_) => return Err(FanError::NotFound(path)),
+                other => return Err(FanError::Transport(format!("unexpected {other:?}"))),
             }
+        };
+        // 2) this node can no longer serve the dead generation (outstanding
+        //    readers keep their pinned Arc; generation-aware releases make
+        //    their eventual close a no-op)
+        self.shared.cache.invalidate(&path);
+        self.shared.output_meta_cache.write().unwrap().remove(&path);
+        // 3) GC the buffered bytes at the origin — without this the origin
+        //    leaks the buffer until shutdown.  Best effort: a dead origin
+        //    cannot leak, and the name is already gone from the home.
+        if origin == self.node_id {
+            self.shared.serve(&Request::DropOutput { path });
+        } else {
+            let _ = self
+                .transport
+                .call(self.node_id, origin, Request::DropOutput { path });
         }
+        Ok(())
+    }
+}
+
+impl Drop for FanStoreVfs {
+    fn drop(&mut self) {
+        // unconsumed batch-hint pins must not outlive the "process".  Open
+        // descriptors intentionally keep their pins (crash analogue — the
+        // refcount survives, see `cluster_survives_client_drop_mid_read`).
+        self.drain_warm();
     }
 }

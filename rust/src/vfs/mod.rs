@@ -47,6 +47,16 @@ pub trait Vfs: Send {
     fn readdir(&mut self, dir: &str) -> Result<Vec<String>>;
     fn unlink(&mut self, path: &str) -> Result<()>;
 
+    /// Batch read-ahead hint — the `posix_fadvise(POSIX_FADV_WILLNEED)`
+    /// analogue for a mini-batch about to be opened sequentially.  Purely
+    /// advisory: backends that can batch or overlap remote fetches override
+    /// it (FanStore groups the paths by owner node and issues one batched
+    /// request per peer); the default no-op keeps POSIX-only backends
+    /// correct, and per-file errors surface at the subsequent `open`.
+    fn prefetch(&mut self, _paths: &[String]) -> Result<()> {
+        Ok(())
+    }
+
     /// Convenience: open+read-to-end+close (the DL input pattern, §3.4:
     /// "when a file is read, it is read sequentially and completely").
     fn read_all(&mut self, path: &str) -> Result<Vec<u8>> {

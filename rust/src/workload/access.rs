@@ -33,6 +33,12 @@ impl EpochSampler {
         self.order.len() - self.cursor
     }
 
+    /// The not-yet-consumed remainder of the current epoch, in draw order —
+    /// exactly what a prefetch pipeline should fetch ahead of the cursor.
+    pub fn upcoming(&self) -> &[u32] {
+        &self.order[self.cursor..]
+    }
+
     /// Next mini-batch of up to `batch` indices; reshuffles when the epoch
     /// ends (returns `None` exactly at the epoch boundary so callers can
     /// run validation/checkpointing, §3.1).
@@ -137,6 +143,19 @@ mod tests {
         }
         idx.sort_unstable();
         assert_eq!(idx, (25..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn upcoming_matches_future_draws() {
+        let mut s = EpochSampler::new(20, 9);
+        assert_eq!(s.next_batch(6).unwrap().len(), 6);
+        let promised: Vec<u32> = s.upcoming().to_vec();
+        assert_eq!(promised.len(), 14);
+        let mut drawn = Vec::new();
+        while let Some(b) = s.next_batch(6) {
+            drawn.extend(b);
+        }
+        assert_eq!(promised, drawn, "upcoming must be the exact draw order");
     }
 
     #[test]

@@ -1,0 +1,394 @@
+//! Integration coverage for the batched remote-read protocol and the
+//! asynchronous prefetch pipeline: per-file results inside one batch
+//! (data / ENOENT / I/O fault), the VFS mini-batch hint, the background
+//! pipeline's exact counter algebra under concurrent trainer threads, and
+//! the unlink GC + output-metadata-cache satellites.
+
+use std::sync::Arc;
+
+use fanstore::compress::Codec;
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::net::transport::{FileFetch, Request, Response};
+use fanstore::partition::builder::InputFile;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+
+fn inputs(n: usize, seed: u64) -> Vec<InputFile> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut data = vec![0u8; 200 + 13 * i];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/class{}/img{i:03}.raw", i % 4),
+                data,
+            }
+        })
+        .collect()
+}
+
+/// Deterministically find an output path whose consistent-hash home is
+/// `home` under this cluster's placement.
+fn path_with_home(cluster: &Cluster, prefix: &str, home: u32) -> String {
+    for i in 0..10_000 {
+        let p = format!("{prefix}{i}.bin");
+        if cluster.placement.output_home(&p) == home {
+            return p;
+        }
+    }
+    panic!("no candidate path hashes to node {home}");
+}
+
+// ---------------------------------------------------------------------------
+// Batched protocol edges
+// ---------------------------------------------------------------------------
+
+#[test]
+fn readfiles_mixed_hit_enoent_and_duplicates_in_one_batch() {
+    // nodes=2, partitions=2: file i -> partition i%2 -> node i%2
+    let files = inputs(8, 1);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 2,
+            partitions: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let resp = cluster
+        .transport
+        .call(
+            0,
+            1,
+            Request::ReadFiles {
+                paths: vec![
+                    "/fanstore/user/train/class1/img001.raw".into(),
+                    "/fanstore/user/train/ghost.raw".into(),
+                    "/fanstore/user/train/class1/img001.raw".into(), // duplicate
+                    "/fanstore/user/train/class3/img003.raw".into(),
+                ],
+            },
+        )
+        .unwrap();
+    let got = resp.into_files_data().unwrap();
+    assert_eq!(got.len(), 4, "one result per requested path, in order");
+    for (slot, want_idx) in [(0usize, 1usize), (2, 1), (3, 3)] {
+        match &got[slot].1 {
+            FileFetch::Data { stored, .. } => {
+                assert_eq!(&stored[..], &files[want_idx].data[..], "slot {slot}");
+            }
+            other => panic!("slot {slot}: unexpected {other:?}"),
+        }
+    }
+    assert!(
+        matches!(got[1].1, FileFetch::NotFound),
+        "missing file is per-file ENOENT, not a batch failure: {:?}",
+        got[1].1
+    );
+    // empty batch is a valid request
+    match cluster
+        .transport
+        .call(0, 1, Request::ReadFiles { paths: vec![] })
+        .unwrap()
+    {
+        Response::FilesData(v) => assert!(v.is_empty()),
+        other => panic!("unexpected {other:?}"),
+    }
+    cluster.shutdown();
+}
+
+#[test]
+fn readfiles_io_fault_is_not_enoent() {
+    // spill-to-disk cluster; deleting the spilled partition files turns
+    // node 1's reads into real I/O faults, which must surface per file as
+    // Fault — never as NotFound
+    let files = inputs(8, 2);
+    let spill = std::env::temp_dir().join(format!("fanstore_bp_{}", std::process::id()));
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 2,
+            partitions: 2,
+            spill_dir: Some(spill.to_string_lossy().into_owned()),
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    for entry in std::fs::read_dir(spill.join("node001")).unwrap() {
+        std::fs::remove_file(entry.unwrap().path()).unwrap();
+    }
+    let resp = cluster
+        .transport
+        .call(
+            0,
+            1,
+            Request::ReadFiles {
+                paths: vec![
+                    "/fanstore/user/train/class1/img001.raw".into(), // indexed, file gone
+                    "/fanstore/user/train/ghost.raw".into(),         // never existed
+                ],
+            },
+        )
+        .unwrap();
+    let got = resp.into_files_data().unwrap();
+    assert!(
+        matches!(got[0].1, FileFetch::Fault(_)),
+        "deleted backing file must be an I/O fault: {:?}",
+        got[0].1
+    );
+    assert!(
+        matches!(got[1].1, FileFetch::NotFound),
+        "unknown path stays ENOENT: {:?}",
+        got[1].1
+    );
+    cluster.shutdown();
+    std::fs::remove_dir_all(&spill).ok();
+}
+
+// ---------------------------------------------------------------------------
+// VFS mini-batch hint (one ReadFiles per owner node)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn vfs_prefetch_hint_batches_and_opens_consume_it() {
+    let files = inputs(32, 3);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 4,
+            partitions: 8,
+            codec: Codec::Lzss(3), // exercise reader-side decode in the batch path
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("/fanstore/user/{}", f.path))
+        .collect();
+    let mut vfs = cluster.client(0);
+    for chunk in paths.chunks(8) {
+        let mut hint: Vec<String> = chunk.to_vec();
+        hint.push("/fanstore/user/train/ghost.raw".into()); // hint ignores bad paths
+        hint.push(chunk[1].clone()); // duplicated remote path must not leak a pin
+        vfs.prefetch(&hint).unwrap();
+        for p in chunk {
+            let want = &files[paths.iter().position(|q| q == p).unwrap()].data;
+            assert_eq!(&vfs.read_all(p).unwrap(), want, "{p}");
+        }
+    }
+    // the bogus path still fails with ENOENT at open time
+    assert!(vfs.read_all("/fanstore/user/train/ghost.raw").is_err());
+    drop(vfs);
+    let st = cluster.node_state(0);
+    assert_eq!(st.cache.resident_files(), 0, "all hint pins consumed/released");
+    drop(st);
+    let report = cluster.shutdown();
+    let batched: u64 = report.per_node.iter().map(|s| s.batched_reads_served).sum();
+    assert!(batched > 0, "mini-batch hints must use ReadFiles");
+    // batching amortizes: way fewer requests than the 24 remote files
+    assert!(
+        report.requests_served < 24,
+        "expected batched round trips, served {}",
+        report.requests_served
+    );
+}
+
+// ---------------------------------------------------------------------------
+// Background pipeline: byte-exact under concurrency + exact counter algebra
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prefetch_pipeline_stress_exact_algebra() {
+    const NODES: u32 = 3;
+    const THREADS: usize = 4;
+    const N_FILES: usize = 48;
+    let files = inputs(N_FILES, 4);
+    let cluster = Arc::new(
+        Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: NODES,
+                partitions: 6,
+                prefetch_window: 8,
+                prefetch_fetchers: 2,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let expect: Arc<Vec<(String, Vec<u8>)>> = Arc::new(
+        files
+            .iter()
+            .map(|f| (format!("/fanstore/user/{}", f.path), f.data.clone()))
+            .collect(),
+    );
+
+    // every node schedules the full sequence once, shuffled per node
+    let mut orders = Vec::new();
+    for node in 0..NODES {
+        let mut order: Vec<usize> = (0..N_FILES).collect();
+        Prng::new(100 + node as u64).shuffle(&mut order);
+        cluster
+            .prefetch_handle(node)
+            .schedule(order.iter().map(|&i| expect[i].0.clone()));
+        orders.push(order);
+    }
+
+    // K trainer threads per node split each node's sequence round-robin
+    let mut handles = Vec::new();
+    for node in 0..NODES {
+        for t in 0..THREADS {
+            let cluster = Arc::clone(&cluster);
+            let expect = Arc::clone(&expect);
+            let order = orders[node as usize].clone();
+            handles.push(std::thread::spawn(move || {
+                let mut vfs = cluster.prefetching_client(node);
+                let mut reads = 0u64;
+                for (k, &i) in order.iter().enumerate() {
+                    if k % THREADS != t {
+                        continue;
+                    }
+                    let (path, want) = &expect[i];
+                    assert_eq!(&vfs.read_all(path).unwrap(), want, "{path}");
+                    reads += 1;
+                }
+                reads
+            }));
+        }
+    }
+    let total_reads: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total_reads, NODES as u64 * N_FILES as u64);
+
+    // snapshot the engine stats before stopping (stats go away with them)
+    let pf_stats: Vec<_> = (0..NODES).map(|n| cluster.prefetch_stats(n)).collect();
+    for node in 0..NODES {
+        let pf = &pf_stats[node as usize];
+        assert_eq!(pf.scheduled, N_FILES as u64, "node {node}: {pf:?}");
+        assert_eq!(pf.failed, 0, "node {node}: no faults in this workload");
+        assert_eq!(
+            pf.claimed + pf.stolen,
+            N_FILES as u64,
+            "node {node}: every read claims or steals its path: {pf:?}"
+        );
+        assert_eq!(
+            pf.picked + pf.stolen + pf.coalesced,
+            N_FILES as u64,
+            "node {node}: every scheduled path is picked, stolen, or coalesced: {pf:?}"
+        );
+    }
+    cluster.stop_prefetchers();
+
+    for node in 0..NODES {
+        let pf = &pf_stats[node as usize];
+        let st = cluster.node_state(node);
+        let cs = st.cache.stats();
+        let ns = st.stats.snapshot();
+        assert_eq!(
+            st.cache.resident_files(),
+            0,
+            "node {node}: descriptors closed + engines stopped -> empty cache"
+        );
+        // every picked path is exactly one cache acquire; every read that
+        // didn't claim is exactly one acquire
+        assert_eq!(
+            cs.hits + cs.misses,
+            N_FILES as u64 - pf.claimed + pf.picked,
+            "node {node}: acquire algebra: cache {cs:?}, pf {pf:?}"
+        );
+        // every miss (reader's or fetcher's) is exactly one fetch
+        assert_eq!(
+            ns.local_reads + ns.remote_reads_issued,
+            cs.misses,
+            "node {node}: fetch algebra: {ns:?} vs {cs:?}"
+        );
+        // fetch breakdown matches the engine's own accounting
+        assert_eq!(
+            pf.picked,
+            pf.prehits + pf.fetched_local + pf.fetched_remote,
+            "node {node}: {pf:?}"
+        );
+        drop(st);
+    }
+    Arc::try_unwrap(cluster)
+        .ok()
+        .expect("all thread handles joined")
+        .shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Satellites: unlink GC at the origin + output metadata caching
+// ---------------------------------------------------------------------------
+
+#[test]
+fn remote_unlink_gcs_origin_and_stale_meta_self_corrects() {
+    let files = inputs(8, 5);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 4,
+            partitions: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // home at node 0; writer (origin) node 1; unlinker node 2; reader node 3
+    let path = path_with_home(&cluster, "/gc/a", 0);
+    let v1 = vec![0xA1u8; 100];
+    cluster.client(1).write_file(&path, &v1).unwrap();
+
+    let mut reader = cluster.client(3);
+    assert_eq!(reader.read_all(&path).unwrap(), v1);
+    assert_eq!(reader.read_all(&path).unwrap(), v1);
+    assert_eq!(
+        cluster.node_state(3).stats.snapshot().output_meta_hits,
+        1,
+        "second open must use the cached metadata, not a StatOutput RPC"
+    );
+
+    // remote unlink (node 2 is neither home nor origin): previously
+    // rejected; now removes home metadata AND GCs the origin buffer
+    cluster.client(2).unlink(&path).unwrap();
+    assert!(
+        !cluster
+            .node_state(1)
+            .output_data
+            .read()
+            .unwrap()
+            .contains_key(&path),
+        "origin buffer must be dropped, not leaked until shutdown"
+    );
+    assert!(cluster.client(2).stat(&path).is_err(), "name is gone");
+    assert!(
+        matches!(cluster.client(2).unlink(&path), Err(fanstore::FanError::NotFound(_))),
+        "double unlink is ENOENT"
+    );
+
+    // same name, new generation, different origin (node 2) and size
+    let v2 = vec![0xB2u8; 37];
+    cluster.client(2).write_file(&path, &v2).unwrap();
+    // node 3 still holds the stale cached metadata (old origin/size); the
+    // ENOENT from the dead origin must trigger a fresh stat + refetch
+    assert_eq!(
+        reader.read_all(&path).unwrap(),
+        v2,
+        "stale output metadata must self-correct on read"
+    );
+
+    // local unlink at the home node also GCs a remote origin's buffer
+    let path2 = path_with_home(&cluster, "/gc/b", 0);
+    cluster.client(1).write_file(&path2, &[7u8; 64]).unwrap();
+    cluster.client(0).unlink(&path2).unwrap();
+    assert!(
+        !cluster
+            .node_state(1)
+            .output_data
+            .read()
+            .unwrap()
+            .contains_key(&path2),
+        "home-side unlink must GC the remote origin too"
+    );
+    cluster.shutdown();
+}

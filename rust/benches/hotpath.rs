@@ -28,7 +28,8 @@ use fanstore::config::ClusterConfig;
 use fanstore::coordinator::Cluster;
 use fanstore::metadata::record::{FileLocation, FileMeta, FileStat};
 use fanstore::metadata::table::MetaTable;
-use fanstore::net::transport::{InProcTransport, Request};
+use fanstore::net::tcp::{TcpServer, TcpTransport};
+use fanstore::net::transport::{InProcTransport, NodeEndpoint, Request, Response, Transport};
 use fanstore::partition::builder::{build_partitions, InputFile};
 use fanstore::util::human_rate;
 use fanstore::util::prng::Prng;
@@ -114,6 +115,7 @@ fn bench_metadata(out: &mut Entries, smoke: bool) {
                     stored_len: 1000,
                     compressed: false,
                 },
+                generation: 0,
             },
         );
     }
@@ -218,31 +220,27 @@ fn bench_partition(out: &mut Entries, smoke: bool) {
     out.push(("partition/scan".into(), 0.0, rate));
 }
 
-fn bench_transport(out: &mut Entries, smoke: bool) {
-    println!("== transport round trip ==");
-    let (tp, eps) = InProcTransport::fully_connected(2);
-    let mut eps = eps.into_iter();
-    let _e0 = eps.next().unwrap();
-    let e1 = eps.next().unwrap();
-    let handle = std::thread::spawn(move || {
-        // one shared payload, cloned per reply: the Arc moves through the
-        // channel, the 128 KiB buffer never does
+/// Echo worker replying with one shared 128 KiB payload: the Arc moves (or
+/// serializes straight from the buffer on TCP) — the bytes are never cloned
+/// on the serving side.
+fn spawn_payload_echo(ep: NodeEndpoint) -> std::thread::JoinHandle<()> {
+    std::thread::spawn(move || {
         let payload: Arc<[u8]> = vec![0u8; 128 * 1024].into();
-        while let Ok(msg) = e1.inbox.recv() {
+        while let Ok(msg) = ep.inbox.recv() {
             if matches!(msg.req, Request::Shutdown) {
-                let _ = msg.reply.send(fanstore::net::transport::Response::Ok);
+                msg.reply.send(Response::Ok);
                 break;
             }
-            let _ = msg
-                .reply
-                .send(fanstore::net::transport::Response::FileData {
-                    stored: Arc::clone(&payload),
-                    raw_len: 128 * 1024,
-                    compressed: false,
-                });
+            msg.reply.send(Response::FileData {
+                stored: Arc::clone(&payload),
+                raw_len: 128 * 1024,
+                compressed: false,
+            });
         }
-    });
-    let iters = if smoke { 4_000 } else { 20_000 };
+    })
+}
+
+fn time_roundtrips(tp: &dyn Transport, iters: u32) -> f64 {
     let t0 = Instant::now();
     for i in 0..iters {
         let r = tp
@@ -256,15 +254,45 @@ fn bench_transport(out: &mut Entries, smoke: bool) {
             .unwrap();
         std::hint::black_box(r);
     }
-    let per = t0.elapsed().as_secs_f64() / iters as f64;
+    t0.elapsed().as_secs_f64() / iters as f64
+}
+
+fn bench_transport(out: &mut Entries, smoke: bool) {
+    println!("== transport round trip (inproc vs TCP loopback) ==");
+    // in-proc (mpsc) fabric
+    let (tp, eps) = InProcTransport::fully_connected(2);
+    let mut eps = eps.into_iter();
+    let _e0 = eps.next().unwrap();
+    let e1 = eps.next().unwrap();
+    let handle = spawn_payload_echo(e1);
+    let iters = if smoke { 4_000 } else { 20_000 };
+    let per = time_roundtrips(&tp, iters);
     println!(
-        "  round trip (128 KiB payload): {:.1} µs, {:.0} req/s",
+        "  inproc round trip (128 KiB payload): {:.1} µs, {:.0} req/s",
         per * 1e6,
         1.0 / per
     );
     out.push(("transport/roundtrip_128k".into(), 1.0 / per, 128.0 * 1024.0 / per));
     tp.shutdown_all();
     handle.join().unwrap();
+
+    // real-socket fabric: same protocol through the wire codec + demux
+    let (srv, ep) = TcpServer::bind(1, "127.0.0.1:0").expect("bind loopback");
+    let handle = spawn_payload_echo(ep);
+    let addr = srv.local_addr();
+    // peer 0 is never dialed (the bench only calls node 1)
+    let tcp = TcpTransport::connect(&[addr, addr]).expect("connect loopback");
+    let iters = if smoke { 1_000 } else { 5_000 };
+    let per = time_roundtrips(&tcp, iters);
+    println!(
+        "  tcp    round trip (128 KiB payload): {:.1} µs, {:.0} req/s",
+        per * 1e6,
+        1.0 / per
+    );
+    out.push(("transport/tcp_roundtrip_128k".into(), 1.0 / per, 128.0 * 1024.0 / per));
+    tcp.shutdown_all();
+    handle.join().unwrap();
+    drop(srv);
 }
 
 fn bench_read_path(out: &mut Entries, smoke: bool) {

@@ -8,6 +8,28 @@
 use crate::compress::Codec;
 use crate::error::{FanError, Result};
 
+/// Which fabric the cluster's request/response protocol runs over.  The
+/// node workers, VFS clients and prefetchers are identical either way —
+/// they program against `dyn Transport`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum TransportKind {
+    /// mpsc channels inside one process (the MPI stand-in).
+    #[default]
+    InProc,
+    /// Real TCP sockets on 127.0.0.1 — every remote read crosses the
+    /// kernel socket stack with the wire codec, one listener per node.
+    TcpLoopback,
+}
+
+impl TransportKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            TransportKind::InProc => "inproc",
+            TransportKind::TcpLoopback => "tcp-loopback",
+        }
+    }
+}
+
 /// In-process cluster bring-up options (paper §5.2/§5.4 knobs).
 #[derive(Clone, Debug)]
 pub struct ClusterConfig {
@@ -37,6 +59,8 @@ pub struct ClusterConfig {
     /// Per-node prefetch engine: background fetcher-thread count (the
     /// paper's §5.4 worker threads that overlap fetch with compute).
     pub prefetch_fetchers: usize,
+    /// Fabric the cluster's protocol runs over (mpsc vs loopback TCP).
+    pub transport: TransportKind,
 }
 
 impl Default for ClusterConfig {
@@ -52,6 +76,7 @@ impl Default for ClusterConfig {
             cache_shards: crate::cache::CACHE_SHARDS,
             prefetch_window: 64,
             prefetch_fetchers: 4,
+            transport: TransportKind::InProc,
         }
     }
 }

@@ -5,24 +5,146 @@
 //! placement (replication factor, replicated directories), input-metadata
 //! broadcast, and worker-thread startup.  The result serves POSIX-shaped
 //! traffic from any number of [`FanStoreVfs`] clients per node.
+//!
+//! The fabric is pluggable ([`crate::config::TransportKind`]): `InProc`
+//! wires the workers over mpsc channels; `TcpLoopback` binds one real TCP
+//! listener per node on 127.0.0.1 and runs the identical protocol through
+//! the wire codec — the workers, clients and prefetchers cannot tell the
+//! difference.  The standalone building blocks ([`prepare_partitions`],
+//! [`build_global_meta`], [`build_node_shared`]) are shared with the
+//! multi-process `fanstore cluster serve|join` CLI, where each host runs
+//! exactly one node of the same pipeline.
 
 use std::sync::{Arc, Mutex};
 
-use crate::config::ClusterConfig;
+use crate::config::{ClusterConfig, TransportKind};
 use crate::error::Result;
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta, REPLICATED_PARTITION};
+use crate::metadata::table::MetaTable;
+use crate::net::tcp::{TcpServer, TcpTransport};
+use crate::net::transport::{InProcTransport, NodeEndpoint, Transport};
 use crate::node::{FanStoreNode, NodeBuilder, NodeShared, NodeStats};
-use crate::net::transport::InProcTransport;
 use crate::partition::builder::{build_partitions, BuildStats, InputFile};
 use crate::partition::format::PartitionReader;
 use crate::prefetch::{PrefetchConfig, PrefetchHandle, PrefetchStats, Prefetcher};
 use crate::storage::disk::DiskStore;
 use crate::vfs::FanStoreVfs;
 
-/// A running in-process FanStore cluster.
+/// Packed dataset ready for distribution: the exclusive partition blobs,
+/// the optional replicated-directory blob, and the prep accounting.
+pub struct PreparedData {
+    pub blobs: Vec<(u32, Vec<u8>)>,
+    pub repl_blob: Option<Vec<u8>>,
+    pub prep_stats: BuildStats,
+}
+
+/// §5.2 data preparation: pack `files` into `config.partitions` exclusive
+/// partitions (± LZSS) plus one replicated partition for everything under
+/// a `config.replicate_dirs` prefix.  Deterministic given identical input,
+/// so every host of a multi-process cluster can prepare independently.
+pub fn prepare_partitions(files: &[InputFile], config: &ClusterConfig) -> Result<PreparedData> {
+    let (replicated, partitioned): (Vec<_>, Vec<_>) = files.iter().cloned().partition(|f| {
+        config
+            .replicate_dirs
+            .iter()
+            .any(|d| f.path.starts_with(d.trim_end_matches('/')))
+    });
+
+    let (blobs, mut prep_stats) = build_partitions(&partitioned, config.partitions, config.codec)?;
+    let blobs: Vec<(u32, Vec<u8>)> = blobs
+        .into_iter()
+        .enumerate()
+        .map(|(i, b)| (i as u32, b))
+        .collect();
+
+    let repl_blob = if replicated.is_empty() {
+        None
+    } else {
+        let (mut rb, rstats) = build_partitions(&replicated, 1, config.codec)?;
+        prep_stats.files += rstats.files;
+        prep_stats.raw_bytes += rstats.raw_bytes;
+        prep_stats.stored_bytes += rstats.stored_bytes;
+        prep_stats.compressed_files += rstats.compressed_files;
+        Some(rb.pop().unwrap())
+    };
+    Ok(PreparedData {
+        blobs,
+        repl_blob,
+        prep_stats,
+    })
+}
+
+/// §5.3 metadata broadcast content: the global input table every node
+/// replicates (identical on all of them).
+pub fn build_global_meta(
+    data: &PreparedData,
+    config: &ClusterConfig,
+    placement: &Placement,
+) -> Result<MetaTable> {
+    let mut global_meta = MetaTable::new();
+    crate::node::index_input_metadata(&mut global_meta, &data.blobs, &config.mount, placement)?;
+    if let Some(rb) = &data.repl_blob {
+        let mut reader = PartitionReader::new(rb)?;
+        while let Some((e, data_off)) = reader.next_entry()? {
+            let path = format!("{}/{}", config.mount.trim_end_matches('/'), e.name);
+            global_meta.insert(
+                &path,
+                FileMeta {
+                    stat: e.stat,
+                    location: FileLocation {
+                        node: u32::MAX,
+                        partition: REPLICATED_PARTITION,
+                        offset: data_off,
+                        stored_len: e.stored_len(),
+                        compressed: e.is_compressed(),
+                    },
+                    generation: 0,
+                },
+            );
+        }
+    }
+    Ok(global_meta)
+}
+
+/// Build and seal one node's shared state: dump the partitions placement
+/// assigns it (plus the replicated blob), attach the metadata replica.
+/// Used per node by [`Cluster::launch`] and once per host by the
+/// `fanstore cluster` CLI.
+pub fn build_node_shared(
+    id: u32,
+    data: &PreparedData,
+    global_meta: Arc<MetaTable>,
+    placement: &Placement,
+    config: &ClusterConfig,
+) -> Result<Arc<NodeShared>> {
+    let store = match &config.spill_dir {
+        Some(dir) => DiskStore::on_disk(format!("{dir}/node{id:03}"))?,
+        None => DiskStore::in_memory(),
+    };
+    let mut builder = NodeBuilder::new(id, store, placement.clone());
+    builder.cache_shards = config.cache_shards;
+    // dump the partitions this node hosts
+    for (pid, blob) in &data.blobs {
+        if placement.is_local(*pid, id) {
+            builder
+                .store
+                .load_partition(*pid, blob.clone(), &config.mount)?;
+        }
+    }
+    if let Some(rb) = &data.repl_blob {
+        builder
+            .store
+            .load_partition(REPLICATED_PARTITION, rb.clone(), &config.mount)?;
+    }
+    builder.input_meta = global_meta;
+    Ok(builder.seal())
+}
+
+/// A running FanStore cluster (single process; fabric per
+/// `config.transport`).
 pub struct Cluster {
-    pub transport: InProcTransport,
+    pub transport: Arc<dyn Transport>,
     pub placement: Placement,
     pub config: ClusterConfig,
     pub prep_stats: BuildStats,
@@ -30,6 +152,11 @@ pub struct Cluster {
     /// Per-node background prefetch engines, started on first use and
     /// stopped (pins released) before the workers shut down.
     prefetchers: Mutex<Vec<Option<Arc<Prefetcher>>>>,
+    /// Loopback-TCP listeners (one per node; empty in `InProc` mode).
+    /// Stopped in `shutdown` after the shutdown broadcast but *before* the
+    /// worker joins, so a worker whose `Shutdown` message was lost still
+    /// exits via inbox-channel close instead of deadlocking the join.
+    tcp_servers: Vec<TcpServer>,
 }
 
 /// Post-shutdown accounting.
@@ -48,84 +175,49 @@ impl Cluster {
     /// partitions distributed per the replication factor.
     pub fn launch(files: &[InputFile], config: ClusterConfig) -> Result<Cluster> {
         config.validate()?;
-        let (replicated, partitioned): (Vec<_>, Vec<_>) = files.iter().cloned().partition(|f| {
-            config
-                .replicate_dirs
-                .iter()
-                .any(|d| f.path.starts_with(d.trim_end_matches('/')))
-        });
-
-        let (blobs, mut prep_stats) =
-            build_partitions(&partitioned, config.partitions, config.codec)?;
-        let blobs: Vec<(u32, Vec<u8>)> = blobs.into_iter().enumerate().map(|(i, b)| (i as u32, b)).collect();
-
-        let repl_blob = if replicated.is_empty() {
-            None
-        } else {
-            let (mut rb, rstats) = build_partitions(&replicated, 1, config.codec)?;
-            prep_stats.files += rstats.files;
-            prep_stats.raw_bytes += rstats.raw_bytes;
-            prep_stats.stored_bytes += rstats.stored_bytes;
-            prep_stats.compressed_files += rstats.compressed_files;
-            Some(rb.pop().unwrap())
-        };
-
+        let data = prepare_partitions(files, &config)?;
         let placement = Placement::new(config.nodes, config.partitions, config.replication);
-        let (transport, endpoints) = InProcTransport::fully_connected(config.nodes);
 
-        // Global input metadata (broadcast): identical on every node.
-        let mut global_meta = crate::metadata::table::MetaTable::new();
-        crate::node::index_input_metadata(&mut global_meta, &blobs, &config.mount, &placement)?;
-        if let Some(rb) = &repl_blob {
-            let mut reader = PartitionReader::new(rb)?;
-            while let Some((e, data_off)) = reader.next_entry()? {
-                let path = format!("{}/{}", config.mount.trim_end_matches('/'), e.name);
-                global_meta.insert(
-                    &path,
-                    FileMeta {
-                        stat: e.stat,
-                        location: FileLocation {
-                            node: u32::MAX,
-                            partition: REPLICATED_PARTITION,
-                            offset: data_off,
-                            stored_len: e.stored_len(),
-                            compressed: e.is_compressed(),
-                        },
-                    },
-                );
-            }
-        }
+        // fabric bring-up: the endpoints feed the worker threads the same
+        // way whichever transport delivers into them
+        let mut tcp_servers: Vec<TcpServer> = Vec::new();
+        let (transport, endpoints): (Arc<dyn Transport>, Vec<NodeEndpoint>) =
+            match config.transport {
+                TransportKind::InProc => {
+                    let (t, eps) = InProcTransport::fully_connected(config.nodes);
+                    let t: Arc<dyn Transport> = Arc::new(t);
+                    (t, eps)
+                }
+                TransportKind::TcpLoopback => {
+                    let mut endpoints = Vec::with_capacity(config.nodes as usize);
+                    let mut addrs = Vec::with_capacity(config.nodes as usize);
+                    for id in 0..config.nodes {
+                        let (srv, ep) = TcpServer::bind(id, "127.0.0.1:0")?;
+                        addrs.push(srv.local_addr());
+                        tcp_servers.push(srv);
+                        endpoints.push(ep);
+                    }
+                    let t: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&addrs)?);
+                    (t, endpoints)
+                }
+            };
 
         // metadata broadcast: every node gets the full table.  Built once,
         // sealed immutable, and shared as one Arc — in-proc, a single RAM
         // copy stands in for the N identical replicas of the real wire
         // broadcast (§5.3).
-        let global_meta = Arc::new(global_meta);
+        let global_meta = Arc::new(build_global_meta(&data, &config, &placement)?);
 
         let mut nodes = Vec::with_capacity(config.nodes as usize);
         for ep in endpoints {
-            let id = ep.node_id;
-            let store = match &config.spill_dir {
-                Some(dir) => DiskStore::on_disk(format!("{dir}/node{id:03}"))?,
-                None => DiskStore::in_memory(),
-            };
-            let mut builder = NodeBuilder::new(id, store, placement.clone());
-            builder.cache_shards = config.cache_shards;
-            // dump the partitions this node hosts
-            for (pid, blob) in &blobs {
-                if placement.is_local(*pid, id) {
-                    builder
-                        .store
-                        .load_partition(*pid, blob.clone(), &config.mount)?;
-                }
-            }
-            if let Some(rb) = &repl_blob {
-                builder
-                    .store
-                    .load_partition(REPLICATED_PARTITION, rb.clone(), &config.mount)?;
-            }
-            builder.input_meta = Arc::clone(&global_meta);
-            nodes.push(FanStoreNode::spawn(builder.seal(), ep));
+            let shared = build_node_shared(
+                ep.node_id,
+                &data,
+                Arc::clone(&global_meta),
+                &placement,
+                &config,
+            )?;
+            nodes.push(FanStoreNode::spawn(shared, ep));
         }
 
         let prefetchers = Mutex::new((0..config.nodes).map(|_| None).collect());
@@ -133,9 +225,10 @@ impl Cluster {
             transport,
             placement,
             config,
-            prep_stats,
+            prep_stats: data.prep_stats,
             nodes,
             prefetchers,
+            tcp_servers,
         })
     }
 
@@ -148,7 +241,7 @@ impl Cluster {
         FanStoreVfs::new(
             node,
             Arc::clone(&self.nodes[node as usize].shared),
-            self.transport.clone(),
+            Arc::clone(&self.transport),
         )
     }
 
@@ -169,7 +262,7 @@ impl Cluster {
             *slot = Some(Arc::new(Prefetcher::spawn(
                 node,
                 Arc::clone(&self.nodes[node as usize].shared),
-                self.transport.clone(),
+                Arc::clone(&self.transport),
                 PrefetchConfig {
                     window: self.config.prefetch_window,
                     fetchers: self.config.prefetch_fetchers,
@@ -204,7 +297,7 @@ impl Cluster {
     }
 
     /// Orderly shutdown; returns per-node stats.
-    pub fn shutdown(self) -> ClusterReport {
+    pub fn shutdown(mut self) -> ClusterReport {
         // prefetch engines first: their fetcher threads talk to the node
         // workers, and their unclaimed pins must drain before stats settle
         self.stop_prefetchers();
@@ -213,7 +306,14 @@ impl Cluster {
             .iter()
             .map(|n| n.shared.stats.snapshot())
             .collect();
+        // transport second: workers receive Shutdown and exit; over TCP
+        // this also closes the client sockets, so bridge threads drain
         self.transport.shutdown_all();
+        // TCP listeners third, BEFORE the worker joins: stopping the
+        // accept loops drops the last inbox senders, so a worker whose
+        // Shutdown message was lost (peer dial failure, torn frame) exits
+        // via channel close instead of deadlocking the join below
+        self.tcp_servers.clear();
         let requests_served = self.nodes.into_iter().map(|n| n.join()).sum();
         ClusterReport {
             per_node,
@@ -407,6 +507,31 @@ mod tests {
         assert_eq!(st.cache.resident_files(), 0, "pins drained");
         drop(st);
         cluster.shutdown();
+    }
+
+    #[test]
+    fn tcp_loopback_cluster_serves_reads() {
+        let files = dataset(24, 31);
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 3,
+                partitions: 6,
+                transport: TransportKind::TcpLoopback,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        for node in 0..3 {
+            let mut vfs = cluster.client(node);
+            for f in &files {
+                let path = format!("/fanstore/user/{}", f.path);
+                assert_eq!(vfs.read_all(&path).unwrap(), f.data, "{path} via node {node}");
+            }
+        }
+        let report = cluster.shutdown();
+        let remote: u64 = report.per_node.iter().map(|s| s.remote_reads_issued).sum();
+        assert!(remote > 0, "3-node single-copy placement must go remote");
     }
 
     #[test]

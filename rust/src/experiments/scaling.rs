@@ -312,6 +312,24 @@ pub fn run_inproc_pipeline(
     file_size: usize,
     batch: usize,
 ) -> crate::error::Result<Vec<PipelinePoint>> {
+    run_pipeline(
+        crate::config::TransportKind::InProc,
+        nodes,
+        file_count,
+        file_size,
+        batch,
+    )
+}
+
+/// [`run_inproc_pipeline`] over an arbitrary fabric — the same cluster
+/// logic and workload runs over mpsc channels or loopback TCP sockets.
+pub fn run_pipeline(
+    transport: crate::config::TransportKind,
+    nodes: u32,
+    file_count: usize,
+    file_size: usize,
+    batch: usize,
+) -> crate::error::Result<Vec<PipelinePoint>> {
     use crate::config::ClusterConfig;
     use crate::coordinator::Cluster;
     use crate::partition::builder::InputFile;
@@ -343,6 +361,7 @@ pub fn run_inproc_pipeline(
             ClusterConfig {
                 nodes,
                 partitions: nodes * 2,
+                transport,
                 ..Default::default()
             },
         )?;
@@ -465,6 +484,189 @@ mod pipeline_tests {
             "prefetch {} !< sync {}",
             prefetch.requests_served,
             sync.requests_served
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Transport equivalence: the same cluster logic over mpsc channels vs real
+// loopback TCP sockets must produce byte-identical reads and the exact same
+// stats/cache counter algebra — the wire codec and demux layer add latency,
+// never semantics.
+// ---------------------------------------------------------------------------
+
+/// One fabric's end-to-end result over the identical workload.
+#[derive(Clone, Debug)]
+pub struct TransportRun {
+    pub kind: crate::config::TransportKind,
+    pub seconds: f64,
+    pub files_read: u64,
+    pub bytes_read: u64,
+    /// FNV-1a digest over every file's bytes in each node's read order —
+    /// byte-identical runs have identical digests.
+    pub digest: u64,
+    pub per_node: Vec<crate::node::NodeStats>,
+    /// (hits, misses) of each node's refcount cache.
+    pub cache: Vec<(u64, u64)>,
+    pub requests_served: u64,
+}
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+/// Run the identical workload (every node reads the full dataset in its own
+/// shuffled order, hinted in `batch`-sized mini-batches) on a fresh cluster
+/// per fabric; returns one [`TransportRun`] per kind, same order as `kinds`.
+pub fn run_transport_equivalence(
+    kinds: &[crate::config::TransportKind],
+    nodes: u32,
+    file_count: usize,
+    file_size: usize,
+    batch: usize,
+) -> crate::error::Result<Vec<TransportRun>> {
+    use crate::config::ClusterConfig;
+    use crate::coordinator::Cluster;
+    use crate::partition::builder::InputFile;
+    use crate::util::prng::Prng;
+    use crate::vfs::Vfs;
+    use std::sync::Arc;
+
+    let mut rng = Prng::new(0x7C9E);
+    let files: Vec<InputFile> = (0..file_count)
+        .map(|i| {
+            let mut data = vec![0u8; file_size];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/f{i:05}"),
+                data,
+            }
+        })
+        .collect();
+    let paths: Arc<Vec<String>> = Arc::new(
+        files
+            .iter()
+            .map(|f| format!("/fanstore/user/{}", f.path))
+            .collect(),
+    );
+    // per-node deterministic shuffled order, identical across fabrics
+    let orders: Arc<Vec<Vec<u32>>> = Arc::new(
+        (0..nodes)
+            .map(|n| {
+                let mut order: Vec<u32> = (0..file_count as u32).collect();
+                Prng::new(0xF00D + n as u64).shuffle(&mut order);
+                order
+            })
+            .collect(),
+    );
+
+    let mut out = Vec::new();
+    for &kind in kinds {
+        let cluster = Arc::new(Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes,
+                partitions: nodes * 2,
+                transport: kind,
+                ..Default::default()
+            },
+        )?);
+        let t0 = std::time::Instant::now();
+        let mut handles = Vec::new();
+        for node in 0..nodes {
+            let cluster = Arc::clone(&cluster);
+            let paths = Arc::clone(&paths);
+            let orders = Arc::clone(&orders);
+            handles.push(std::thread::spawn(
+                move || -> crate::error::Result<(u64, u64)> {
+                    let mut vfs = cluster.client(node);
+                    let mut digest = 0xCBF2_9CE4_8422_2325u64;
+                    let mut bytes = 0u64;
+                    for chunk in orders[node as usize].chunks(batch) {
+                        let hint: Vec<String> =
+                            chunk.iter().map(|&i| paths[i as usize].clone()).collect();
+                        vfs.prefetch(&hint)?;
+                        for p in &hint {
+                            let data = vfs.read_all(p)?;
+                            bytes += data.len() as u64;
+                            digest = fnv1a(digest, &data);
+                        }
+                    }
+                    Ok((digest, bytes))
+                },
+            ));
+        }
+        let mut digest = 0u64;
+        let mut bytes_read = 0u64;
+        for h in handles {
+            let (d, b) = h.join().expect("reader thread")?;
+            // order-independent combine of per-node (order-dependent) digests
+            digest ^= d;
+            bytes_read += b;
+        }
+        let seconds = t0.elapsed().as_secs_f64();
+        let cache: Vec<(u64, u64)> = (0..nodes)
+            .map(|n| {
+                let cs = cluster.node_state(n).cache.stats();
+                (cs.hits, cs.misses)
+            })
+            .collect();
+        let cluster = Arc::try_unwrap(cluster)
+            .ok()
+            .expect("all reader threads joined");
+        let report = cluster.shutdown();
+        out.push(TransportRun {
+            kind,
+            seconds,
+            files_read: nodes as u64 * file_count as u64,
+            bytes_read,
+            digest,
+            per_node: report.per_node,
+            cache,
+            requests_served: report.requests_served,
+        });
+    }
+    Ok(out)
+}
+
+/// True iff two fabrics produced byte-identical reads with the exact same
+/// counter algebra (the acceptance gauge for the pluggable transport).
+pub fn transport_runs_equivalent(a: &TransportRun, b: &TransportRun) -> bool {
+    a.digest == b.digest
+        && a.bytes_read == b.bytes_read
+        && a.files_read == b.files_read
+        && a.per_node == b.per_node
+        && a.cache == b.cache
+        && a.requests_served == b.requests_served
+}
+
+pub fn report_transport_equivalence(runs: &[TransportRun]) {
+    let mut t = Table::new(
+        "Transport equivalence — identical workload per fabric",
+        &["fabric", "MB/s", "files/s", "digest", "transport reqs", "remote reads"],
+    );
+    for r in runs {
+        let remote: u64 = r.per_node.iter().map(|s| s.remote_reads_issued).sum();
+        t.row(&[
+            r.kind.name().to_string(),
+            f1(r.bytes_read as f64 / r.seconds.max(1e-9) / 1e6),
+            f1(r.files_read as f64 / r.seconds.max(1e-9)),
+            format!("{:016x}", r.digest),
+            r.requests_served.to_string(),
+            remote.to_string(),
+        ]);
+    }
+    t.print();
+    if let (Some(a), Some(b)) = (runs.first(), runs.last()) {
+        shape_check(
+            "tcp run byte- and counter-identical to inproc",
+            if transport_runs_equivalent(a, b) { 1.0 } else { 0.0 },
+            0.5,
+            1.5,
         );
     }
 }

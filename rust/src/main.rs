@@ -4,11 +4,15 @@
 //! fanstore prepare   --files N --partitions P [--codec lzss --level L]
 //! fanstore bench-io  --nodes N [--cluster gpu|cpu] [--scale S] [--ratio R]
 //! fanstore train     --nodes N --epochs E [--view global|partitioned]
-//! fanstore experiment <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|prep-cost|all>
+//! fanstore cluster   serve --node-id I --nodes N --listen HOST:PORT
+//! fanstore cluster   join  --node-id I --nodes N --peers a:p,b:p,... [--shutdown]
+//! fanstore experiment <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|prep-cost|pipeline|transport|all>
 //! ```
 
+use std::sync::Arc;
+
 use fanstore::compress::Codec;
-use fanstore::config::{ArgMap, ClusterConfig};
+use fanstore::config::{ArgMap, ClusterConfig, TransportKind};
 use fanstore::coordinator::Cluster;
 use fanstore::error::Result;
 use fanstore::experiments as exp;
@@ -26,13 +30,17 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: fanstore <prepare|bench-io|train|experiment> [--key value ...]\n\
+        "usage: fanstore <prepare|bench-io|train|cluster|experiment> [--key value ...]\n\
          \n\
          prepare     pack a synthetic dataset into partitions (§5.2)\n\
          bench-io    run the §6.2 benchmark on the in-proc cluster\n\
          train       train the CNN surrogate through FanStore + PJRT\n\
+         cluster     run one FanStore node over real TCP:\n\
+                       serve --node-id I --nodes N --listen HOST:PORT\n\
+                       join  --node-id I --nodes N --peers a:p,b:p,... [--shutdown]\n\
+                     (every host passes the same --files/--size/--seed/--partitions)\n\
          experiment  regenerate a paper figure: fig1 fig3 fig4 fig5 fig6\n\
-                     fig7 fig8 fig9 fig10 fig11 prep-cost pipeline all"
+                     fig7 fig8 fig9 fig10 fig11 prep-cost pipeline transport all"
     );
 }
 
@@ -64,11 +72,188 @@ fn run(args: &[String]) -> Result<()> {
         "prepare" => cmd_prepare(&m),
         "bench-io" => cmd_bench_io(&m),
         "train" => cmd_train(&m),
+        "cluster" => cmd_cluster(&m),
         "experiment" => cmd_experiment(&m),
         _ => {
             usage();
             Err(fanstore::FanError::Config(format!("unknown command {cmd}")))
         }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `fanstore cluster serve|join` — one real-TCP FanStore node per process.
+//
+// Every participant runs the same deterministic §5.2 prep (seeded synthetic
+// dataset → partitions → metadata broadcast), loads only the partitions
+// placement assigns its node id, and serves them over a TCP listener.
+// `join` additionally acts as a reading client: it sweeps the whole global
+// namespace through the transport, verifies every byte against the
+// generator, and (with --shutdown) stops the cluster.
+// ---------------------------------------------------------------------------
+
+fn cluster_dataset(files: usize, size: usize, seed: u64) -> Vec<fanstore::partition::builder::InputFile> {
+    use fanstore::partition::builder::InputFile;
+    let mut rng = fanstore::util::prng::Prng::new(seed);
+    (0..files)
+        .map(|i| {
+            let mut data = vec![0u8; size];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/f{i:05}"),
+                data,
+            }
+        })
+        .collect()
+}
+
+fn cmd_cluster(m: &ArgMap) -> Result<()> {
+    use fanstore::coordinator::{build_global_meta, build_node_shared, prepare_partitions};
+    use fanstore::metadata::placement::Placement;
+    use fanstore::net::tcp::{TcpServer, TcpTransport};
+    use fanstore::net::transport::Transport;
+    use fanstore::node::FanStoreNode;
+    use fanstore::vfs::{FanStoreVfs, Vfs};
+
+    let Some(sub) = m.positional.get(1).map(|s| s.as_str()) else {
+        usage();
+        return Err(fanstore::FanError::Config(
+            "cluster needs a subcommand: serve | join".into(),
+        ));
+    };
+    let node_id = m.get_u32("node-id", 0)?;
+    let nodes = m.get_u32("nodes", 3)?;
+    let n_files = m.get_u64("files", 256)? as usize;
+    let size = m.get_u64("size", 64 << 10)? as usize;
+    let seed = m.get_u64("seed", 0xFA57)?;
+    let cfg = ClusterConfig {
+        nodes,
+        partitions: m.get_u32("partitions", nodes * 2)?,
+        codec: codec_of(m)?,
+        ..Default::default()
+    };
+    cfg.validate()?;
+    if node_id >= nodes {
+        return Err(fanstore::FanError::Config(format!(
+            "--node-id {node_id} out of range for --nodes {nodes}"
+        )));
+    }
+
+    // identical on every host: same seed → same partitions → same metadata
+    let files = cluster_dataset(n_files, size, seed);
+    let data = prepare_partitions(&files, &cfg)?;
+    let placement = Placement::new(cfg.nodes, cfg.partitions, cfg.replication);
+    let global_meta = Arc::new(build_global_meta(&data, &cfg, &placement)?);
+    let shared = build_node_shared(node_id, &data, global_meta, &placement, &cfg)?;
+
+    match sub {
+        "serve" => {
+            let listen = m.get("listen").unwrap_or("127.0.0.1:0").to_string();
+            let (server, endpoint) = TcpServer::bind(node_id, listen.as_str())?;
+            println!(
+                "node {node_id}/{nodes}: serving {} files ({} partitions dumped) on {}",
+                n_files,
+                shared.store.partition_count(),
+                server.local_addr()
+            );
+            let node = FanStoreNode::spawn(shared, endpoint);
+            // blocks until a peer sends Shutdown (fanstore cluster join --shutdown)
+            let served = node.join();
+            println!("node {node_id}: served {served} requests, exiting");
+            drop(server);
+            Ok(())
+        }
+        "join" => {
+            let peers = m.get("peers").ok_or_else(|| {
+                fanstore::FanError::Config(
+                    "join needs --peers host:port,host:port,... (node-id order)".into(),
+                )
+            })?;
+            let addrs: Vec<std::net::SocketAddr> = peers
+                .split(',')
+                .map(|s| {
+                    s.trim().parse().map_err(|_| {
+                        fanstore::FanError::Config(format!("bad peer address {s}"))
+                    })
+                })
+                .collect::<Result<_>>()?;
+            if addrs.len() != nodes as usize {
+                return Err(fanstore::FanError::Config(format!(
+                    "--peers lists {} addresses for --nodes {nodes}",
+                    addrs.len()
+                )));
+            }
+            // optionally serve our own share too (peers may read from us)
+            let server_node = match m.get("listen") {
+                Some(listen) => {
+                    let (server, endpoint) = TcpServer::bind(node_id, listen)?;
+                    println!("node {node_id}: also serving on {}", server.local_addr());
+                    Some((server, FanStoreNode::spawn(Arc::clone(&shared), endpoint)))
+                }
+                None => None,
+            };
+            let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&addrs)?);
+            let mut vfs = FanStoreVfs::new(node_id, shared, Arc::clone(&transport));
+            let mount = cfg.mount.clone();
+            let listing = vfs.readdir(&format!("{mount}/train"))?;
+            println!(
+                "node {node_id}: joined; global namespace lists {} files",
+                listing.len()
+            );
+            let batch = m.get_u64("batch", 16)? as usize;
+            let t0 = std::time::Instant::now();
+            let mut bytes = 0u64;
+            for chunk in files.chunks(batch) {
+                let hint: Vec<String> = chunk
+                    .iter()
+                    .map(|f| format!("{mount}/{}", f.path))
+                    .collect();
+                vfs.prefetch(&hint)?;
+                for (f, p) in chunk.iter().zip(&hint) {
+                    let got = vfs.read_all(p)?;
+                    if got != f.data {
+                        return Err(fanstore::FanError::Transport(format!(
+                            "byte mismatch reading {p} over TCP"
+                        )));
+                    }
+                    bytes += got.len() as u64;
+                }
+            }
+            let secs = t0.elapsed().as_secs_f64();
+            println!(
+                "node {node_id}: read+verified {} files ({}) over TCP in {secs:.3}s — {}",
+                files.len(),
+                fanstore::util::human_bytes(bytes),
+                fanstore::util::human_rate(bytes as f64 / secs),
+            );
+            drop(vfs);
+            if m.get_flag("shutdown") {
+                println!("node {node_id}: broadcasting shutdown to {} peers", nodes);
+                transport.shutdown_all();
+            }
+            if let Some((server, node)) = server_node {
+                if m.get_flag("shutdown") {
+                    // stop our listener first: its inbox sender drops, so
+                    // the worker exits even if our own --peers slot did not
+                    // point at our real address
+                    drop(server);
+                    let served = node.join();
+                    println!("node {node_id}: served {served} requests");
+                } else {
+                    // symmetric deployment: peers may still be reading our
+                    // partitions, so keep serving until some joiner
+                    // broadcasts the cluster shutdown
+                    println!("node {node_id}: serving until cluster shutdown...");
+                    let served = node.join();
+                    println!("node {node_id}: served {served} requests");
+                    drop(server);
+                }
+            }
+            Ok(())
+        }
+        other => Err(fanstore::FanError::Config(format!(
+            "unknown cluster subcommand {other}"
+        ))),
     }
 }
 
@@ -283,6 +468,18 @@ fn cmd_experiment(m: &ArgMap) -> Result<()> {
                 let rows = exp::scaling::run_inproc_pipeline(4, 512, 64 << 10, 16)?;
                 exp::scaling::report_inproc_pipeline(&rows);
             }
+            "transport" => {
+                // same workload over mpsc channels vs real loopback TCP:
+                // byte-identical reads, identical counter algebra
+                let runs = exp::scaling::run_transport_equivalence(
+                    &[TransportKind::InProc, TransportKind::TcpLoopback],
+                    4,
+                    256,
+                    64 << 10,
+                    16,
+                )?;
+                exp::scaling::report_transport_equivalence(&runs);
+            }
             other => {
                 return Err(fanstore::FanError::Config(format!(
                     "unknown experiment {other}"
@@ -294,7 +491,7 @@ fn cmd_experiment(m: &ArgMap) -> Result<()> {
     if which == "all" {
         for id in [
             "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-            "prep-cost", "pipeline", "fig1",
+            "prep-cost", "pipeline", "transport", "fig1",
         ] {
             run_one(id)?;
         }

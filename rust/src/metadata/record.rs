@@ -155,6 +155,11 @@ pub struct FileLocation {
 pub struct FileMeta {
     pub stat: FileStat,
     pub location: FileLocation,
+    /// Commit generation of an output file, stamped by its *home* node when
+    /// the `CommitOutput` lands (0 = input / never committed).  Two commits
+    /// of the same path always carry different generations, so a reader can
+    /// tell a same-origin same-size rewrite from the bytes it has cached.
+    pub generation: u64,
 }
 
 #[cfg(test)]

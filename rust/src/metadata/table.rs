@@ -193,6 +193,7 @@ mod tests {
                 stored_len: size,
                 compressed: false,
             },
+            generation: 0,
         }
     }
 

@@ -3,12 +3,20 @@
 //! The paper's remote file access is "a round-trip MPI message" (§1) over
 //! FDR InfiniBand (GPU cluster, 56 Gb/s, sub-µs latency) or Omni-Path
 //! (CPU cluster, 100 Gb/s).  [`fabric`] is the virtual-time cost model of
-//! those links; [`transport`] is the real message-passing layer used by the
-//! in-process cluster (std::sync::mpsc standing in for MPI point-to-point,
-//! same request/response protocol, real bytes).
+//! those links; [`transport`] defines the real message-passing layer — the
+//! [`transport::Transport`] trait plus the in-process implementation
+//! (std::sync::mpsc standing in for MPI point-to-point); [`wire`] is the
+//! length-prefixed frame codec for the same protocol; [`tcp`] runs it over
+//! real sockets (loopback single-process or multi-host via the
+//! `fanstore cluster` CLI).
 
 pub mod fabric;
+pub mod tcp;
 pub mod transport;
+pub mod wire;
 
 pub use fabric::Fabric;
-pub use transport::{InProcTransport, Message, NodeEndpoint, Request, Response};
+pub use tcp::{TcpServer, TcpTransport};
+pub use transport::{
+    InProcTransport, Message, NodeEndpoint, Request, Response, Transport,
+};

@@ -1,0 +1,583 @@
+//! Real-socket transport: [`TcpServer`] bridges incoming framed requests
+//! onto a node's worker inbox, [`TcpTransport`] implements [`Transport`]
+//! over per-peer pooled connections.
+//!
+//! # Server side
+//!
+//! `TcpServer::bind` returns the listener handle plus a [`NodeEndpoint`]
+//! whose inbox is fed by the accept loop: one bridge thread per accepted
+//! connection reads `[len][body]` frames ([`crate::net::wire`]), decodes
+//! the request, and forwards it as a [`Message`] whose [`ReplySink`]
+//! encodes the response with the request's correlation id and writes it
+//! back on the same connection.  The node worker (`FanStoreNode::spawn`)
+//! is byte-for-byte the same code that serves the in-proc transport.
+//!
+//! # Client side
+//!
+//! Each peer gets a lazily-grown pool of connections (`pool_size` cap,
+//! round-robin).  A connection pairs a write half (mutex-serialized frame
+//! writes, payload `Arc<[u8]>`s written without intermediate copies) with
+//! one demux reader thread that matches response frames to pending
+//! requests by correlation id and completes their [`PendingReply`]
+//! channels.  Requests on one connection therefore pipeline: many callers
+//! can have round trips in flight concurrently, replies resolve in
+//! whatever order the worker produces them.
+//!
+//! # Shutdown ordering
+//!
+//! `shutdown_all` first sends a `Shutdown` request to every reachable
+//! peer (the worker replies `Ok` and exits), then closes every pooled
+//! socket.  Closing fails outstanding requests (their reply channels are
+//! dropped, so `wait()` returns a transport error rather than hanging),
+//! unblocks the demux readers (EOF), and the server-side bridge threads
+//! exit when their socket closes or the worker inbox is gone.  The accept
+//! loop itself stops when the [`TcpServer`] is dropped.
+
+use std::collections::HashMap;
+use std::io::Write;
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{FanError, Result};
+use crate::net::transport::{
+    Message, NodeEndpoint, PendingReply, ReplySink, Request, Response, Transport,
+};
+use crate::net::wire;
+
+/// Connections kept per peer before round-robining over them.
+pub const DEFAULT_POOL_SIZE: usize = 2;
+
+// ---------------------------------------------------------------------------
+// Server side
+// ---------------------------------------------------------------------------
+
+/// Listener half of a TCP node: accepts connections and bridges their
+/// framed requests onto the worker inbox returned from [`TcpServer::bind`].
+/// Dropping it stops the accept loop (existing connections drain on their
+/// own when the sockets or the worker go away).
+pub struct TcpServer {
+    node_id: u32,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_thread: Option<JoinHandle<()>>,
+}
+
+impl TcpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
+    /// and return the server handle plus the node's worker endpoint.
+    pub fn bind(node_id: u32, addr: impl ToSocketAddrs) -> Result<(TcpServer, NodeEndpoint)> {
+        let listener = TcpListener::bind(addr)
+            .map_err(|e| FanError::Transport(format!("node {node_id} bind: {e}")))?;
+        let local_addr = listener
+            .local_addr()
+            .map_err(|e| FanError::Transport(format!("node {node_id} local_addr: {e}")))?;
+        let (inbox_tx, inbox_rx) = channel::<Message>();
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop_flag = Arc::clone(&stop);
+        let accept_thread = std::thread::Builder::new()
+            .name(format!("fanstore-tcp-accept-{node_id}"))
+            .spawn(move || {
+                for stream in listener.incoming() {
+                    if stop_flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let stream = match stream {
+                        Ok(s) => s,
+                        Err(_) => {
+                            // persistent accept errors (fd exhaustion)
+                            // return immediately — back off instead of
+                            // hot-spinning the accept thread
+                            std::thread::sleep(std::time::Duration::from_millis(10));
+                            continue;
+                        }
+                    };
+                    let tx = inbox_tx.clone();
+                    let _ = std::thread::Builder::new()
+                        .name(format!("fanstore-tcp-bridge-{node_id}"))
+                        .spawn(move || bridge_connection(stream, tx));
+                }
+            })
+            .map_err(|e| FanError::Transport(format!("spawn accept loop: {e}")))?;
+        Ok((
+            TcpServer {
+                node_id,
+                local_addr,
+                stop,
+                accept_thread: Some(accept_thread),
+            },
+            NodeEndpoint {
+                node_id,
+                inbox: inbox_rx,
+            },
+        ))
+    }
+
+    pub fn node_id(&self) -> u32 {
+        self.node_id
+    }
+
+    /// The bound address (resolves the ephemeral port of `"...:0"` binds).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+}
+
+impl Drop for TcpServer {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // wake the accept loop so it observes the flag
+        let _ = TcpStream::connect(self.local_addr);
+        if let Some(h) = self.accept_thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Per-connection bridge: framed requests in, correlated responses out.
+fn bridge_connection(stream: TcpStream, inbox: Sender<Message>) {
+    let _ = stream.set_nodelay(true);
+    let mut read_half = match stream.try_clone() {
+        Ok(s) => s,
+        Err(_) => return,
+    };
+    let write_half = Arc::new(Mutex::new(stream));
+    loop {
+        // EOF / torn frame / corrupt body all close this connection; the
+        // peer's pending requests fail over on its side
+        let body = match wire::read_frame(&mut read_half) {
+            Ok(b) => b,
+            Err(_) => break,
+        };
+        let Ok((corr, from, req)) = wire::decode_request(&body) else {
+            break;
+        };
+        let w = Arc::clone(&write_half);
+        let reply = ReplySink::from_fn(move |resp| {
+            let frame = wire::encode_response(corr, &resp);
+            if let Ok(mut stream) = w.lock() {
+                if frame.write_to(&mut *stream).is_err() {
+                    // a reply that cannot be delivered (socket error, frame
+                    // over MAX_FRAME) must not leave the client's pending
+                    // request hanging: kill the connection so its demux
+                    // reader fails every outstanding wait with an error
+                    let _ = stream.shutdown(Shutdown::Both);
+                }
+            }
+        });
+        if inbox.send(Message { from, req, reply }).is_err() {
+            // worker is gone (already shut down): close the connection so
+            // the client sees EOF instead of a silent hang
+            break;
+        }
+    }
+    if let Ok(stream) = write_half.lock() {
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Client side
+// ---------------------------------------------------------------------------
+
+/// One pooled connection: mutex-serialized writes + a demux reader thread
+/// resolving pending requests by correlation id.
+struct TcpConn {
+    writer: Mutex<TcpStream>,
+    /// corr → reply channel.  `None` once the demux reader exited (every
+    /// still-pending sender is dropped then, failing its `wait()`).
+    pending: Mutex<Option<HashMap<u64, Sender<Response>>>>,
+    next_corr: AtomicU64,
+    dead: AtomicBool,
+}
+
+impl TcpConn {
+    fn open(to: u32, addr: SocketAddr) -> Result<Arc<TcpConn>> {
+        let stream = TcpStream::connect(addr)
+            .map_err(|e| FanError::Transport(format!("connect node {to} at {addr}: {e}")))?;
+        let _ = stream.set_nodelay(true);
+        let read_half = stream
+            .try_clone()
+            .map_err(|e| FanError::Transport(format!("clone stream to node {to}: {e}")))?;
+        let conn = Arc::new(TcpConn {
+            writer: Mutex::new(stream),
+            pending: Mutex::new(Some(HashMap::new())),
+            next_corr: AtomicU64::new(1),
+            dead: AtomicBool::new(false),
+        });
+        let demux = Arc::clone(&conn);
+        std::thread::Builder::new()
+            .name(format!("fanstore-tcp-demux-{to}"))
+            .spawn(move || demux.reader_loop(read_half))
+            .map_err(|e| FanError::Transport(format!("spawn demux reader: {e}")))?;
+        Ok(conn)
+    }
+
+    /// Demux loop: route each response frame to the request that owns its
+    /// correlation id.  On connection teardown, fail everything pending.
+    fn reader_loop(&self, mut stream: TcpStream) {
+        loop {
+            let body = match wire::read_frame(&mut stream) {
+                Ok(b) => b,
+                Err(_) => break,
+            };
+            let Ok((corr, resp)) = wire::decode_response(&body) else {
+                break;
+            };
+            let tx = self
+                .pending
+                .lock()
+                .map(|mut p| p.as_mut().and_then(|m| m.remove(&corr)))
+                .unwrap_or(None);
+            if let Some(tx) = tx {
+                // receiver may have been dropped (abandoned PendingReply)
+                let _ = tx.send(resp);
+            }
+        }
+        self.dead.store(true, Ordering::SeqCst);
+        // dropping the map drops every pending sender: their PendingReply
+        // channels error out instead of hanging forever
+        if let Ok(mut p) = self.pending.lock() {
+            *p = None;
+        }
+        let _ = stream.shutdown(Shutdown::Both);
+    }
+
+    /// Register a pending slot, then write the framed request.
+    fn request(&self, from: u32, to: u32, req: &Request) -> Result<PendingReply> {
+        if self.dead.load(Ordering::SeqCst) {
+            return Err(FanError::Transport(format!("node {to} connection closed")));
+        }
+        let corr = self.next_corr.fetch_add(1, Ordering::Relaxed);
+        let (tx, rx) = channel();
+        {
+            let mut p = self.pending.lock().unwrap();
+            match p.as_mut() {
+                Some(m) => {
+                    m.insert(corr, tx);
+                }
+                None => {
+                    return Err(FanError::Transport(format!("node {to} connection closed")))
+                }
+            }
+        }
+        let frame = wire::encode_request(corr, from, req);
+        let write_result = {
+            let mut w = self.writer.lock().unwrap();
+            let r = frame.write_to(&mut *w);
+            if r.is_ok() {
+                w.flush().ok();
+            }
+            r
+        };
+        if let Err(e) = write_result {
+            if let Ok(mut p) = self.pending.lock() {
+                if let Some(m) = p.as_mut() {
+                    m.remove(&corr);
+                }
+            }
+            self.dead.store(true, Ordering::SeqCst);
+            return Err(FanError::Transport(format!("send to node {to}: {e}")));
+        }
+        Ok(PendingReply::from_channel(to, rx))
+    }
+
+    fn close(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.shutdown(Shutdown::Both);
+        }
+    }
+}
+
+struct Peer {
+    addr: SocketAddr,
+    pool: Mutex<Vec<Arc<TcpConn>>>,
+    rr: AtomicUsize,
+}
+
+impl Peer {
+    /// Round-robin over live pooled connections, growing the pool up to
+    /// `pool_size` and replacing dead connections on the way.
+    fn conn(&self, to: u32, pool_size: usize) -> Result<Arc<TcpConn>> {
+        {
+            let mut pool = self.pool.lock().unwrap();
+            pool.retain(|c| !c.dead.load(Ordering::SeqCst));
+            if pool.len() >= pool_size {
+                let i = self.rr.fetch_add(1, Ordering::Relaxed) % pool.len();
+                return Ok(Arc::clone(&pool[i]));
+            }
+        }
+        // dial OUTSIDE the pool lock: a blackholed peer's SYN timeout must
+        // not stall senders that could round-robin onto a healthy pooled
+        // connection (racing dials may transiently overshoot `pool_size`
+        // by a connection or two — harmless, they drain by round-robin)
+        let conn = TcpConn::open(to, self.addr)?;
+        self.pool.lock().unwrap().push(Arc::clone(&conn));
+        Ok(conn)
+    }
+
+    fn close_all(&self) {
+        let conns: Vec<Arc<TcpConn>> = {
+            let mut pool = self.pool.lock().unwrap();
+            pool.drain(..).collect()
+        };
+        for c in conns {
+            c.close();
+        }
+    }
+}
+
+/// [`Transport`] over real sockets: peer `i` of the address list is node
+/// `i`.  Connections are opened lazily, pooled per peer, and demuxed by
+/// correlation id, so one transport value serves any number of concurrent
+/// clients (exactly like the in-proc sender bundle).
+pub struct TcpTransport {
+    peers: Vec<Peer>,
+    pool_size: usize,
+}
+
+impl TcpTransport {
+    /// Address the cluster: `addrs[i]` is node `i`'s listener.  No sockets
+    /// are opened until the first send to each peer.
+    pub fn connect(addrs: &[SocketAddr]) -> Result<TcpTransport> {
+        Self::connect_pooled(addrs, DEFAULT_POOL_SIZE)
+    }
+
+    /// [`TcpTransport::connect`] with an explicit per-peer pool size.
+    pub fn connect_pooled(addrs: &[SocketAddr], pool_size: usize) -> Result<TcpTransport> {
+        if addrs.is_empty() {
+            return Err(FanError::Transport("empty peer address list".into()));
+        }
+        Ok(TcpTransport {
+            peers: addrs
+                .iter()
+                .map(|&addr| Peer {
+                    addr,
+                    pool: Mutex::new(Vec::new()),
+                    rr: AtomicUsize::new(0),
+                })
+                .collect(),
+            pool_size: pool_size.max(1),
+        })
+    }
+
+    fn peer(&self, to: u32) -> Result<&Peer> {
+        self.peers
+            .get(to as usize)
+            .ok_or_else(|| FanError::Transport(format!("no such node {to}")))
+    }
+
+    /// Close every pooled connection (failing outstanding requests and
+    /// releasing the demux readers).  Idempotent.
+    pub fn disconnect(&self) {
+        for peer in &self.peers {
+            peer.close_all();
+        }
+    }
+}
+
+impl Transport for TcpTransport {
+    fn node_count(&self) -> u32 {
+        self.peers.len() as u32
+    }
+
+    fn send(&self, from: u32, to: u32, req: Request) -> Result<PendingReply> {
+        let peer = self.peer(to)?;
+        // one retry through a fresh connection: the pooled socket may have
+        // died since its last use (peer restart, idle teardown)
+        match peer.conn(to, self.pool_size)?.request(from, to, &req) {
+            Ok(pending) => Ok(pending),
+            Err(_) => peer.conn(to, self.pool_size)?.request(from, to, &req),
+        }
+    }
+
+    fn shutdown_all(&self) {
+        // ask every worker to exit (reply ignored), then drop the sockets
+        for to in 0..self.peers.len() as u32 {
+            let _ = self.send(u32::MAX, to, Request::Shutdown);
+        }
+        self.disconnect();
+    }
+}
+
+impl Drop for TcpTransport {
+    fn drop(&mut self) {
+        self.disconnect();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::FileFetch;
+    use std::thread;
+
+    /// Echo worker identical in shape to the in-proc transport tests.
+    fn spawn_echo(ep: NodeEndpoint) -> thread::JoinHandle<u32> {
+        thread::spawn(move || {
+            let mut served = 0;
+            while let Ok(msg) = ep.inbox.recv() {
+                match msg.req {
+                    Request::Shutdown => {
+                        msg.reply.send(Response::Ok);
+                        break;
+                    }
+                    Request::ReadFile { path } => {
+                        served += 1;
+                        msg.reply.send(Response::FileData {
+                            stored: path.into_bytes().into(),
+                            raw_len: 0,
+                            compressed: false,
+                        });
+                    }
+                    Request::ReadFiles { paths } => {
+                        served += 1;
+                        let files = paths
+                            .into_iter()
+                            .map(|p| {
+                                let fetch = if p.contains("missing") {
+                                    FileFetch::NotFound
+                                } else {
+                                    FileFetch::Data {
+                                        stored: p.clone().into_bytes().into(),
+                                        raw_len: 0,
+                                        compressed: false,
+                                    }
+                                };
+                                (p, fetch)
+                            })
+                            .collect();
+                        msg.reply.send(Response::FilesData(files));
+                    }
+                    _ => {
+                        msg.reply.send(Response::Ok);
+                    }
+                }
+            }
+            served
+        })
+    }
+
+    fn loopback(n: u32) -> (TcpTransport, Vec<TcpServer>, Vec<thread::JoinHandle<u32>>) {
+        let mut servers = Vec::new();
+        let mut addrs = Vec::new();
+        let mut workers = Vec::new();
+        for id in 0..n {
+            let (srv, ep) = TcpServer::bind(id, "127.0.0.1:0").unwrap();
+            addrs.push(srv.local_addr());
+            servers.push(srv);
+            workers.push(spawn_echo(ep));
+        }
+        (TcpTransport::connect(&addrs).unwrap(), servers, workers)
+    }
+
+    #[test]
+    fn tcp_roundtrip_between_nodes() {
+        let (tp, servers, workers) = loopback(3);
+        let resp = tp
+            .call(0, 2, Request::ReadFile { path: "/x/y".into() })
+            .unwrap();
+        let (data, _, _) = resp.into_file_data().unwrap();
+        assert_eq!(&data[..], &b"/x/y"[..]);
+        tp.shutdown_all();
+        let served: u32 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 1);
+        drop(servers);
+    }
+
+    #[test]
+    fn tcp_batched_roundtrip_and_overlapped_sends() {
+        let (tp, servers, workers) = loopback(4);
+        // batched: one request, per-file outcomes in order
+        let files = tp
+            .call(
+                0,
+                1,
+                Request::ReadFiles {
+                    paths: vec!["/a".into(), "/missing/x".into(), "/b".into()],
+                },
+            )
+            .unwrap()
+            .into_files_data()
+            .unwrap();
+        assert_eq!(files.len(), 3);
+        assert!(files[0].1.is_data());
+        assert!(matches!(files[1].1, FileFetch::NotFound));
+        // overlapped gather across three peers
+        let pending: Vec<PendingReply> = (1..4)
+            .map(|to| {
+                tp.send(0, to, Request::ReadFile { path: format!("/p{to}") })
+                    .unwrap()
+            })
+            .collect();
+        for (i, p) in pending.into_iter().enumerate() {
+            let (data, _, _) = p.wait().unwrap().into_file_data().unwrap();
+            assert_eq!(&data[..], format!("/p{}", i + 1).as_bytes());
+        }
+        tp.shutdown_all();
+        let served: u32 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 4);
+        drop(servers);
+    }
+
+    #[test]
+    fn tcp_many_concurrent_callers_pipeline_on_pooled_connections() {
+        let (tp, servers, workers) = loopback(2);
+        let tp = Arc::new(tp);
+        let mut callers = Vec::new();
+        for i in 0..6u32 {
+            let tp = Arc::clone(&tp);
+            callers.push(thread::spawn(move || {
+                for j in 0..40u32 {
+                    let r = tp
+                        .call(0, 1, Request::ReadFile {
+                            path: format!("/f/{i}_{j}"),
+                        })
+                        .unwrap();
+                    let (d, _, _) = r.into_file_data().unwrap();
+                    assert_eq!(&d[..], format!("/f/{i}_{j}").as_bytes());
+                }
+            }));
+        }
+        for c in callers {
+            c.join().unwrap();
+        }
+        tp.shutdown_all();
+        let served: u32 = workers.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 240);
+        drop(servers);
+    }
+
+    #[test]
+    fn tcp_dead_peer_errors_instead_of_hanging() {
+        // no listener at this address: send must fail, not hang
+        let dead: SocketAddr = "127.0.0.1:1".parse().unwrap();
+        let tp = TcpTransport::connect(&[dead]).unwrap();
+        let err = tp
+            .call(0, 0, Request::ReadFile { path: "/x".into() })
+            .unwrap_err();
+        assert!(matches!(err, FanError::Transport(_)), "{err}");
+        // a worker that dies mid-conversation fails pending requests
+        let (srv, ep) = TcpServer::bind(0, "127.0.0.1:0").unwrap();
+        let addr = srv.local_addr();
+        drop(ep); // worker never runs: inbox receiver is gone
+        let tp = TcpTransport::connect(&[addr]).unwrap();
+        let r = tp.call(0, 0, Request::ReadFile { path: "/y".into() });
+        assert!(r.is_err(), "dropped worker must surface an error");
+        drop(srv);
+    }
+
+    #[test]
+    fn tcp_unknown_node_is_error() {
+        let (tp, servers, workers) = loopback(1);
+        assert!(tp.call(0, 9, Request::Shutdown).is_err());
+        tp.shutdown_all();
+        for w in workers {
+            w.join().unwrap();
+        }
+        drop(servers);
+    }
+}

@@ -1,20 +1,26 @@
-//! Real inter-node message passing for the in-process cluster.
+//! Inter-node message passing: the [`Transport`] trait and its in-process
+//! implementation.
 //!
 //! Stands in for the paper's MPI point-to-point: each node runs a worker
 //! (service) thread draining a request queue; remote file access is a
 //! request/response round trip carrying the *stored* bytes (compressed data
 //! travels compressed — decompression happens on the reader, §5.4).
 //!
-//! `std::sync::mpsc` replaces `MPI_Send/Recv`; the protocol, message sizes
-//! and who-talks-to-whom are identical to the paper's design, which is what
-//! the experiments depend on (DESIGN.md substitution table).
+//! Every consumer (VFS, prefetcher, coordinator) holds an
+//! `Arc<dyn Transport>`, so the same cluster logic runs over
+//! [`InProcTransport`] (std::sync::mpsc replacing `MPI_Send/Recv`) or
+//! [`crate::net::tcp::TcpTransport`] (real sockets, length-prefixed frames
+//! from [`crate::net::wire`]) without change.  The protocol, message sizes
+//! and who-talks-to-whom are identical either way, which is what the
+//! experiments depend on (DESIGN.md substitution table).
 //!
 //! Payloads travel as `Arc<[u8]>`: the worker serves a shared view of its
-//! store/output buffer and the reply channel moves the Arc, so a remote
-//! read never copies the stored bytes end to end.  [`InProcTransport::send`]
-//! exposes the asynchronous half of a round trip so gather patterns
-//! (e.g. `readdir` collecting `ListOutputs` from every node) can issue all
-//! requests first and overlap the waits.
+//! store/output buffer and the reply path moves the Arc (in-proc) or
+//! serializes straight from it (TCP), so a remote read never copies the
+//! stored bytes on the serving side.  [`Transport::send`] exposes the
+//! asynchronous half of a round trip so gather patterns (e.g. `readdir`
+//! collecting `ListOutputs` from every node) can issue all requests first
+//! and overlap the waits.
 
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::Arc;
@@ -34,6 +40,11 @@ pub enum Request {
     ReadFiles { paths: Vec<String> },
     /// Stat a path this node is authoritative for (output files).
     StatOutput { path: String },
+    /// Stat a whole batch of output paths homed on this node in one round
+    /// trip (multi-shard checkpoint resume).  The reply carries one
+    /// [`MetaFetch`] per requested path, request order — `ReadFiles`'
+    /// per-path-outcome shape applied to metadata.
+    StatOutputs { paths: Vec<String> },
     /// Forward a finished output file's metadata to its home node
     /// (visible-until-finish commit, §5.4).
     CommitOutput { path: String, meta: FileMeta },
@@ -85,6 +96,19 @@ impl FileFetch {
     }
 }
 
+/// Per-path outcome inside a batched [`Response::Metas`] reply (the
+/// metadata analogue of [`FileFetch`]).
+#[derive(Clone, Debug)]
+pub enum MetaFetch {
+    Meta {
+        stat: FileStat,
+        origin: u32,
+        generation: u64,
+    },
+    /// No output with that path is homed on the serving node.
+    NotFound,
+}
+
 /// Worker replies.
 #[derive(Debug)]
 pub enum Response {
@@ -96,49 +120,116 @@ pub enum Response {
     /// Batched read reply: one entry per requested path, request order.
     FilesData(Vec<(String, FileFetch)>),
     /// Output-file metadata: the stat plus the node that buffered the data
-    /// (the originating node, §5.4 — reads must go there, not to the home).
+    /// (the originating node, §5.4 — reads must go there, not to the home)
+    /// plus the commit generation stamped by the home node.
     Meta {
         stat: FileStat,
         origin: u32,
+        generation: u64,
     },
+    /// Batched stat reply: one entry per requested path, request order.
+    Metas(Vec<(String, MetaFetch)>),
     Names(Vec<String>),
     Ok,
     Err(String),
 }
 
-/// An addressed request with its reply channel.
+/// Where a worker's reply goes: an in-proc channel or a framed write back
+/// onto the TCP connection the request came from.  Transport-agnostic so
+/// the node worker never knows which fabric delivered the request.
+pub struct ReplySink(Box<dyn FnOnce(Response) + Send>);
+
+impl ReplySink {
+    /// Reply into an mpsc channel (the in-proc path).
+    pub fn channel(tx: Sender<Response>) -> ReplySink {
+        ReplySink(Box::new(move |resp| {
+            let _ = tx.send(resp);
+        }))
+    }
+
+    /// Reply through an arbitrary delivery closure (the TCP path encodes
+    /// the response with its correlation id and writes the frame).
+    pub fn from_fn<F: FnOnce(Response) + Send + 'static>(f: F) -> ReplySink {
+        ReplySink(Box::new(f))
+    }
+
+    /// Swallow the reply (fire-and-forget requests like broadcast shutdown).
+    pub fn discard() -> ReplySink {
+        ReplySink(Box::new(|_| {}))
+    }
+
+    pub fn send(self, resp: Response) {
+        (self.0)(resp)
+    }
+}
+
+impl std::fmt::Debug for ReplySink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str("ReplySink")
+    }
+}
+
+/// An addressed request with its reply sink.
 pub struct Message {
     pub from: u32,
     pub req: Request,
-    pub reply: Sender<Response>,
+    pub reply: ReplySink,
 }
 
-/// Sender half bundle: lets any node address any other node.
-#[derive(Clone)]
-pub struct InProcTransport {
-    peers: Vec<Sender<Message>>,
-}
-
-/// The per-node receive side handed to its worker thread.
+/// The per-node receive side handed to its worker thread.  Both transports
+/// feed the same inbox, so `FanStoreNode::spawn` is fabric-agnostic.
 pub struct NodeEndpoint {
     pub node_id: u32,
     pub inbox: Receiver<Message>,
 }
 
 /// An in-flight request: the reply side of a round trip started with
-/// [`InProcTransport::send`].  Dropping it abandons the reply.
+/// [`Transport::send`].  Dropping it abandons the reply.
 pub struct PendingReply {
     to: u32,
     rx: Receiver<Response>,
 }
 
 impl PendingReply {
+    /// Wrap the receive half of a reply channel (used by transports; the
+    /// TCP demux thread feeds the channel when the correlated frame lands).
+    pub fn from_channel(to: u32, rx: Receiver<Response>) -> PendingReply {
+        PendingReply { to, rx }
+    }
+
     /// Block until the worker replies.
     pub fn wait(self) -> Result<Response> {
         self.rx
             .recv()
             .map_err(|_| FanError::Transport(format!("node {} dropped the reply", self.to)))
     }
+}
+
+/// The fabric abstraction every consumer programs against: synchronous
+/// round trips (`call`) and the asynchronous `send`/[`PendingReply`] split
+/// for overlapped gathers.  Implementations: [`InProcTransport`] (mpsc) and
+/// [`crate::net::tcp::TcpTransport`] (real sockets).
+pub trait Transport: Send + Sync {
+    /// How many nodes this transport can address.
+    fn node_count(&self) -> u32;
+
+    /// Enqueue a request at `to` and return the pending reply without
+    /// blocking — the building block for overlapped gathers.
+    fn send(&self, from: u32, to: u32, req: Request) -> Result<PendingReply>;
+
+    /// Fire-and-forget shutdown to every node.
+    fn shutdown_all(&self);
+
+    /// Round-trip request to `to`; blocks until the worker replies.
+    fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
+        self.send(from, to, req)?.wait()
+    }
+}
+
+/// Sender half bundle: lets any node address any other node in process.
+#[derive(Clone)]
+pub struct InProcTransport {
+    peers: Vec<Sender<Message>>,
 }
 
 impl InProcTransport {
@@ -159,8 +250,7 @@ impl InProcTransport {
         self.peers.len() as u32
     }
 
-    /// Enqueue a request at `to` and return the pending reply without
-    /// blocking — the building block for overlapped gathers.
+    /// See [`Transport::send`].
     pub fn send(&self, from: u32, to: u32, req: Request) -> Result<PendingReply> {
         let peer = self
             .peers
@@ -170,27 +260,40 @@ impl InProcTransport {
         peer.send(Message {
             from,
             req,
-            reply: reply_tx,
+            reply: ReplySink::channel(reply_tx),
         })
         .map_err(|_| FanError::Transport(format!("node {to} is down")))?;
         Ok(PendingReply { to, rx: reply_rx })
     }
 
-    /// Round-trip request to `to`; blocks until the worker replies.
+    /// See [`Transport::call`].
     pub fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
         self.send(from, to, req)?.wait()
     }
 
-    /// Fire-and-forget shutdown to every node.
+    /// See [`Transport::shutdown_all`].
     pub fn shutdown_all(&self) {
         for peer in self.peers.iter() {
-            let (reply_tx, _reply_rx) = channel();
             let _ = peer.send(Message {
                 from: u32::MAX,
                 req: Request::Shutdown,
-                reply: reply_tx,
+                reply: ReplySink::discard(),
             });
         }
+    }
+}
+
+impl Transport for InProcTransport {
+    fn node_count(&self) -> u32 {
+        InProcTransport::node_count(self)
+    }
+
+    fn send(&self, from: u32, to: u32, req: Request) -> Result<PendingReply> {
+        InProcTransport::send(self, from, to, req)
+    }
+
+    fn shutdown_all(&self) {
+        InProcTransport::shutdown_all(self)
     }
 }
 
@@ -220,6 +323,17 @@ impl Response {
             ))),
         }
     }
+
+    /// Unwrap a `Metas` (batched stat) response.
+    pub fn into_metas(self) -> Result<Vec<(String, MetaFetch)>> {
+        match self {
+            Response::Metas(metas) => Ok(metas),
+            Response::Err(e) => Err(FanError::Transport(e)),
+            other => Err(FanError::Transport(format!(
+                "expected Metas, got {other:?}"
+            ))),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -236,7 +350,7 @@ mod tests {
                     Request::Shutdown => break,
                     Request::ReadFile { path } => {
                         served += 1;
-                        let _ = msg.reply.send(Response::FileData {
+                        msg.reply.send(Response::FileData {
                             stored: path.into_bytes().into(),
                             raw_len: 0,
                             compressed: false,
@@ -259,10 +373,10 @@ mod tests {
                                 (p, fetch)
                             })
                             .collect();
-                        let _ = msg.reply.send(Response::FilesData(files));
+                        msg.reply.send(Response::FilesData(files));
                     }
                     _ => {
-                        let _ = msg.reply.send(Response::Ok);
+                        msg.reply.send(Response::Ok);
                     }
                 }
             }
@@ -373,5 +487,21 @@ mod tests {
         tp.shutdown_all();
         let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
         assert_eq!(served, 400);
+    }
+
+    #[test]
+    fn dyn_transport_dispatch_matches_inherent() {
+        let (tp, eps) = InProcTransport::fully_connected(2);
+        let handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        let dynt: Arc<dyn Transport> = Arc::new(tp);
+        assert_eq!(dynt.node_count(), 2);
+        let resp = dynt
+            .call(0, 1, Request::ReadFile { path: "/dyn".into() })
+            .unwrap();
+        let (data, _, _) = resp.into_file_data().unwrap();
+        assert_eq!(&data[..], b"/dyn");
+        dynt.shutdown_all();
+        let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        assert_eq!(served, 1);
     }
 }

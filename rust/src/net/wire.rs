@@ -1,0 +1,931 @@
+//! Wire format for the transport protocol: length-prefixed frames with an
+//! explicit varint/LE encoding for every [`Request`]/[`Response`] variant.
+//!
+//! No external crates — the codec is written out by hand against std.
+//!
+//! # Frame layout
+//!
+//! ```text
+//! [u32 LE body length][body]
+//! request  body: [u8 kind=1][u64 LE correlation id][u32 LE from][u8 tag][fields]
+//! response body: [u8 kind=2][u64 LE correlation id][u8 tag][fields]
+//! ```
+//!
+//! Strings and byte payloads are varint(LEB128)-length-prefixed; fixed ids
+//! (`from`, node ids, correlation ids) are little-endian; file stats ride as
+//! their existing 144-byte partition image ([`FileStat::encode`]).
+//!
+//! The encoder produces a [`Frame`]: a chunk list where owned header bytes
+//! and shared `Arc<[u8]>` payloads interleave.  [`Frame::write_to`] writes
+//! the chunks in order, so serving a read never copies the stored bytes
+//! into an intermediate buffer on the send side — the zero-copy data plane
+//! of DESIGN.md extends across the socket boundary.  The receive side reads
+//! one bounded body and parses it; payload bytes are materialized once into
+//! fresh `Arc<[u8]>`s (that copy *is* the network receive).
+
+use std::io::{Read, Write};
+use std::sync::Arc;
+
+use crate::error::{FanError, Result};
+use crate::metadata::record::{FileMeta, FileStat, STAT_BYTES};
+use crate::net::transport::{FileFetch, MetaFetch, Request, Response};
+
+/// Sanity cap on one frame body (a `ReadFiles` reply carrying a whole
+/// mini-batch of multi-MB files fits with room to spare; a corrupt length
+/// prefix does not get to allocate half the address space).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+const KIND_REQUEST: u8 = 1;
+const KIND_RESPONSE: u8 = 2;
+
+const REQ_READ_FILE: u8 = 0;
+const REQ_READ_FILES: u8 = 1;
+const REQ_STAT_OUTPUT: u8 = 2;
+const REQ_STAT_OUTPUTS: u8 = 3;
+const REQ_COMMIT_OUTPUT: u8 = 4;
+const REQ_LIST_OUTPUTS: u8 = 5;
+const REQ_UNLINK_OUTPUT: u8 = 6;
+const REQ_DROP_OUTPUT: u8 = 7;
+const REQ_SHUTDOWN: u8 = 8;
+
+const RESP_FILE_DATA: u8 = 0;
+const RESP_FILES_DATA: u8 = 1;
+const RESP_META: u8 = 2;
+const RESP_METAS: u8 = 3;
+const RESP_NAMES: u8 = 4;
+const RESP_OK: u8 = 5;
+const RESP_ERR: u8 = 6;
+
+const FETCH_DATA: u8 = 0;
+const FETCH_NOT_FOUND: u8 = 1;
+const FETCH_FAULT: u8 = 2;
+
+const META_FOUND: u8 = 0;
+const META_NOT_FOUND: u8 = 1;
+
+enum Chunk {
+    Owned(Vec<u8>),
+    Shared(Arc<[u8]>),
+}
+
+/// One encoded frame: interleaved owned header bytes and shared payloads.
+pub struct Frame {
+    chunks: Vec<Chunk>,
+}
+
+impl Frame {
+    fn new() -> Frame {
+        Frame {
+            chunks: vec![Chunk::Owned(Vec::with_capacity(64))],
+        }
+    }
+
+    fn tail(&mut self) -> &mut Vec<u8> {
+        if !matches!(self.chunks.last(), Some(Chunk::Owned(_))) {
+            self.chunks.push(Chunk::Owned(Vec::new()));
+        }
+        match self.chunks.last_mut() {
+            Some(Chunk::Owned(v)) => v,
+            _ => unreachable!("tail chunk just ensured owned"),
+        }
+    }
+
+    fn put_u8(&mut self, v: u8) {
+        self.tail().push(v);
+    }
+
+    fn put_u32(&mut self, v: u32) {
+        self.tail().extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_u64(&mut self, v: u64) {
+        self.tail().extend_from_slice(&v.to_le_bytes());
+    }
+
+    fn put_varint(&mut self, mut v: u64) {
+        let t = self.tail();
+        loop {
+            let b = (v & 0x7F) as u8;
+            v >>= 7;
+            if v == 0 {
+                t.push(b);
+                break;
+            }
+            t.push(b | 0x80);
+        }
+    }
+
+    fn put_slice(&mut self, s: &[u8]) {
+        self.tail().extend_from_slice(s);
+    }
+
+    fn put_str(&mut self, s: &str) {
+        self.put_varint(s.len() as u64);
+        self.put_slice(s.as_bytes());
+    }
+
+    /// Append a payload without copying it: the Arc rides in the chunk list
+    /// and is written straight to the socket.
+    fn put_shared(&mut self, payload: Arc<[u8]>) {
+        self.put_varint(payload.len() as u64);
+        self.chunks.push(Chunk::Shared(payload));
+    }
+
+    /// Total body length (without the 4-byte frame prefix).
+    pub fn body_len(&self) -> usize {
+        self.chunks
+            .iter()
+            .map(|c| match c {
+                Chunk::Owned(v) => v.len(),
+                Chunk::Shared(a) => a.len(),
+            })
+            .sum()
+    }
+
+    /// Write `[len][body]` to `w`, chunk by chunk.
+    pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
+        let len = self.body_len();
+        if len > MAX_FRAME as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame body {len} exceeds MAX_FRAME"),
+            ));
+        }
+        w.write_all(&(len as u32).to_le_bytes())?;
+        for c in &self.chunks {
+            match c {
+                Chunk::Owned(v) => w.write_all(v)?,
+                Chunk::Shared(a) => w.write_all(a)?,
+            }
+        }
+        Ok(())
+    }
+
+    /// Flatten the body into one buffer (tests / diagnostics).
+    pub fn to_body_bytes(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.body_len());
+        for c in &self.chunks {
+            match c {
+                Chunk::Owned(v) => out.extend_from_slice(v),
+                Chunk::Shared(a) => out.extend_from_slice(a),
+            }
+        }
+        out
+    }
+}
+
+/// Read one `[len][body]` frame; returns the body.
+pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
+    let mut len = [0u8; 4];
+    r.read_exact(&mut len)
+        .map_err(|e| FanError::Transport(format!("frame read: {e}")))?;
+    let len = u32::from_le_bytes(len);
+    if len > MAX_FRAME {
+        return Err(FanError::Format(format!(
+            "frame length {len} exceeds MAX_FRAME"
+        )));
+    }
+    let mut body = vec![0u8; len as usize];
+    r.read_exact(&mut body)
+        .map_err(|e| FanError::Transport(format!("frame body read: {e}")))?;
+    Ok(body)
+}
+
+/// Bounds-checked cursor over one frame body.
+struct WireReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> WireReader<'a> {
+    fn new(buf: &'a [u8]) -> WireReader<'a> {
+        WireReader { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if n > self.remaining() {
+            return Err(FanError::Format(format!(
+                "frame truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn get_varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let b = self.get_u8()?;
+            if shift == 63 && b > 1 {
+                return Err(FanError::Format("varint overflows u64".into()));
+            }
+            v |= u64::from(b & 0x7F) << shift;
+            if b & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+            if shift > 63 {
+                return Err(FanError::Format("varint longer than 10 bytes".into()));
+            }
+        }
+    }
+
+    /// Varint length that must fit in the remaining bytes (corrupt counts
+    /// cannot trigger huge allocations).
+    fn get_len(&mut self) -> Result<usize> {
+        let n = self.get_varint()?;
+        if n > self.remaining() as u64 {
+            return Err(FanError::Format(format!(
+                "length {n} exceeds remaining frame bytes {}",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
+    fn get_str(&mut self) -> Result<String> {
+        let n = self.get_len()?;
+        String::from_utf8(self.take(n)?.to_vec())
+            .map_err(|_| FanError::Format("non-UTF8 string in frame".into()))
+    }
+
+    fn get_bytes(&mut self) -> Result<Arc<[u8]>> {
+        let n = self.get_len()?;
+        Ok(self.take(n)?.into())
+    }
+
+    fn expect_end(&self) -> Result<()> {
+        if self.remaining() != 0 {
+            return Err(FanError::Format(format!(
+                "{} trailing bytes after frame payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+fn put_stat(f: &mut Frame, stat: &FileStat) {
+    f.put_slice(&stat.encode());
+}
+
+fn get_stat(r: &mut WireReader) -> Result<FileStat> {
+    FileStat::decode(r.take(STAT_BYTES)?)
+}
+
+fn put_meta(f: &mut Frame, meta: &FileMeta) {
+    put_stat(f, &meta.stat);
+    f.put_u32(meta.location.node);
+    f.put_u32(meta.location.partition);
+    f.put_varint(meta.location.offset);
+    f.put_varint(meta.location.stored_len);
+    f.put_u8(meta.location.compressed as u8);
+    f.put_varint(meta.generation);
+}
+
+fn get_meta(r: &mut WireReader) -> Result<FileMeta> {
+    let stat = get_stat(r)?;
+    let node = r.get_u32()?;
+    let partition = r.get_u32()?;
+    let offset = r.get_varint()?;
+    let stored_len = r.get_varint()?;
+    let compressed = r.get_u8()? != 0;
+    let generation = r.get_varint()?;
+    Ok(FileMeta {
+        stat,
+        location: crate::metadata::record::FileLocation {
+            node,
+            partition,
+            offset,
+            stored_len,
+            compressed,
+        },
+        generation,
+    })
+}
+
+fn put_fetch(f: &mut Frame, fetch: &FileFetch) {
+    match fetch {
+        FileFetch::Data {
+            stored,
+            raw_len,
+            compressed,
+        } => {
+            f.put_u8(FETCH_DATA);
+            f.put_varint(*raw_len);
+            f.put_u8(*compressed as u8);
+            f.put_shared(Arc::clone(stored));
+        }
+        FileFetch::NotFound => f.put_u8(FETCH_NOT_FOUND),
+        FileFetch::Fault(e) => {
+            f.put_u8(FETCH_FAULT);
+            f.put_str(e);
+        }
+    }
+}
+
+fn get_fetch(r: &mut WireReader) -> Result<FileFetch> {
+    match r.get_u8()? {
+        FETCH_DATA => {
+            let raw_len = r.get_varint()?;
+            let compressed = r.get_u8()? != 0;
+            let stored = r.get_bytes()?;
+            Ok(FileFetch::Data {
+                stored,
+                raw_len,
+                compressed,
+            })
+        }
+        FETCH_NOT_FOUND => Ok(FileFetch::NotFound),
+        FETCH_FAULT => Ok(FileFetch::Fault(r.get_str()?)),
+        t => Err(FanError::Format(format!("unknown FileFetch tag {t}"))),
+    }
+}
+
+/// Encode one addressed request with its correlation id.
+pub fn encode_request(corr: u64, from: u32, req: &Request) -> Frame {
+    let mut f = Frame::new();
+    f.put_u8(KIND_REQUEST);
+    f.put_u64(corr);
+    f.put_u32(from);
+    match req {
+        Request::ReadFile { path } => {
+            f.put_u8(REQ_READ_FILE);
+            f.put_str(path);
+        }
+        Request::ReadFiles { paths } => {
+            f.put_u8(REQ_READ_FILES);
+            f.put_varint(paths.len() as u64);
+            for p in paths {
+                f.put_str(p);
+            }
+        }
+        Request::StatOutput { path } => {
+            f.put_u8(REQ_STAT_OUTPUT);
+            f.put_str(path);
+        }
+        Request::StatOutputs { paths } => {
+            f.put_u8(REQ_STAT_OUTPUTS);
+            f.put_varint(paths.len() as u64);
+            for p in paths {
+                f.put_str(p);
+            }
+        }
+        Request::CommitOutput { path, meta } => {
+            f.put_u8(REQ_COMMIT_OUTPUT);
+            f.put_str(path);
+            put_meta(&mut f, meta);
+        }
+        Request::ListOutputs { dir } => {
+            f.put_u8(REQ_LIST_OUTPUTS);
+            f.put_str(dir);
+        }
+        Request::UnlinkOutput { path } => {
+            f.put_u8(REQ_UNLINK_OUTPUT);
+            f.put_str(path);
+        }
+        Request::DropOutput { path } => {
+            f.put_u8(REQ_DROP_OUTPUT);
+            f.put_str(path);
+        }
+        Request::Shutdown => f.put_u8(REQ_SHUTDOWN),
+    }
+    f
+}
+
+/// Decode one request frame body → (correlation id, from, request).
+pub fn decode_request(body: &[u8]) -> Result<(u64, u32, Request)> {
+    let mut r = WireReader::new(body);
+    if r.get_u8()? != KIND_REQUEST {
+        return Err(FanError::Format("frame is not a request".into()));
+    }
+    let corr = r.get_u64()?;
+    let from = r.get_u32()?;
+    let req = match r.get_u8()? {
+        REQ_READ_FILE => Request::ReadFile { path: r.get_str()? },
+        REQ_READ_FILES => {
+            let n = r.get_len()?;
+            let mut paths = Vec::with_capacity(n);
+            for _ in 0..n {
+                paths.push(r.get_str()?);
+            }
+            Request::ReadFiles { paths }
+        }
+        REQ_STAT_OUTPUT => Request::StatOutput { path: r.get_str()? },
+        REQ_STAT_OUTPUTS => {
+            let n = r.get_len()?;
+            let mut paths = Vec::with_capacity(n);
+            for _ in 0..n {
+                paths.push(r.get_str()?);
+            }
+            Request::StatOutputs { paths }
+        }
+        REQ_COMMIT_OUTPUT => {
+            let path = r.get_str()?;
+            let meta = get_meta(&mut r)?;
+            Request::CommitOutput { path, meta }
+        }
+        REQ_LIST_OUTPUTS => Request::ListOutputs { dir: r.get_str()? },
+        REQ_UNLINK_OUTPUT => Request::UnlinkOutput { path: r.get_str()? },
+        REQ_DROP_OUTPUT => Request::DropOutput { path: r.get_str()? },
+        REQ_SHUTDOWN => Request::Shutdown,
+        t => return Err(FanError::Format(format!("unknown request tag {t}"))),
+    };
+    r.expect_end()?;
+    Ok((corr, from, req))
+}
+
+/// Encode one correlated response.
+pub fn encode_response(corr: u64, resp: &Response) -> Frame {
+    let mut f = Frame::new();
+    f.put_u8(KIND_RESPONSE);
+    f.put_u64(corr);
+    match resp {
+        Response::FileData {
+            stored,
+            raw_len,
+            compressed,
+        } => {
+            f.put_u8(RESP_FILE_DATA);
+            f.put_varint(*raw_len);
+            f.put_u8(*compressed as u8);
+            f.put_shared(Arc::clone(stored));
+        }
+        Response::FilesData(files) => {
+            f.put_u8(RESP_FILES_DATA);
+            f.put_varint(files.len() as u64);
+            for (path, fetch) in files {
+                f.put_str(path);
+                put_fetch(&mut f, fetch);
+            }
+        }
+        Response::Meta {
+            stat,
+            origin,
+            generation,
+        } => {
+            f.put_u8(RESP_META);
+            put_stat(&mut f, stat);
+            f.put_u32(*origin);
+            f.put_varint(*generation);
+        }
+        Response::Metas(metas) => {
+            f.put_u8(RESP_METAS);
+            f.put_varint(metas.len() as u64);
+            for (path, m) in metas {
+                f.put_str(path);
+                match m {
+                    MetaFetch::Meta {
+                        stat,
+                        origin,
+                        generation,
+                    } => {
+                        f.put_u8(META_FOUND);
+                        put_stat(&mut f, stat);
+                        f.put_u32(*origin);
+                        f.put_varint(*generation);
+                    }
+                    MetaFetch::NotFound => f.put_u8(META_NOT_FOUND),
+                }
+            }
+        }
+        Response::Names(names) => {
+            f.put_u8(RESP_NAMES);
+            f.put_varint(names.len() as u64);
+            for n in names {
+                f.put_str(n);
+            }
+        }
+        Response::Ok => f.put_u8(RESP_OK),
+        Response::Err(e) => {
+            f.put_u8(RESP_ERR);
+            f.put_str(e);
+        }
+    }
+    f
+}
+
+/// Decode one response frame body → (correlation id, response).
+pub fn decode_response(body: &[u8]) -> Result<(u64, Response)> {
+    let mut r = WireReader::new(body);
+    if r.get_u8()? != KIND_RESPONSE {
+        return Err(FanError::Format("frame is not a response".into()));
+    }
+    let corr = r.get_u64()?;
+    let resp = match r.get_u8()? {
+        RESP_FILE_DATA => {
+            let raw_len = r.get_varint()?;
+            let compressed = r.get_u8()? != 0;
+            let stored = r.get_bytes()?;
+            Response::FileData {
+                stored,
+                raw_len,
+                compressed,
+            }
+        }
+        RESP_FILES_DATA => {
+            let n = r.get_len()?;
+            let mut files = Vec::with_capacity(n);
+            for _ in 0..n {
+                let path = r.get_str()?;
+                let fetch = get_fetch(&mut r)?;
+                files.push((path, fetch));
+            }
+            Response::FilesData(files)
+        }
+        RESP_META => {
+            let stat = get_stat(&mut r)?;
+            let origin = r.get_u32()?;
+            let generation = r.get_varint()?;
+            Response::Meta {
+                stat,
+                origin,
+                generation,
+            }
+        }
+        RESP_METAS => {
+            let n = r.get_len()?;
+            let mut metas = Vec::with_capacity(n);
+            for _ in 0..n {
+                let path = r.get_str()?;
+                let m = match r.get_u8()? {
+                    META_FOUND => {
+                        let stat = get_stat(&mut r)?;
+                        let origin = r.get_u32()?;
+                        let generation = r.get_varint()?;
+                        MetaFetch::Meta {
+                            stat,
+                            origin,
+                            generation,
+                        }
+                    }
+                    META_NOT_FOUND => MetaFetch::NotFound,
+                    t => return Err(FanError::Format(format!("unknown MetaFetch tag {t}"))),
+                };
+                metas.push((path, m));
+            }
+            Response::Metas(metas)
+        }
+        RESP_NAMES => {
+            let n = r.get_len()?;
+            let mut names = Vec::with_capacity(n);
+            for _ in 0..n {
+                names.push(r.get_str()?);
+            }
+            Response::Names(names)
+        }
+        RESP_OK => Response::Ok,
+        RESP_ERR => Response::Err(r.get_str()?),
+        t => return Err(FanError::Format(format!("unknown response tag {t}"))),
+    };
+    r.expect_end()?;
+    Ok((corr, resp))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metadata::record::FileLocation;
+
+    fn meta(gen: u64) -> FileMeta {
+        FileMeta {
+            stat: FileStat::regular(77, 1234),
+            location: FileLocation {
+                node: 3,
+                partition: u32::MAX,
+                offset: 9_000_000_123,
+                stored_len: 1234,
+                compressed: true,
+            },
+            generation: gen,
+        }
+    }
+
+    fn roundtrip_request(req: &Request) -> (u64, u32, Request) {
+        let body = encode_request(0xC0FFEE, 7, req).to_body_bytes();
+        decode_request(&body).unwrap()
+    }
+
+    fn roundtrip_response(resp: &Response) -> (u64, Response) {
+        let body = encode_response(0xDECAF, resp).to_body_bytes();
+        decode_response(&body).unwrap()
+    }
+
+    #[test]
+    fn request_variants_roundtrip() {
+        // every Request variant survives encode → decode intact
+        let (corr, from, req) = roundtrip_request(&Request::ReadFile { path: "/a/b".into() });
+        assert_eq!((corr, from), (0xC0FFEE, 7));
+        assert!(matches!(req, Request::ReadFile { path } if path == "/a/b"));
+
+        let (_, _, req) = roundtrip_request(&Request::ReadFiles {
+            paths: vec!["/x".into(), "".into(), "/ü/ñ".into()],
+        });
+        match req {
+            Request::ReadFiles { paths } => assert_eq!(paths, vec!["/x", "", "/ü/ñ"]),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, _, req) = roundtrip_request(&Request::StatOutput { path: "/o".into() });
+        assert!(matches!(req, Request::StatOutput { path } if path == "/o"));
+
+        let (_, _, req) = roundtrip_request(&Request::StatOutputs {
+            paths: vec!["/s1".into(), "/s2".into()],
+        });
+        match req {
+            Request::StatOutputs { paths } => assert_eq!(paths, vec!["/s1", "/s2"]),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, _, req) = roundtrip_request(&Request::CommitOutput {
+            path: "/ckpt/m.bin".into(),
+            meta: meta(42),
+        });
+        match req {
+            Request::CommitOutput { path, meta: m } => {
+                assert_eq!(path, "/ckpt/m.bin");
+                assert_eq!(m, meta(42));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, _, req) = roundtrip_request(&Request::ListOutputs { dir: "/d".into() });
+        assert!(matches!(req, Request::ListOutputs { dir } if dir == "/d"));
+        let (_, _, req) = roundtrip_request(&Request::UnlinkOutput { path: "/u".into() });
+        assert!(matches!(req, Request::UnlinkOutput { path } if path == "/u"));
+        let (_, _, req) = roundtrip_request(&Request::DropOutput { path: "/g".into() });
+        assert!(matches!(req, Request::DropOutput { path } if path == "/g"));
+        let (_, _, req) = roundtrip_request(&Request::Shutdown);
+        assert!(matches!(req, Request::Shutdown));
+    }
+
+    #[test]
+    fn response_variants_roundtrip() {
+        let payload: Arc<[u8]> = vec![7u8; 300].into();
+        let (corr, resp) = roundtrip_response(&Response::FileData {
+            stored: Arc::clone(&payload),
+            raw_len: 4096,
+            compressed: true,
+        });
+        assert_eq!(corr, 0xDECAF);
+        match resp {
+            Response::FileData {
+                stored,
+                raw_len,
+                compressed,
+            } => {
+                assert_eq!(&stored[..], &payload[..]);
+                assert_eq!(raw_len, 4096);
+                assert!(compressed);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, resp) = roundtrip_response(&Response::FilesData(vec![
+            (
+                "/a".into(),
+                FileFetch::Data {
+                    stored: vec![1, 2, 3].into(),
+                    raw_len: 3,
+                    compressed: false,
+                },
+            ),
+            ("/b".into(), FileFetch::NotFound),
+            ("/c".into(), FileFetch::Fault("disk on fire".into())),
+        ]));
+        match resp {
+            Response::FilesData(files) => {
+                assert_eq!(files.len(), 3);
+                match &files[0].1 {
+                    FileFetch::Data {
+                        stored,
+                        raw_len,
+                        compressed,
+                    } => {
+                        assert_eq!(&stored[..], &[1, 2, 3]);
+                        assert_eq!(*raw_len, 3);
+                        assert!(!compressed);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+                assert!(matches!(files[1].1, FileFetch::NotFound));
+                assert!(matches!(&files[2].1, FileFetch::Fault(e) if e == "disk on fire"));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let stat = FileStat::directory(9);
+        let (_, resp) = roundtrip_response(&Response::Meta {
+            stat,
+            origin: 11,
+            generation: u64::MAX,
+        });
+        match resp {
+            Response::Meta {
+                stat: s,
+                origin,
+                generation,
+            } => {
+                assert_eq!(s, stat);
+                assert_eq!(origin, 11);
+                assert_eq!(generation, u64::MAX);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, resp) = roundtrip_response(&Response::Metas(vec![
+            (
+                "/m1".into(),
+                MetaFetch::Meta {
+                    stat: FileStat::regular(1, 10),
+                    origin: 2,
+                    generation: 5,
+                },
+            ),
+            ("/m2".into(), MetaFetch::NotFound),
+        ]));
+        match resp {
+            Response::Metas(metas) => {
+                assert_eq!(metas.len(), 2);
+                match &metas[0].1 {
+                    MetaFetch::Meta {
+                        stat,
+                        origin,
+                        generation,
+                    } => {
+                        assert_eq!(stat.size, 10);
+                        assert_eq!(*origin, 2);
+                        assert_eq!(*generation, 5);
+                    }
+                    other => panic!("unexpected {other:?}"),
+                }
+                assert!(matches!(metas[1].1, MetaFetch::NotFound));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, resp) =
+            roundtrip_response(&Response::Names(vec!["a.bin".into(), "b.bin".into()]));
+        match resp {
+            Response::Names(names) => assert_eq!(names, vec!["a.bin", "b.bin"]),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, resp) = roundtrip_response(&Response::Ok);
+        assert!(matches!(resp, Response::Ok));
+        let (_, resp) = roundtrip_response(&Response::Err("nope".into()));
+        assert!(matches!(resp, Response::Err(e) if e == "nope"));
+    }
+
+    #[test]
+    fn empty_batches_roundtrip() {
+        let (_, _, req) = roundtrip_request(&Request::ReadFiles { paths: vec![] });
+        assert!(matches!(req, Request::ReadFiles { paths } if paths.is_empty()));
+        let (_, resp) = roundtrip_response(&Response::FilesData(vec![]));
+        assert!(matches!(resp, Response::FilesData(v) if v.is_empty()));
+        let (_, resp) = roundtrip_response(&Response::Metas(vec![]));
+        assert!(matches!(resp, Response::Metas(v) if v.is_empty()));
+    }
+
+    #[test]
+    fn varint_boundaries_roundtrip() {
+        for v in [0u64, 127, 128, 16_383, 16_384, u32::MAX as u64, u64::MAX] {
+            let mut f = Frame::new();
+            f.put_varint(v);
+            let body = f.to_body_bytes();
+            let mut r = WireReader::new(&body);
+            assert_eq!(r.get_varint().unwrap(), v, "varint {v}");
+            r.expect_end().unwrap();
+        }
+    }
+
+    #[test]
+    fn truncated_frames_are_rejected_at_every_cut() {
+        // any prefix of a valid body must decode to an error, never panic
+        let body = encode_request(
+            1,
+            0,
+            &Request::CommitOutput {
+                path: "/ckpt/x".into(),
+                meta: meta(3),
+            },
+        )
+        .to_body_bytes();
+        for cut in 0..body.len() {
+            assert!(
+                decode_request(&body[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+        let resp = Response::FilesData(vec![(
+            "/p".into(),
+            FileFetch::Data {
+                stored: vec![9u8; 64].into(),
+                raw_len: 64,
+                compressed: false,
+            },
+        )]);
+        let body = encode_response(2, &resp).to_body_bytes();
+        for cut in 0..body.len() {
+            assert!(
+                decode_response(&body[..cut]).is_err(),
+                "cut at {cut} must fail"
+            );
+        }
+    }
+
+    #[test]
+    fn corrupt_frames_are_rejected() {
+        // wrong kind byte
+        let mut body = encode_request(1, 0, &Request::Shutdown).to_body_bytes();
+        body[0] = KIND_RESPONSE;
+        assert!(decode_request(&body).is_err());
+        // unknown tag
+        let mut body = encode_request(1, 0, &Request::Shutdown).to_body_bytes();
+        let tag_off = body.len() - 1;
+        body[tag_off] = 0xEE;
+        assert!(decode_request(&body).is_err());
+        // trailing garbage
+        let mut body = encode_response(1, &Response::Ok).to_body_bytes();
+        body.push(0);
+        assert!(decode_response(&body).is_err());
+        // payload length pointing past the end of the frame
+        let mut f = Frame::new();
+        f.put_u8(KIND_RESPONSE);
+        f.put_u64(1);
+        f.put_u8(RESP_FILE_DATA);
+        f.put_varint(10);
+        f.put_u8(0);
+        f.put_varint(1 << 40); // claims a petabyte payload
+        assert!(decode_response(&f.to_body_bytes()).is_err());
+        // oversized length prefix is rejected before allocating
+        let mut framed = Vec::new();
+        framed.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        let mut cur = std::io::Cursor::new(framed);
+        assert!(read_frame(&mut cur).is_err());
+    }
+
+    #[test]
+    fn framing_roundtrips_over_a_stream() {
+        let frame = encode_response(
+            99,
+            &Response::FileData {
+                stored: vec![5u8; 1000].into(),
+                raw_len: 1000,
+                compressed: false,
+            },
+        );
+        let mut buf = Vec::new();
+        frame.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), frame.body_len() + 4);
+        let mut cur = std::io::Cursor::new(buf);
+        let body = read_frame(&mut cur).unwrap();
+        let (corr, resp) = decode_response(&body).unwrap();
+        assert_eq!(corr, 99);
+        let (data, _, _) = resp.into_file_data().unwrap();
+        assert_eq!(&data[..], &[5u8; 1000]);
+    }
+
+    #[test]
+    fn shared_payloads_are_not_copied_into_the_header() {
+        // the Arc payload rides as its own chunk: same allocation
+        let payload: Arc<[u8]> = vec![1u8; 1 << 16].into();
+        let frame = encode_response(
+            1,
+            &Response::FileData {
+                stored: Arc::clone(&payload),
+                raw_len: 1 << 16,
+                compressed: false,
+            },
+        );
+        let shared_ptrs: Vec<*const u8> = frame
+            .chunks
+            .iter()
+            .filter_map(|c| match c {
+                Chunk::Shared(a) => Some(a.as_ptr()),
+                Chunk::Owned(_) => None,
+            })
+            .collect();
+        assert_eq!(shared_ptrs, vec![payload.as_ptr()]);
+    }
+}

@@ -32,15 +32,17 @@ use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
 
 use crate::cache::ShardedCache;
-use crate::error::Result;
+use crate::error::{FanError, Result};
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta};
 use crate::metadata::table::MetaTable;
-use crate::net::transport::{FileFetch, NodeEndpoint, Request, Response};
+use crate::net::transport::{
+    FileFetch, MetaFetch, NodeEndpoint, PendingReply, Request, Response, Transport,
+};
 use crate::storage::disk::DiskStore;
 
 /// Per-node I/O accounting snapshot used by the experiment reports.
-#[derive(Clone, Copy, Debug, Default)]
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct NodeStats {
     pub local_reads: u64,
     pub remote_reads_served: u64,
@@ -137,6 +139,8 @@ impl NodeBuilder {
             output_meta: RwLock::new(MetaTable::new()),
             output_data: RwLock::new(HashMap::new()),
             output_meta_cache: RwLock::new(HashMap::new()),
+            output_gen: RwLock::new(HashMap::new()),
+            commit_seq: AtomicU64::new(1),
             stats: AtomicNodeStats::default(),
         })
     }
@@ -169,7 +173,33 @@ pub struct NodeShared {
     /// unlink+rewrite is corrected lazily when the stale origin read comes
     /// back ENOENT (see `FanStoreVfs::open`).
     pub output_meta_cache: RwLock<HashMap<String, FileMeta>>,
+    /// Commit generation of the *output bytes currently resident in this
+    /// node's refcount cache*, recorded when `fetch_output` inserts them.
+    /// The authoritative stat's generation is compared against this on a
+    /// resident re-open, so any rewrite — even same origin, same size —
+    /// retires the stale copy (see DESIGN.md "generation stamps").
+    pub output_gen: RwLock<HashMap<String, u64>>,
+    /// Monotonic commit-generation source for outputs homed on this node;
+    /// `serve(CommitOutput)` stamps each landed commit from it.
+    pub commit_seq: AtomicU64,
     pub stats: AtomicNodeStats,
+}
+
+/// Where one successfully fetched input in a [`NodeShared::fetch_inputs_batched`]
+/// call came from (the cache acquire, this node's own store, or a peer).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FetchSource {
+    Cache,
+    Local,
+    Remote,
+}
+
+/// Result of one batched input fetch: per-path outcomes (each `Ok` carries
+/// a live cache pin the caller must eventually `release`) plus how many
+/// `ReadFiles` requests went to peers.
+pub struct BatchedFetch {
+    pub outcomes: Vec<(String, Result<(Arc<[u8]>, FetchSource)>)>,
+    pub remote_batches: u64,
 }
 
 impl NodeShared {
@@ -206,12 +236,39 @@ impl NodeShared {
                     Some(m) => Response::Meta {
                         stat: m.stat,
                         origin: m.location.node,
+                        generation: m.generation,
                     },
                     None => Response::Err(format!("ENOENT {path}")),
                 }
             }
+            Request::StatOutputs { paths } => {
+                // batched stat mirroring ReadFiles: one table lock, one
+                // round trip, per-path outcomes in request order
+                let table = self.output_meta.read().unwrap();
+                Response::Metas(
+                    paths
+                        .iter()
+                        .map(|p| {
+                            let fetch = match table.get(p) {
+                                Some(m) => MetaFetch::Meta {
+                                    stat: m.stat,
+                                    origin: m.location.node,
+                                    generation: m.generation,
+                                },
+                                None => MetaFetch::NotFound,
+                            };
+                            (p.clone(), fetch)
+                        })
+                        .collect(),
+                )
+            }
             Request::CommitOutput { path, meta } => {
-                self.output_meta.write().unwrap().insert(path, meta.clone());
+                // the home node is the serializer for a path: stamping the
+                // generation here guarantees two commits of the same name
+                // are distinguishable even with identical origin and size
+                let mut meta = meta.clone();
+                meta.generation = self.commit_seq.fetch_add(1, Ordering::Relaxed);
+                self.output_meta.write().unwrap().insert(path, meta);
                 Response::Ok
             }
             Request::ListOutputs { dir } => {
@@ -231,9 +288,11 @@ impl NodeShared {
                         // this generation can no longer be served from here
                         self.cache.invalidate(path);
                         self.output_meta_cache.write().unwrap().remove(path.as_str());
+                        self.output_gen.write().unwrap().remove(path.as_str());
                         Response::Meta {
                             stat: meta.stat,
                             origin: meta.location.node,
+                            generation: meta.generation,
                         }
                     }
                     Err(_) => Response::Err(format!("ENOENT {path}")),
@@ -245,6 +304,7 @@ impl NodeShared {
                 self.output_data.write().unwrap().remove(path.as_str());
                 self.cache.invalidate(path);
                 self.output_meta_cache.write().unwrap().remove(path.as_str());
+                self.output_gen.write().unwrap().remove(path.as_str());
                 Response::Ok
             }
             Request::Shutdown => Response::Ok,
@@ -318,6 +378,124 @@ impl NodeShared {
         self.stats.decompressions.fetch_add(1, Ordering::Relaxed);
         Ok(out.into())
     }
+
+    /// The one batched input-fetch body every read path shares
+    /// (`FanStoreVfs::fetch_input`, `Vfs::prefetch`, the prefetch engine's
+    /// pickups): resolve each path against the refcount cache, read the
+    /// local share directly, and fetch the rest with **one `ReadFiles`
+    /// round trip per holder node**, all requests in flight before any
+    /// reply is awaited.  Fetched payloads are decoded on this (reading)
+    /// node and inserted into the cache; every `Ok` outcome transfers that
+    /// pin to the caller.  Exactly one cache acquire happens per item, and
+    /// every miss is exactly one fetch, so the node-wide counter algebra
+    /// the stress tests assert holds no matter which caller runs this.
+    ///
+    /// `items` must not contain duplicate paths (every caller dedups or
+    /// coalesces first): a duplicated remote path would collapse in the
+    /// reply map and report a spurious transport error for its second slot.
+    pub fn fetch_inputs_batched(
+        &self,
+        transport: &dyn Transport,
+        items: Vec<(String, FileLocation)>,
+    ) -> BatchedFetch {
+        let stats = &self.stats;
+        let mut outcomes: Vec<(String, Result<(Arc<[u8]>, FetchSource)>)> =
+            Vec::with_capacity(items.len());
+        let mut local: Vec<String> = Vec::new();
+        let mut remote: HashMap<u32, Vec<String>> = HashMap::new();
+        for (path, loc) in items {
+            if let Some(pin) = self.cache.acquire(&path) {
+                outcomes.push((path, Ok((pin, FetchSource::Cache))));
+                continue;
+            }
+            let holder = self.holder_of(&loc);
+            if holder == self.id {
+                local.push(path);
+            } else {
+                remote.entry(holder).or_default().push(path);
+            }
+        }
+
+        // every remote batch in flight before any local work or wait: the
+        // per-peer round trips overlap with each other AND the local reads
+        let pending: Vec<(Vec<String>, Result<PendingReply>)> = remote
+            .into_iter()
+            .map(|(holder, paths)| {
+                let reply = transport.send(
+                    self.id,
+                    holder,
+                    Request::ReadFiles {
+                        paths: paths.clone(),
+                    },
+                );
+                (paths, reply)
+            })
+            .collect();
+        let remote_batches = pending.iter().filter(|(_, r)| r.is_ok()).count() as u64;
+
+        // serve the local share while the peers work
+        for path in local {
+            let outcome = match self.store.read_stored(&path) {
+                Ok((stored, at)) => {
+                    stats.local_reads.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .bytes_read_local
+                        .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                    self.decode_stored(stored, at.raw_len, at.compressed)
+                        .map(|raw| (self.cache.insert(&path, raw), FetchSource::Local))
+                }
+                Err(e) => Err(e),
+            };
+            outcomes.push((path, outcome));
+        }
+
+        // collect the batched replies
+        for (paths, reply) in pending {
+            let files = reply
+                .and_then(|r| r.wait())
+                .and_then(|resp| resp.into_files_data());
+            match files {
+                Ok(files) => {
+                    let mut by_path: HashMap<String, FileFetch> = files.into_iter().collect();
+                    for path in paths {
+                        let outcome = match by_path.remove(&path) {
+                            Some(FileFetch::Data {
+                                stored,
+                                raw_len,
+                                compressed,
+                            }) => {
+                                stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+                                stats
+                                    .bytes_fetched_remote
+                                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                                self.decode_stored(stored, raw_len, compressed)
+                                    .map(|raw| (self.cache.insert(&path, raw), FetchSource::Remote))
+                            }
+                            Some(FileFetch::NotFound) => Err(FanError::NotFound(path.clone())),
+                            Some(FileFetch::Fault(e)) => {
+                                Err(FanError::Transport(format!("EIO {path}: {e}")))
+                            }
+                            None => Err(FanError::Transport(format!(
+                                "peer reply missing entry for {path}"
+                            ))),
+                        };
+                        outcomes.push((path, outcome));
+                    }
+                }
+                // peer down / malformed reply: fail the whole batch for
+                // this holder; callers fall back or surface the error
+                Err(e) => {
+                    for path in paths {
+                        outcomes.push((path, Err(FanError::Transport(e.to_string()))));
+                    }
+                }
+            }
+        }
+        BatchedFetch {
+            outcomes,
+            remote_batches,
+        }
+    }
 }
 
 /// Handle to a running node: shared state + its worker thread.
@@ -338,12 +516,12 @@ impl FanStoreNode {
                 let mut served = 0u64;
                 while let Ok(msg) = endpoint.inbox.recv() {
                     if matches!(msg.req, Request::Shutdown) {
-                        let _ = msg.reply.send(Response::Ok);
+                        msg.reply.send(Response::Ok);
                         break;
                     }
                     let resp = thread_shared.serve(&msg.req);
                     served += 1;
-                    let _ = msg.reply.send(resp);
+                    msg.reply.send(resp);
                 }
                 served
             })
@@ -403,6 +581,7 @@ pub fn index_input_metadata(
                         stored_len: e.stored_len(),
                         compressed: e.is_compressed(),
                     },
+                    generation: 0,
                 },
             );
         }
@@ -531,6 +710,7 @@ mod tests {
                 stored_len: 42,
                 compressed: false,
             },
+            generation: 0,
         };
         node.serve(&Request::CommitOutput {
             path: "/out/ckpt_1.h5".into(),
@@ -539,9 +719,10 @@ mod tests {
         match node.serve(&Request::StatOutput {
             path: "/out/ckpt_1.h5".into(),
         }) {
-            Response::Meta { stat, origin } => {
+            Response::Meta { stat, origin, generation } => {
                 assert_eq!(stat.size, 42);
                 assert_eq!(origin, 0);
+                assert!(generation > 0, "commit must stamp a generation");
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -549,6 +730,125 @@ mod tests {
             Response::Names(names) => assert_eq!(names, vec!["ckpt_1.h5"]),
             other => panic!("unexpected {other:?}"),
         }
+    }
+
+    #[test]
+    fn recommits_get_distinct_generations() {
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 9),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 9,
+                compressed: false,
+            },
+            generation: 0,
+        };
+        let gen_of = |node: &NodeShared| match node.serve(&Request::StatOutput {
+            path: "/o/x".into(),
+        }) {
+            Response::Meta { generation, .. } => generation,
+            other => panic!("unexpected {other:?}"),
+        };
+        node.serve(&Request::CommitOutput { path: "/o/x".into(), meta: meta.clone() });
+        let g1 = gen_of(&node);
+        // same origin, same size, recommitted — the home must re-stamp
+        node.serve(&Request::CommitOutput { path: "/o/x".into(), meta });
+        let g2 = gen_of(&node);
+        assert_ne!(g1, g2, "identical recommit must get a fresh generation");
+    }
+
+    #[test]
+    fn serve_batched_stat_outputs_mixed() {
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 77),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 77,
+                compressed: false,
+            },
+            generation: 0,
+        };
+        node.serve(&Request::CommitOutput { path: "/s/a".into(), meta });
+        let resp = node.serve(&Request::StatOutputs {
+            paths: vec!["/s/a".into(), "/s/ghost".into(), "/s/a".into()],
+        });
+        let metas = resp.into_metas().unwrap();
+        assert_eq!(metas.len(), 3, "one outcome per path, request order");
+        match &metas[0].1 {
+            MetaFetch::Meta { stat, origin, generation } => {
+                assert_eq!(stat.size, 77);
+                assert_eq!(*origin, 0);
+                assert!(*generation > 0);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(matches!(metas[1].1, MetaFetch::NotFound));
+        assert!(matches!(metas[2].1, MetaFetch::Meta { .. }));
+        // empty batch is a valid request
+        match node.serve(&Request::StatOutputs { paths: vec![] }) {
+            Response::Metas(v) => assert!(v.is_empty()),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn batched_fetch_helper_cache_local_and_error_outcomes() {
+        let fs = files(4);
+        let (blobs, _) = build_partitions(&fs, 1, Codec::None).unwrap();
+        let placement = Placement::new(1, 1, 1);
+        let mut b = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        let node = b.seal();
+        let (tp, _eps) = InProcTransport::fully_connected(1);
+        let loc = FileLocation {
+            node: 0,
+            partition: 0,
+            offset: 0,
+            stored_len: 0,
+            compressed: false,
+        };
+        let batch = node.fetch_inputs_batched(
+            &tp,
+            vec![
+                ("/m/train/f1".to_string(), loc),
+                ("/nope".to_string(), loc),
+            ],
+        );
+        assert_eq!(batch.remote_batches, 0, "single node: all local");
+        assert_eq!(batch.outcomes.len(), 2);
+        let mut pins = Vec::new();
+        for (path, outcome) in batch.outcomes {
+            match path.as_str() {
+                "/m/train/f1" => {
+                    let (pin, src) = outcome.unwrap();
+                    assert_eq!(src, FetchSource::Local);
+                    assert_eq!(&pin[..], &vec![1u8; 101][..]);
+                    pins.push((path, pin));
+                }
+                "/nope" => assert!(matches!(outcome, Err(FanError::NotFound(_)))),
+                other => panic!("unexpected path {other}"),
+            }
+        }
+        // a second fetch of the same path is a cache hit carrying its own pin
+        let batch = node.fetch_inputs_batched(&tp, vec![("/m/train/f1".to_string(), loc)]);
+        let (path, outcome) = batch.outcomes.into_iter().next().unwrap();
+        let (pin, src) = outcome.unwrap();
+        assert_eq!(src, FetchSource::Cache);
+        pins.push((path, pin));
+        for (path, pin) in pins {
+            node.cache.release(&path, &pin);
+        }
+        assert_eq!(node.cache.resident_files(), 0, "all helper pins released");
+        let st = node.stats.snapshot();
+        assert_eq!(st.local_reads, 1, "one fetch despite two acquires");
     }
 
     #[test]
@@ -615,6 +915,7 @@ mod tests {
                 stored_len: 5,
                 compressed: false,
             },
+            generation: 0,
         };
         node.serve(&Request::CommitOutput {
             path: "/o/x".into(),
@@ -625,7 +926,7 @@ mod tests {
             .unwrap()
             .insert("/o/x".into(), vec![9u8; 5].into());
         match node.serve(&Request::UnlinkOutput { path: "/o/x".into() }) {
-            Response::Meta { origin, stat } => {
+            Response::Meta { origin, stat, .. } => {
                 assert_eq!(origin, 0);
                 assert_eq!(stat.size, 5);
             }

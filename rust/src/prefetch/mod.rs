@@ -3,12 +3,16 @@
 //!
 //! A [`Prefetcher`] runs per node: N fetcher threads drain a queue of
 //! scheduled paths (the epoch's shuffled access sequence from
-//! [`crate::workload::access::EpochSampler`]), group each pickup by owner
-//! node, and issue **one batched `ReadFiles` round trip per peer** with the
-//! per-peer requests overlapped through `InProcTransport::send`.  Fetched
+//! [`crate::workload::access::EpochSampler`]), and resolve each pickup
+//! through the node's shared batched-fetch body
+//! ([`NodeShared::fetch_inputs_batched`]: cache acquire, overlapped local
+//! reads, **one batched `ReadFiles` round trip per peer** with the
+//! per-peer requests overlapped through `Transport::send`).  Fetched
 //! content lands in the node's sharded refcount cache with the pin held by
 //! the prefetcher until a reader claims it, so `FanStoreVfs::open` is a
-//! cache hit in steady state.
+//! cache hit in steady state.  The engine is fabric-agnostic: it holds an
+//! `Arc<dyn Transport>`, so the same pipeline runs over mpsc channels or
+//! real TCP sockets.
 //!
 //! # Backpressure
 //!
@@ -50,8 +54,8 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use crate::net::transport::{FileFetch, InProcTransport, PendingReply, Request};
-use crate::node::NodeShared;
+use crate::net::transport::Transport;
+use crate::node::{FetchSource, NodeShared};
 
 /// Engine sizing (validated upstream by `ClusterConfig::validate`).
 #[derive(Clone, Copy, Debug)]
@@ -156,9 +160,8 @@ struct PfState {
 
 /// State shared by the fetcher threads and every handle.
 struct Inner {
-    node_id: u32,
     shared: Arc<NodeShared>,
-    transport: InProcTransport,
+    transport: Arc<dyn Transport>,
     window: usize,
     max_batch: usize,
     state: Mutex<PfState>,
@@ -190,7 +193,7 @@ impl Prefetcher {
     pub fn spawn(
         node_id: u32,
         shared: Arc<NodeShared>,
-        transport: InProcTransport,
+        transport: Arc<dyn Transport>,
         cfg: PrefetchConfig,
     ) -> Prefetcher {
         let window = cfg.window.max(1);
@@ -199,7 +202,6 @@ impl Prefetcher {
         // sensible per-request payload count
         let max_batch = (window / nfetchers).clamp(1, 16);
         let inner = Arc::new(Inner {
-            node_id,
             shared,
             transport,
             window,
@@ -411,111 +413,46 @@ fn fetch_loop(inner: &Inner) {
     }
 }
 
-/// Fetch one pickup: resolve each path against the cache, the local store,
-/// or a peer; peers get one batched request each, all issued before any
-/// reply is awaited so the round trips overlap.
+/// Fetch one pickup through the node's shared batched-fetch body (cache
+/// acquire, overlapped local reads, one batched request per peer), then
+/// mark the slots with the outcomes.
 fn fetch_batch(inner: &Inner, picked: Vec<String>) {
-    let stats = &inner.shared.stats;
     let mut done: Vec<(String, Option<Arc<[u8]>>)> = Vec::with_capacity(picked.len());
-    let mut local: Vec<String> = Vec::new();
-    let mut remote: HashMap<u32, Vec<String>> = HashMap::new();
+    let mut items: Vec<(String, crate::metadata::record::FileLocation)> = Vec::new();
     for p in picked {
         match inner.shared.input_meta.get(&p) {
             // not an input file: fail WITHOUT touching the cache — the
             // reader's fallback handles outputs, and a fetchless acquire
             // here would skew the node-wide miss/fetch algebra
             None => done.push((p, None)),
-            Some(m) => {
-                let loc = m.location;
-                // exactly one cache acquire per picked input (hit → Ready
-                // immediately; miss → exactly one fetch below)
-                if let Some(pin) = inner.shared.cache.acquire(&p) {
-                    inner.stats.prehits.fetch_add(1, Ordering::Relaxed);
-                    done.push((p, Some(pin)));
-                    continue;
-                }
-                let holder = inner.shared.holder_of(&loc);
-                if holder == inner.node_id {
-                    local.push(p);
-                } else {
-                    remote.entry(holder).or_default().push(p);
-                }
-            }
+            Some(m) => items.push((p, m.location)),
         }
     }
 
-    // all remote batches in flight first...
-    let pending: Vec<(Vec<String>, Option<PendingReply>)> = remote
-        .into_iter()
-        .map(|(holder, paths)| {
-            let reply = inner
-                .transport
-                .send(
-                    inner.node_id,
-                    holder,
-                    Request::ReadFiles {
-                        paths: paths.clone(),
-                    },
-                )
-                .ok();
-            (paths, reply)
-        })
-        .collect();
+    let batch = inner
+        .shared
+        .fetch_inputs_batched(inner.transport.as_ref(), items);
     inner
         .stats
         .batches_issued
-        .fetch_add(pending.len() as u64, Ordering::Relaxed);
-
-    // ...then serve the local share while the peers work
-    for p in local {
-        let outcome = match inner.shared.store.read_stored(&p) {
-            Ok((stored, at)) => {
-                stats.local_reads.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .bytes_read_local
-                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                inner.stats.fetched_local.fetch_add(1, Ordering::Relaxed);
-                decode_and_insert(inner, &p, stored, at.raw_len, at.compressed)
+        .fetch_add(batch.remote_batches, Ordering::Relaxed);
+    for (p, outcome) in batch.outcomes {
+        match outcome {
+            Ok((pin, src)) => {
+                // exactly one cache acquire happened per picked input (hit
+                // → Ready immediately; miss → exactly one fetch), so the
+                // engine's own accounting mirrors the node-wide algebra
+                let ctr = match src {
+                    FetchSource::Cache => &inner.stats.prehits,
+                    FetchSource::Local => &inner.stats.fetched_local,
+                    FetchSource::Remote => &inner.stats.fetched_remote,
+                };
+                ctr.fetch_add(1, Ordering::Relaxed);
+                done.push((p, Some(pin)));
             }
-            Err(_) => None,
-        };
-        done.push((p, outcome));
-    }
-
-    // collect the batched replies
-    for (paths, reply) in pending {
-        let files = reply
-            .and_then(|r| r.wait().ok())
-            .and_then(|resp| resp.into_files_data().ok());
-        match files {
-            Some(files) => {
-                let mut by_path: HashMap<String, FileFetch> = files.into_iter().collect();
-                for p in paths {
-                    let outcome = match by_path.remove(&p) {
-                        Some(FileFetch::Data {
-                            stored,
-                            raw_len,
-                            compressed,
-                        }) => {
-                            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
-                            stats
-                                .bytes_fetched_remote
-                                .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                            inner.stats.fetched_remote.fetch_add(1, Ordering::Relaxed);
-                            decode_and_insert(inner, &p, stored, raw_len, compressed)
-                        }
-                        _ => None,
-                    };
-                    done.push((p, outcome));
-                }
-            }
-            None => {
-                // peer down / malformed reply: fail the whole pickup for
-                // this holder; readers fall back synchronously
-                for p in paths {
-                    done.push((p, None));
-                }
-            }
+            // fetch failed (ENOENT, fault, dead peer, decode error):
+            // readers fall back synchronously and surface the real error
+            Err(_) => done.push((p, None)),
         }
     }
 
@@ -538,21 +475,6 @@ fn fetch_batch(inner: &Inner, picked: Vec<String>) {
     inner.work_cv.notify_all();
 }
 
-/// Decompress (reader-side, §5.4) and park the content in the refcount
-/// cache; the returned pin belongs to the Ready slot until claimed.
-fn decode_and_insert(
-    inner: &Inner,
-    path: &str,
-    stored: Arc<[u8]>,
-    raw_len: u64,
-    compressed: bool,
-) -> Option<Arc<[u8]>> {
-    match inner.shared.decode_stored(stored, raw_len, compressed) {
-        Ok(raw) => Some(inner.shared.cache.insert(path, raw)),
-        Err(_) => None,
-    }
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -562,10 +484,12 @@ mod tests {
     use crate::partition::builder::{build_partitions, InputFile};
     use crate::storage::disk::DiskStore;
 
+    use crate::net::transport::InProcTransport;
+
     /// Single-node world: everything is a local fetch, which is all these
     /// unit tests need (the remote/batched path is covered by the
     /// integration tests over a full cluster).
-    fn one_node(n_files: usize) -> (Arc<NodeShared>, InProcTransport, Vec<String>) {
+    fn one_node(n_files: usize) -> (Arc<NodeShared>, Arc<dyn Transport>, Vec<String>) {
         let files: Vec<InputFile> = (0..n_files)
             .map(|i| InputFile {
                 path: format!("train/f{i}"),
@@ -587,6 +511,7 @@ mod tests {
         b.input_meta = Arc::new(table);
         let shared = b.seal();
         let (tp, _eps) = InProcTransport::fully_connected(1);
+        let tp: Arc<dyn Transport> = Arc::new(tp);
         let paths = (0..n_files).map(|i| format!("/m/train/f{i}")).collect();
         (shared, tp, paths)
     }

@@ -18,7 +18,9 @@ use std::sync::Arc;
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileLocation, FileMeta, FileStat};
 use crate::metadata::table::normalize;
-use crate::net::transport::{FileFetch, InProcTransport, PendingReply, Request, Response};
+use crate::net::transport::{
+    FileFetch, MetaFetch, PendingReply, Request, Response, Transport,
+};
 use crate::node::NodeShared;
 use crate::prefetch::PrefetchHandle;
 use crate::vfs::{Fd, OpenFlags, Vfs};
@@ -35,11 +37,13 @@ enum OpenFile {
     },
 }
 
-/// Client handle bound to one node.
+/// Client handle bound to one node.  Holds its fabric as `Arc<dyn
+/// Transport>`, so the same client logic runs over the in-proc channels or
+/// real TCP sockets unchanged.
 pub struct FanStoreVfs {
     node_id: u32,
     shared: Arc<NodeShared>,
-    transport: InProcTransport,
+    transport: Arc<dyn Transport>,
     fds: HashMap<Fd, OpenFile>,
     next_fd: Fd,
     /// Node prefetch engine, when attached: `fetch_input` claims fetched
@@ -52,7 +56,7 @@ pub struct FanStoreVfs {
 }
 
 impl FanStoreVfs {
-    pub fn new(node_id: u32, shared: Arc<NodeShared>, transport: InProcTransport) -> Self {
+    pub fn new(node_id: u32, shared: Arc<NodeShared>, transport: Arc<dyn Transport>) -> Self {
         FanStoreVfs {
             node_id,
             shared,
@@ -98,40 +102,17 @@ impl FanStoreVfs {
                 return Ok(pin);
             }
         }
-        // 2) cache hit on this node?
-        if let Some(data) = self.shared.cache.acquire(path) {
-            return Ok(data);
-        }
-        // 3) local partition?  (replicated directories — the test-set
-        //    broadcast of §5.4 — are always local)
-        let holder = self.shared.holder_of(&loc);
-        let stats = &self.shared.stats;
-        let (stored, raw_len, compressed) = if holder == self.node_id {
-            let (stored, at) = self.shared.store.read_stored(path)?;
-            stats.local_reads.fetch_add(1, Ordering::Relaxed);
-            stats
-                .bytes_read_local
-                .fetch_add(stored.len() as u64, Ordering::Relaxed);
-            (stored, at.raw_len, at.compressed)
-        } else {
-            // 4) remote round trip (paper §5.4)
-            let resp = self.transport.call(
-                self.node_id,
-                holder,
-                Request::ReadFile {
-                    path: path.to_string(),
-                },
-            )?;
-            let (stored, raw_len, compressed) = resp.into_file_data()?;
-            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
-            stats
-                .bytes_fetched_remote
-                .fetch_add(stored.len() as u64, Ordering::Relaxed);
-            (stored, raw_len, compressed)
-        };
-        // 5) decompress on the reading node (§5.4)
-        let raw = self.shared.decode_stored(stored, raw_len, compressed)?;
-        Ok(self.shared.cache.insert(path, raw))
+        // 2..4) cache / local store / remote round trip (paper §5.4): the
+        // shared batched-fetch body, degenerate single-path case
+        let batch = self
+            .shared
+            .fetch_inputs_batched(self.transport.as_ref(), vec![(path.to_string(), loc)]);
+        let (_, outcome) = batch
+            .outcomes
+            .into_iter()
+            .next()
+            .expect("one outcome per requested path");
+        outcome.map(|(pin, _src)| pin)
     }
 
     /// Read an already-committed output file (checkpoint resume path),
@@ -139,12 +120,18 @@ impl FanStoreVfs {
     /// resume `open()`s on one node fetch from the origin once.
     fn fetch_output(&mut self, path: &str, meta: &FileMeta) -> Result<Arc<[u8]>> {
         if let Some(data) = self.shared.cache.acquire(path) {
-            // Guard against a cached generation that predates an
-            // unlink+rewrite on the home node (only the home invalidates
-            // its own cache): the authoritative stat is the referee.  A
-            // same-size rewrite slips through — acceptable for the DL
-            // pattern, which never unlinks (§3.4).
-            if data.len() as u64 == meta.stat.size {
+            // Guard against a cached copy that predates an unlink+rewrite
+            // on the home node (only the home invalidates its own cache):
+            // the authoritative stat is the referee.  The commit generation
+            // recorded when these bytes were inserted closes the last
+            // window — a same-origin same-size rewrite carries a fresh
+            // generation and retires the stale copy too.
+            let cached_gen = self.shared.output_gen.read().unwrap().get(path).copied();
+            let gen_fresh = match cached_gen {
+                Some(g) => g == meta.generation,
+                None => true, // pre-stamp resident bytes: size check only
+            };
+            if data.len() as u64 == meta.stat.size && gen_fresh {
                 return Ok(data);
             }
             // single-lock, generation-aware refresh: drops our pin and
@@ -192,6 +179,13 @@ impl FanStoreVfs {
                 .fetch_add(stored.len() as u64, Ordering::Relaxed);
             stored
         };
+        // remember which commit generation these resident bytes belong to —
+        // the referee for the staleness check above on later re-opens
+        self.shared
+            .output_gen
+            .write()
+            .unwrap()
+            .insert(path.to_string(), meta.generation);
         Ok(self.shared.cache.insert(path, data))
     }
 
@@ -237,17 +231,12 @@ impl FanStoreVfs {
                 path: path.to_string(),
             },
         )? {
-            Response::Meta { stat, origin } => {
-                let meta = FileMeta {
-                    stat,
-                    location: FileLocation {
-                        node: origin,
-                        partition: u32::MAX,
-                        offset: 0,
-                        stored_len: stat.size,
-                        compressed: false,
-                    },
-                };
+            Response::Meta {
+                stat,
+                origin,
+                generation,
+            } => {
+                let meta = output_meta(stat, origin, generation);
                 self.shared
                     .output_meta_cache
                     .write()
@@ -258,6 +247,21 @@ impl FanStoreVfs {
             Response::Err(_) => Err(FanError::NotFound(path.to_string())),
             other => Err(FanError::Transport(format!("unexpected {other:?}"))),
         }
+    }
+}
+
+/// Reader-side record for a committed output from its home node's answer.
+fn output_meta(stat: FileStat, origin: u32, generation: u64) -> FileMeta {
+    FileMeta {
+        stat,
+        location: FileLocation {
+            node: origin,
+            partition: u32::MAX,
+            offset: 0,
+            stored_len: stat.size,
+            compressed: false,
+        },
+        generation,
     }
 }
 
@@ -372,6 +376,8 @@ impl Vfs for FanStoreVfs {
                         stored_len: size,
                         compressed: false,
                     },
+                    // stamped by the home node when the commit lands
+                    generation: 0,
                 };
                 // data first, then the metadata commit: once the name is
                 // discoverable at the home node, the bytes must already be
@@ -410,6 +416,122 @@ impl Vfs for FanStoreVfs {
             return Ok(s);
         }
         self.stat_output(&path).map(|m| m.stat)
+    }
+
+    /// Batched stat: inputs answered from the replicated table, locally
+    /// homed outputs from this node's own table, and every remote home gets
+    /// **one `StatOutputs` round trip**, all in flight before any reply is
+    /// awaited — a multi-shard checkpoint resume stats all its shards in
+    /// one round trip per home node instead of one per shard.  Fetched
+    /// metadata lands in the node's output-meta cache, so the subsequent
+    /// shard `open`s skip their `StatOutput` too.
+    fn stat_many(&mut self, paths: &[String]) -> Vec<Result<FileStat>> {
+        enum Slot {
+            Done(Result<FileStat>),
+            Pending,
+        }
+        let normalized: Vec<String> = paths.iter().map(|p| normalize(p)).collect();
+        let mut slots: Vec<Slot> = Vec::with_capacity(normalized.len());
+        let mut remote: HashMap<u32, Vec<(usize, String)>> = HashMap::new();
+        for (i, path) in normalized.iter().enumerate() {
+            if let Ok(s) = self.shared.input_meta.stat(path) {
+                slots.push(Slot::Done(Ok(s)));
+                continue;
+            }
+            let home = self.shared.placement.output_home(path);
+            if home == self.node_id {
+                let stat = self.shared.output_meta.read().unwrap().get(path).map(|m| m.stat);
+                slots.push(Slot::Done(
+                    stat.ok_or_else(|| FanError::NotFound(path.clone())),
+                ));
+                continue;
+            }
+            // already-cached remote metadata answers without joining any
+            // batch — the same round trip the single-path stat saves
+            let cached = self
+                .shared
+                .output_meta_cache
+                .read()
+                .unwrap()
+                .get(path)
+                .map(|m| m.stat);
+            if let Some(stat) = cached {
+                self.shared
+                    .stats
+                    .output_meta_hits
+                    .fetch_add(1, Ordering::Relaxed);
+                slots.push(Slot::Done(Ok(stat)));
+                continue;
+            }
+            slots.push(Slot::Pending);
+            remote.entry(home).or_default().push((i, path.clone()));
+        }
+        // one batched request per remote home, all issued before any wait
+        let pending: Vec<(Vec<(usize, String)>, Result<PendingReply>)> = remote
+            .into_iter()
+            .map(|(home, entries)| {
+                let reply = self.transport.send(
+                    self.node_id,
+                    home,
+                    Request::StatOutputs {
+                        paths: entries.iter().map(|(_, p)| p.clone()).collect(),
+                    },
+                );
+                (entries, reply)
+            })
+            .collect();
+        for (entries, reply) in pending {
+            let metas = reply
+                .and_then(|r| r.wait())
+                .and_then(|resp| resp.into_metas());
+            match metas {
+                Ok(metas) => {
+                    // looked up by `get`, never `remove`: duplicate (or
+                    // alias-normalized) paths in one call must all resolve
+                    let by_path: HashMap<String, MetaFetch> = metas.into_iter().collect();
+                    for (i, path) in entries {
+                        let outcome = match by_path.get(&path) {
+                            Some(MetaFetch::Meta {
+                                stat,
+                                origin,
+                                generation,
+                            }) => {
+                                // cache next to the eventually cached bytes,
+                                // like a single StatOutput answer would be
+                                self.shared
+                                    .output_meta_cache
+                                    .write()
+                                    .unwrap()
+                                    .insert(path, output_meta(*stat, *origin, *generation));
+                                Ok(*stat)
+                            }
+                            Some(MetaFetch::NotFound) => Err(FanError::NotFound(path)),
+                            None => Err(FanError::Transport(format!(
+                                "home reply missing entry for {path}"
+                            ))),
+                        };
+                        slots[i] = Slot::Done(outcome);
+                    }
+                }
+                // home unreachable: surface the transport failure per path,
+                // exactly like a per-path stat would — a dead home must not
+                // masquerade as ENOENT during a checkpoint resume
+                Err(e) => {
+                    for (i, path) in entries {
+                        slots[i] =
+                            Slot::Done(Err(FanError::Transport(format!("stat {path}: {e}"))));
+                    }
+                }
+            }
+        }
+        slots
+            .into_iter()
+            .zip(normalized)
+            .map(|(slot, path)| match slot {
+                Slot::Done(r) => r,
+                Slot::Pending => Err(FanError::Transport(format!("no stat reply for {path}"))),
+            })
+            .collect()
     }
 
     fn readdir(&mut self, dir: &str) -> Result<Vec<String>> {
@@ -455,24 +577,23 @@ impl Vfs for FanStoreVfs {
     }
 
     /// Batched mini-batch read-ahead: resolve every path against the warm
-    /// set / prefetcher / cache first, read the local share directly, and
-    /// fetch the rest with **one `ReadFiles` round trip per owner node**,
-    /// all issued before any reply is awaited.  Fetched pins park in the
-    /// warm set for the subsequent `open`s.  Purely advisory: per-file
-    /// failures (ENOENT, fault, dead peer) are skipped here and surface
-    /// with the right errno at `open` time.
+    /// set / prefetcher first, then run the rest through the node's shared
+    /// batched-fetch body ([`NodeShared::fetch_inputs_batched`]: cache
+    /// acquire, overlapped local reads, **one `ReadFiles` round trip per
+    /// owner node**).  Fetched pins park in the warm set for the subsequent
+    /// `open`s.  Purely advisory: per-file failures (ENOENT, fault, dead
+    /// peer) are skipped here and surface with the right errno at `open`
+    /// time.
     fn prefetch(&mut self, paths: &[String]) -> Result<()> {
         self.drain_warm();
-        let stats = &self.shared.stats;
-        let mut remote: HashMap<u32, Vec<String>> = HashMap::new();
-        // remote paths are not warmed until their reply arrives, so the
-        // warm-set check alone cannot dedup them — without this a
-        // duplicated (or alias-normalized) path would be fetched twice and
-        // its second cache pin leaked when warm.insert overwrote the first
-        let mut requested: std::collections::HashSet<String> = std::collections::HashSet::new();
+        // dedup inside one hint: a duplicated (or alias-normalized) path
+        // would otherwise be fetched twice and its second cache pin leaked
+        // when warm.insert overwrote the first
+        let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
+        let mut items: Vec<(String, FileLocation)> = Vec::new();
         for p in paths {
             let path = normalize(p);
-            if self.warm.contains_key(&path) || requested.contains(&path) {
+            if self.warm.contains_key(&path) || seen.contains(&path) {
                 continue; // duplicate inside this batch
             }
             // only inputs are hintable (outputs keep the per-open path);
@@ -488,68 +609,18 @@ impl Vfs for FanStoreVfs {
                     continue;
                 }
             }
-            if let Some(pin) = self.shared.cache.acquire(&path) {
-                self.warm.insert(path, pin);
-                continue;
-            }
-            let holder = self.shared.holder_of(&loc);
-            if holder == self.node_id {
-                // local share: no round trip to amortize, read it now
-                let Ok((stored, at)) = self.shared.store.read_stored(&path) else {
-                    continue;
-                };
-                stats.local_reads.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .bytes_read_local
-                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                let Ok(raw) = self.shared.decode_stored(stored, at.raw_len, at.compressed)
-                else {
-                    continue;
-                };
-                let pin = self.shared.cache.insert(&path, raw);
-                self.warm.insert(path, pin);
-            } else {
-                requested.insert(path.clone());
-                remote.entry(holder).or_default().push(path);
-            }
+            seen.insert(path.clone());
+            items.push((path, loc));
         }
-        // every batch in flight before any wait: the per-peer round trips
-        // overlap instead of serializing (send/PendingReply split)
-        let mut pending: Vec<PendingReply> = Vec::with_capacity(remote.len());
-        for (holder, batch) in remote {
-            if let Ok(reply) =
-                self.transport
-                    .send(self.node_id, holder, Request::ReadFiles { paths: batch })
-            {
-                pending.push(reply);
-            }
-        }
-        for reply in pending {
-            let Ok(resp) = reply.wait() else { continue };
-            let Ok(files) = resp.into_files_data() else { continue };
-            for (path, fetch) in files {
-                let FileFetch::Data {
-                    stored,
-                    raw_len,
-                    compressed,
-                } = fetch
-                else {
-                    continue;
-                };
-                stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
-                stats
-                    .bytes_fetched_remote
-                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                let Ok(raw) = self.shared.decode_stored(stored, raw_len, compressed) else {
-                    continue;
-                };
-                let pin = self.shared.cache.insert(&path, raw);
-                if let Some(extra) = self.warm.insert(path.clone(), pin) {
-                    // defensive: a duplicated reply entry bumped the
-                    // refcount twice — drop the superseded pin so the
-                    // entry still drains to zero
-                    self.shared.cache.release(&path, &extra);
-                }
+        let batch = self
+            .shared
+            .fetch_inputs_batched(self.transport.as_ref(), items);
+        for (path, outcome) in batch.outcomes {
+            let Ok((pin, _src)) = outcome else { continue };
+            if let Some(extra) = self.warm.insert(path.clone(), pin) {
+                // defensive: should be unreachable given the dedup above —
+                // drop the superseded pin so the entry still drains to zero
+                self.shared.cache.release(&path, &extra);
             }
         }
         Ok(())
@@ -579,6 +650,8 @@ impl Vfs for FanStoreVfs {
                 other => return Err(FanError::Transport(format!("unexpected {other:?}"))),
             }
         };
+        // this node can no longer prove the resident bytes' generation
+        self.shared.output_gen.write().unwrap().remove(&path);
         // 2) this node can no longer serve the dead generation (outstanding
         //    readers keep their pinned Arc; generation-aware releases make
         //    their eventual close a no-op)

@@ -57,6 +57,14 @@ pub trait Vfs: Send {
         Ok(())
     }
 
+    /// Batched stat, one result per path in order (multi-shard checkpoint
+    /// resume stats every shard before reading any).  Backends with remote
+    /// metadata override it to gather per metadata home in one round trip
+    /// each (FanStore's `StatOutputs`); the default is a per-path loop.
+    fn stat_many(&mut self, paths: &[String]) -> Vec<Result<FileStat>> {
+        paths.iter().map(|p| self.stat(p)).collect()
+    }
+
     /// Convenience: open+read-to-end+close (the DL input pattern, §3.4:
     /// "when a file is read, it is read sequentially and completely").
     fn read_all(&mut self, path: &str) -> Result<Vec<u8>> {

@@ -9,7 +9,7 @@ use std::sync::Arc;
 use fanstore::compress::Codec;
 use fanstore::config::ClusterConfig;
 use fanstore::coordinator::Cluster;
-use fanstore::net::transport::{FileFetch, Request, Response};
+use fanstore::net::transport::{FileFetch, Request, Response, Transport};
 use fanstore::partition::builder::InputFile;
 use fanstore::util::prng::Prng;
 use fanstore::vfs::Vfs;
@@ -391,4 +391,119 @@ fn remote_unlink_gcs_origin_and_stale_meta_self_corrects() {
         "home-side unlink must GC the remote origin too"
     );
     cluster.shutdown();
+}
+
+#[test]
+fn same_origin_same_size_rewrite_invalidates_resident_output() {
+    // The window the generation stamp closes: node 3 holds the OLD bytes
+    // resident in its cache, the rewrite lands on the SAME origin with the
+    // SAME size, so neither the size check nor the origin's ENOENT can
+    // catch it — only the commit generation can.
+    let files = inputs(8, 6);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 4,
+            partitions: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let path = path_with_home(&cluster, "/gen/a", 0);
+    let v1 = vec![0xA1u8; 64];
+    let v2 = vec![0xB2u8; 64]; // same size, different bytes
+    cluster.client(1).write_file(&path, &v1).unwrap();
+
+    // reader on node 3 keeps a descriptor open so the bytes STAY resident
+    // across the rewrite (refcount > 0 pins them in the cache)
+    let mut reader = cluster.client(3);
+    let fd = reader
+        .open(&path, fanstore::vfs::OpenFlags::Read)
+        .unwrap();
+    assert_eq!(reader.read_all(&path).unwrap(), v1);
+
+    // unlink + rewrite from the SAME origin node with the SAME size
+    cluster.client(1).unlink(&path).unwrap();
+    cluster.client(1).write_file(&path, &v2).unwrap();
+
+    assert_eq!(
+        reader.read_all(&path).unwrap(),
+        v2,
+        "resident same-origin same-size rewrite must not serve stale bytes"
+    );
+    reader.close(fd).unwrap();
+    cluster.shutdown();
+}
+
+#[test]
+fn stat_many_batches_by_home_and_warms_the_meta_cache() {
+    let files = inputs(8, 7);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 4,
+            partitions: 4,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // outputs homed on three different remote nodes (from reader node 0's
+    // perspective) plus one local home and one missing path
+    let mut paths = Vec::new();
+    for (i, home) in [(0u32, 1u32), (1, 2), (2, 3), (3, 2), (4, 0)] {
+        let p = path_with_home(&cluster, &format!("/shards/s{i}_"), home);
+        cluster
+            .client((i + 1) % 4)
+            .write_file(&p, &vec![i as u8; 50 + i as usize])
+            .unwrap();
+        paths.push(p);
+    }
+    paths.push("/shards/ghost.bin".into());
+    // an input path mixes in fine (answered from the replicated table)
+    paths.push(format!("/fanstore/user/{}", files[0].path));
+    // duplicate of a remote-homed path: must resolve, not report ENOENT
+    paths.push(paths[1].clone());
+
+    let mut reader = cluster.client(0);
+    let results = reader.stat_many(&paths);
+    assert_eq!(results.len(), 8);
+    for i in 0..5 {
+        assert_eq!(
+            results[i].as_ref().unwrap().size,
+            50 + i as u64,
+            "{}",
+            paths[i]
+        );
+    }
+    assert!(
+        matches!(&results[5], Err(fanstore::FanError::NotFound(_))),
+        "missing path fails in place without poisoning the batch"
+    );
+    assert_eq!(
+        results[6].as_ref().unwrap().size as usize,
+        files[0].data.len()
+    );
+    assert_eq!(
+        results[7].as_ref().unwrap().size,
+        51,
+        "duplicated path resolves like its first occurrence"
+    );
+
+    // the remote-home metadata is now cached: per-path stats are all hits
+    for p in &paths[..4] {
+        reader.stat(p).unwrap();
+    }
+    let hits = cluster.node_state(0).stats.snapshot().output_meta_hits;
+    assert_eq!(
+        hits, 4,
+        "stat_many must warm the output metadata cache for remote homes"
+    );
+    let report = cluster.shutdown();
+    let served = report.requests_served;
+    // 5 writes (4 remote-home commits) + 3 StatOutputs gathers (homes 1,2,3)
+    // + nothing else remote: well under one round trip per path
+    assert!(
+        served <= 12,
+        "stat_many must gather per home, not per path: {served} requests"
+    );
 }

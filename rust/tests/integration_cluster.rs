@@ -338,7 +338,7 @@ fn dead_peer_surfaces_transport_error_not_hang() {
     let handle = std::thread::spawn(move || {
         // worker replies Err then exits mid-conversation
         if let Ok(msg) = ep1.inbox.recv() {
-            let _ = msg.reply.send(Response::Err("injected".into()));
+            msg.reply.send(Response::Err("injected".into()));
         }
     });
     let resp = tp2

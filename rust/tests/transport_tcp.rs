@@ -1,0 +1,277 @@
+//! Loopback-TCP integration: the same cluster logic that runs over mpsc
+//! channels runs over real sockets with byte-identical results and the
+//! exact same stats/cache counter algebra (the acceptance gauge for the
+//! pluggable transport), including the prefetch pipeline stress and the
+//! output commit/stat/unlink lifecycle.
+
+use std::sync::Arc;
+
+use fanstore::config::{ClusterConfig, TransportKind};
+use fanstore::coordinator::Cluster;
+use fanstore::experiments::scaling::{run_transport_equivalence, transport_runs_equivalent};
+use fanstore::partition::builder::InputFile;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+
+fn inputs(n: usize, seed: u64) -> Vec<InputFile> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut data = vec![0u8; 200 + 13 * i];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/class{}/img{i:03}.raw", i % 4),
+                data,
+            }
+        })
+        .collect()
+}
+
+/// Deterministically find an output path whose consistent-hash home is
+/// `home` under this cluster's placement.
+fn path_with_home(cluster: &Cluster, prefix: &str, home: u32) -> String {
+    for i in 0..10_000 {
+        let p = format!("{prefix}{i}.bin");
+        if cluster.placement.output_home(&p) == home {
+            return p;
+        }
+    }
+    panic!("no candidate path hashes to node {home}");
+}
+
+#[test]
+fn three_node_tcp_run_matches_inproc_exactly() {
+    // every node reads the whole dataset in its own shuffled order, hinted
+    // in mini-batches — once over mpsc, once over real loopback sockets
+    let runs = run_transport_equivalence(
+        &[TransportKind::InProc, TransportKind::TcpLoopback],
+        3,
+        36,
+        2048,
+        8,
+    )
+    .unwrap();
+    assert_eq!(runs.len(), 2);
+    let (inproc, tcp) = (&runs[0], &runs[1]);
+    assert_eq!(inproc.digest, tcp.digest, "byte-identical reads");
+    assert_eq!(inproc.bytes_read, tcp.bytes_read);
+    assert_eq!(
+        inproc.per_node, tcp.per_node,
+        "node stats algebra must match exactly:\n inproc {:?}\n tcp {:?}",
+        inproc.per_node, tcp.per_node
+    );
+    assert_eq!(inproc.cache, tcp.cache, "cache hit/miss algebra must match");
+    assert_eq!(
+        inproc.requests_served, tcp.requests_served,
+        "same protocol, same round-trip count"
+    );
+    assert!(transport_runs_equivalent(inproc, tcp));
+    // sanity: the workload actually exercised the fabric
+    let remote: u64 = tcp.per_node.iter().map(|s| s.remote_reads_issued).sum();
+    assert!(remote > 0, "3-node single-copy placement must read remotely");
+}
+
+#[test]
+fn tcp_prefetch_pipeline_stress_exact_algebra() {
+    // the batch_prefetch stress assertions, over real sockets
+    const NODES: u32 = 3;
+    const THREADS: usize = 4;
+    const N_FILES: usize = 48;
+    let files = inputs(N_FILES, 4);
+    let cluster = Arc::new(
+        Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: NODES,
+                partitions: 6,
+                prefetch_window: 8,
+                prefetch_fetchers: 2,
+                transport: TransportKind::TcpLoopback,
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let expect: Arc<Vec<(String, Vec<u8>)>> = Arc::new(
+        files
+            .iter()
+            .map(|f| (format!("/fanstore/user/{}", f.path), f.data.clone()))
+            .collect(),
+    );
+
+    // every node schedules the full sequence once, shuffled per node
+    let mut orders = Vec::new();
+    for node in 0..NODES {
+        let mut order: Vec<usize> = (0..N_FILES).collect();
+        Prng::new(100 + node as u64).shuffle(&mut order);
+        cluster
+            .prefetch_handle(node)
+            .schedule(order.iter().map(|&i| expect[i].0.clone()));
+        orders.push(order);
+    }
+
+    // K trainer threads per node split each node's sequence round-robin
+    let mut handles = Vec::new();
+    for node in 0..NODES {
+        for t in 0..THREADS {
+            let cluster = Arc::clone(&cluster);
+            let expect = Arc::clone(&expect);
+            let order = orders[node as usize].clone();
+            handles.push(std::thread::spawn(move || {
+                let mut vfs = cluster.prefetching_client(node);
+                let mut reads = 0u64;
+                for (k, &i) in order.iter().enumerate() {
+                    if k % THREADS != t {
+                        continue;
+                    }
+                    let (path, want) = &expect[i];
+                    assert_eq!(&vfs.read_all(path).unwrap(), want, "{path}");
+                    reads += 1;
+                }
+                reads
+            }));
+        }
+    }
+    let total_reads: u64 = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    assert_eq!(total_reads, NODES as u64 * N_FILES as u64);
+
+    let pf_stats: Vec<_> = (0..NODES).map(|n| cluster.prefetch_stats(n)).collect();
+    for node in 0..NODES {
+        let pf = &pf_stats[node as usize];
+        assert_eq!(pf.scheduled, N_FILES as u64, "node {node}: {pf:?}");
+        assert_eq!(pf.failed, 0, "node {node}: no faults over loopback TCP");
+        assert_eq!(
+            pf.claimed + pf.stolen,
+            N_FILES as u64,
+            "node {node}: every read claims or steals its path: {pf:?}"
+        );
+        assert_eq!(
+            pf.picked + pf.stolen + pf.coalesced,
+            N_FILES as u64,
+            "node {node}: every scheduled path is picked, stolen, or coalesced: {pf:?}"
+        );
+    }
+    cluster.stop_prefetchers();
+
+    for node in 0..NODES {
+        let pf = &pf_stats[node as usize];
+        let st = cluster.node_state(node);
+        let cs = st.cache.stats();
+        let ns = st.stats.snapshot();
+        assert_eq!(
+            st.cache.resident_files(),
+            0,
+            "node {node}: descriptors closed + engines stopped -> empty cache"
+        );
+        assert_eq!(
+            cs.hits + cs.misses,
+            N_FILES as u64 - pf.claimed + pf.picked,
+            "node {node}: acquire algebra: cache {cs:?}, pf {pf:?}"
+        );
+        assert_eq!(
+            ns.local_reads + ns.remote_reads_issued,
+            cs.misses,
+            "node {node}: fetch algebra: {ns:?} vs {cs:?}"
+        );
+        assert_eq!(
+            pf.picked,
+            pf.prehits + pf.fetched_local + pf.fetched_remote,
+            "node {node}: {pf:?}"
+        );
+        drop(st);
+    }
+    Arc::try_unwrap(cluster)
+        .ok()
+        .expect("all thread handles joined")
+        .shutdown();
+}
+
+#[test]
+fn tcp_output_lifecycle_commit_stat_read_unlink() {
+    let files = inputs(8, 9);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 3,
+            partitions: 3,
+            transport: TransportKind::TcpLoopback,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // writer on node 1, home forced to node 0, readers everywhere
+    let path = path_with_home(&cluster, "/ckpt/tcp_a", 0);
+    let ckpt = vec![0x5Au8; 4096];
+    cluster.client(1).write_file(&path, &ckpt).unwrap();
+    for node in 0..3 {
+        let mut v = cluster.client(node);
+        assert_eq!(v.stat(&path).unwrap().size, 4096, "visible on node {node}");
+        assert_eq!(v.read_all(&path).unwrap(), ckpt, "readable on node {node}");
+    }
+    // readdir gathers homes over the sockets
+    let names = cluster.client(2).readdir("/ckpt").unwrap();
+    assert_eq!(names.len(), 1);
+    // unlink from a node that is neither home nor origin; the origin
+    // buffer must be GC'd through the socket path too
+    cluster.client(2).unlink(&path).unwrap();
+    assert!(
+        !cluster
+            .node_state(1)
+            .output_data
+            .read()
+            .unwrap()
+            .contains_key(&path),
+        "origin buffer dropped over TCP"
+    );
+    assert!(cluster.client(0).stat(&path).is_err(), "name gone everywhere");
+    cluster.shutdown();
+}
+
+#[test]
+fn tcp_batched_stat_many_resumes_in_one_round_trip_per_home() {
+    let files = inputs(6, 10);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 3,
+            partitions: 3,
+            transport: TransportKind::TcpLoopback,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    // multi-shard checkpoint: shards homed across the cluster
+    let mut shard_paths = Vec::new();
+    for (i, home) in [(0u32, 0u32), (1, 1), (2, 2), (3, 1)] {
+        let p = path_with_home(&cluster, &format!("/resume/shard{i}_"), home);
+        cluster
+            .client(i % 3)
+            .write_file(&p, &vec![i as u8; 100 + i as usize])
+            .unwrap();
+        shard_paths.push(p);
+    }
+    shard_paths.push("/resume/missing.bin".into());
+    let mut reader = cluster.client(0);
+    let stats = reader.stat_many(&shard_paths);
+    assert_eq!(stats.len(), 5, "one result per path, in order");
+    for (i, s) in stats.iter().take(4).enumerate() {
+        assert_eq!(
+            s.as_ref().unwrap().size,
+            100 + i as u64,
+            "{}",
+            shard_paths[i]
+        );
+    }
+    assert!(stats[4].is_err(), "missing shard reports ENOENT in place");
+    // the batched stat warmed the meta cache: the subsequent shard opens
+    // skip their StatOutput round trips (counted as output_meta_hits)
+    for p in &shard_paths[..4] {
+        reader.read_all(p).unwrap();
+    }
+    let hits = cluster.node_state(0).stats.snapshot().output_meta_hits;
+    assert!(
+        hits >= 2,
+        "resume opens must reuse stat_many's cached metadata, hits={hits}"
+    );
+    cluster.shutdown();
+}

@@ -13,7 +13,11 @@
 //!     at ~1×; the sharded/zero-copy hot path must scale);
 //!   * remote-read pipeline: sync-per-file vs batched `ReadFiles` vs
 //!     batched+background-prefetch on the same shuffled workload (the
-//!     §5.4 overlap claim, end to end).
+//!     §5.4 overlap claim, end to end);
+//!   * spilled-partition reads: reopen vs pooled-pread vs mmap backing
+//!     (the syscall-lean `DiskStore` file path);
+//!   * wire send: per-frame vs coalesced small-request streams over a
+//!     loopback socket (the `CoalescingWriter` syscall amortization).
 //!
 //! Besides the human-readable log, emits `BENCH_hotpath.json`
 //! (section → ops/s and bytes/s) so the perf trajectory is tracked across
@@ -30,7 +34,9 @@ use fanstore::metadata::record::{FileLocation, FileMeta, FileStat};
 use fanstore::metadata::table::MetaTable;
 use fanstore::net::tcp::{TcpServer, TcpTransport};
 use fanstore::net::transport::{InProcTransport, NodeEndpoint, Request, Response, Transport};
+use fanstore::net::wire::{self, CoalescingWriter};
 use fanstore::partition::builder::{build_partitions, InputFile};
+use fanstore::storage::disk::{DiskStore, SpillReadMode};
 use fanstore::util::human_rate;
 use fanstore::util::prng::Prng;
 use fanstore::vfs::{OpenFlags, Vfs};
@@ -458,6 +464,135 @@ fn bench_remote_pipeline(out: &mut Entries, smoke: bool) {
     }
 }
 
+/// Spilled-partition read path: the same dataset read back through each
+/// [`SpillReadMode`].  Small files make the per-read syscall budget the
+/// dominant cost, which is exactly what the pooled-fd/mmap backing cuts:
+/// reopen pays open+seek+read+close, pread pays one positioned read, mmap
+/// pays none.
+fn bench_spill_read(out: &mut Entries, smoke: bool) {
+    println!("== spilled-partition reads: reopen vs pread vs mmap ==");
+    let (n_files, size, rounds) = if smoke {
+        (256usize, 4 << 10, 4u32)
+    } else {
+        (1024usize, 8 << 10, 16u32)
+    };
+    let mut rng = Prng::new(31);
+    let files: Vec<InputFile> = (0..n_files)
+        .map(|i| {
+            let mut data = vec![0u8; size];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("d/f{i:05}"),
+                data,
+            }
+        })
+        .collect();
+    let (blobs, _) = build_partitions(&files, 4, fanstore::compress::Codec::None).unwrap();
+    let base = std::env::temp_dir().join(format!("fanstore_bench_spill_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+    let paths: Vec<String> = files.iter().map(|f| format!("/b/{}", f.path)).collect();
+    let mut base_rate = 0.0f64;
+    for mode in [SpillReadMode::Reopen, SpillReadMode::Pread, SpillReadMode::Mmap] {
+        let dir = base.join(mode.name());
+        let mut store = DiskStore::on_disk_with_mode(&dir, mode).unwrap();
+        for (pid, blob) in blobs.iter().enumerate() {
+            store.load_partition(pid as u32, blob.clone(), "/b").unwrap();
+        }
+        let t0 = Instant::now();
+        let mut bytes = 0u64;
+        for _ in 0..rounds {
+            for p in &paths {
+                let (data, _) = store.read_stored(p).unwrap();
+                bytes += data.len() as u64;
+                std::hint::black_box(&data);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        let ops = (rounds as usize * paths.len()) as f64 / secs;
+        if mode == SpillReadMode::Reopen {
+            base_rate = ops;
+        }
+        println!(
+            "  {:>6}: {:>12}, {ops:.0} reads/s ({:.2}x vs reopen)",
+            mode.name(),
+            human_rate(bytes as f64 / secs),
+            ops / base_rate.max(1e-9)
+        );
+        out.push((
+            format!("spill_read/{}", mode.name()),
+            ops,
+            bytes as f64 / secs,
+        ));
+    }
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// Wire small-request streams over a real loopback socket: one vectored
+/// write per frame vs the coalescing writer (flush-on-full / queue-drain
+/// rules, as `TcpTransport` uses per pooled connection).
+fn bench_wire_send(out: &mut Entries, smoke: bool) {
+    println!("== wire send: per-frame vs coalesced (loopback, small requests) ==");
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap();
+    let sink = std::thread::spawn(move || {
+        let (s, _) = listener.accept().expect("accept");
+        // buffered reads keep the sink off the critical path: the sender's
+        // syscall budget is what this section measures
+        let mut r = std::io::BufReader::with_capacity(256 << 10, s);
+        let mut n = 0u64;
+        while wire::read_frame(&mut r).is_ok() {
+            n += 1;
+        }
+        n
+    });
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect loopback");
+    stream.set_nodelay(true).ok();
+    // a representative metadata storm: small stat requests
+    let frames: Vec<wire::Frame> = (0..256u64)
+        .map(|i| {
+            wire::encode_request(
+                i,
+                0,
+                &Request::StatOutput {
+                    path: format!("/ckpt/shard_{i:04}.bin"),
+                },
+            )
+        })
+        .collect();
+    let iters = if smoke { 20u32 } else { 100 };
+    let total = iters as u64 * frames.len() as u64;
+
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for f in &frames {
+            f.write_to(&mut stream).expect("per-frame write");
+        }
+    }
+    let per_frame = total as f64 / t0.elapsed().as_secs_f64();
+    println!("  per-frame: {per_frame:.0} frames/s (1 writev per frame)");
+    out.push(("wire_send/per_frame".into(), per_frame, 0.0));
+
+    let mut cw = CoalescingWriter::new(stream);
+    let t0 = Instant::now();
+    for _ in 0..iters {
+        for (i, f) in frames.iter().enumerate() {
+            // writers stay queued through the storm; the last one flushes
+            cw.write_frame(f, i + 1 != frames.len()).expect("coalesced write");
+        }
+    }
+    cw.flush().expect("final flush");
+    let coalesced = total as f64 / t0.elapsed().as_secs_f64();
+    let (sent, flushes) = cw.counts();
+    println!(
+        "  coalesced: {coalesced:.0} frames/s ({:.2}x, {sent} frames in {flushes} flushes)",
+        coalesced / per_frame.max(1e-9)
+    );
+    out.push(("wire_send/coalesced".into(), coalesced, 0.0));
+    drop(cw); // EOF for the sink
+    let received = sink.join().expect("sink thread");
+    assert_eq!(received, 2 * total, "every frame decoded at the sink");
+}
+
 /// Write `BENCH_hotpath.json`: {"section": {"ops_per_sec": x, "bytes_per_sec": y}, ...}
 fn write_json(entries: &Entries) {
     let mut s = String::from("{\n");
@@ -485,6 +620,8 @@ fn main() {
     bench_metadata(&mut entries, smoke);
     bench_cache(&mut entries, smoke);
     bench_partition(&mut entries, smoke);
+    bench_spill_read(&mut entries, smoke);
+    bench_wire_send(&mut entries, smoke);
     bench_transport(&mut entries, smoke);
     bench_read_path(&mut entries, smoke);
     bench_multithread_reads(&mut entries, smoke);

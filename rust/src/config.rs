@@ -7,6 +7,7 @@
 
 use crate::compress::Codec;
 use crate::error::{FanError, Result};
+use crate::storage::disk::SpillReadMode;
 
 /// Which fabric the cluster's request/response protocol runs over.  The
 /// node workers, VFS clients and prefetchers are identical either way —
@@ -50,6 +51,10 @@ pub struct ClusterConfig {
     pub replicate_dirs: Vec<String>,
     /// Spill partitions to this directory (real file I/O) instead of RAM.
     pub spill_dir: Option<String>,
+    /// How spilled partitions are read back: zero-syscall `Mmap`, pooled
+    /// positioned `Pread` (default), or the `Reopen` baseline (only
+    /// meaningful with `spill_dir`; see `storage::disk::SpillReadMode`).
+    pub spill_read_mode: SpillReadMode,
     /// Lock-shard count of each node's refcount cache (contention knob,
     /// never semantics; see `cache::ShardedCache`).
     pub cache_shards: usize,
@@ -73,6 +78,7 @@ impl Default for ClusterConfig {
             mount: "/fanstore/user".into(),
             replicate_dirs: Vec::new(),
             spill_dir: None,
+            spill_read_mode: SpillReadMode::default(),
             cache_shards: crate::cache::CACHE_SHARDS,
             prefetch_window: 64,
             prefetch_fetchers: 4,

@@ -119,7 +119,9 @@ pub fn build_node_shared(
     config: &ClusterConfig,
 ) -> Result<Arc<NodeShared>> {
     let store = match &config.spill_dir {
-        Some(dir) => DiskStore::on_disk(format!("{dir}/node{id:03}"))?,
+        Some(dir) => {
+            DiskStore::on_disk_with_mode(format!("{dir}/node{id:03}"), config.spill_read_mode)?
+        }
         None => DiskStore::in_memory(),
     };
     let mut builder = NodeBuilder::new(id, store, placement.clone());
@@ -304,7 +306,7 @@ impl Cluster {
         let per_node: Vec<NodeStats> = self
             .nodes
             .iter()
-            .map(|n| n.shared.stats.snapshot())
+            .map(|n| n.shared.stats_snapshot())
             .collect();
         // transport second: workers receive Shutdown and exit; over TCP
         // this also closes the client sockets, so bridge threads drain

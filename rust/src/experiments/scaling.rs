@@ -375,9 +375,13 @@ pub fn run_pipeline(
             cluster.client(0)
         };
         if key == "batched_prefetch" {
+            // interned index-based schedule: the table is built once, the
+            // epoch order rides as u32 indices (sampler index == table index)
+            let table =
+                std::sync::Arc::new(crate::prefetch::EpochPathTable::from_paths(&paths));
             cluster
                 .prefetch_handle(0)
-                .schedule(order.iter().map(|&i| paths[i as usize].clone()));
+                .schedule_table(&table, order.iter().copied());
             // let the fetchers take the queue before the reader races them,
             // so the measured loop is the steady state, not the cold start
             let t0 = std::time::Instant::now();

@@ -34,6 +34,8 @@ fn usage() {
          \n\
          prepare     pack a synthetic dataset into partitions (§5.2)\n\
          bench-io    run the §6.2 benchmark on the in-proc cluster\n\
+                     (--spill-dir DIR --spill-read-mode reopen|pread|mmap\n\
+                      for real file I/O instead of RAM backing)\n\
          train       train the CNN surrogate through FanStore + PJRT\n\
          cluster     run one FanStore node over real TCP:\n\
                        serve --node-id I --nodes N --listen HOST:PORT\n\
@@ -54,6 +56,21 @@ fn codec_of(m: &ArgMap) -> Result<Codec> {
             )))
         }
     })
+}
+
+/// `--spill-dir DIR` / `--spill-read-mode reopen|pread|mmap` options for
+/// commands that can run the cluster against real file I/O.
+fn spill_opts(m: &ArgMap) -> Result<(Option<String>, fanstore::storage::SpillReadMode)> {
+    let dir = m.get("spill-dir").map(|s| s.to_string());
+    let mode = match m.get("spill-read-mode") {
+        None => fanstore::storage::SpillReadMode::default(),
+        Some(s) => fanstore::storage::SpillReadMode::parse(s).ok_or_else(|| {
+            fanstore::FanError::Config(format!(
+                "--spill-read-mode expects reopen|pread|mmap, got {s}"
+            ))
+        })?,
+    };
+    Ok((dir, mode))
 }
 
 fn artifacts_dir() -> std::path::PathBuf {
@@ -305,10 +322,13 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
         redundancy: if matches!(codec, Codec::Lzss(_)) { 0.72 } else { 0.0 },
     };
     let data = spec.generate_point(spec.points[0], 3);
+    let (spill_dir, spill_read_mode) = spill_opts(m)?;
     let cfg = ClusterConfig {
         nodes,
         partitions: nodes * 2,
         codec,
+        spill_dir,
+        spill_read_mode,
         ..Default::default()
     };
     let mount = cfg.mount.clone();

@@ -15,13 +15,16 @@
 //! # Client side
 //!
 //! Each peer gets a lazily-grown pool of connections (`pool_size` cap,
-//! round-robin).  A connection pairs a write half (mutex-serialized frame
-//! writes, payload `Arc<[u8]>`s written without intermediate copies) with
-//! one demux reader thread that matches response frames to pending
-//! requests by correlation id and completes their [`PendingReply`]
-//! channels.  Requests on one connection therefore pipeline: many callers
-//! can have round trips in flight concurrently, replies resolve in
-//! whatever order the worker produces them.
+//! round-robin).  A connection pairs a write half (mutex-serialized,
+//! coalescing frame writes — [`wire::CoalescingWriter`] batches
+//! back-to-back small requests into one syscall per buffer and flushes
+//! whenever the writer queue drains, while large payload frames write
+//! through vectored with their `Arc<[u8]>` chunks uncopied) with one
+//! demux reader thread that matches response frames to pending requests
+//! by correlation id and completes their [`PendingReply`] channels.
+//! Requests on one connection therefore pipeline: many callers can have
+//! round trips in flight concurrently, replies resolve in whatever order
+//! the worker produces them.
 //!
 //! # Shutdown ordering
 //!
@@ -34,7 +37,6 @@
 //! loop itself stops when the [`TcpServer`] is dropped.
 
 use std::collections::HashMap;
-use std::io::Write;
 use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
@@ -45,7 +47,7 @@ use crate::error::{FanError, Result};
 use crate::net::transport::{
     Message, NodeEndpoint, PendingReply, ReplySink, Request, Response, Transport,
 };
-use crate::net::wire;
+use crate::net::wire::{self, CoalescingWriter};
 
 /// Connections kept per peer before round-robining over them.
 pub const DEFAULT_POOL_SIZE: usize = 2;
@@ -182,10 +184,15 @@ fn bridge_connection(stream: TcpStream, inbox: Sender<Message>) {
 // Client side
 // ---------------------------------------------------------------------------
 
-/// One pooled connection: mutex-serialized writes + a demux reader thread
-/// resolving pending requests by correlation id.
+/// One pooled connection: mutex-serialized coalescing writes + a demux
+/// reader thread resolving pending requests by correlation id.
 struct TcpConn {
-    writer: Mutex<TcpStream>,
+    writer: Mutex<CoalescingWriter<TcpStream>>,
+    /// Writers queued on (or holding) the writer mutex right now.  A
+    /// departing writer that observes nobody behind it flushes the
+    /// coalescing buffer, so a frame is never parked while the connection
+    /// is idle (the flush-when-drained rule).
+    queued_writers: AtomicUsize,
     /// corr → reply channel.  `None` once the demux reader exited (every
     /// still-pending sender is dropped then, failing its `wait()`).
     pending: Mutex<Option<HashMap<u64, Sender<Response>>>>,
@@ -202,7 +209,8 @@ impl TcpConn {
             .try_clone()
             .map_err(|e| FanError::Transport(format!("clone stream to node {to}: {e}")))?;
         let conn = Arc::new(TcpConn {
-            writer: Mutex::new(stream),
+            writer: Mutex::new(CoalescingWriter::new(stream)),
+            queued_writers: AtomicUsize::new(0),
             pending: Mutex::new(Some(HashMap::new())),
             next_corr: AtomicU64::new(1),
             dead: AtomicBool::new(false),
@@ -264,13 +272,15 @@ impl TcpConn {
             }
         }
         let frame = wire::encode_request(corr, from, req);
+        // announce the write BEFORE taking the lock: the current lock
+        // holder sees a follower and leaves its frames in the coalescing
+        // buffer for us to carry (or flush) — back-to-back small requests
+        // from many callers share one syscall per buffer
+        self.queued_writers.fetch_add(1, Ordering::AcqRel);
         let write_result = {
             let mut w = self.writer.lock().unwrap();
-            let r = frame.write_to(&mut *w);
-            if r.is_ok() {
-                w.flush().ok();
-            }
-            r
+            let more_queued = self.queued_writers.fetch_sub(1, Ordering::AcqRel) > 1;
+            w.write_frame(&frame, more_queued)
         };
         if let Err(e) = write_result {
             if let Ok(mut p) = self.pending.lock() {
@@ -279,6 +289,12 @@ impl TcpConn {
                 }
             }
             self.dead.store(true, Ordering::SeqCst);
+            // a failed coalesced write may strand OTHER requests' frames in
+            // the buffer: kill the socket so the demux reader fails every
+            // outstanding wait instead of leaving them hanging
+            if let Ok(w) = self.writer.lock() {
+                let _ = w.get_ref().shutdown(Shutdown::Both);
+            }
             return Err(FanError::Transport(format!("send to node {to}: {e}")));
         }
         Ok(PendingReply::from_channel(to, rx))
@@ -286,8 +302,9 @@ impl TcpConn {
 
     fn close(&self) {
         self.dead.store(true, Ordering::SeqCst);
-        if let Ok(w) = self.writer.lock() {
-            let _ = w.shutdown(Shutdown::Both);
+        if let Ok(mut w) = self.writer.lock() {
+            let _ = w.flush();
+            let _ = w.get_ref().shutdown(Shutdown::Both);
         }
     }
 }

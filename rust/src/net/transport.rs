@@ -56,6 +56,10 @@ pub enum Request {
     /// Drop the buffered bytes of an unlinked output at its originating
     /// node (idempotent — a second drop is a no-op).
     DropOutput { path: String },
+    /// Retire the receiving node's cached `readdir` listings.  Broadcast
+    /// (and awaited) by the writer once a commit/unlink lands, so the
+    /// steady-state `readdir` on every node can be a local cache lookup.
+    InvalidateListings,
     /// Orderly shutdown of the worker thread.
     Shutdown,
 }

@@ -23,7 +23,7 @@
 //! one bounded body and parses it; payload bytes are materialized once into
 //! fresh `Arc<[u8]>`s (that copy *is* the network receive).
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::sync::Arc;
 
 use crate::error::{FanError, Result};
@@ -47,6 +47,7 @@ const REQ_LIST_OUTPUTS: u8 = 5;
 const REQ_UNLINK_OUTPUT: u8 = 6;
 const REQ_DROP_OUTPUT: u8 = 7;
 const REQ_SHUTDOWN: u8 = 8;
+const REQ_INVALIDATE_LISTINGS: u8 = 9;
 
 const RESP_FILE_DATA: u8 = 0;
 const RESP_FILES_DATA: u8 = 1;
@@ -142,7 +143,10 @@ impl Frame {
             .sum()
     }
 
-    /// Write `[len][body]` to `w`, chunk by chunk.
+    /// Write `[len][body]` to `w` with one `write_vectored` spanning the
+    /// length prefix and every chunk, repeated only when the writer takes
+    /// a short write — serving a read is ~1 syscall instead of one per
+    /// chunk, and the `Arc` payloads still go to the socket uncopied.
     pub fn write_to(&self, w: &mut impl Write) -> std::io::Result<()> {
         let len = self.body_len();
         if len > MAX_FRAME as usize {
@@ -151,11 +155,37 @@ impl Frame {
                 format!("frame body {len} exceeds MAX_FRAME"),
             ));
         }
-        w.write_all(&(len as u32).to_le_bytes())?;
+        let prefix = (len as u32).to_le_bytes();
+        let mut parts: Vec<&[u8]> = Vec::with_capacity(1 + self.chunks.len());
+        parts.push(&prefix);
+        for c in &self.chunks {
+            let s: &[u8] = match c {
+                Chunk::Owned(v) => v,
+                Chunk::Shared(a) => a,
+            };
+            if !s.is_empty() {
+                parts.push(s);
+            }
+        }
+        write_all_vectored(w, &parts)
+    }
+
+    /// Serialize `[len][body]` into `out` (the send-coalescing path: small
+    /// frames accumulate in one buffer flushed by a single write).
+    pub fn append_to(&self, out: &mut Vec<u8>) -> std::io::Result<()> {
+        let len = self.body_len();
+        if len > MAX_FRAME as usize {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!("frame body {len} exceeds MAX_FRAME"),
+            ));
+        }
+        out.reserve(4 + len);
+        out.extend_from_slice(&(len as u32).to_le_bytes());
         for c in &self.chunks {
             match c {
-                Chunk::Owned(v) => w.write_all(v)?,
-                Chunk::Shared(a) => w.write_all(a)?,
+                Chunk::Owned(v) => out.extend_from_slice(v),
+                Chunk::Shared(a) => out.extend_from_slice(a),
             }
         }
         Ok(())
@@ -171,6 +201,138 @@ impl Frame {
             }
         }
         out
+    }
+}
+
+/// `write_all` over a scatter list: issue `write_vectored` and advance
+/// through partial writes until every byte is gone.  (std's
+/// `Write::write_all_vectored` is unstable; this is the loop it would do.)
+fn write_all_vectored(w: &mut impl Write, parts: &[&[u8]]) -> std::io::Result<()> {
+    let mut idx = 0; // first part not fully written
+    let mut off = 0; // bytes of parts[idx] already written
+    let mut slices: Vec<IoSlice> = Vec::with_capacity(parts.len());
+    while idx < parts.len() {
+        if parts[idx].len() == off {
+            // empty part (or fully written by the accounting below)
+            idx += 1;
+            off = 0;
+            continue;
+        }
+        slices.clear();
+        slices.push(IoSlice::new(&parts[idx][off..]));
+        slices.extend(parts[idx + 1..].iter().map(|p| IoSlice::new(p)));
+        let mut n = match w.write_vectored(&slices) {
+            Ok(0) => {
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::WriteZero,
+                    "writer accepted zero bytes",
+                ))
+            }
+            Ok(n) => n,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(e),
+        };
+        while n > 0 && idx < parts.len() {
+            let rem = parts[idx].len() - off;
+            if n >= rem {
+                n -= rem;
+                idx += 1;
+                off = 0;
+            } else {
+                off += n;
+                n = 0;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Default flush threshold for [`CoalescingWriter`] buffers.
+pub const COALESCE_CAPACITY: usize = 16 * 1024;
+
+/// Per-connection send coalescing.  Small frames append to a bounded
+/// buffer; the buffer flushes in one write when
+///
+/// 1. it reaches capacity,
+/// 2. a frame at least as large as the capacity arrives (the buffer
+///    drains first, then the large frame is written through vectored,
+///    skipping the copy), or
+/// 3. the caller reports that no further writer is queued on the
+///    connection (`more_queued == false`).
+///
+/// Rule 3 is the latency bound: a request with nobody behind it is
+/// flushed before `write_frame` returns, so coalescing only ever delays a
+/// frame behind writes that were already queued ahead of it.  A metadata
+/// storm (stat storm, batched resume) pays ~1 syscall per buffer instead
+/// of one per frame.
+pub struct CoalescingWriter<W: Write> {
+    inner: W,
+    buf: Vec<u8>,
+    cap: usize,
+    frames: u64,
+    flushes: u64,
+}
+
+impl<W: Write> CoalescingWriter<W> {
+    pub fn new(inner: W) -> CoalescingWriter<W> {
+        Self::with_capacity(inner, COALESCE_CAPACITY)
+    }
+
+    pub fn with_capacity(inner: W, cap: usize) -> CoalescingWriter<W> {
+        let cap = cap.max(1);
+        CoalescingWriter {
+            inner,
+            buf: Vec::with_capacity(cap),
+            cap,
+            frames: 0,
+            flushes: 0,
+        }
+    }
+
+    /// Queue or write one frame.  `more_queued` is the caller's statement
+    /// that another writer is already waiting on this connection.
+    pub fn write_frame(&mut self, frame: &Frame, more_queued: bool) -> std::io::Result<()> {
+        self.frames += 1;
+        if 4 + frame.body_len() >= self.cap {
+            // large frame: drain the buffer (ordering!), then write through
+            self.flush_buf()?;
+            frame.write_to(&mut self.inner)?;
+            self.flushes += 1;
+        } else {
+            frame.append_to(&mut self.buf)?;
+            if self.buf.len() >= self.cap {
+                self.flush_buf()?;
+            }
+        }
+        if !more_queued {
+            self.flush_buf()?;
+        }
+        Ok(())
+    }
+
+    /// Force out any buffered bytes.
+    pub fn flush(&mut self) -> std::io::Result<()> {
+        self.flush_buf()
+    }
+
+    fn flush_buf(&mut self) -> std::io::Result<()> {
+        if self.buf.is_empty() {
+            return Ok(());
+        }
+        self.inner.write_all(&self.buf)?;
+        self.buf.clear();
+        self.flushes += 1;
+        self.inner.flush()
+    }
+
+    /// `(frames accepted, flushes issued)` — the coalescing win is the
+    /// ratio (bench/test accounting).
+    pub fn counts(&self) -> (u64, u64) {
+        (self.frames, self.flushes)
+    }
+
+    pub fn get_ref(&self) -> &W {
+        &self.inner
     }
 }
 
@@ -408,6 +570,7 @@ pub fn encode_request(corr: u64, from: u32, req: &Request) -> Frame {
             f.put_u8(REQ_DROP_OUTPUT);
             f.put_str(path);
         }
+        Request::InvalidateListings => f.put_u8(REQ_INVALIDATE_LISTINGS),
         Request::Shutdown => f.put_u8(REQ_SHUTDOWN),
     }
     f
@@ -448,6 +611,7 @@ pub fn decode_request(body: &[u8]) -> Result<(u64, u32, Request)> {
         REQ_LIST_OUTPUTS => Request::ListOutputs { dir: r.get_str()? },
         REQ_UNLINK_OUTPUT => Request::UnlinkOutput { path: r.get_str()? },
         REQ_DROP_OUTPUT => Request::DropOutput { path: r.get_str()? },
+        REQ_INVALIDATE_LISTINGS => Request::InvalidateListings,
         REQ_SHUTDOWN => Request::Shutdown,
         t => return Err(FanError::Format(format!("unknown request tag {t}"))),
     };
@@ -675,6 +839,8 @@ mod tests {
         assert!(matches!(req, Request::UnlinkOutput { path } if path == "/u"));
         let (_, _, req) = roundtrip_request(&Request::DropOutput { path: "/g".into() });
         assert!(matches!(req, Request::DropOutput { path } if path == "/g"));
+        let (_, _, req) = roundtrip_request(&Request::InvalidateListings);
+        assert!(matches!(req, Request::InvalidateListings));
         let (_, _, req) = roundtrip_request(&Request::Shutdown);
         assert!(matches!(req, Request::Shutdown));
     }
@@ -904,6 +1070,153 @@ mod tests {
         assert_eq!(corr, 99);
         let (data, _, _) = resp.into_file_data().unwrap();
         assert_eq!(&data[..], &[5u8; 1000]);
+    }
+
+    /// Writer that accepts at most `max` bytes per call — forces the
+    /// vectored write loop through every partial-write path.
+    struct ShortWriter {
+        out: Vec<u8>,
+        max: usize,
+    }
+
+    impl Write for ShortWriter {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            let n = buf.len().min(self.max);
+            self.out.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn write_vectored(&mut self, bufs: &[IoSlice<'_>]) -> std::io::Result<usize> {
+            let mut left = self.max;
+            let mut written = 0;
+            for b in bufs {
+                if left == 0 {
+                    break;
+                }
+                let n = b.len().min(left);
+                self.out.extend_from_slice(&b[..n]);
+                written += n;
+                left -= n;
+            }
+            Ok(written)
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    fn sample_frames() -> Vec<Frame> {
+        let mut frames = Vec::new();
+        for i in 0..40u64 {
+            frames.push(encode_request(
+                i,
+                0,
+                &Request::StatOutput {
+                    path: format!("/ckpt/shard_{i:03}.bin"),
+                },
+            ));
+        }
+        // a payload larger than the test coalescing capacity: must write
+        // through (and stay in order relative to the buffered frames)
+        frames.push(encode_response(
+            99,
+            &Response::FileData {
+                stored: vec![0xAB; 4096].into(),
+                raw_len: 4096,
+                compressed: false,
+            },
+        ));
+        for i in 40..60u64 {
+            frames.push(encode_request(i, 1, &Request::ReadFile {
+                path: format!("/f{i}"),
+            }));
+        }
+        frames
+    }
+
+    fn decode_stream(mut bytes: &[u8]) -> Vec<Vec<u8>> {
+        let mut bodies = Vec::new();
+        while !bytes.is_empty() {
+            let mut cur = std::io::Cursor::new(bytes);
+            let body = read_frame(&mut cur).expect("well-formed stream");
+            let consumed = cur.position() as usize;
+            bytes = &bytes[consumed..];
+            bodies.push(body);
+        }
+        bodies
+    }
+
+    #[test]
+    fn vectored_write_survives_short_writes() {
+        for frame in sample_frames() {
+            for max in [1usize, 3, 7, 64] {
+                let mut w = ShortWriter { out: Vec::new(), max };
+                frame.write_to(&mut w).unwrap();
+                let mut flat = Vec::new();
+                flat.extend_from_slice(&(frame.body_len() as u32).to_le_bytes());
+                flat.extend_from_slice(&frame.to_body_bytes());
+                assert_eq!(w.out, flat, "short-write max {max}");
+            }
+        }
+    }
+
+    #[test]
+    fn coalesced_and_per_frame_sends_decode_identically() {
+        let frames = sample_frames();
+        // per-frame: every frame flushed on its own
+        let mut per_frame: Vec<u8> = Vec::new();
+        for f in &frames {
+            f.write_to(&mut per_frame).unwrap();
+        }
+        // coalesced: writers stay queued until the last frame
+        let mut cw = CoalescingWriter::with_capacity(Vec::new(), 512);
+        for (i, f) in frames.iter().enumerate() {
+            cw.write_frame(f, i + 1 != frames.len()).unwrap();
+        }
+        let (sent, flushes) = cw.counts();
+        assert_eq!(sent, frames.len() as u64);
+        assert!(
+            flushes < sent,
+            "coalescing must batch small frames: {flushes} flushes for {sent} frames"
+        );
+        let coalesced = cw.inner;
+        assert_eq!(coalesced, per_frame, "byte-identical streams");
+        let a = decode_stream(&per_frame);
+        let b = decode_stream(&coalesced);
+        assert_eq!(a.len(), frames.len());
+        assert_eq!(a, b);
+        // the decoded sequence is the original frames, in order
+        for (frame, body) in frames.iter().zip(&a) {
+            assert_eq!(&frame.to_body_bytes(), body);
+        }
+    }
+
+    #[test]
+    fn coalesced_sends_through_a_short_writer_stay_intact() {
+        let frames = sample_frames();
+        let mut cw = CoalescingWriter::with_capacity(
+            ShortWriter { out: Vec::new(), max: 5 },
+            512,
+        );
+        for (i, f) in frames.iter().enumerate() {
+            cw.write_frame(f, i + 1 != frames.len()).unwrap();
+        }
+        let out = cw.get_ref().out.clone();
+        let bodies = decode_stream(&out);
+        assert_eq!(bodies.len(), frames.len());
+        for (frame, body) in frames.iter().zip(&bodies) {
+            assert_eq!(&frame.to_body_bytes(), body);
+        }
+    }
+
+    #[test]
+    fn lone_frame_is_flushed_immediately() {
+        // the queue-drained rule: nobody behind you -> no added latency
+        let mut cw = CoalescingWriter::with_capacity(Vec::new(), 1 << 20);
+        let f = encode_request(1, 0, &Request::ReadFile { path: "/x".into() });
+        cw.write_frame(&f, false).unwrap();
+        assert_eq!(cw.get_ref().len(), 4 + f.body_len(), "no bytes held back");
     }
 
     #[test]

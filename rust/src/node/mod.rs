@@ -53,6 +53,16 @@ pub struct NodeStats {
     /// `StatOutput` round trips avoided by the committed-output metadata
     /// cache on this (reading) node.
     pub output_meta_hits: u64,
+    /// `readdir` gathers answered from this node's generation-stamped
+    /// listing cache (no `ListOutputs` round trips at all).
+    pub readdir_cache_hits: u64,
+    /// Spilled-partition reads by mode (zero without `spill_dir`); see
+    /// `storage::disk::SpillReadMode`.  Populated only by
+    /// `NodeShared::stats_snapshot` (the counters live in the store, not
+    /// in `AtomicNodeStats`).
+    pub spill_reads_reopen: u64,
+    pub spill_reads_pread: u64,
+    pub spill_reads_mmap: u64,
     pub bytes_read_local: u64,
     pub bytes_served_remote: u64,
     pub bytes_fetched_remote: u64,
@@ -70,6 +80,7 @@ pub struct AtomicNodeStats {
     pub remote_reads_issued: AtomicU64,
     pub batched_reads_served: AtomicU64,
     pub output_meta_hits: AtomicU64,
+    pub readdir_cache_hits: AtomicU64,
     pub bytes_read_local: AtomicU64,
     pub bytes_served_remote: AtomicU64,
     pub bytes_fetched_remote: AtomicU64,
@@ -81,6 +92,11 @@ pub struct AtomicNodeStats {
 impl AtomicNodeStats {
     /// Consistent-enough snapshot for reports (individual counters are
     /// exact; cross-counter skew is possible while traffic is in flight).
+    ///
+    /// The `spill_reads_*` fields are NOT populated here — they are
+    /// tallied inside `DiskStore`, which this struct cannot reach.  Use
+    /// [`NodeShared::stats_snapshot`] for the full view (the shutdown
+    /// report does); this snapshot reports them as zero.
     pub fn snapshot(&self) -> NodeStats {
         let ld = |c: &AtomicU64| c.load(Ordering::Relaxed);
         NodeStats {
@@ -89,6 +105,11 @@ impl AtomicNodeStats {
             remote_reads_issued: ld(&self.remote_reads_issued),
             batched_reads_served: ld(&self.batched_reads_served),
             output_meta_hits: ld(&self.output_meta_hits),
+            readdir_cache_hits: ld(&self.readdir_cache_hits),
+            // tallied inside DiskStore; merged by NodeShared::stats_snapshot
+            spill_reads_reopen: 0,
+            spill_reads_pread: 0,
+            spill_reads_mmap: 0,
             bytes_read_local: ld(&self.bytes_read_local),
             bytes_served_remote: ld(&self.bytes_served_remote),
             bytes_fetched_remote: ld(&self.bytes_fetched_remote),
@@ -141,6 +162,8 @@ impl NodeBuilder {
             output_meta_cache: RwLock::new(HashMap::new()),
             output_gen: RwLock::new(HashMap::new()),
             commit_seq: AtomicU64::new(1),
+            readdir_cache: RwLock::new(HashMap::new()),
+            listing_gen: AtomicU64::new(0),
             stats: AtomicNodeStats::default(),
         })
     }
@@ -182,6 +205,16 @@ pub struct NodeShared {
     /// Monotonic commit-generation source for outputs homed on this node;
     /// `serve(CommitOutput)` stamps each landed commit from it.
     pub commit_seq: AtomicU64,
+    /// Generation-stamped cache of fully merged `readdir` listings (input
+    /// names + the cluster-wide `ListOutputs` gather), so a steady-state
+    /// listing is a local lookup.  Any commit/unlink invalidates it: the
+    /// local serve path directly, remote mutators via the writer's
+    /// `InvalidateListings` broadcast (see `FanStoreVfs`).
+    pub readdir_cache: RwLock<HashMap<String, Arc<Vec<String>>>>,
+    /// Invalidation watermark for `readdir_cache`: bumped by every
+    /// invalidation; a gather stamped with an older value may not install
+    /// its (possibly stale) listing.
+    pub listing_gen: AtomicU64,
     pub stats: AtomicNodeStats,
 }
 
@@ -203,6 +236,47 @@ pub struct BatchedFetch {
 }
 
 impl NodeShared {
+    /// Full accounting snapshot: the atomic counters plus the store's
+    /// per-mode spilled-read tallies.
+    pub fn stats_snapshot(&self) -> NodeStats {
+        let mut s = self.stats.snapshot();
+        let (reopen, pread, mmap) = self.store.spill_read_counts();
+        s.spill_reads_reopen = reopen;
+        s.spill_reads_pread = pread;
+        s.spill_reads_mmap = mmap;
+        s
+    }
+
+    /// Current watermark of the listing cache (sample it *before* starting
+    /// a gather; pass it back to [`NodeShared::install_listing`]).
+    pub fn listing_generation(&self) -> u64 {
+        self.listing_gen.load(Ordering::Acquire)
+    }
+
+    /// Drop every cached listing and advance the generation, so a gather
+    /// that started before this point can no longer install a stale entry.
+    pub fn invalidate_listings(&self) {
+        let mut cache = self.readdir_cache.write().unwrap();
+        self.listing_gen.fetch_add(1, Ordering::AcqRel);
+        cache.clear();
+    }
+
+    /// Install a gathered listing for `dir` unless an invalidation has
+    /// happened since the caller sampled `gen` (both the stamp check and
+    /// the insert happen under the cache lock, so they are atomic with
+    /// respect to `invalidate_listings`).
+    pub fn install_listing(&self, dir: &str, gen: u64, names: &[String]) {
+        let mut cache = self.readdir_cache.write().unwrap();
+        if self.listing_gen.load(Ordering::Acquire) == gen {
+            cache.insert(dir.to_string(), Arc::new(names.to_vec()));
+        }
+    }
+
+    /// Cached merged listing for `dir`, if the cache holds a fresh one.
+    pub fn cached_listing(&self, dir: &str) -> Option<Arc<Vec<String>>> {
+        self.readdir_cache.read().unwrap().get(dir).cloned()
+    }
+
     /// Serve a peer's request (also used directly for self-requests so the
     /// local path does not pay a channel round trip).  Takes `&self`: the
     /// worker thread and any number of VFS clients call this concurrently.
@@ -269,6 +343,8 @@ impl NodeShared {
                 let mut meta = meta.clone();
                 meta.generation = self.commit_seq.fetch_add(1, Ordering::Relaxed);
                 self.output_meta.write().unwrap().insert(path, meta);
+                // a new name is listable: cached listings are stale now
+                self.invalidate_listings();
                 Response::Ok
             }
             Request::ListOutputs { dir } => {
@@ -289,6 +365,7 @@ impl NodeShared {
                         self.cache.invalidate(path);
                         self.output_meta_cache.write().unwrap().remove(path.as_str());
                         self.output_gen.write().unwrap().remove(path.as_str());
+                        self.invalidate_listings();
                         Response::Meta {
                             stat: meta.stat,
                             origin: meta.location.node,
@@ -305,6 +382,13 @@ impl NodeShared {
                 self.cache.invalidate(path);
                 self.output_meta_cache.write().unwrap().remove(path.as_str());
                 self.output_gen.write().unwrap().remove(path.as_str());
+                Response::Ok
+            }
+            Request::InvalidateListings => {
+                // a commit/unlink landed somewhere in the cluster: retire
+                // this node's cached listings (the writer awaits the acks,
+                // so listings taken after its mutation re-gather)
+                self.invalidate_listings();
                 Response::Ok
             }
             Request::Shutdown => Response::Ok,
@@ -943,6 +1027,44 @@ mod tests {
             node.serve(&Request::DropOutput { path: "/o/x".into() }),
             Response::Ok
         ));
+    }
+
+    #[test]
+    fn listing_cache_generation_stamp_rejects_stale_fills() {
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        let names = vec!["a.bin".to_string()];
+        let g = node.listing_generation();
+        node.install_listing("/d", g, &names);
+        assert_eq!(&node.cached_listing("/d").unwrap()[..], &names[..]);
+        // a commit invalidates and advances the generation...
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 3),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 3,
+                compressed: false,
+            },
+            generation: 0,
+        };
+        node.serve(&Request::CommitOutput { path: "/d/b".into(), meta });
+        assert!(node.cached_listing("/d").is_none());
+        // ...so a gather stamped before the commit cannot install stale data
+        node.install_listing("/d", g, &names);
+        assert!(node.cached_listing("/d").is_none(), "stale fill rejected");
+        // the broadcast request invalidates too
+        let g2 = node.listing_generation();
+        node.install_listing("/d", g2, &names);
+        assert!(node.cached_listing("/d").is_some());
+        assert!(matches!(node.serve(&Request::InvalidateListings), Response::Ok));
+        assert!(node.cached_listing("/d").is_none());
+        assert!(node.listing_generation() > g2);
+        // unlink invalidates as well
+        node.install_listing("/d", node.listing_generation(), &names);
+        node.serve(&Request::UnlinkOutput { path: "/d/b".into() });
+        assert!(node.cached_listing("/d").is_none());
     }
 
     #[test]

@@ -14,6 +14,18 @@
 //! `Arc<dyn Transport>`, so the same pipeline runs over mpsc channels or
 //! real TCP sockets.
 //!
+//! # Scheduling (interned, index-based)
+//!
+//! Epoch schedules go through an [`EpochPathTable`]: the caller interns
+//! the path set once (`Arc<str>` per distinct path) and pushes the epoch's
+//! access order as `u32` indices.  The queue holds `(table, index)` pairs
+//! and every membership structure (queued/stolen/slots multiset) keys on
+//! `Arc<str>` clones into the table, so scheduling a million-file epoch
+//! costs one table build plus index pushes — no per-path `String` clone
+//! anywhere on the queue path.  Paths materialize as `String`s only at
+//! pickup time (≤ `max_batch` at once) because the wire protocol carries
+//! owned strings.
+//!
 //! # Backpressure
 //!
 //! The engine never holds more than `window` unclaimed pins: `inflight`
@@ -133,6 +145,65 @@ impl AtomicPrefetchStats {
     }
 }
 
+/// Interned epoch access order: every path stored once as an `Arc<str>`,
+/// addressed by its dense `u32` index.  Build one per epoch (or one per
+/// run when the path set is stable) and schedule *indices* through
+/// [`PrefetchHandle::schedule_table`]: the queue then holds bare
+/// `(table, index)` pairs and the membership multiset clones `Arc`
+/// handles, so scheduling a million-file epoch performs zero per-path
+/// `String` clones.
+pub struct EpochPathTable {
+    paths: Vec<Arc<str>>,
+    /// path → first index (dedup at build time + reverse lookups).
+    index: HashMap<Arc<str>, u32>,
+}
+
+impl EpochPathTable {
+    /// Intern `paths` in order; duplicate paths share one allocation but
+    /// keep their positional slots (so caller-side sampler indices map 1:1).
+    pub fn from_paths<I>(paths: I) -> EpochPathTable
+    where
+        I: IntoIterator,
+        I::Item: AsRef<str>,
+    {
+        let mut table = EpochPathTable {
+            paths: Vec::new(),
+            index: HashMap::new(),
+        };
+        for p in paths {
+            let p = p.as_ref();
+            let interned = match table.index.get(p) {
+                Some(&i) => Arc::clone(&table.paths[i as usize]),
+                None => {
+                    let a: Arc<str> = Arc::from(p);
+                    table.index.insert(Arc::clone(&a), table.paths.len() as u32);
+                    a
+                }
+            };
+            table.paths.push(interned);
+        }
+        table
+    }
+
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+
+    /// The interned path at `idx`.
+    pub fn path(&self, idx: u32) -> Option<&Arc<str>> {
+        self.paths.get(idx as usize)
+    }
+
+    /// First index of `path`, if interned here.
+    pub fn index_of(&self, path: &str) -> Option<u32> {
+        self.index.get(path).copied()
+    }
+}
+
 /// A picked path's lifecycle entry.
 enum Slot {
     /// A fetcher is working on it right now.
@@ -143,16 +214,29 @@ enum Slot {
     Failed,
 }
 
+/// One live scheduled table: the shared paths plus how many queue entries
+/// still reference it (retired when the last entry pops).
+struct TableSlot {
+    table: Arc<EpochPathTable>,
+    remaining: u64,
+}
+
 #[derive(Default)]
 struct PfState {
-    /// Scheduled, not yet picked up (FIFO = the trainer's access order).
-    queue: VecDeque<String>,
+    /// Scheduled, not yet picked up (FIFO = the trainer's access order):
+    /// `(table id, path index)` — 8 bytes per entry, no path clones.
+    queue: VecDeque<(u32, u32)>,
+    /// Live schedule tables by id (typically one or two: the current
+    /// epoch, plus the next one's head once cross-epoch scheduling lands).
+    tables: HashMap<u32, TableSlot>,
+    next_table: u32,
     /// Multiset view of `queue` for O(1) membership on the claim path.
-    queued: HashMap<String, u32>,
+    /// Keys are `Arc` clones into the tables, never fresh strings.
+    queued: HashMap<Arc<str>, u32>,
     /// Queue entries a reader stole back; fetchers skip them on pop.
-    stolen: HashMap<String, u32>,
+    stolen: HashMap<Arc<str>, u32>,
     /// Picked paths: in flight, ready, or failed.
-    slots: HashMap<String, Slot>,
+    slots: HashMap<Arc<str>, Slot>,
     /// Pending + Ready slots — the pins/window currently held.
     inflight: usize,
     shutdown: bool,
@@ -250,6 +334,7 @@ impl Drop for Prefetcher {
         let mut st = self.inner.state.lock().unwrap();
         let slots = std::mem::take(&mut st.slots);
         st.queue.clear();
+        st.tables.clear();
         st.queued.clear();
         st.stolen.clear();
         st.inflight = 0;
@@ -265,11 +350,16 @@ impl Drop for Prefetcher {
 }
 
 impl PrefetchHandle {
-    /// Append `paths` (the upcoming access sequence, in read order) to the
-    /// fetch queue.  Duplicates are legal; redundant fetches coalesce.
-    pub fn schedule<I>(&self, paths: I)
+    /// Append the access order `order` (indices into `table`) to the fetch
+    /// queue.  Duplicates are legal; redundant fetches coalesce.  The
+    /// queue stores `(table, index)` pairs and the membership multiset
+    /// clones `Arc<str>` handles out of the table, so an epoch-scale
+    /// schedule costs the (caller-owned, reusable) table build plus index
+    /// pushes — zero per-path `String` clones.  Out-of-range indices are
+    /// ignored.
+    pub fn schedule_table<I>(&self, table: &Arc<EpochPathTable>, order: I)
     where
-        I: IntoIterator<Item = String>,
+        I: IntoIterator<Item = u32>,
     {
         let mut n = 0u64;
         {
@@ -277,14 +367,40 @@ impl PrefetchHandle {
             if st.shutdown {
                 return;
             }
-            for p in paths {
-                *st.queued.entry(p.clone()).or_insert(0) += 1;
-                st.queue.push_back(p);
+            let tid = st.next_table;
+            for idx in order {
+                let Some(path) = table.path(idx) else { continue };
+                let path = Arc::clone(path);
+                *st.queued.entry(path).or_insert(0) += 1;
+                st.queue.push_back((tid, idx));
                 n += 1;
+            }
+            if n > 0 {
+                st.next_table = st.next_table.wrapping_add(1);
+                st.tables.insert(
+                    tid,
+                    TableSlot {
+                        table: Arc::clone(table),
+                        remaining: n,
+                    },
+                );
             }
         }
         self.inner.stats.scheduled.fetch_add(n, Ordering::Relaxed);
         self.inner.work_cv.notify_all();
+    }
+
+    /// Convenience for small schedules and tests: intern `paths` into a
+    /// fresh table and schedule it in order.  Epoch-scale callers build
+    /// one [`EpochPathTable`] up front and use
+    /// [`PrefetchHandle::schedule_table`] with sampler indices.
+    pub fn schedule<I>(&self, paths: I)
+    where
+        I: IntoIterator<Item = String>,
+    {
+        let table = EpochPathTable::from_paths(paths);
+        let n = table.len() as u32;
+        self.schedule_table(&Arc::new(table), 0..n);
     }
 
     /// Claim `path` from the pipeline (see the module-level protocol).
@@ -330,18 +446,20 @@ impl PrefetchHandle {
                     return None;
                 }
                 Act::TrySteal => {
-                    let was_queued = match st.queued.get_mut(path) {
-                        Some(c) if *c > 0 => {
-                            *c -= 1;
-                            if *c == 0 {
-                                st.queued.remove(path);
-                            }
-                            true
+                    // clone the interned key out of the multiset instead of
+                    // allocating a fresh string for the stolen marker
+                    let key = st
+                        .queued
+                        .get_key_value(path)
+                        .filter(|(_, c)| **c > 0)
+                        .map(|(k, _)| Arc::clone(k));
+                    if let Some(key) = key {
+                        let c = st.queued.get_mut(path).expect("key just found");
+                        *c -= 1;
+                        if *c == 0 {
+                            st.queued.remove(path);
                         }
-                        _ => false,
-                    };
-                    if was_queued {
-                        *st.stolen.entry(path.to_string()).or_insert(0) += 1;
+                        *st.stolen.entry(key).or_insert(0) += 1;
                         self.inner.stats.stolen.fetch_add(1, Ordering::Relaxed);
                     }
                     return None;
@@ -373,30 +491,48 @@ fn fetch_loop(inner: &Inner) {
             }
             let room = inner.window - st.inflight;
             let take = room.min(inner.max_batch);
-            let mut picked = Vec::with_capacity(take);
+            let mut picked: Vec<Arc<str>> = Vec::with_capacity(take);
             while picked.len() < take {
-                let Some(p) = st.queue.pop_front() else { break };
+                let Some((tid, idx)) = st.queue.pop_front() else { break };
+                // resolve the interned path; retire the table slot once
+                // its last queue entry pops
+                let (p, drained) = {
+                    let slot = st
+                        .tables
+                        .get_mut(&tid)
+                        .expect("queued entry's table is live");
+                    let p = slot
+                        .table
+                        .path(idx)
+                        .cloned()
+                        .expect("queued index validated at schedule time");
+                    slot.remaining -= 1;
+                    (p, slot.remaining == 0)
+                };
+                if drained {
+                    st.tables.remove(&tid);
+                }
                 // claimed back by a reader before we got here?
-                if let Some(c) = st.stolen.get_mut(&p) {
+                if let Some(c) = st.stolen.get_mut(&*p) {
                     *c -= 1;
                     if *c == 0 {
-                        st.stolen.remove(&p);
+                        st.stolen.remove(&*p);
                     }
                     continue;
                 }
-                if let Some(c) = st.queued.get_mut(&p) {
+                if let Some(c) = st.queued.get_mut(&*p) {
                     *c -= 1;
                     if *c == 0 {
-                        st.queued.remove(&p);
+                        st.queued.remove(&*p);
                     }
                 }
-                if st.slots.contains_key(&p) {
+                if st.slots.contains_key(&*p) {
                     // an earlier schedule of the same path is in flight or
                     // unclaimed — a second fetch buys nothing
                     inner.stats.coalesced.fetch_add(1, Ordering::Relaxed);
                     continue;
                 }
-                st.slots.insert(p.clone(), Slot::Pending);
+                st.slots.insert(Arc::clone(&p), Slot::Pending);
                 st.inflight += 1;
                 picked.push(p);
             }
@@ -416,16 +552,24 @@ fn fetch_loop(inner: &Inner) {
 /// Fetch one pickup through the node's shared batched-fetch body (cache
 /// acquire, overlapped local reads, one batched request per peer), then
 /// mark the slots with the outcomes.
-fn fetch_batch(inner: &Inner, picked: Vec<String>) {
-    let mut done: Vec<(String, Option<Arc<[u8]>>)> = Vec::with_capacity(picked.len());
+///
+/// The wire protocol carries `String` paths, so the picked interned
+/// handles materialize here — a bounded `≤ max_batch` conversion at fetch
+/// time, not an epoch-scale one on the schedule path.
+fn fetch_batch(inner: &Inner, picked: Vec<Arc<str>>) {
+    let mut done: Vec<(Arc<str>, Option<Arc<[u8]>>)> = Vec::with_capacity(picked.len());
     let mut items: Vec<(String, crate::metadata::record::FileLocation)> = Vec::new();
+    let mut fetched: Vec<Arc<str>> = Vec::new();
     for p in picked {
         match inner.shared.input_meta.get(&p) {
             // not an input file: fail WITHOUT touching the cache — the
             // reader's fallback handles outputs, and a fetchless acquire
             // here would skew the node-wide miss/fetch algebra
             None => done.push((p, None)),
-            Some(m) => items.push((p, m.location)),
+            Some(m) => {
+                items.push((p.to_string(), m.location));
+                fetched.push(p);
+            }
         }
     }
 
@@ -437,6 +581,13 @@ fn fetch_batch(inner: &Inner, picked: Vec<String>) {
         .batches_issued
         .fetch_add(batch.remote_batches, Ordering::Relaxed);
     for (p, outcome) in batch.outcomes {
+        // map the outcome's String path back to its interned handle
+        // (linear scan over ≤ max_batch entries)
+        let key = fetched
+            .iter()
+            .find(|a| a.as_ref() == p.as_str())
+            .cloned()
+            .expect("every outcome corresponds to a picked path");
         match outcome {
             Ok((pin, src)) => {
                 // exactly one cache acquire happened per picked input (hit
@@ -448,11 +599,11 @@ fn fetch_batch(inner: &Inner, picked: Vec<String>) {
                     FetchSource::Remote => &inner.stats.fetched_remote,
                 };
                 ctr.fetch_add(1, Ordering::Relaxed);
-                done.push((p, Some(pin)));
+                done.push((key, Some(pin)));
             }
             // fetch failed (ENOENT, fault, dead peer, decode error):
             // readers fall back synchronously and surface the real error
-            Err(_) => done.push((p, None)),
+            Err(_) => done.push((key, None)),
         }
     }
 
@@ -597,6 +748,56 @@ mod tests {
         let pin = h.wait(&paths[0]).expect("ready slot");
         shared.cache.release(&paths[0], &pin);
         assert!(h.wait(&paths[0]).is_none(), "second claim falls back");
+        drop(pf);
+        assert_eq!(shared.cache.resident_files(), 0);
+    }
+
+    #[test]
+    fn epoch_table_interns_and_indexes() {
+        let dup = EpochPathTable::from_paths(["/a", "/b", "/a", "/c", "/b"]);
+        assert_eq!(dup.len(), 5);
+        assert!(!dup.is_empty());
+        // duplicates share one allocation but keep positional slots
+        assert!(Arc::ptr_eq(dup.path(0).unwrap(), dup.path(2).unwrap()));
+        assert!(Arc::ptr_eq(dup.path(1).unwrap(), dup.path(4).unwrap()));
+        assert_eq!(dup.index_of("/a"), Some(0));
+        assert_eq!(dup.index_of("/c"), Some(3));
+        assert_eq!(dup.index_of("/nope"), None);
+        assert!(dup.path(5).is_none());
+    }
+
+    #[test]
+    fn schedule_table_runs_on_indices() {
+        let (shared, tp, paths) = one_node(6);
+        let table = Arc::new(EpochPathTable::from_paths(&paths));
+        assert_eq!(table.len(), 6);
+        let pf = Prefetcher::spawn(0, Arc::clone(&shared), tp, PrefetchConfig::default());
+        let h = pf.handle();
+        // out-of-range indices are skipped; valid ones are scheduled
+        h.schedule_table(&table, vec![2u32, 0, 99, 4]);
+        assert_eq!(h.stats().scheduled, 3);
+        assert!(
+            poll_until(
+                || {
+                    let s = h.stats();
+                    s.prehits + s.fetched_local + s.stolen + s.failed >= 3
+                },
+                3000
+            ),
+            "{:?}",
+            h.stats()
+        );
+        let mut claimed = 0;
+        for i in [2usize, 0, 4] {
+            if let Some(pin) = h.wait(&paths[i]) {
+                assert_eq!(&pin[..], &vec![(i % 251) as u8; 64 + i][..]);
+                shared.cache.release(&paths[i], &pin);
+                claimed += 1;
+            }
+        }
+        assert_eq!(h.stats().claimed, claimed);
+        // a path in the table but never scheduled falls straight back
+        assert!(h.wait(&paths[1]).is_none());
         drop(pf);
         assert_eq!(shared.cache.resident_files(), 0);
     }

@@ -6,15 +6,141 @@
 //! index of path → (partition, offset, stored_len, compressed, raw_len),
 //! and optional spill to an actual directory on disk (tmpfs/SSD) so the
 //! in-proc cluster exercises real file I/O when asked to.
+//!
+//! # Spilled-read modes
+//!
+//! Spilled partitions keep a persistent handle per blob, so a stored-range
+//! read costs ([`SpillReadMode`]):
+//!
+//! | mode     | syscalls per read | mechanism |
+//! |----------|-------------------|-----------|
+//! | `Mmap`   | 0                 | memcpy out of the mapped region |
+//! | `Pread`  | 1                 | positioned read on the pooled fd |
+//! | `Reopen` | 4 (open/seek/read/close) | the pre-pool baseline, kept for comparison |
+//!
+//! The map is created with raw libc syscalls (no crates.io in this build);
+//! if mapping fails the partition silently degrades to pooled `pread`.
+//! Per-mode read counters are exposed via [`DiskStore::spill_read_counts`]
+//! and surface in `NodeStats`.
 
 use std::collections::HashMap;
 use std::fs;
 use std::path::PathBuf;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::FileStat;
 use crate::partition::format::PartitionReader;
+
+/// How stored ranges are read back out of spilled partition files.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SpillReadMode {
+    /// open + seek + read + close per read (baseline; measurably slower).
+    Reopen,
+    /// One positioned read per range on a persistent per-partition handle.
+    #[default]
+    Pread,
+    /// Zero-syscall memcpy out of an `mmap`'d region (falls back to
+    /// `Pread` per partition if the map cannot be created).
+    Mmap,
+}
+
+impl SpillReadMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SpillReadMode::Reopen => "reopen",
+            SpillReadMode::Pread => "pread",
+            SpillReadMode::Mmap => "mmap",
+        }
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(s: &str) -> Option<SpillReadMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "reopen" => Some(SpillReadMode::Reopen),
+            "pread" => Some(SpillReadMode::Pread),
+            "mmap" => Some(SpillReadMode::Mmap),
+            _ => None,
+        }
+    }
+}
+
+/// Read-only memory map of one spilled partition file, created with raw
+/// libc syscalls (the build has no crates.io, so no `memmap` crate).
+/// Unmapped exactly once, on drop.
+#[cfg(unix)]
+mod mmap_region {
+    use std::fs;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+
+    const PROT_READ: i32 = 1;
+    const MAP_SHARED: i32 = 1;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut u8,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut u8;
+        fn munmap(addr: *mut u8, len: usize) -> i32;
+    }
+
+    pub struct MmapRegion {
+        ptr: *mut u8,
+        len: usize,
+    }
+
+    // The region is written before mapping, never mutated after, and
+    // unmapped once on Drop — shared &[u8] views are safe across threads.
+    unsafe impl Send for MmapRegion {}
+    unsafe impl Sync for MmapRegion {}
+
+    impl MmapRegion {
+        pub fn map(file: &fs::File) -> io::Result<MmapRegion> {
+            let len = file.metadata()?.len() as usize;
+            if len == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    "cannot map an empty partition",
+                ));
+            }
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_SHARED,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            Ok(MmapRegion { ptr, len })
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+        }
+    }
+
+    impl Drop for MmapRegion {
+        fn drop(&mut self) {
+            unsafe {
+                munmap(self.ptr, self.len);
+            }
+        }
+    }
+}
+
+#[cfg(unix)]
+use mmap_region::MmapRegion;
 
 /// Index entry for one stored file.
 #[derive(Clone, Copy, Debug)]
@@ -26,13 +152,52 @@ pub struct StoredAt {
     pub compressed: bool,
 }
 
+/// Persistent read handles for one spilled partition: the blob path (for
+/// `Reopen`), the pooled fd (`Pread` — positioned reads need no per-call
+/// seek and share the handle lock-free), and the optional mapped region.
+struct SpillFile {
+    path: PathBuf,
+    file: fs::File,
+    #[cfg(unix)]
+    map: Option<MmapRegion>,
+}
+
+impl SpillFile {
+    fn open(path: PathBuf, mode: SpillReadMode) -> Result<SpillFile> {
+        let file = fs::File::open(&path)?;
+        #[cfg(unix)]
+        let map = if mode == SpillReadMode::Mmap {
+            // a partition that cannot be mapped degrades to pooled pread
+            MmapRegion::map(&file).ok()
+        } else {
+            None
+        };
+        #[cfg(not(unix))]
+        let _ = mode;
+        Ok(SpillFile {
+            path,
+            file,
+            #[cfg(unix)]
+            map,
+        })
+    }
+}
+
 /// Backing for partition blobs.
 enum Backing {
     /// Blob kept in RAM (fast mode for tests and the simulator's "real
     /// logic" checks).
     Ram(Vec<u8>),
-    /// Blob spilled to a file (real-I/O mode).
-    File(PathBuf),
+    /// Blob spilled to a file (real-I/O mode) with persistent handles.
+    File(SpillFile),
+}
+
+/// Relaxed per-mode spilled-read tallies (merged into `NodeStats`).
+#[derive(Debug, Default)]
+struct SpillReadCounters {
+    reopen: AtomicU64,
+    pread: AtomicU64,
+    mmap: AtomicU64,
 }
 
 /// A node's local store: dumped partitions + the path index.
@@ -41,6 +206,8 @@ pub struct DiskStore {
     index: HashMap<String, StoredAt>,
     stats: HashMap<String, FileStat>,
     spill_dir: Option<PathBuf>,
+    spill_mode: SpillReadMode,
+    spill_counts: SpillReadCounters,
     bytes_stored: u64,
 }
 
@@ -52,13 +219,20 @@ impl DiskStore {
             index: HashMap::new(),
             stats: HashMap::new(),
             spill_dir: None,
+            spill_mode: SpillReadMode::default(),
+            spill_counts: SpillReadCounters::default(),
             bytes_stored: 0,
         }
     }
 
     /// Store that spills partition blobs to `dir` and reads them back with
-    /// real file I/O.
+    /// real file I/O (default [`SpillReadMode`]).
     pub fn on_disk(dir: impl Into<PathBuf>) -> Result<Self> {
+        Self::on_disk_with_mode(dir, SpillReadMode::default())
+    }
+
+    /// [`DiskStore::on_disk`] with an explicit spilled-read mode.
+    pub fn on_disk_with_mode(dir: impl Into<PathBuf>, mode: SpillReadMode) -> Result<Self> {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
         Ok(DiskStore {
@@ -66,8 +240,23 @@ impl DiskStore {
             index: HashMap::new(),
             stats: HashMap::new(),
             spill_dir: Some(dir),
+            spill_mode: mode,
+            spill_counts: SpillReadCounters::default(),
             bytes_stored: 0,
         })
+    }
+
+    pub fn spill_read_mode(&self) -> SpillReadMode {
+        self.spill_mode
+    }
+
+    /// Spilled reads served since launch as `(reopen, pread, mmap)`.
+    pub fn spill_read_counts(&self) -> (u64, u64, u64) {
+        (
+            self.spill_counts.reopen.load(Ordering::Relaxed),
+            self.spill_counts.pread.load(Ordering::Relaxed),
+            self.spill_counts.mmap.load(Ordering::Relaxed),
+        )
     }
 
     /// Load (dump) one partition blob, indexing every contained file under
@@ -104,7 +293,7 @@ impl DiskStore {
             Some(dir) => {
                 let p = dir.join(format!("partition_{pid:05}.fan"));
                 fs::write(&p, &blob)?;
-                Backing::File(p)
+                Backing::File(SpillFile::open(p, self.spill_mode)?)
             }
         };
         self.partitions.insert(pid, backing);
@@ -133,14 +322,56 @@ impl DiskStore {
         Ok((at, backing))
     }
 
-    /// Read one stored range out of a spilled partition file.
-    fn read_spilled(p: &std::path::Path, at: &StoredAt) -> Result<Vec<u8>> {
-        use std::io::{Read, Seek, SeekFrom};
-        let mut f = fs::File::open(p)?;
-        f.seek(SeekFrom::Start(at.offset))?;
-        let mut buf = vec![0u8; at.stored_len as usize];
-        f.read_exact(&mut buf)?;
-        Ok(buf)
+    /// Read one stored range out of a spilled partition via the configured
+    /// mode: a zero-syscall memcpy from the map, one positioned read on the
+    /// pooled handle, or the open/seek/read baseline.
+    fn read_spilled(&self, sf: &SpillFile, at: &StoredAt) -> Result<Vec<u8>> {
+        let len = at.stored_len as usize;
+        #[cfg(unix)]
+        if let Some(map) = &sf.map {
+            let m = map.as_slice();
+            let off = at.offset as usize;
+            if off.checked_add(len).map(|end| end > m.len()).unwrap_or(true) {
+                return Err(FanError::Format(format!(
+                    "stored range {off}+{len} exceeds mapped partition of {} bytes",
+                    m.len()
+                )));
+            }
+            self.spill_counts.mmap.fetch_add(1, Ordering::Relaxed);
+            return Ok(m[off..off + len].to_vec());
+        }
+        match self.spill_mode {
+            SpillReadMode::Reopen => {
+                use std::io::{Read, Seek, SeekFrom};
+                self.spill_counts.reopen.fetch_add(1, Ordering::Relaxed);
+                let mut f = fs::File::open(&sf.path)?;
+                f.seek(SeekFrom::Start(at.offset))?;
+                let mut buf = vec![0u8; len];
+                f.read_exact(&mut buf)?;
+                Ok(buf)
+            }
+            // Pread, or Mmap whose region could not be created
+            _ => {
+                let mut buf = vec![0u8; len];
+                #[cfg(unix)]
+                {
+                    use std::os::unix::fs::FileExt;
+                    self.spill_counts.pread.fetch_add(1, Ordering::Relaxed);
+                    sf.file.read_exact_at(&mut buf, at.offset)?;
+                }
+                #[cfg(not(unix))]
+                {
+                    // no positioned-read API: this really is a reopen, so
+                    // count it honestly as one
+                    use std::io::{Read, Seek, SeekFrom};
+                    self.spill_counts.reopen.fetch_add(1, Ordering::Relaxed);
+                    let mut f = fs::File::open(&sf.path)?;
+                    f.seek(SeekFrom::Start(at.offset))?;
+                    f.read_exact(&mut buf)?;
+                }
+                Ok(buf)
+            }
+        }
     }
 
     /// Read the *stored* bytes of `path` (compressed bytes when compressed —
@@ -156,7 +387,7 @@ impl DiskStore {
             Backing::Ram(blob) => {
                 Arc::from(&blob[at.offset as usize..(at.offset + at.stored_len) as usize])
             }
-            Backing::File(p) => Self::read_spilled(p, &at)?.into(),
+            Backing::File(sf) => self.read_spilled(sf, &at)?.into(),
         };
         Ok((bytes, at))
     }
@@ -168,7 +399,7 @@ impl DiskStore {
             Backing::Ram(blob) => {
                 blob[at.offset as usize..(at.offset + at.stored_len) as usize].to_vec()
             }
-            Backing::File(p) => Self::read_spilled(p, &at)?,
+            Backing::File(sf) => self.read_spilled(sf, &at)?,
         };
         if at.compressed {
             crate::compress::lzss::decompress(&stored, at.raw_len as usize)
@@ -201,6 +432,30 @@ mod tests {
     use crate::compress::Codec;
     use crate::partition::builder::{build_partitions, InputFile};
     use crate::util::prng::Prng;
+    use std::sync::atomic::AtomicU32;
+
+    /// Unique per-test scratch directory, removed on drop, so concurrent
+    /// tests in one process (or leftovers from a killed run) never collide.
+    struct TestDir(PathBuf);
+
+    impl TestDir {
+        fn new(tag: &str) -> TestDir {
+            static SEQ: AtomicU32 = AtomicU32::new(0);
+            let dir = std::env::temp_dir().join(format!(
+                "fanstore_test_{tag}_{}_{}",
+                std::process::id(),
+                SEQ.fetch_add(1, Ordering::Relaxed)
+            ));
+            std::fs::remove_dir_all(&dir).ok();
+            TestDir(dir)
+        }
+    }
+
+    impl Drop for TestDir {
+        fn drop(&mut self) {
+            std::fs::remove_dir_all(&self.0).ok();
+        }
+    }
 
     fn sample_files(n: usize) -> Vec<InputFile> {
         let mut rng = Prng::new(10);
@@ -236,14 +491,15 @@ mod tests {
             assert_eq!(store.read_raw(&path).unwrap(), f.data, "{path}");
             assert_eq!(store.stat(&path).unwrap().size as usize, f.data.len());
         }
+        assert_eq!(store.spill_read_counts(), (0, 0, 0), "RAM never spills");
     }
 
     #[test]
     fn disk_store_roundtrip() {
-        let dir = std::env::temp_dir().join(format!("fanstore_test_{}", std::process::id()));
+        let dir = TestDir::new("roundtrip");
         let files = sample_files(10);
         let (blobs, _) = build_partitions(&files, 3, Codec::None).unwrap();
-        let mut store = DiskStore::on_disk(&dir).unwrap();
+        let mut store = DiskStore::on_disk(&dir.0).unwrap();
         for (pid, blob) in blobs.into_iter().enumerate() {
             store.load_partition(pid as u32, blob, "/fanstore/u").unwrap();
         }
@@ -251,7 +507,60 @@ mod tests {
             let path = format!("/fanstore/u/{}", f.path);
             assert_eq!(store.read_raw(&path).unwrap(), f.data);
         }
-        std::fs::remove_dir_all(&dir).ok();
+        // default mode pools the handle: one positioned read per file
+        let (reopen, pread, mmap) = store.spill_read_counts();
+        assert_eq!((reopen, mmap), (0, 0));
+        assert_eq!(pread, 10);
+    }
+
+    #[test]
+    fn every_spill_mode_roundtrips_and_counts() {
+        let files = sample_files(12);
+        let (blobs, _) = build_partitions(&files, 2, Codec::Lzss(3)).unwrap();
+        for mode in [
+            SpillReadMode::Reopen,
+            SpillReadMode::Pread,
+            SpillReadMode::Mmap,
+        ] {
+            let dir = TestDir::new(mode.name());
+            let mut store = DiskStore::on_disk_with_mode(&dir.0, mode).unwrap();
+            assert_eq!(store.spill_read_mode(), mode);
+            for (pid, blob) in blobs.iter().enumerate() {
+                store
+                    .load_partition(pid as u32, blob.clone(), "/m")
+                    .unwrap();
+            }
+            for f in &files {
+                let path = format!("/m/{}", f.path);
+                assert_eq!(store.read_raw(&path).unwrap(), f.data, "{mode:?} {path}");
+                let (stored, at) = store.read_stored(&path).unwrap();
+                assert_eq!(at.raw_len as usize, f.data.len());
+                assert_eq!(stored.len() as u64, at.stored_len);
+            }
+            let (reopen, pread, mmap) = store.spill_read_counts();
+            let total = reopen + pread + mmap;
+            assert_eq!(total, 2 * files.len() as u64, "{mode:?}: {total}");
+            match mode {
+                SpillReadMode::Reopen => assert_eq!((pread, mmap), (0, 0)),
+                SpillReadMode::Pread => assert_eq!((reopen, mmap), (0, 0)),
+                // mmap may legitimately fall back to pread on exotic
+                // filesystems, but must never reopen
+                SpillReadMode::Mmap => assert_eq!(reopen, 0),
+            }
+        }
+    }
+
+    #[test]
+    fn spill_mode_parse_roundtrip() {
+        for mode in [
+            SpillReadMode::Reopen,
+            SpillReadMode::Pread,
+            SpillReadMode::Mmap,
+        ] {
+            assert_eq!(SpillReadMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(SpillReadMode::parse("MMAP"), Some(SpillReadMode::Mmap));
+        assert_eq!(SpillReadMode::parse("nope"), None);
     }
 
     #[test]

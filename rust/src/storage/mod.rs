@@ -9,5 +9,5 @@
 pub mod disk;
 pub mod models;
 
-pub use disk::DiskStore;
+pub use disk::{DiskStore, SpillReadMode};
 pub use models::{DeviceProfile, FuseModel, SharedFsModel, SsdModel};

@@ -221,6 +221,11 @@ pub fn train_cnn(
     let pf_handles: Vec<Option<crate::prefetch::PrefetchHandle>> = (0..nodes)
         .map(|n| cfg.prefetch.then(|| cluster.prefetch_handle(n)))
         .collect();
+    // one interned path table for the whole run: per-epoch scheduling
+    // pushes the sampler's u32 indices, never path strings
+    let epoch_table = cfg.prefetch.then(|| {
+        std::sync::Arc::new(crate::prefetch::EpochPathTable::from_paths(train_paths))
+    });
     let mut samplers: Vec<EpochSampler> = (0..nodes)
         .map(|n| match cfg.view {
             DatasetView::Global => EpochSampler::new(train_paths.len(), cfg.seed + n as u64),
@@ -254,13 +259,12 @@ pub fn train_cnn(
         // to the synchronous read path
         let horizon = steps_this_epoch as usize * batch;
         for (node, handle) in pf_handles.iter().enumerate() {
-            if let Some(h) = handle {
-                h.schedule(
-                    samplers[node]
-                        .upcoming()
-                        .iter()
-                        .take(horizon)
-                        .map(|&i| train_paths[i as usize].clone()),
+            if let (Some(h), Some(table)) = (handle, &epoch_table) {
+                // sampler indices ARE table indices (the table was built
+                // from `train_paths` in order)
+                h.schedule_table(
+                    table,
+                    samplers[node].upcoming().iter().take(horizon).copied(),
                 );
             }
         }

@@ -87,6 +87,29 @@ impl FanStoreVfs {
         }
     }
 
+    /// Drop this node's listing cache and tell every peer to do the same.
+    /// Awaited: once this returns, a `readdir` anywhere in the cluster
+    /// re-gathers and sees the mutation that prompted the call.  `home` is
+    /// skipped — its `CommitOutput`/`UnlinkOutput` serve arm already
+    /// invalidated its own listings when the mutation landed there.  Best
+    /// effort per peer — an unreachable node cannot be holding a *fresh*
+    /// stale listing, and it re-gathers once it recovers.
+    fn invalidate_listings_cluster_wide(&self, home: u32) {
+        self.shared.invalidate_listings();
+        let n = self.transport.node_count();
+        let pending: Vec<PendingReply> = (0..n)
+            .filter(|&node| node != self.node_id && node != home)
+            .filter_map(|node| {
+                self.transport
+                    .send(self.node_id, node, Request::InvalidateListings)
+                    .ok()
+            })
+            .collect();
+        for p in pending {
+            let _ = p.wait();
+        }
+    }
+
     /// Fetch + decompress an input file's content, going through the node's
     /// refcount cache.  Returns a pinned Arc (caller must `release` on
     /// close — handled by [`Vfs::close`]).
@@ -404,6 +427,9 @@ impl Vfs for FanStoreVfs {
                     .stats
                     .output_bytes
                     .fetch_add(size, Ordering::Relaxed);
+                // the new name is listable everywhere: retire every node's
+                // cached listings before the close returns
+                self.invalidate_listings_cluster_wide(home);
                 Ok(())
             }
             None => Err(FanError::BadFd(fd)),
@@ -536,6 +562,21 @@ impl Vfs for FanStoreVfs {
 
     fn readdir(&mut self, dir: &str) -> Result<Vec<String>> {
         let dir = normalize(dir);
+        // Steady state: the node's generation-stamped listing cache makes
+        // the whole gather a local lookup.  Any commit/unlink anywhere in
+        // the cluster invalidates it before the mutating call returns (the
+        // writer's awaited `InvalidateListings` broadcast), so a listing
+        // taken after a mutation always re-gathers.
+        if let Some(names) = self.shared.cached_listing(&dir) {
+            self.shared
+                .stats
+                .readdir_cache_hits
+                .fetch_add(1, Ordering::Relaxed);
+            return Ok((*names).clone());
+        }
+        // stamp BEFORE gathering: an invalidation racing this gather bumps
+        // the generation and the stale merge below is not installed
+        let gen = self.shared.listing_generation();
         let mut names: Vec<String> = match self.shared.input_meta.readdir(&dir) {
             Ok(v) => v.to_vec(),
             Err(FanError::NotFound(_)) => Vec::new(),
@@ -573,6 +614,7 @@ impl Vfs for FanStoreVfs {
                 return Err(FanError::NotFound(dir));
             }
         }
+        self.shared.install_listing(&dir, gen, &names);
         Ok(names)
     }
 
@@ -667,6 +709,9 @@ impl Vfs for FanStoreVfs {
                 .transport
                 .call(self.node_id, origin, Request::DropOutput { path });
         }
+        // the name is gone from every listing: retire cached listings
+        // cluster-wide before unlink returns
+        self.invalidate_listings_cluster_wide(home);
         Ok(())
     }
 }

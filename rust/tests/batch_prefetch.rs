@@ -500,10 +500,12 @@ fn stat_many_batches_by_home_and_warms_the_meta_cache() {
     );
     let report = cluster.shutdown();
     let served = report.requests_served;
-    // 5 writes (4 remote-home commits) + 3 StatOutputs gathers (homes 1,2,3)
-    // + nothing else remote: well under one round trip per path
+    // 5 writes (2 land at remote homes) + ≤13 awaited listing-invalidation
+    // broadcasts (N-1 per commit, the already-invalidated home skipped) +
+    // 3 StatOutputs gathers (homes 1,2,3) + nothing else remote: still
+    // well under one stat round trip per path on the resume path itself
     assert!(
-        served <= 12,
+        served <= 12 + 13,
         "stat_many must gather per home, not per path: {served} requests"
     );
 }

@@ -158,6 +158,54 @@ fn readdir_gathers_outputs_from_all_homes() {
 }
 
 #[test]
+fn readdir_listing_cache_hits_and_cluster_wide_invalidation() {
+    let files = dataset(9, 14);
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 3,
+            partitions: 3,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let hits = |node: u32| cluster.node_state(node).stats.snapshot().readdir_cache_hits;
+
+    let mut reader = cluster.client(0);
+    let mut writer = cluster.client(2);
+    writer.write_file("/ckpt/a.bin", b"aa").unwrap();
+
+    // first listing gathers and caches; the repeat is a local lookup
+    assert_eq!(reader.readdir("/ckpt").unwrap(), vec!["a.bin"]);
+    let h0 = hits(0);
+    assert_eq!(reader.readdir("/ckpt").unwrap(), vec!["a.bin"]);
+    assert_eq!(hits(0), h0 + 1, "repeat readdir must hit the cache");
+
+    // a commit from ANY node invalidates the cached listing everywhere
+    writer.write_file("/ckpt/b.bin", b"bb").unwrap();
+    assert_eq!(reader.readdir("/ckpt").unwrap(), vec!["a.bin", "b.bin"]);
+    // a second client on a third node shares the per-node cache
+    let mut sibling = cluster.client(1);
+    assert_eq!(sibling.readdir("/ckpt").unwrap(), vec!["a.bin", "b.bin"]);
+    let h1 = hits(1);
+    assert_eq!(sibling.readdir("/ckpt").unwrap(), vec!["a.bin", "b.bin"]);
+    assert_eq!(hits(1), h1 + 1);
+
+    // unlink from any node invalidates too
+    sibling.unlink("/ckpt/a.bin").unwrap();
+    assert_eq!(reader.readdir("/ckpt").unwrap(), vec!["b.bin"]);
+    assert_eq!(sibling.readdir("/ckpt").unwrap(), vec!["b.bin"]);
+
+    // input listings are cacheable as well
+    let inputs = reader.readdir("/fanstore/user/imagenet-1k").unwrap();
+    assert!(!inputs.is_empty());
+    let h2 = hits(0);
+    assert_eq!(reader.readdir("/fanstore/user/imagenet-1k").unwrap(), inputs);
+    assert_eq!(hits(0), h2 + 1);
+    cluster.shutdown();
+}
+
+#[test]
 fn compressed_cluster_with_spill_to_disk() {
     let spec = DatasetSpec::srgan();
     let files = spec.generate(24, 512, 5);

@@ -1,0 +1,197 @@
+//! Backend equivalence for the syscall-lean data plane: every spilled-read
+//! mode (`Reopen`/`Pread`/`Mmap`) must return byte-identical
+//! `read_stored`/`read_raw` results — equal to the RAM backing — under
+//! 8-thread concurrent reads, and the per-mode counters must tally every
+//! read under the configured mode.  A cluster-level spin proves the
+//! `ClusterConfig::spill_read_mode` knob reaches the node stores and that
+//! the end-to-end read path is unchanged by the backing.
+
+use std::sync::atomic::{AtomicU32, Ordering};
+use std::sync::Arc;
+
+use fanstore::compress::Codec;
+use fanstore::config::ClusterConfig;
+use fanstore::coordinator::Cluster;
+use fanstore::partition::builder::{build_partitions, InputFile};
+use fanstore::storage::disk::{DiskStore, SpillReadMode};
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+
+/// Unique scratch dir, removed on drop (hygiene: concurrent tests in one
+/// process must not collide, leftovers must not poison reruns).
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        static SEQ: AtomicU32 = AtomicU32::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "fanstore_spill_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        TempDir(dir)
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+/// Mixed compressible / incompressible files so both stored-bytes shapes
+/// (compressed and raw) cross every backend.
+fn dataset(n: usize) -> Vec<InputFile> {
+    let mut rng = Prng::new(0x5B1A);
+    (0..n)
+        .map(|i| {
+            let mut data = vec![0u8; 300 + rng.index(2048)];
+            if i % 2 == 0 {
+                rng.fill_bytes(&mut data);
+            } else {
+                data.fill((i % 251) as u8);
+            }
+            InputFile {
+                path: format!("train/c{}/f{i:04}.raw", i % 3),
+                data,
+            }
+        })
+        .collect()
+}
+
+const MODES: [SpillReadMode; 3] = [
+    SpillReadMode::Reopen,
+    SpillReadMode::Pread,
+    SpillReadMode::Mmap,
+];
+
+#[test]
+fn spill_backends_byte_identical_under_concurrent_reads() {
+    let files = dataset(48);
+    let (blobs, _) = build_partitions(&files, 4, Codec::Lzss(3)).unwrap();
+
+    // reference: the RAM backing
+    let mut ram = DiskStore::in_memory();
+    for (pid, b) in blobs.iter().enumerate() {
+        ram.load_partition(pid as u32, b.clone(), "/m").unwrap();
+    }
+    let paths: Arc<Vec<String>> =
+        Arc::new(files.iter().map(|f| format!("/m/{}", f.path)).collect());
+    let expect_stored: Arc<Vec<Vec<u8>>> = Arc::new(
+        paths
+            .iter()
+            .map(|p| ram.read_stored(p).unwrap().0.to_vec())
+            .collect(),
+    );
+    let expect_raw: Arc<Vec<Vec<u8>>> = Arc::new(files.iter().map(|f| f.data.clone()).collect());
+
+    for mode in MODES {
+        let dir = TempDir::new(mode.name());
+        let mut store = DiskStore::on_disk_with_mode(&dir.0, mode).unwrap();
+        for (pid, b) in blobs.iter().enumerate() {
+            store.load_partition(pid as u32, b.clone(), "/m").unwrap();
+        }
+        let store = Arc::new(store);
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let store = Arc::clone(&store);
+            let paths = Arc::clone(&paths);
+            let expect_stored = Arc::clone(&expect_stored);
+            let expect_raw = Arc::clone(&expect_raw);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..paths.len() * 4 {
+                    let k = (t * 11 + i) % paths.len();
+                    let (stored, at) = store.read_stored(&paths[k]).expect("read_stored");
+                    assert_eq!(
+                        &stored[..],
+                        &expect_stored[k][..],
+                        "{} stored bytes diverge on {}",
+                        mode.name(),
+                        paths[k]
+                    );
+                    assert_eq!(at.raw_len as usize, expect_raw[k].len());
+                    assert_eq!(
+                        store.read_raw(&paths[k]).expect("read_raw"),
+                        expect_raw[k],
+                        "{} raw bytes diverge on {}",
+                        mode.name(),
+                        paths[k]
+                    );
+                }
+            }));
+        }
+        for h in handles {
+            h.join().expect("no reader thread panicked");
+        }
+        // every spilled read tallied under the configured mode: 8 threads
+        // × 4 rounds × paths, twice per iteration (read_stored + read_raw)
+        let (reopen, pread, mmap) = store.spill_read_counts();
+        let expected = 8 * 4 * paths.len() as u64 * 2;
+        assert_eq!(reopen + pread + mmap, expected, "{}", mode.name());
+        match mode {
+            SpillReadMode::Reopen => assert_eq!((pread, mmap), (0, 0)),
+            SpillReadMode::Pread => assert_eq!((reopen, mmap), (0, 0)),
+            // mmap may fall back to pread if mapping is unavailable, but
+            // must never reopen per read
+            SpillReadMode::Mmap => {
+                assert_eq!(reopen, 0);
+                assert!(mmap > 0 || pread > 0);
+            }
+        }
+    }
+}
+
+#[test]
+fn cluster_reads_identical_across_spill_modes() {
+    let files = dataset(24);
+    let mut digests: Vec<(String, Vec<Vec<u8>>)> = Vec::new();
+    for mode in MODES {
+        let dir = TempDir::new(&format!("cluster_{}", mode.name()));
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 3,
+                partitions: 6,
+                codec: Codec::Lzss(3),
+                spill_dir: Some(dir.0.to_string_lossy().into_owned()),
+                spill_read_mode: mode,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut vfs = cluster.client(0);
+        let contents: Vec<Vec<u8>> = files
+            .iter()
+            .map(|f| vfs.read_all(&format!("/fanstore/user/{}", f.path)).unwrap())
+            .collect();
+        drop(vfs);
+        let report = cluster.shutdown();
+        // the knob reached the stores: reads landed on the right counter
+        let spills: (u64, u64, u64) = report.per_node.iter().fold((0, 0, 0), |acc, s| {
+            (
+                acc.0 + s.spill_reads_reopen,
+                acc.1 + s.spill_reads_pread,
+                acc.2 + s.spill_reads_mmap,
+            )
+        });
+        let total = spills.0 + spills.1 + spills.2;
+        assert!(total > 0, "{}: spilled reads must be counted", mode.name());
+        match mode {
+            SpillReadMode::Reopen => assert_eq!((spills.1, spills.2), (0, 0)),
+            SpillReadMode::Pread => assert_eq!((spills.0, spills.2), (0, 0)),
+            SpillReadMode::Mmap => assert_eq!(spills.0, 0),
+        }
+        digests.push((mode.name().to_string(), contents));
+    }
+    for (f, want) in files.iter().zip(&digests[0].1) {
+        assert_eq!(&f.data, want, "{}", f.path);
+    }
+    for pair in digests.windows(2) {
+        assert_eq!(
+            pair[0].1, pair[1].1,
+            "{} and {} reads diverge",
+            pair[0].0, pair[1].0
+        );
+    }
+}

@@ -12,16 +12,20 @@
 //! Two layers live here:
 //!
 //! * [`RefCountCache`] — the single-lock-domain refcount table.  Payloads
-//!   are `Arc<[u8]>` so a hit hands back a shared view of one buffer with
-//!   no copy ("multiple training processes on the same node can access the
-//!   same file simultaneously").
+//!   are [`Payload`] handles (owned buffer or zero-copy region view) so a
+//!   hit hands back a shared view of one buffer with no copy ("multiple
+//!   training processes on the same node can access the same file
+//!   simultaneously"); an mmap-backed entry keeps its region mapped for
+//!   exactly as long as it is resident or pinned.
 //! * [`ShardedCache`] — N independent `Mutex<RefCountCache>` shards keyed
 //!   by a path hash.  Concurrent trainers on one node acquire/release
 //!   different files without serializing on a single node-global lock;
 //!   same-file accesses only contend with each other.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::Mutex;
+
+use crate::storage::payload::Payload;
 
 /// Cache statistics for the experiment reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -34,17 +38,18 @@ pub struct CacheStats {
 }
 
 struct Entry {
-    data: Arc<[u8]>,
+    data: Payload,
     refcount: u32,
 }
 
 /// Refcount cache: entries live exactly while at least one fd references
-/// them.  Shared decompressed content is handed out as `Arc<[u8]>` so
-/// simultaneous readers on the same node share one buffer.
+/// them.  Shared decompressed content is handed out as [`Payload`] handles
+/// so simultaneous readers on the same node share one buffer (or one
+/// mapped region view — no copy either way).
 ///
-/// Releases are generation-aware: a pin is the `Arc` handed out by
+/// Releases are generation-aware: a pin is the handle handed out by
 /// `acquire`/`insert`, and [`Self::release`] only decrements the entry
-/// whose buffer is pointer-identical to that pin.  A release presented
+/// whose buffer is [`Payload::same`]-identical to that pin.  A release presented
 /// against a retired generation (the entry was [`Self::invalidate`]d or
 /// [`Self::retire`]d and possibly replaced) is a no-op, so stale
 /// descriptors can never evict a newer entry that reuses the path.
@@ -61,12 +66,12 @@ impl RefCountCache {
 
     /// Try to pin `path`; on hit the refcount rises and the content is
     /// returned.  On miss the caller must fetch and call [`Self::insert`].
-    pub fn acquire(&mut self, path: &str) -> Option<Arc<[u8]>> {
+    pub fn acquire(&mut self, path: &str) -> Option<Payload> {
         match self.entries.get_mut(path) {
             Some(e) => {
                 e.refcount += 1;
                 self.stats.hits += 1;
-                Some(Arc::clone(&e.data))
+                Some(e.data.clone())
             }
             None => {
                 self.stats.misses += 1;
@@ -78,16 +83,16 @@ impl RefCountCache {
     /// Insert freshly-fetched content with refcount 1 and return the shared
     /// handle.  If another thread inserted in the meantime, the existing
     /// entry wins (its refcount rises instead).
-    pub fn insert(&mut self, path: &str, data: Arc<[u8]>) -> Arc<[u8]> {
+    pub fn insert(&mut self, path: &str, data: Payload) -> Payload {
         if let Some(e) = self.entries.get_mut(path) {
             e.refcount += 1;
-            return Arc::clone(&e.data);
+            return e.data.clone();
         }
         let len = data.len() as u64;
         self.entries.insert(
             path.to_string(),
             Entry {
-                data: Arc::clone(&data),
+                data: data.clone(),
                 refcount: 1,
             },
         );
@@ -96,12 +101,12 @@ impl RefCountCache {
         data
     }
 
-    /// Drop one reference — `pin` is the `Arc` this pinner got from
+    /// Drop one reference — `pin` is the handle this pinner got from
     /// `acquire`/`insert`; evicts the content at zero (fd release, §5.4).
     /// A pin from a retired generation matches nothing and is a no-op.
-    pub fn release(&mut self, path: &str, pin: &Arc<[u8]>) {
+    pub fn release(&mut self, path: &str, pin: &Payload) {
         let evict = match self.entries.get_mut(path) {
-            Some(e) if Arc::ptr_eq(&e.data, pin) => {
+            Some(e) if e.data.same(pin) => {
                 e.refcount = e.refcount.saturating_sub(1);
                 e.refcount == 0
             }
@@ -116,8 +121,8 @@ impl RefCountCache {
     }
 
     /// Drop the entry regardless of refcount (`unlink` invalidation).
-    /// Outstanding `Arc` handles stay valid; their eventual releases
-    /// mismatch the (gone or replaced) entry and are no-ops.
+    /// Outstanding handles stay valid; their eventual releases mismatch
+    /// the (gone or replaced) entry and are no-ops.
     pub fn invalidate(&mut self, path: &str) {
         if let Some(e) = self.entries.remove(path) {
             self.stats.resident_bytes -= e.data.len() as u64;
@@ -130,11 +135,11 @@ impl RefCountCache {
     /// already refreshed the path (entry absent or newer), both our pin and
     /// the removal are moot — a single call under one lock, so concurrent
     /// refreshers can't clobber each other's fresh inserts.
-    pub fn retire(&mut self, path: &str, stale: &Arc<[u8]>) {
+    pub fn retire(&mut self, path: &str, stale: &Payload) {
         let matches = self
             .entries
             .get(path)
-            .map(|e| Arc::ptr_eq(&e.data, stale))
+            .map(|e| e.data.same(stale))
             .unwrap_or(false);
         if matches {
             self.invalidate(path);
@@ -207,15 +212,15 @@ impl ShardedCache {
         self.shards[i].lock().unwrap()
     }
 
-    pub fn acquire(&self, path: &str) -> Option<Arc<[u8]>> {
+    pub fn acquire(&self, path: &str) -> Option<Payload> {
         self.shard(path).acquire(path)
     }
 
-    pub fn insert(&self, path: &str, data: Arc<[u8]>) -> Arc<[u8]> {
+    pub fn insert(&self, path: &str, data: Payload) -> Payload {
         self.shard(path).insert(path, data)
     }
 
-    pub fn release(&self, path: &str, pin: &Arc<[u8]>) {
+    pub fn release(&self, path: &str, pin: &Payload) {
         self.shard(path).release(path, pin)
     }
 
@@ -223,7 +228,7 @@ impl ShardedCache {
         self.shard(path).invalidate(path)
     }
 
-    pub fn retire(&self, path: &str, stale: &Arc<[u8]>) {
+    pub fn retire(&self, path: &str, stale: &Payload) {
         self.shard(path).retire(path, stale)
     }
 
@@ -263,6 +268,7 @@ impl ShardedCache {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use std::sync::Arc;
 
     #[test]
     fn miss_then_insert_then_hit() {
@@ -295,7 +301,7 @@ mod tests {
         let mut c = RefCountCache::new();
         let a = c.insert("/f", vec![1].into());
         let b = c.insert("/f", vec![9, 9, 9].into()); // loser: existing entry wins
-        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.same(&b));
         assert_eq!(&b[..], &[1]);
         assert_eq!(c.refcount("/f"), 2);
     }
@@ -313,7 +319,7 @@ mod tests {
     #[test]
     fn release_unknown_is_noop() {
         let mut c = RefCountCache::new();
-        let stray: Arc<[u8]> = vec![1u8].into();
+        let stray: Payload = vec![1u8].into();
         c.release("/nope", &stray);
         assert_eq!(c.stats().evictions, 0);
     }
@@ -344,7 +350,7 @@ mod tests {
         c.release("/f", &old);
         assert_eq!(c.refcount("/f"), 1, "fd2 still pins the new entry");
         let again = c.acquire("/f").expect("new entry resident");
-        assert!(Arc::ptr_eq(&new, &again));
+        assert!(new.same(&again));
         c.release("/f", &new);
         c.release("/f", &again); // fd2 + the acquire above
         assert_eq!(c.resident_files(), 0);
@@ -371,7 +377,7 @@ mod tests {
         crate::util::proptest_lite::check("cache refcount", 0xCACE, 30, |rng| {
             let mut c = RefCountCache::new();
             let paths = ["/a", "/b", "/c", "/d"];
-            let mut live: Vec<(&str, Arc<[u8]>)> = Vec::new();
+            let mut live: Vec<(&str, Payload)> = Vec::new();
             for _ in 0..200 {
                 let p = paths[rng.index(paths.len())];
                 if rng.chance(0.55) {
@@ -404,7 +410,7 @@ mod tests {
         assert!(c.acquire("/x").is_none());
         let a = c.insert("/x", vec![5; 32].into());
         let b = c.acquire("/x").expect("hit");
-        assert!(Arc::ptr_eq(&a, &b));
+        assert!(a.same(&b));
         assert_eq!(c.refcount("/x"), 2);
         c.release("/x", &a);
         c.release("/x", &b);

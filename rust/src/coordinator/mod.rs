@@ -513,7 +513,7 @@ mod tests {
 
     #[test]
     fn tcp_loopback_cluster_serves_reads() {
-        let files = dataset(24, 31);
+        let files = dataset(24, 31, 7);
         let cluster = Cluster::launch(
             &files,
             ClusterConfig {

@@ -7,10 +7,18 @@
 //! `TcpServer::bind` returns the listener handle plus a [`NodeEndpoint`]
 //! whose inbox is fed by the accept loop: one bridge thread per accepted
 //! connection reads `[len][body]` frames ([`crate::net::wire`]), decodes
-//! the request, and forwards it as a [`Message`] whose [`ReplySink`]
-//! encodes the response with the request's correlation id and writes it
-//! back on the same connection.  The node worker (`FanStoreNode::spawn`)
-//! is byte-for-byte the same code that serves the in-proc transport.
+//! the request (paths interned per connection through a
+//! [`wire::PathInterner`]), and forwards it as a [`Message`] whose
+//! [`ReplySink`] encodes the response with the request's correlation id
+//! and writes it back on the same connection **through a per-connection
+//! [`wire::CoalescingWriter`]**: while other requests from the same
+//! connection are still outstanding at the worker, small reply frames
+//! (`Meta`, `NotFound`, acks) park in the coalescing buffer; the reply
+//! that observes itself to be the last outstanding one flushes.  A lone
+//! request's reply is therefore never delayed, and a pipelined fan-in
+//! burst pays ~1 syscall per buffer instead of one per reply.  The node
+//! worker (`FanStoreNode::spawn`) is byte-for-byte the same code that
+//! serves the in-proc transport.
 //!
 //! # Client side
 //!
@@ -138,14 +146,57 @@ impl Drop for TcpServer {
     }
 }
 
-/// Per-connection bridge: framed requests in, correlated responses out.
+/// Reply side of one accepted connection: a coalescing writer plus the
+/// outstanding-request counter that implements the flush-when-served
+/// rule.  `inflight` counts requests forwarded to the worker whose
+/// replies have not yet been written back on this connection; a reply
+/// that decrements it to zero knows no further reply is coming (the
+/// worker serves its inbox FIFO on one thread) and flushes the buffer.
+/// Pipelined bursts coalesce; a lone request's reply is written before
+/// its `ReplySink` returns.
+struct BridgeWriter {
+    writer: Mutex<CoalescingWriter<TcpStream>>,
+    inflight: AtomicUsize,
+}
+
+impl BridgeWriter {
+    /// Write (or park) one correlated reply frame.  On error, kill the
+    /// socket: parked frames of OTHER replies may be stranded in the
+    /// buffer, and the peer's demux reader must fail every outstanding
+    /// wait instead of hanging.
+    fn write_reply(&self, frame: &wire::Frame) {
+        let more_queued = self.inflight.fetch_sub(1, Ordering::AcqRel) > 1;
+        let result = {
+            let mut w = self.writer.lock().unwrap();
+            w.write_frame(frame, more_queued)
+        };
+        if result.is_err() {
+            self.kill();
+        }
+    }
+
+    fn kill(&self) {
+        if let Ok(w) = self.writer.lock() {
+            let _ = w.get_ref().shutdown(Shutdown::Both);
+        }
+    }
+}
+
+/// Per-connection bridge: framed requests in, correlated (coalesced)
+/// responses out.
 fn bridge_connection(stream: TcpStream, inbox: Sender<Message>) {
     let _ = stream.set_nodelay(true);
     let mut read_half = match stream.try_clone() {
         Ok(s) => s,
         Err(_) => return,
     };
-    let write_half = Arc::new(Mutex::new(stream));
+    let bw = Arc::new(BridgeWriter {
+        writer: Mutex::new(CoalescingWriter::new(stream)),
+        inflight: AtomicUsize::new(0),
+    });
+    // per-connection interner: an epoch's worth of repeated request paths
+    // decodes into Arc clones of one allocation each
+    let mut paths = wire::PathInterner::default();
     loop {
         // EOF / torn frame / corrupt body all close this connection; the
         // peer's pending requests fail over on its side
@@ -153,30 +204,29 @@ fn bridge_connection(stream: TcpStream, inbox: Sender<Message>) {
             Ok(b) => b,
             Err(_) => break,
         };
-        let Ok((corr, from, req)) = wire::decode_request(&body) else {
+        let Ok((corr, from, req)) = wire::decode_request(&body, &mut paths) else {
             break;
         };
-        let w = Arc::clone(&write_half);
+        // account the request BEFORE forwarding: its reply must observe
+        // every request forwarded ahead of it
+        bw.inflight.fetch_add(1, Ordering::AcqRel);
+        let w = Arc::clone(&bw);
         let reply = ReplySink::from_fn(move |resp| {
             let frame = wire::encode_response(corr, &resp);
-            if let Ok(mut stream) = w.lock() {
-                if frame.write_to(&mut *stream).is_err() {
-                    // a reply that cannot be delivered (socket error, frame
-                    // over MAX_FRAME) must not leave the client's pending
-                    // request hanging: kill the connection so its demux
-                    // reader fails every outstanding wait with an error
-                    let _ = stream.shutdown(Shutdown::Both);
-                }
-            }
+            w.write_reply(&frame);
         });
         if inbox.send(Message { from, req, reply }).is_err() {
-            // worker is gone (already shut down): close the connection so
-            // the client sees EOF instead of a silent hang
+            // worker is gone (already shut down): un-account the request
+            // (its sink will never run) and close the connection so the
+            // client sees EOF instead of a silent hang
+            bw.inflight.fetch_sub(1, Ordering::AcqRel);
             break;
         }
     }
-    if let Ok(stream) = write_half.lock() {
-        let _ = stream.shutdown(Shutdown::Both);
+    // drain anything still parked (replies that raced our exit), then close
+    if let Ok(mut w) = bw.writer.lock() {
+        let _ = w.flush();
+        let _ = w.get_ref().shutdown(Shutdown::Both);
     }
 }
 
@@ -225,13 +275,15 @@ impl TcpConn {
 
     /// Demux loop: route each response frame to the request that owns its
     /// correlation id.  On connection teardown, fail everything pending.
+    /// Batched-reply paths intern per connection, mirroring the server.
     fn reader_loop(&self, mut stream: TcpStream) {
+        let mut paths = wire::PathInterner::default();
         loop {
             let body = match wire::read_frame(&mut stream) {
                 Ok(b) => b,
                 Err(_) => break,
             };
-            let Ok((corr, resp)) = wire::decode_response(&body) else {
+            let Ok((corr, resp)) = wire::decode_response(&body, &mut paths) else {
                 break;
             };
             let tx = self
@@ -445,7 +497,7 @@ mod tests {
                     Request::ReadFile { path } => {
                         served += 1;
                         msg.reply.send(Response::FileData {
-                            stored: path.into_bytes().into(),
+                            stored: path.as_bytes().to_vec().into(),
                             raw_len: 0,
                             compressed: false,
                         });
@@ -459,7 +511,7 @@ mod tests {
                                     FileFetch::NotFound
                                 } else {
                                     FileFetch::Data {
-                                        stored: p.clone().into_bytes().into(),
+                                        stored: p.as_bytes().to_vec().into(),
                                         raw_len: 0,
                                         compressed: false,
                                     }
@@ -526,7 +578,7 @@ mod tests {
         // overlapped gather across three peers
         let pending: Vec<PendingReply> = (1..4)
             .map(|to| {
-                tp.send(0, to, Request::ReadFile { path: format!("/p{to}") })
+                tp.send(0, to, Request::ReadFile { path: format!("/p{to}").into() })
                     .unwrap()
             })
             .collect();
@@ -551,7 +603,7 @@ mod tests {
                 for j in 0..40u32 {
                     let r = tp
                         .call(0, 1, Request::ReadFile {
-                            path: format!("/f/{i}_{j}"),
+                            path: format!("/f/{i}_{j}").into(),
                         })
                         .unwrap();
                     let (d, _, _) = r.into_file_data().unwrap();
@@ -596,5 +648,41 @@ mod tests {
             w.join().unwrap();
         }
         drop(servers);
+    }
+
+    #[test]
+    fn pipelined_replies_coalesce_without_parking() {
+        // one pooled connection (pool_size = 1): overlapped requests travel
+        // on a single socket, so their replies hit the bridge's coalescing
+        // writer back-to-back.  Every reply must still arrive — the last
+        // outstanding reply flushes the parked batch — and a lone request
+        // after each burst must not be delayed behind an idle buffer.
+        let (srv, ep) = TcpServer::bind(0, "127.0.0.1:0").unwrap();
+        let worker = spawn_echo(ep);
+        let tp = TcpTransport::connect_pooled(&[srv.local_addr()], 1).unwrap();
+        for round in 0..8u32 {
+            let pending: Vec<PendingReply> = (0..32u32)
+                .map(|i| {
+                    tp.send(0, 0, Request::ReadFile {
+                        path: format!("/r{round}/f{i}").into(),
+                    })
+                    .unwrap()
+                })
+                .collect();
+            for (i, pnd) in pending.into_iter().enumerate() {
+                let (d, _, _) = pnd.wait().unwrap().into_file_data().unwrap();
+                assert_eq!(&d[..], format!("/r{round}/f{i}").as_bytes());
+            }
+            // lone request after the burst: flush-when-served keeps it prompt
+            let (d, _, _) = tp
+                .call(0, 0, Request::ReadFile { path: "/lone".into() })
+                .unwrap()
+                .into_file_data()
+                .unwrap();
+            assert_eq!(&d[..], b"/lone");
+        }
+        tp.shutdown_all();
+        worker.join().unwrap();
+        drop(srv);
     }
 }

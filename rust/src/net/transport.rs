@@ -14,10 +14,13 @@
 //! and who-talks-to-whom are identical either way, which is what the
 //! experiments depend on (DESIGN.md substitution table).
 //!
-//! Payloads travel as `Arc<[u8]>`: the worker serves a shared view of its
-//! store/output buffer and the reply path moves the Arc (in-proc) or
-//! serializes straight from it (TCP), so a remote read never copies the
-//! stored bytes on the serving side.  [`Transport::send`] exposes the
+//! Payloads travel as [`Payload`] handles: the worker serves a shared
+//! view of its store (for RAM- and mmap-backed partitions a zero-copy
+//! view of the region itself) and the reply path moves the handle
+//! (in-proc) or writes its bytes straight to the socket (TCP), so a
+//! remote read never copies the stored bytes on the serving side.  Paths
+//! travel as `Arc<str>`: the decode side interns them per connection and
+//! batched serves clone the `Arc`, never the string.  [`Transport::send`] exposes the
 //! asynchronous half of a round trip so gather patterns (e.g. `readdir`
 //! collecting `ListOutputs` from every node) can issue all requests first
 //! and overlap the waits.
@@ -27,39 +30,42 @@ use std::sync::Arc;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileMeta, FileStat};
+use crate::storage::payload::Payload;
 
 /// Requests a FanStore worker thread services (paper §5.1 "worker threads
 /// ... handle file system requests").
 #[derive(Debug)]
 pub enum Request {
     /// Read the stored bytes of an input (or committed output) file.
-    ReadFile { path: String },
+    ReadFile { path: Arc<str> },
     /// Read a whole mini-batch's stored bytes in one round trip.  The reply
     /// carries one [`FileFetch`] per requested path (same order), so a
     /// missing or faulted file never poisons the rest of the batch.
-    ReadFiles { paths: Vec<String> },
+    ReadFiles { paths: Vec<Arc<str>> },
     /// Stat a path this node is authoritative for (output files).
-    StatOutput { path: String },
+    StatOutput { path: Arc<str> },
     /// Stat a whole batch of output paths homed on this node in one round
     /// trip (multi-shard checkpoint resume).  The reply carries one
     /// [`MetaFetch`] per requested path, request order — `ReadFiles`'
     /// per-path-outcome shape applied to metadata.
-    StatOutputs { paths: Vec<String> },
+    StatOutputs { paths: Vec<Arc<str>> },
     /// Forward a finished output file's metadata to its home node
     /// (visible-until-finish commit, §5.4).
-    CommitOutput { path: String, meta: FileMeta },
+    CommitOutput { path: Arc<str>, meta: FileMeta },
     /// List output files homed on this node under a directory.
-    ListOutputs { dir: String },
+    ListOutputs { dir: Arc<str> },
     /// Remove an output file's metadata at its home node; the reply names
     /// the originating node so the caller can GC the buffered bytes there.
-    UnlinkOutput { path: String },
+    UnlinkOutput { path: Arc<str> },
     /// Drop the buffered bytes of an unlinked output at its originating
     /// node (idempotent — a second drop is a no-op).
-    DropOutput { path: String },
-    /// Retire the receiving node's cached `readdir` listings.  Broadcast
-    /// (and awaited) by the writer once a commit/unlink lands, so the
-    /// steady-state `readdir` on every node can be a local cache lookup.
-    InvalidateListings,
+    DropOutput { path: Arc<str> },
+    /// Retire the receiving node's cached `readdir` listings along the
+    /// committed/unlinked path's ancestor chain (directory-granular —
+    /// unrelated hot listings stay cached).  Broadcast (and awaited) by
+    /// the writer once a commit/unlink lands, so the steady-state
+    /// `readdir` on every node can be a local cache lookup.
+    InvalidateListings { path: Arc<str> },
     /// Orderly shutdown of the worker thread.
     Shutdown,
 }
@@ -70,7 +76,7 @@ pub enum Request {
 #[derive(Debug)]
 pub enum FileFetch {
     Data {
-        stored: Arc<[u8]>,
+        stored: Payload,
         raw_len: u64,
         compressed: bool,
     },
@@ -83,7 +89,7 @@ pub enum FileFetch {
 
 impl FileFetch {
     /// Caller-facing conversion preserving the errno distinction.
-    pub fn into_result(self, path: &str) -> Result<(Arc<[u8]>, u64, bool)> {
+    pub fn into_result(self, path: &str) -> Result<(Payload, u64, bool)> {
         match self {
             FileFetch::Data {
                 stored,
@@ -117,12 +123,13 @@ pub enum MetaFetch {
 #[derive(Debug)]
 pub enum Response {
     FileData {
-        stored: Arc<[u8]>,
+        stored: Payload,
         raw_len: u64,
         compressed: bool,
     },
     /// Batched read reply: one entry per requested path, request order.
-    FilesData(Vec<(String, FileFetch)>),
+    /// Paths are `Arc` clones of the request's — no string copies.
+    FilesData(Vec<(Arc<str>, FileFetch)>),
     /// Output-file metadata: the stat plus the node that buffered the data
     /// (the originating node, §5.4 — reads must go there, not to the home)
     /// plus the commit generation stamped by the home node.
@@ -132,7 +139,7 @@ pub enum Response {
         generation: u64,
     },
     /// Batched stat reply: one entry per requested path, request order.
-    Metas(Vec<(String, MetaFetch)>),
+    Metas(Vec<(Arc<str>, MetaFetch)>),
     Names(Vec<String>),
     Ok,
     Err(String),
@@ -303,7 +310,7 @@ impl Transport for InProcTransport {
 
 impl Response {
     /// Unwrap a `FileData` response.
-    pub fn into_file_data(self) -> Result<(Arc<[u8]>, u64, bool)> {
+    pub fn into_file_data(self) -> Result<(Payload, u64, bool)> {
         match self {
             Response::FileData {
                 stored,
@@ -318,7 +325,7 @@ impl Response {
     }
 
     /// Unwrap a `FilesData` (batched read) response.
-    pub fn into_files_data(self) -> Result<Vec<(String, FileFetch)>> {
+    pub fn into_files_data(self) -> Result<Vec<(Arc<str>, FileFetch)>> {
         match self {
             Response::FilesData(files) => Ok(files),
             Response::Err(e) => Err(FanError::Transport(e)),
@@ -329,7 +336,7 @@ impl Response {
     }
 
     /// Unwrap a `Metas` (batched stat) response.
-    pub fn into_metas(self) -> Result<Vec<(String, MetaFetch)>> {
+    pub fn into_metas(self) -> Result<Vec<(Arc<str>, MetaFetch)>> {
         match self {
             Response::Metas(metas) => Ok(metas),
             Response::Err(e) => Err(FanError::Transport(e)),
@@ -355,7 +362,7 @@ mod tests {
                     Request::ReadFile { path } => {
                         served += 1;
                         msg.reply.send(Response::FileData {
-                            stored: path.into_bytes().into(),
+                            stored: path.as_bytes().to_vec().into(),
                             raw_len: 0,
                             compressed: false,
                         });
@@ -369,7 +376,7 @@ mod tests {
                                     FileFetch::NotFound
                                 } else {
                                     FileFetch::Data {
-                                        stored: p.clone().into_bytes().into(),
+                                        stored: p.as_bytes().to_vec().into(),
                                         raw_len: 0,
                                         compressed: false,
                                     }
@@ -417,13 +424,13 @@ mod tests {
             .unwrap();
         let files = resp.into_files_data().unwrap();
         assert_eq!(files.len(), 3);
-        assert_eq!(files[0].0, "/a");
+        assert_eq!(&*files[0].0, "/a");
         assert!(files[0].1.is_data());
-        assert_eq!(files[1].0, "/missing/x");
+        assert_eq!(&*files[1].0, "/missing/x");
         assert!(matches!(files[1].1, FileFetch::NotFound));
         // one missing file does not poison the rest of the batch
         let (path, fetch) = files.into_iter().nth(2).unwrap();
-        assert_eq!(path, "/b");
+        assert_eq!(&*path, "/b");
         let (data, _, _) = fetch.into_result(&path).unwrap();
         assert_eq!(&data[..], b"/b");
         // ENOENT maps to NotFound, not a transport fault
@@ -453,7 +460,7 @@ mod tests {
         // issue to all peers first, then collect — the gather pattern
         let pending: Vec<PendingReply> = (1..4)
             .map(|to| {
-                tp.send(0, to, Request::ReadFile { path: format!("/p{to}") })
+                tp.send(0, to, Request::ReadFile { path: format!("/p{to}").into() })
                     .unwrap()
             })
             .collect();
@@ -477,7 +484,7 @@ mod tests {
                 for j in 0..50 {
                     let r = tp
                         .call(0, 1, Request::ReadFile {
-                            path: format!("/f/{i}_{j}"),
+                            path: format!("/f/{i}_{j}").into(),
                         })
                         .unwrap();
                     let (d, _, _) = r.into_file_data().unwrap();

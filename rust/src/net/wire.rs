@@ -16,19 +16,25 @@
 //! their existing 144-byte partition image ([`FileStat::encode`]).
 //!
 //! The encoder produces a [`Frame`]: a chunk list where owned header bytes
-//! and shared `Arc<[u8]>` payloads interleave.  [`Frame::write_to`] writes
+//! and shared [`Payload`] handles interleave.  [`Frame::write_to`] writes
 //! the chunks in order, so serving a read never copies the stored bytes
-//! into an intermediate buffer on the send side — the zero-copy data plane
-//! of DESIGN.md extends across the socket boundary.  The receive side reads
-//! one bounded body and parses it; payload bytes are materialized once into
-//! fresh `Arc<[u8]>`s (that copy *is* the network receive).
+//! into an intermediate buffer on the send side — a spilled mmap-backed
+//! read goes region → socket with **zero payload memcpys node-side**, and
+//! the frame's handle keeps the region mapped until the write completes.
+//! The receive side reads one bounded body and parses it; payload bytes
+//! are materialized once into fresh owned buffers (that copy *is* the
+//! network receive), and paths are interned per connection through a
+//! [`PathInterner`], so an epoch's worth of repeated request paths decodes
+//! into `Arc` clones of one allocation each.
 
+use std::collections::HashSet;
 use std::io::{IoSlice, Read, Write};
 use std::sync::Arc;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileMeta, FileStat, STAT_BYTES};
 use crate::net::transport::{FileFetch, MetaFetch, Request, Response};
+use crate::storage::payload::{self, Payload};
 
 /// Sanity cap on one frame body (a `ReadFiles` reply carrying a whole
 /// mini-batch of multi-MB files fits with room to spare; a corrupt length
@@ -66,10 +72,12 @@ const META_NOT_FOUND: u8 = 1;
 
 enum Chunk {
     Owned(Vec<u8>),
-    Shared(Arc<[u8]>),
+    Shared(Payload),
 }
 
-/// One encoded frame: interleaved owned header bytes and shared payloads.
+/// One encoded frame: interleaved owned header bytes and shared payload
+/// handles (which keep their backing buffer/region alive until the frame
+/// is written or dropped).
 pub struct Frame {
     chunks: Vec<Chunk>,
 }
@@ -125,9 +133,10 @@ impl Frame {
         self.put_slice(s.as_bytes());
     }
 
-    /// Append a payload without copying it: the Arc rides in the chunk list
-    /// and is written straight to the socket.
-    fn put_shared(&mut self, payload: Arc<[u8]>) {
+    /// Append a payload without copying it: the handle rides in the chunk
+    /// list and its bytes are written straight to the socket (a zero-copy
+    /// view stays a view all the way to the `writev`).
+    fn put_shared(&mut self, payload: Payload) {
         self.put_varint(payload.len() as u64);
         self.chunks.push(Chunk::Shared(payload));
     }
@@ -172,6 +181,10 @@ impl Frame {
 
     /// Serialize `[len][body]` into `out` (the send-coalescing path: small
     /// frames accumulate in one buffer flushed by a single write).
+    /// Flattening a payload chunk here duplicates its bytes, so each one
+    /// is recorded as a payload memcpy — only sub-capacity data frames pay
+    /// it (large frames write through vectored, and the small `Meta`/ack
+    /// frames that coalescing exists for carry no payload chunks at all).
     pub fn append_to(&self, out: &mut Vec<u8>) -> std::io::Result<()> {
         let len = self.body_len();
         if len > MAX_FRAME as usize {
@@ -185,7 +198,10 @@ impl Frame {
         for c in &self.chunks {
             match c {
                 Chunk::Owned(v) => out.extend_from_slice(v),
-                Chunk::Shared(a) => out.extend_from_slice(a),
+                Chunk::Shared(a) => {
+                    payload::record_copy();
+                    out.extend_from_slice(a);
+                }
             }
         }
         Ok(())
@@ -336,6 +352,57 @@ impl<W: Write> CoalescingWriter<W> {
     }
 }
 
+/// Decode-side path interner, one per connection: every path decoded on
+/// the connection is stored once as an `Arc<str>`; repeats (steady-state
+/// training re-requests the same dataset paths epoch after epoch, batched
+/// replies echo their request's paths) decode into `Arc` clones of that
+/// single allocation instead of fresh `String`s.
+///
+/// Bounded **by entries and by bytes**: at [`PathInterner::CAP`] distinct
+/// paths or [`PathInterner::BYTE_CAP`] retained path bytes the table
+/// resets (outstanding `Arc`s stay valid — only future dedup restarts),
+/// so a hostile stream of long distinct paths cannot pin unbounded memory
+/// per connection.
+#[derive(Default)]
+pub struct PathInterner {
+    paths: HashSet<Arc<str>>,
+    bytes: usize,
+}
+
+impl PathInterner {
+    /// Entry-count reset threshold (distinct paths per connection).  Far
+    /// above any real dataset's working set of *wire-visible* paths.
+    pub const CAP: usize = 1 << 20;
+    /// Byte reset threshold: total retained path bytes per connection.
+    /// Caps the adversarial case (CAP long distinct paths) at ~16 MiB
+    /// instead of hundreds of MB.
+    pub const BYTE_CAP: usize = 16 << 20;
+
+    /// The interned handle for `s`, allocating only on first sight.
+    pub fn intern(&mut self, s: &str) -> Arc<str> {
+        if let Some(a) = self.paths.get(s) {
+            return Arc::clone(a);
+        }
+        if self.paths.len() >= Self::CAP || self.bytes + s.len() > Self::BYTE_CAP {
+            self.paths.clear();
+            self.bytes = 0;
+        }
+        let a: Arc<str> = Arc::from(s);
+        self.bytes += s.len();
+        self.paths.insert(Arc::clone(&a));
+        a
+    }
+
+    /// Distinct paths currently interned.
+    pub fn len(&self) -> usize {
+        self.paths.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.paths.is_empty()
+    }
+}
+
 /// Read one `[len][body]` frame; returns the body.
 pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
@@ -431,9 +498,21 @@ impl<'a> WireReader<'a> {
             .map_err(|_| FanError::Format("non-UTF8 string in frame".into()))
     }
 
-    fn get_bytes(&mut self) -> Result<Arc<[u8]>> {
+    /// Decode a path through the connection's interner: repeated paths
+    /// come back as `Arc` clones of one allocation.
+    fn get_path(&mut self, paths: &mut PathInterner) -> Result<Arc<str>> {
         let n = self.get_len()?;
-        Ok(self.take(n)?.into())
+        let s = std::str::from_utf8(self.take(n)?)
+            .map_err(|_| FanError::Format("non-UTF8 string in frame".into()))?;
+        Ok(paths.intern(s))
+    }
+
+    /// Materialize a received payload (this copy *is* the network
+    /// receive — the frame body buffer does not outlive the decode).
+    fn get_bytes(&mut self) -> Result<Payload> {
+        let n = self.get_len()?;
+        let owned: Arc<[u8]> = self.take(n)?.into();
+        Ok(Payload::Owned(owned))
     }
 
     fn expect_end(&self) -> Result<()> {
@@ -496,7 +575,7 @@ fn put_fetch(f: &mut Frame, fetch: &FileFetch) {
             f.put_u8(FETCH_DATA);
             f.put_varint(*raw_len);
             f.put_u8(*compressed as u8);
-            f.put_shared(Arc::clone(stored));
+            f.put_shared(stored.clone());
         }
         FileFetch::NotFound => f.put_u8(FETCH_NOT_FOUND),
         FileFetch::Fault(e) => {
@@ -507,6 +586,7 @@ fn put_fetch(f: &mut Frame, fetch: &FileFetch) {
 }
 
 fn get_fetch(r: &mut WireReader) -> Result<FileFetch> {
+    // (payload bytes are materialized by get_bytes — the network receive)
     match r.get_u8()? {
         FETCH_DATA => {
             let raw_len = r.get_varint()?;
@@ -570,14 +650,19 @@ pub fn encode_request(corr: u64, from: u32, req: &Request) -> Frame {
             f.put_u8(REQ_DROP_OUTPUT);
             f.put_str(path);
         }
-        Request::InvalidateListings => f.put_u8(REQ_INVALIDATE_LISTINGS),
+        Request::InvalidateListings { path } => {
+            f.put_u8(REQ_INVALIDATE_LISTINGS);
+            f.put_str(path);
+        }
         Request::Shutdown => f.put_u8(REQ_SHUTDOWN),
     }
     f
 }
 
 /// Decode one request frame body → (correlation id, from, request).
-pub fn decode_request(body: &[u8]) -> Result<(u64, u32, Request)> {
+/// `paths` is the connection's interner — repeated paths across frames
+/// decode into `Arc` clones of one allocation.
+pub fn decode_request(body: &[u8], paths: &mut PathInterner) -> Result<(u64, u32, Request)> {
     let mut r = WireReader::new(body);
     if r.get_u8()? != KIND_REQUEST {
         return Err(FanError::Format("frame is not a request".into()));
@@ -585,33 +670,45 @@ pub fn decode_request(body: &[u8]) -> Result<(u64, u32, Request)> {
     let corr = r.get_u64()?;
     let from = r.get_u32()?;
     let req = match r.get_u8()? {
-        REQ_READ_FILE => Request::ReadFile { path: r.get_str()? },
+        REQ_READ_FILE => Request::ReadFile {
+            path: r.get_path(paths)?,
+        },
         REQ_READ_FILES => {
             let n = r.get_len()?;
-            let mut paths = Vec::with_capacity(n);
+            let mut batch = Vec::with_capacity(n);
             for _ in 0..n {
-                paths.push(r.get_str()?);
+                batch.push(r.get_path(paths)?);
             }
-            Request::ReadFiles { paths }
+            Request::ReadFiles { paths: batch }
         }
-        REQ_STAT_OUTPUT => Request::StatOutput { path: r.get_str()? },
+        REQ_STAT_OUTPUT => Request::StatOutput {
+            path: r.get_path(paths)?,
+        },
         REQ_STAT_OUTPUTS => {
             let n = r.get_len()?;
-            let mut paths = Vec::with_capacity(n);
+            let mut batch = Vec::with_capacity(n);
             for _ in 0..n {
-                paths.push(r.get_str()?);
+                batch.push(r.get_path(paths)?);
             }
-            Request::StatOutputs { paths }
+            Request::StatOutputs { paths: batch }
         }
         REQ_COMMIT_OUTPUT => {
-            let path = r.get_str()?;
+            let path = r.get_path(paths)?;
             let meta = get_meta(&mut r)?;
             Request::CommitOutput { path, meta }
         }
-        REQ_LIST_OUTPUTS => Request::ListOutputs { dir: r.get_str()? },
-        REQ_UNLINK_OUTPUT => Request::UnlinkOutput { path: r.get_str()? },
-        REQ_DROP_OUTPUT => Request::DropOutput { path: r.get_str()? },
-        REQ_INVALIDATE_LISTINGS => Request::InvalidateListings,
+        REQ_LIST_OUTPUTS => Request::ListOutputs {
+            dir: r.get_path(paths)?,
+        },
+        REQ_UNLINK_OUTPUT => Request::UnlinkOutput {
+            path: r.get_path(paths)?,
+        },
+        REQ_DROP_OUTPUT => Request::DropOutput {
+            path: r.get_path(paths)?,
+        },
+        REQ_INVALIDATE_LISTINGS => Request::InvalidateListings {
+            path: r.get_path(paths)?,
+        },
         REQ_SHUTDOWN => Request::Shutdown,
         t => return Err(FanError::Format(format!("unknown request tag {t}"))),
     };
@@ -633,7 +730,7 @@ pub fn encode_response(corr: u64, resp: &Response) -> Frame {
             f.put_u8(RESP_FILE_DATA);
             f.put_varint(*raw_len);
             f.put_u8(*compressed as u8);
-            f.put_shared(Arc::clone(stored));
+            f.put_shared(stored.clone());
         }
         Response::FilesData(files) => {
             f.put_u8(RESP_FILES_DATA);
@@ -690,7 +787,8 @@ pub fn encode_response(corr: u64, resp: &Response) -> Frame {
 }
 
 /// Decode one response frame body → (correlation id, response).
-pub fn decode_response(body: &[u8]) -> Result<(u64, Response)> {
+/// `paths` interns the batched-reply paths exactly like the request side.
+pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Response)> {
     let mut r = WireReader::new(body);
     if r.get_u8()? != KIND_RESPONSE {
         return Err(FanError::Format("frame is not a response".into()));
@@ -711,7 +809,7 @@ pub fn decode_response(body: &[u8]) -> Result<(u64, Response)> {
             let n = r.get_len()?;
             let mut files = Vec::with_capacity(n);
             for _ in 0..n {
-                let path = r.get_str()?;
+                let path = r.get_path(paths)?;
                 let fetch = get_fetch(&mut r)?;
                 files.push((path, fetch));
             }
@@ -731,7 +829,7 @@ pub fn decode_response(body: &[u8]) -> Result<(u64, Response)> {
             let n = r.get_len()?;
             let mut metas = Vec::with_capacity(n);
             for _ in 0..n {
-                let path = r.get_str()?;
+                let path = r.get_path(paths)?;
                 let m = match r.get_u8()? {
                     META_FOUND => {
                         let stat = get_stat(&mut r)?;
@@ -787,12 +885,16 @@ mod tests {
 
     fn roundtrip_request(req: &Request) -> (u64, u32, Request) {
         let body = encode_request(0xC0FFEE, 7, req).to_body_bytes();
-        decode_request(&body).unwrap()
+        decode_request(&body, &mut PathInterner::default()).unwrap()
     }
 
     fn roundtrip_response(resp: &Response) -> (u64, Response) {
         let body = encode_response(0xDECAF, resp).to_body_bytes();
-        decode_response(&body).unwrap()
+        decode_response(&body, &mut PathInterner::default()).unwrap()
+    }
+
+    fn strs(v: &[Arc<str>]) -> Vec<&str> {
+        v.iter().map(|p| &**p).collect()
     }
 
     #[test]
@@ -800,24 +902,24 @@ mod tests {
         // every Request variant survives encode → decode intact
         let (corr, from, req) = roundtrip_request(&Request::ReadFile { path: "/a/b".into() });
         assert_eq!((corr, from), (0xC0FFEE, 7));
-        assert!(matches!(req, Request::ReadFile { path } if path == "/a/b"));
+        assert!(matches!(req, Request::ReadFile { path } if &*path == "/a/b"));
 
         let (_, _, req) = roundtrip_request(&Request::ReadFiles {
             paths: vec!["/x".into(), "".into(), "/ü/ñ".into()],
         });
         match req {
-            Request::ReadFiles { paths } => assert_eq!(paths, vec!["/x", "", "/ü/ñ"]),
+            Request::ReadFiles { paths } => assert_eq!(strs(&paths), vec!["/x", "", "/ü/ñ"]),
             other => panic!("unexpected {other:?}"),
         }
 
         let (_, _, req) = roundtrip_request(&Request::StatOutput { path: "/o".into() });
-        assert!(matches!(req, Request::StatOutput { path } if path == "/o"));
+        assert!(matches!(req, Request::StatOutput { path } if &*path == "/o"));
 
         let (_, _, req) = roundtrip_request(&Request::StatOutputs {
             paths: vec!["/s1".into(), "/s2".into()],
         });
         match req {
-            Request::StatOutputs { paths } => assert_eq!(paths, vec!["/s1", "/s2"]),
+            Request::StatOutputs { paths } => assert_eq!(strs(&paths), vec!["/s1", "/s2"]),
             other => panic!("unexpected {other:?}"),
         }
 
@@ -827,29 +929,30 @@ mod tests {
         });
         match req {
             Request::CommitOutput { path, meta: m } => {
-                assert_eq!(path, "/ckpt/m.bin");
+                assert_eq!(&*path, "/ckpt/m.bin");
                 assert_eq!(m, meta(42));
             }
             other => panic!("unexpected {other:?}"),
         }
 
         let (_, _, req) = roundtrip_request(&Request::ListOutputs { dir: "/d".into() });
-        assert!(matches!(req, Request::ListOutputs { dir } if dir == "/d"));
+        assert!(matches!(req, Request::ListOutputs { dir } if &*dir == "/d"));
         let (_, _, req) = roundtrip_request(&Request::UnlinkOutput { path: "/u".into() });
-        assert!(matches!(req, Request::UnlinkOutput { path } if path == "/u"));
+        assert!(matches!(req, Request::UnlinkOutput { path } if &*path == "/u"));
         let (_, _, req) = roundtrip_request(&Request::DropOutput { path: "/g".into() });
-        assert!(matches!(req, Request::DropOutput { path } if path == "/g"));
-        let (_, _, req) = roundtrip_request(&Request::InvalidateListings);
-        assert!(matches!(req, Request::InvalidateListings));
+        assert!(matches!(req, Request::DropOutput { path } if &*path == "/g"));
+        let (_, _, req) =
+            roundtrip_request(&Request::InvalidateListings { path: "/ckpt/new.bin".into() });
+        assert!(matches!(req, Request::InvalidateListings { path } if &*path == "/ckpt/new.bin"));
         let (_, _, req) = roundtrip_request(&Request::Shutdown);
         assert!(matches!(req, Request::Shutdown));
     }
 
     #[test]
     fn response_variants_roundtrip() {
-        let payload: Arc<[u8]> = vec![7u8; 300].into();
+        let payload: Payload = vec![7u8; 300].into();
         let (corr, resp) = roundtrip_response(&Response::FileData {
-            stored: Arc::clone(&payload),
+            stored: payload.clone(),
             raw_len: 4096,
             compressed: true,
         });
@@ -997,9 +1100,10 @@ mod tests {
             },
         )
         .to_body_bytes();
+        let mut it = PathInterner::default();
         for cut in 0..body.len() {
             assert!(
-                decode_request(&body[..cut]).is_err(),
+                decode_request(&body[..cut], &mut it).is_err(),
                 "cut at {cut} must fail"
             );
         }
@@ -1014,7 +1118,7 @@ mod tests {
         let body = encode_response(2, &resp).to_body_bytes();
         for cut in 0..body.len() {
             assert!(
-                decode_response(&body[..cut]).is_err(),
+                decode_response(&body[..cut], &mut it).is_err(),
                 "cut at {cut} must fail"
             );
         }
@@ -1022,19 +1126,20 @@ mod tests {
 
     #[test]
     fn corrupt_frames_are_rejected() {
+        let mut it = PathInterner::default();
         // wrong kind byte
         let mut body = encode_request(1, 0, &Request::Shutdown).to_body_bytes();
         body[0] = KIND_RESPONSE;
-        assert!(decode_request(&body).is_err());
+        assert!(decode_request(&body, &mut it).is_err());
         // unknown tag
         let mut body = encode_request(1, 0, &Request::Shutdown).to_body_bytes();
         let tag_off = body.len() - 1;
         body[tag_off] = 0xEE;
-        assert!(decode_request(&body).is_err());
+        assert!(decode_request(&body, &mut it).is_err());
         // trailing garbage
         let mut body = encode_response(1, &Response::Ok).to_body_bytes();
         body.push(0);
-        assert!(decode_response(&body).is_err());
+        assert!(decode_response(&body, &mut it).is_err());
         // payload length pointing past the end of the frame
         let mut f = Frame::new();
         f.put_u8(KIND_RESPONSE);
@@ -1043,7 +1148,7 @@ mod tests {
         f.put_varint(10);
         f.put_u8(0);
         f.put_varint(1 << 40); // claims a petabyte payload
-        assert!(decode_response(&f.to_body_bytes()).is_err());
+        assert!(decode_response(&f.to_body_bytes(), &mut it).is_err());
         // oversized length prefix is rejected before allocating
         let mut framed = Vec::new();
         framed.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
@@ -1066,7 +1171,7 @@ mod tests {
         assert_eq!(buf.len(), frame.body_len() + 4);
         let mut cur = std::io::Cursor::new(buf);
         let body = read_frame(&mut cur).unwrap();
-        let (corr, resp) = decode_response(&body).unwrap();
+        let (corr, resp) = decode_response(&body, &mut PathInterner::default()).unwrap();
         assert_eq!(corr, 99);
         let (data, _, _) = resp.into_file_data().unwrap();
         assert_eq!(&data[..], &[5u8; 1000]);
@@ -1113,7 +1218,7 @@ mod tests {
                 i,
                 0,
                 &Request::StatOutput {
-                    path: format!("/ckpt/shard_{i:03}.bin"),
+                    path: format!("/ckpt/shard_{i:03}.bin").into(),
                 },
             ));
         }
@@ -1129,7 +1234,7 @@ mod tests {
         ));
         for i in 40..60u64 {
             frames.push(encode_request(i, 1, &Request::ReadFile {
-                path: format!("/f{i}"),
+                path: format!("/f{i}").into(),
             }));
         }
         frames
@@ -1221,12 +1326,12 @@ mod tests {
 
     #[test]
     fn shared_payloads_are_not_copied_into_the_header() {
-        // the Arc payload rides as its own chunk: same allocation
-        let payload: Arc<[u8]> = vec![1u8; 1 << 16].into();
+        // the payload handle rides as its own chunk: same backing bytes
+        let payload: Payload = vec![1u8; 1 << 16].into();
         let frame = encode_response(
             1,
             &Response::FileData {
-                stored: Arc::clone(&payload),
+                stored: payload.clone(),
                 raw_len: 1 << 16,
                 compressed: false,
             },
@@ -1235,10 +1340,72 @@ mod tests {
             .chunks
             .iter()
             .filter_map(|c| match c {
-                Chunk::Shared(a) => Some(a.as_ptr()),
+                Chunk::Shared(a) => Some(a.as_slice().as_ptr()),
                 Chunk::Owned(_) => None,
             })
             .collect();
-        assert_eq!(shared_ptrs, vec![payload.as_ptr()]);
+        assert_eq!(shared_ptrs, vec![payload.as_slice().as_ptr()]);
+    }
+
+    #[test]
+    fn decode_interns_repeated_paths_per_connection() {
+        // two frames carrying the same path on one "connection" decode
+        // into Arc clones of a single allocation
+        let mut it = PathInterner::default();
+        let body = encode_request(1, 0, &Request::ReadFile { path: "/data/f1".into() })
+            .to_body_bytes();
+        let (_, _, ra) = decode_request(&body, &mut it).unwrap();
+        let body = encode_request(
+            2,
+            0,
+            &Request::ReadFiles {
+                paths: vec!["/data/f1".into(), "/data/f2".into(), "/data/f1".into()],
+            },
+        )
+        .to_body_bytes();
+        let (_, _, rb) = decode_request(&body, &mut it).unwrap();
+        let a = match ra {
+            Request::ReadFile { path } => path,
+            other => panic!("unexpected {other:?}"),
+        };
+        let b = match rb {
+            Request::ReadFiles { paths } => paths,
+            other => panic!("unexpected {other:?}"),
+        };
+        assert!(Arc::ptr_eq(&a, &b[0]), "same path, same allocation");
+        assert!(Arc::ptr_eq(&b[0], &b[2]), "within one frame too");
+        assert!(!Arc::ptr_eq(&b[0], &b[1]));
+        assert_eq!(it.len(), 2, "two distinct paths interned");
+        // batched replies intern through the response decoder as well
+        let resp = Response::FilesData(vec![
+            ("/data/f1".into(), FileFetch::NotFound),
+            ("/data/f3".into(), FileFetch::NotFound),
+        ]);
+        let body = encode_response(3, &resp).to_body_bytes();
+        let (_, decoded) = decode_response(&body, &mut it).unwrap();
+        match decoded {
+            Response::FilesData(files) => {
+                assert!(Arc::ptr_eq(&files[0].0, &a), "reply path reuses the request's");
+                assert_eq!(it.len(), 3);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn interner_resets_at_capacity_but_stays_correct() {
+        let mut it = PathInterner::default();
+        let a = it.intern("/x");
+        let b = it.intern("/x");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(it.len(), 1);
+        assert!(!it.is_empty());
+        // force a reset through the public API contract: after clear,
+        // old handles stay valid and new interns still round-trip
+        for i in 0..100 {
+            it.intern(&format!("/spam/{i}"));
+        }
+        let c = it.intern("/x");
+        assert_eq!(&*a, &*c, "same content either side of any reset");
     }
 }

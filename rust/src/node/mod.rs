@@ -40,6 +40,7 @@ use crate::net::transport::{
     FileFetch, MetaFetch, NodeEndpoint, PendingReply, Request, Response, Transport,
 };
 use crate::storage::disk::DiskStore;
+use crate::storage::payload::Payload;
 
 /// Per-node I/O accounting snapshot used by the experiment reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -229,9 +230,10 @@ pub enum FetchSource {
 
 /// Result of one batched input fetch: per-path outcomes (each `Ok` carries
 /// a live cache pin the caller must eventually `release`) plus how many
-/// `ReadFiles` requests went to peers.
+/// `ReadFiles` requests went to peers.  Paths are the caller's `Arc`
+/// handles, cloned — never re-allocated — through the whole body.
 pub struct BatchedFetch {
-    pub outcomes: Vec<(String, Result<(Arc<[u8]>, FetchSource)>)>,
+    pub outcomes: Vec<(Arc<str>, Result<(Payload, FetchSource)>)>,
     pub remote_batches: u64,
 }
 
@@ -255,10 +257,33 @@ impl NodeShared {
 
     /// Drop every cached listing and advance the generation, so a gather
     /// that started before this point can no longer install a stale entry.
+    /// The blanket fallback — mutations with a known path use the
+    /// directory-granular [`NodeShared::invalidate_listings_for`].
     pub fn invalidate_listings(&self) {
         let mut cache = self.readdir_cache.write().unwrap();
         self.listing_gen.fetch_add(1, Ordering::AcqRel);
         cache.clear();
+    }
+
+    /// Directory-granular invalidation: drop only the cached listings a
+    /// mutation of `path` can change — its ancestor directory chain (the
+    /// immediate parent gains/loses the name; higher ancestors may gain/
+    /// lose a subdirectory).  Unrelated hot listings stay cached across
+    /// checkpoints.  The generation still advances globally, so any
+    /// in-flight gather stamped before this point is (conservatively)
+    /// rejected at install time — correctness never depends on the
+    /// granularity.
+    pub fn invalidate_listings_for(&self, path: &str) {
+        let mut cache = self.readdir_cache.write().unwrap();
+        self.listing_gen.fetch_add(1, Ordering::AcqRel);
+        let mut dir = crate::metadata::table::parent(path);
+        loop {
+            cache.remove(dir);
+            if dir == "/" {
+                break;
+            }
+            dir = crate::metadata::table::parent(dir);
+        }
     }
 
     /// Install a gathered listing for `dir` unless an invalidation has
@@ -297,10 +322,12 @@ impl NodeShared {
             },
             Request::ReadFiles { paths } => {
                 self.stats.batched_reads_served.fetch_add(1, Ordering::Relaxed);
+                // reply paths are Arc clones of the request's — the batched
+                // serve allocates no strings and copies no payload bytes
                 Response::FilesData(
                     paths
                         .iter()
-                        .map(|p| (p.clone(), self.fetch_stored(p)))
+                        .map(|p| (Arc::clone(p), self.fetch_stored(p)))
                         .collect(),
                 )
             }
@@ -331,7 +358,7 @@ impl NodeShared {
                                 },
                                 None => MetaFetch::NotFound,
                             };
-                            (p.clone(), fetch)
+                            (Arc::clone(p), fetch)
                         })
                         .collect(),
                 )
@@ -343,8 +370,8 @@ impl NodeShared {
                 let mut meta = meta.clone();
                 meta.generation = self.commit_seq.fetch_add(1, Ordering::Relaxed);
                 self.output_meta.write().unwrap().insert(path, meta);
-                // a new name is listable: cached listings are stale now
-                self.invalidate_listings();
+                // the new name is listable: its ancestor listings are stale
+                self.invalidate_listings_for(path);
                 Response::Ok
             }
             Request::ListOutputs { dir } => {
@@ -363,9 +390,9 @@ impl NodeShared {
                     Ok(meta) => {
                         // this generation can no longer be served from here
                         self.cache.invalidate(path);
-                        self.output_meta_cache.write().unwrap().remove(path.as_str());
-                        self.output_gen.write().unwrap().remove(path.as_str());
-                        self.invalidate_listings();
+                        self.output_meta_cache.write().unwrap().remove(&**path);
+                        self.output_gen.write().unwrap().remove(&**path);
+                        self.invalidate_listings_for(path);
                         Response::Meta {
                             stat: meta.stat,
                             origin: meta.location.node,
@@ -378,17 +405,18 @@ impl NodeShared {
             Request::DropOutput { path } => {
                 // origin-side GC of an unlinked output's buffered bytes;
                 // idempotent so a re-delivered drop is harmless
-                self.output_data.write().unwrap().remove(path.as_str());
+                self.output_data.write().unwrap().remove(&**path);
                 self.cache.invalidate(path);
-                self.output_meta_cache.write().unwrap().remove(path.as_str());
-                self.output_gen.write().unwrap().remove(path.as_str());
+                self.output_meta_cache.write().unwrap().remove(&**path);
+                self.output_gen.write().unwrap().remove(&**path);
                 Response::Ok
             }
-            Request::InvalidateListings => {
+            Request::InvalidateListings { path } => {
                 // a commit/unlink landed somewhere in the cluster: retire
-                // this node's cached listings (the writer awaits the acks,
-                // so listings taken after its mutation re-gather)
-                self.invalidate_listings();
+                // this node's cached listings along its ancestor chain (the
+                // writer awaits the acks, so listings taken after its
+                // mutation re-gather; unrelated dirs stay cached)
+                self.invalidate_listings_for(path);
                 Response::Ok
             }
             Request::Shutdown => Response::Ok,
@@ -421,7 +449,7 @@ impl NodeShared {
                             .fetch_add(data.len() as u64, Ordering::Relaxed);
                         let raw_len = data.len() as u64;
                         FileFetch::Data {
-                            stored: data,
+                            stored: data.into(),
                             raw_len,
                             compressed: false,
                         }
@@ -451,11 +479,13 @@ impl NodeShared {
     /// counting the decompression.  Shared by the VFS and the prefetcher.
     pub fn decode_stored(
         &self,
-        stored: Arc<[u8]>,
+        stored: Payload,
         raw_len: u64,
         compressed: bool,
-    ) -> Result<Arc<[u8]>> {
+    ) -> Result<Payload> {
         if !compressed {
+            // uncompressed content is served as-is: an mmap/RAM view stays
+            // a view all the way into the cache and the descriptors
             return Ok(stored);
         }
         let out = crate::compress::lzss::decompress(&stored, raw_len as usize)?;
@@ -480,13 +510,13 @@ impl NodeShared {
     pub fn fetch_inputs_batched(
         &self,
         transport: &dyn Transport,
-        items: Vec<(String, FileLocation)>,
+        items: Vec<(Arc<str>, FileLocation)>,
     ) -> BatchedFetch {
         let stats = &self.stats;
-        let mut outcomes: Vec<(String, Result<(Arc<[u8]>, FetchSource)>)> =
+        let mut outcomes: Vec<(Arc<str>, Result<(Payload, FetchSource)>)> =
             Vec::with_capacity(items.len());
-        let mut local: Vec<String> = Vec::new();
-        let mut remote: HashMap<u32, Vec<String>> = HashMap::new();
+        let mut local: Vec<Arc<str>> = Vec::new();
+        let mut remote: HashMap<u32, Vec<Arc<str>>> = HashMap::new();
         for (path, loc) in items {
             if let Some(pin) = self.cache.acquire(&path) {
                 outcomes.push((path, Ok((pin, FetchSource::Cache))));
@@ -502,7 +532,8 @@ impl NodeShared {
 
         // every remote batch in flight before any local work or wait: the
         // per-peer round trips overlap with each other AND the local reads
-        let pending: Vec<(Vec<String>, Result<PendingReply>)> = remote
+        // (the request clones Arc handles, not strings)
+        let pending: Vec<(Vec<Arc<str>>, Result<PendingReply>)> = remote
             .into_iter()
             .map(|(holder, paths)| {
                 let reply = transport.send(
@@ -540,9 +571,9 @@ impl NodeShared {
                 .and_then(|resp| resp.into_files_data());
             match files {
                 Ok(files) => {
-                    let mut by_path: HashMap<String, FileFetch> = files.into_iter().collect();
+                    let mut by_path: HashMap<Arc<str>, FileFetch> = files.into_iter().collect();
                     for path in paths {
-                        let outcome = match by_path.remove(&path) {
+                        let outcome = match by_path.remove(&*path) {
                             Some(FileFetch::Data {
                                 stored,
                                 raw_len,
@@ -555,7 +586,7 @@ impl NodeShared {
                                 self.decode_stored(stored, raw_len, compressed)
                                     .map(|raw| (self.cache.insert(&path, raw), FetchSource::Remote))
                             }
-                            Some(FileFetch::NotFound) => Err(FanError::NotFound(path.clone())),
+                            Some(FileFetch::NotFound) => Err(FanError::NotFound(path.to_string())),
                             Some(FileFetch::Fault(e)) => {
                                 Err(FanError::Transport(format!("EIO {path}: {e}")))
                             }
@@ -737,7 +768,7 @@ mod tests {
                 for i in 0..200usize {
                     let f = (t + i) % 8;
                     let resp = node.serve(&Request::ReadFile {
-                        path: format!("/m/train/f{f}"),
+                        path: format!("/m/train/f{f}").into(),
                     });
                     match resp {
                         Response::FileData { stored, .. } => {
@@ -901,16 +932,13 @@ mod tests {
         };
         let batch = node.fetch_inputs_batched(
             &tp,
-            vec![
-                ("/m/train/f1".to_string(), loc),
-                ("/nope".to_string(), loc),
-            ],
+            vec![("/m/train/f1".into(), loc), ("/nope".into(), loc)],
         );
         assert_eq!(batch.remote_batches, 0, "single node: all local");
         assert_eq!(batch.outcomes.len(), 2);
         let mut pins = Vec::new();
         for (path, outcome) in batch.outcomes {
-            match path.as_str() {
+            match &*path {
                 "/m/train/f1" => {
                     let (pin, src) = outcome.unwrap();
                     assert_eq!(src, FetchSource::Local);
@@ -922,7 +950,7 @@ mod tests {
             }
         }
         // a second fetch of the same path is a cache hit carrying its own pin
-        let batch = node.fetch_inputs_batched(&tp, vec![("/m/train/f1".to_string(), loc)]);
+        let batch = node.fetch_inputs_batched(&tp, vec![("/m/train/f1".into(), loc)]);
         let (path, outcome) = batch.outcomes.into_iter().next().unwrap();
         let (pin, src) = outcome.unwrap();
         assert_eq!(src, FetchSource::Cache);
@@ -1058,13 +1086,58 @@ mod tests {
         let g2 = node.listing_generation();
         node.install_listing("/d", g2, &names);
         assert!(node.cached_listing("/d").is_some());
-        assert!(matches!(node.serve(&Request::InvalidateListings), Response::Ok));
+        assert!(matches!(
+            node.serve(&Request::InvalidateListings { path: "/d/b".into() }),
+            Response::Ok
+        ));
         assert!(node.cached_listing("/d").is_none());
         assert!(node.listing_generation() > g2);
         // unlink invalidates as well
         node.install_listing("/d", node.listing_generation(), &names);
         node.serve(&Request::UnlinkOutput { path: "/d/b".into() });
         assert!(node.cached_listing("/d").is_none());
+    }
+
+    #[test]
+    fn listing_invalidation_is_directory_granular() {
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        let hot = vec!["hot.bin".to_string()];
+        let deep = vec!["x".to_string()];
+        // unrelated listing + every ancestor of the mutated path cached
+        let g = node.listing_generation();
+        node.install_listing("/other/dir", g, &hot);
+        node.install_listing("/ckpt/run1", g, &deep);
+        node.install_listing("/ckpt", g, &deep);
+        node.install_listing("/", g, &deep);
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 3),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 3,
+                compressed: false,
+            },
+            generation: 0,
+        };
+        node.serve(&Request::CommitOutput { path: "/ckpt/run1/s0.bin".into(), meta });
+        // the ancestor chain is retired...
+        assert!(node.cached_listing("/ckpt/run1").is_none());
+        assert!(node.cached_listing("/ckpt").is_none());
+        assert!(node.cached_listing("/").is_none());
+        // ...but the unrelated hot listing survives the checkpoint
+        assert_eq!(&node.cached_listing("/other/dir").unwrap()[..], &hot[..]);
+        // the targeted broadcast behaves identically
+        let g = node.listing_generation();
+        node.install_listing("/other/dir", g, &hot);
+        node.install_listing("/ckpt/run1", g, &deep);
+        node.serve(&Request::InvalidateListings { path: "/ckpt/run1/s1.bin".into() });
+        assert!(node.cached_listing("/ckpt/run1").is_none());
+        assert!(node.cached_listing("/other/dir").is_some(), "unrelated dir survives");
+        // stale fills are still rejected by the advanced generation
+        node.install_listing("/zzz", g, &hot);
+        assert!(node.cached_listing("/zzz").is_none(), "pre-bump stamp rejected");
     }
 
     #[test]

@@ -22,9 +22,9 @@
 //! and every membership structure (queued/stolen/slots multiset) keys on
 //! `Arc<str>` clones into the table, so scheduling a million-file epoch
 //! costs one table build plus index pushes — no per-path `String` clone
-//! anywhere on the queue path.  Paths materialize as `String`s only at
-//! pickup time (≤ `max_batch` at once) because the wire protocol carries
-//! owned strings.
+//! anywhere on the queue path.  The wire protocol carries `Arc<str>` too,
+//! so even pickups fetch with clones of the interned handles: no path
+//! materializes as a `String` anywhere in the pipeline.
 //!
 //! # Backpressure
 //!
@@ -68,6 +68,7 @@ use std::thread::JoinHandle;
 
 use crate::net::transport::Transport;
 use crate::node::{FetchSource, NodeShared};
+use crate::storage::payload::Payload;
 
 /// Engine sizing (validated upstream by `ClusterConfig::validate`).
 #[derive(Clone, Copy, Debug)]
@@ -208,8 +209,8 @@ impl EpochPathTable {
 enum Slot {
     /// A fetcher is working on it right now.
     Pending,
-    /// Fetched; the `Arc` is the cache pin held for the eventual claimer.
-    Ready(Arc<[u8]>),
+    /// Fetched; the handle is the cache pin held for the eventual claimer.
+    Ready(Payload),
     /// Fetch failed; the claimer falls back to the synchronous path.
     Failed,
 }
@@ -407,7 +408,7 @@ impl PrefetchHandle {
     /// `Some(pin)` transfers the cache pin to the caller — it must be
     /// `release`d like any other descriptor pin.  `None` means the caller
     /// should read synchronously.
-    pub fn wait(&self, path: &str) -> Option<Arc<[u8]>> {
+    pub fn wait(&self, path: &str) -> Option<Payload> {
         enum Act {
             Block,
             TakeReady,
@@ -553,23 +554,19 @@ fn fetch_loop(inner: &Inner) {
 /// acquire, overlapped local reads, one batched request per peer), then
 /// mark the slots with the outcomes.
 ///
-/// The wire protocol carries `String` paths, so the picked interned
-/// handles materialize here — a bounded `≤ max_batch` conversion at fetch
-/// time, not an epoch-scale one on the schedule path.
+/// The wire protocol carries `Arc<str>` paths, so the picked interned
+/// handles ride straight through the batched fetch and come back as the
+/// outcome keys — no `String` materialization, no re-mapping.
 fn fetch_batch(inner: &Inner, picked: Vec<Arc<str>>) {
-    let mut done: Vec<(Arc<str>, Option<Arc<[u8]>>)> = Vec::with_capacity(picked.len());
-    let mut items: Vec<(String, crate::metadata::record::FileLocation)> = Vec::new();
-    let mut fetched: Vec<Arc<str>> = Vec::new();
+    let mut done: Vec<(Arc<str>, Option<Payload>)> = Vec::with_capacity(picked.len());
+    let mut items: Vec<(Arc<str>, crate::metadata::record::FileLocation)> = Vec::new();
     for p in picked {
         match inner.shared.input_meta.get(&p) {
             // not an input file: fail WITHOUT touching the cache — the
             // reader's fallback handles outputs, and a fetchless acquire
             // here would skew the node-wide miss/fetch algebra
             None => done.push((p, None)),
-            Some(m) => {
-                items.push((p.to_string(), m.location));
-                fetched.push(p);
-            }
+            Some(m) => items.push((p, m.location)),
         }
     }
 
@@ -581,13 +578,6 @@ fn fetch_batch(inner: &Inner, picked: Vec<Arc<str>>) {
         .batches_issued
         .fetch_add(batch.remote_batches, Ordering::Relaxed);
     for (p, outcome) in batch.outcomes {
-        // map the outcome's String path back to its interned handle
-        // (linear scan over ≤ max_batch entries)
-        let key = fetched
-            .iter()
-            .find(|a| a.as_ref() == p.as_str())
-            .cloned()
-            .expect("every outcome corresponds to a picked path");
         match outcome {
             Ok((pin, src)) => {
                 // exactly one cache acquire happened per picked input (hit
@@ -599,11 +589,11 @@ fn fetch_batch(inner: &Inner, picked: Vec<Arc<str>>) {
                     FetchSource::Remote => &inner.stats.fetched_remote,
                 };
                 ctr.fetch_add(1, Ordering::Relaxed);
-                done.push((key, Some(pin)));
+                done.push((p, Some(pin)));
             }
             // fetch failed (ENOENT, fault, dead peer, decode error):
             // readers fall back synchronously and surface the real error
-            Err(_) => done.push((key, None)),
+            Err(_) => done.push((p, None)),
         }
     }
 

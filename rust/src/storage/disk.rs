@@ -12,16 +12,22 @@
 //! Spilled partitions keep a persistent handle per blob, so a stored-range
 //! read costs ([`SpillReadMode`]):
 //!
-//! | mode     | syscalls per read | mechanism |
-//! |----------|-------------------|-----------|
-//! | `Mmap`   | 0                 | memcpy out of the mapped region |
-//! | `Pread`  | 1                 | positioned read on the pooled fd |
-//! | `Reopen` | 4 (open/seek/read/close) | the pre-pool baseline, kept for comparison |
+//! | mode     | syscalls per read | copies | mechanism |
+//! |----------|-------------------|--------|-----------|
+//! | `Mmap`   | 0                 | 0      | [`Payload`] view of the mapped region |
+//! | `Pread`  | 1                 | 1 (the read) | positioned read on the pooled fd |
+//! | `Reopen` | 4 (open/seek/read/close) | 1 | the pre-pool baseline, kept for comparison |
 //!
 //! The map is created with raw libc syscalls (no crates.io in this build);
 //! if mapping fails the partition silently degrades to pooled `pread`.
 //! Per-mode read counters are exposed via [`DiskStore::spill_read_counts`]
 //! and surface in `NodeStats`.
+//!
+//! [`DiskStore::read_stored`] hands out [`Payload`] handles: RAM-backed and
+//! mmap-backed partitions serve **zero-copy views** whose `Arc` keeps the
+//! blob/region alive (mapped) for the handle's lifetime — so the region is
+//! only unmapped once the store *and* every outstanding reader, cache entry
+//! and half-written frame are gone (the `Payload` ownership rules).
 
 use std::collections::HashMap;
 use std::fs;
@@ -32,6 +38,7 @@ use std::sync::Arc;
 use crate::error::{FanError, Result};
 use crate::metadata::record::FileStat;
 use crate::partition::format::PartitionReader;
+use crate::storage::payload::{Payload, PayloadRegion};
 
 /// How stored ranges are read back out of spilled partition files.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -137,6 +144,14 @@ mod mmap_region {
             }
         }
     }
+
+    // lets `Payload` views borrow ranges of the map, keeping it mapped
+    // (the Arc in the handle) until the last view is gone
+    impl crate::storage::payload::PayloadRegion for MmapRegion {
+        fn bytes(&self) -> &[u8] {
+            self.as_slice()
+        }
+    }
 }
 
 #[cfg(unix)]
@@ -159,7 +174,7 @@ struct SpillFile {
     path: PathBuf,
     file: fs::File,
     #[cfg(unix)]
-    map: Option<MmapRegion>,
+    map: Option<Arc<MmapRegion>>,
 }
 
 impl SpillFile {
@@ -168,7 +183,7 @@ impl SpillFile {
         #[cfg(unix)]
         let map = if mode == SpillReadMode::Mmap {
             // a partition that cannot be mapped degrades to pooled pread
-            MmapRegion::map(&file).ok()
+            MmapRegion::map(&file).ok().map(Arc::new)
         } else {
             None
         };
@@ -186,8 +201,8 @@ impl SpillFile {
 /// Backing for partition blobs.
 enum Backing {
     /// Blob kept in RAM (fast mode for tests and the simulator's "real
-    /// logic" checks).
-    Ram(Vec<u8>),
+    /// logic" checks).  `Arc`'d so reads serve zero-copy `Payload` views.
+    Ram(Arc<Vec<u8>>),
     /// Blob spilled to a file (real-I/O mode) with persistent handles.
     File(SpillFile),
 }
@@ -289,7 +304,7 @@ impl DiskStore {
         }
         self.bytes_stored += blob.len() as u64;
         let backing = match &self.spill_dir {
-            None => Backing::Ram(blob),
+            None => Backing::Ram(Arc::new(blob)),
             Some(dir) => {
                 let p = dir.join(format!("partition_{pid:05}.fan"));
                 fs::write(&p, &blob)?;
@@ -323,9 +338,11 @@ impl DiskStore {
     }
 
     /// Read one stored range out of a spilled partition via the configured
-    /// mode: a zero-syscall memcpy from the map, one positioned read on the
-    /// pooled handle, or the open/seek/read baseline.
-    fn read_spilled(&self, sf: &SpillFile, at: &StoredAt) -> Result<Vec<u8>> {
+    /// mode: a **zero-copy [`Payload`] view** of the mapped region, one
+    /// positioned read on the pooled handle, or the open/seek/read
+    /// baseline (those reads materialize owned bytes — the read *is* the
+    /// single copy).
+    fn read_spilled(&self, sf: &SpillFile, at: &StoredAt) -> Result<Payload> {
         let len = at.stored_len as usize;
         #[cfg(unix)]
         if let Some(map) = &sf.map {
@@ -338,7 +355,8 @@ impl DiskStore {
                 )));
             }
             self.spill_counts.mmap.fetch_add(1, Ordering::Relaxed);
-            return Ok(m[off..off + len].to_vec());
+            let region: Arc<dyn PayloadRegion> = Arc::clone(map) as Arc<dyn PayloadRegion>;
+            return Ok(Payload::view(region, off, len));
         }
         match self.spill_mode {
             SpillReadMode::Reopen => {
@@ -348,7 +366,7 @@ impl DiskStore {
                 f.seek(SeekFrom::Start(at.offset))?;
                 let mut buf = vec![0u8; len];
                 f.read_exact(&mut buf)?;
-                Ok(buf)
+                Ok(buf.into())
             }
             // Pread, or Mmap whose region could not be created
             _ => {
@@ -369,42 +387,46 @@ impl DiskStore {
                     f.seek(SeekFrom::Start(at.offset))?;
                     f.read_exact(&mut buf)?;
                 }
-                Ok(buf)
+                Ok(buf.into())
             }
         }
+    }
+
+    /// Lookup + backing dispatch shared by the stored and raw read paths.
+    fn read_payload(&self, path: &str) -> Result<(Payload, StoredAt)> {
+        let (at, backing) = self.backing_of(path)?;
+        let payload = match backing {
+            Backing::Ram(blob) => Payload::view(
+                Arc::clone(blob) as Arc<dyn PayloadRegion>,
+                at.offset as usize,
+                at.stored_len as usize,
+            ),
+            Backing::File(sf) => self.read_spilled(sf, &at)?,
+        };
+        Ok((payload, at))
     }
 
     /// Read the *stored* bytes of `path` (compressed bytes when compressed —
     /// decompression happens on the reading node, §5.4).
     ///
-    /// Returns a shared `Arc<[u8]>` buffer materialized in one copy (that
-    /// *is* the disk read); everything downstream (worker serve path,
-    /// transport response, refcount cache, VFS descriptors) clones the Arc,
-    /// never the payload.
-    pub fn read_stored(&self, path: &str) -> Result<(Arc<[u8]>, StoredAt)> {
-        let (at, backing) = self.backing_of(path)?;
-        let bytes: Arc<[u8]> = match backing {
-            Backing::Ram(blob) => {
-                Arc::from(&blob[at.offset as usize..(at.offset + at.stored_len) as usize])
-            }
-            Backing::File(sf) => self.read_spilled(sf, &at)?.into(),
-        };
-        Ok((bytes, at))
+    /// Returns a [`Payload`] handle: RAM and mmap backings serve a
+    /// **zero-copy view** whose `Arc` keeps the blob/region alive for the
+    /// handle's lifetime; pooled-pread/reopen backings serve owned bytes
+    /// materialized by the disk read itself.  Everything downstream
+    /// (worker serve path, transport response, refcount cache, VFS
+    /// descriptors, the frame encoder's vectored send) clones the handle,
+    /// never the bytes.
+    pub fn read_stored(&self, path: &str) -> Result<(Payload, StoredAt)> {
+        self.read_payload(path)
     }
 
     /// Read + decompress to raw file contents.
     pub fn read_raw(&self, path: &str) -> Result<Vec<u8>> {
-        let (at, backing) = self.backing_of(path)?;
-        let stored = match backing {
-            Backing::Ram(blob) => {
-                blob[at.offset as usize..(at.offset + at.stored_len) as usize].to_vec()
-            }
-            Backing::File(sf) => self.read_spilled(sf, &at)?,
-        };
+        let (stored, at) = self.read_payload(path)?;
         if at.compressed {
             crate::compress::lzss::decompress(&stored, at.raw_len as usize)
         } else {
-            Ok(stored)
+            Ok(stored.to_vec())
         }
     }
 

@@ -8,6 +8,8 @@
 
 pub mod disk;
 pub mod models;
+pub mod payload;
 
 pub use disk::{DiskStore, SpillReadMode};
 pub use models::{DeviceProfile, FuseModel, SharedFsModel, SsdModel};
+pub use payload::{payload_copies, Payload, PayloadRegion};

@@ -1,0 +1,272 @@
+//! Zero-copy payload handles for the serve path.
+//!
+//! A [`Payload`] is the unit of file content flowing through the data
+//! plane: `DiskStore::read_stored` → the node's `FileFetch`/`Response`
+//! variants → the refcount cache → VFS descriptors → the wire encoder's
+//! vectored send.  It is either an exclusively-owned buffer (decoded
+//! content, network receives, output bytes) or a **borrowed byte range of
+//! a shared region** — a RAM partition blob or an `mmap`'d spill file —
+//! in which case the `Arc` inside the handle keeps the region alive (and,
+//! for maps, *mapped*) for as long as any reader, cache entry, in-flight
+//! response or half-written frame still references it.
+//!
+//! # Ownership rules
+//!
+//! * A region (partition blob / mmap) may only be unmapped or freed when
+//!   its `Arc` count reaches zero — i.e. when the owning `DiskStore` is
+//!   gone **and** no `Payload` view of it survives anywhere (cache entry,
+//!   open descriptor, queued reply, frame mid-write).  Dropping the store
+//!   while payloads are live is therefore safe by construction.
+//! * Regions are written before they are shared and never mutated after,
+//!   so concurrent `as_slice` views need no synchronization.
+//! * Pin identity in the refcount cache is [`Payload::same`]: the same
+//!   region + range (or the same owned allocation), never byte equality.
+//!
+//! # Copy accounting
+//!
+//! The whole point of the handle is that serving spilled bytes performs
+//! **zero payload memcpys node-side**.  Every place a payload's bytes are
+//! actually duplicated ([`Payload::to_vec`], [`Payload::into_arc`] on a
+//! view, the wire coalescing buffer via [`record_copy`]) bumps a global
+//! relaxed counter, exposed as [`payload_copies`]; the hotpath bench
+//! proves the zero-copy serve path by snapshotting it.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Process-wide tally of payload byte duplications (relaxed; see the
+/// module docs).  Monotonic — benches snapshot before/after and diff.
+static PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
+
+/// Payload memcpys performed since process start.
+pub fn payload_copies() -> u64 {
+    PAYLOAD_COPIES.load(Ordering::Relaxed)
+}
+
+/// Record one payload memcpy performed outside the handle's own methods
+/// (e.g. the wire writer flattening a data frame into a coalescing
+/// buffer).
+pub fn record_copy() {
+    PAYLOAD_COPIES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// A shared, immutable byte region a [`Payload`] may borrow a range of.
+/// Implementors: RAM partition blobs (`Vec<u8>`) and mmap'd spill files
+/// (`storage::disk`'s map type).  `Send + Sync` is part of the contract:
+/// regions are written before sharing and never mutated after.
+pub trait PayloadRegion: Send + Sync {
+    fn bytes(&self) -> &[u8];
+}
+
+impl PayloadRegion for Vec<u8> {
+    fn bytes(&self) -> &[u8] {
+        self
+    }
+}
+
+/// Handle to one file's stored (or decoded) bytes — see the module docs.
+/// Cloning clones an `Arc`, never the bytes.
+#[derive(Clone)]
+pub enum Payload {
+    /// Exclusively-owned whole buffer (decoded content, network receives,
+    /// buffered output bytes).
+    Owned(Arc<[u8]>),
+    /// Borrowed range of a shared region; the `Arc` keeps the region
+    /// alive (mapped) for the payload's lifetime.
+    View {
+        region: Arc<dyn PayloadRegion>,
+        off: usize,
+        len: usize,
+    },
+}
+
+impl Payload {
+    /// Zero-copy view of `region[off..off + len]`.
+    pub fn view(region: Arc<dyn PayloadRegion>, off: usize, len: usize) -> Payload {
+        assert!(
+            off.checked_add(len).map(|e| e <= region.bytes().len()).unwrap_or(false),
+            "payload view {off}+{len} exceeds region of {} bytes",
+            region.bytes().len()
+        );
+        Payload::View { region, off, len }
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            Payload::Owned(a) => a,
+            Payload::View { region, off, len } => &region.bytes()[*off..*off + *len],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::Owned(a) => a.len(),
+            Payload::View { len, .. } => *len,
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pin identity: same owned allocation, or same region + range.
+    /// (Never byte equality — two generations of one path may hold equal
+    /// bytes and must still be distinguishable.)
+    pub fn same(&self, other: &Payload) -> bool {
+        match (self, other) {
+            (Payload::Owned(a), Payload::Owned(b)) => Arc::ptr_eq(a, b),
+            (
+                Payload::View { region: ra, off: oa, len: la },
+                Payload::View { region: rb, off: ob, len: lb },
+            ) => {
+                // compare region identity by data address (not vtable)
+                std::ptr::eq(
+                    Arc::as_ptr(ra) as *const u8,
+                    Arc::as_ptr(rb) as *const u8,
+                ) && oa == ob
+                    && la == lb
+            }
+            _ => false,
+        }
+    }
+
+    /// Materialize into an exclusively-owned `Arc<[u8]>`.  Free for
+    /// `Owned` payloads; **copies (and counts the copy) for views** — use
+    /// only where an `Arc<[u8]>` is genuinely required.
+    pub fn into_arc(self) -> Arc<[u8]> {
+        match self {
+            Payload::Owned(a) => a,
+            Payload::View { region, off, len } => {
+                record_copy();
+                Arc::from(&region.bytes()[off..off + len])
+            }
+        }
+    }
+
+    /// Copy the bytes out (always a counted memcpy).
+    pub fn to_vec(&self) -> Vec<u8> {
+        record_copy();
+        self.as_slice().to_vec()
+    }
+}
+
+impl std::ops::Deref for Payload {
+    type Target = [u8];
+
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Payload {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Arc<[u8]>> for Payload {
+    fn from(a: Arc<[u8]>) -> Payload {
+        Payload::Owned(a)
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    fn from(v: Vec<u8>) -> Payload {
+        Payload::Owned(v.into())
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Payload::Owned(a) => write!(f, "Payload::Owned({} bytes)", a.len()),
+            Payload::View { off, len, .. } => {
+                write!(f, "Payload::View({off}+{len} bytes)")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn region(n: usize) -> Arc<dyn PayloadRegion> {
+        Arc::new((0..n).map(|i| i as u8).collect::<Vec<u8>>())
+    }
+
+    #[test]
+    fn view_exposes_the_range_without_copying() {
+        let r = region(64);
+        let before = payload_copies();
+        let p = Payload::view(Arc::clone(&r), 8, 16);
+        assert_eq!(p.len(), 16);
+        assert_eq!(&p[..], &r.bytes()[8..24]);
+        assert_eq!(payload_copies(), before, "a view costs no copy");
+        // cloning clones the handle, not the bytes
+        let q = p.clone();
+        assert!(p.same(&q));
+        assert_eq!(payload_copies(), before);
+    }
+
+    #[test]
+    fn same_is_range_and_allocation_identity() {
+        let r = region(32);
+        let a = Payload::view(Arc::clone(&r), 0, 8);
+        let b = Payload::view(Arc::clone(&r), 0, 8);
+        let c = Payload::view(Arc::clone(&r), 8, 8);
+        assert!(a.same(&b), "same region + range");
+        assert!(!a.same(&c), "different range");
+        let o1: Payload = vec![0u8; 8].into();
+        let o2: Payload = vec![0u8; 8].into();
+        assert!(o1.same(&o1.clone()));
+        assert!(!o1.same(&o2), "equal bytes, different allocations");
+        assert!(!o1.same(&a), "owned vs view never match");
+        // a different region with identical content is a different pin
+        let r2 = region(32);
+        let d = Payload::view(r2, 0, 8);
+        assert!(!a.same(&d));
+    }
+
+    #[test]
+    fn into_arc_is_free_for_owned_and_counted_for_views() {
+        let owned: Payload = vec![7u8; 32].into();
+        let before = payload_copies();
+        let a = owned.clone().into_arc();
+        assert_eq!(payload_copies(), before, "owned materialization is free");
+        assert_eq!(&a[..], &[7u8; 32]);
+
+        let r = region(16);
+        let v = Payload::view(r, 4, 8);
+        let a = v.into_arc();
+        assert_eq!(payload_copies(), before + 1, "view materialization copies");
+        assert_eq!(&a[..], &[4, 5, 6, 7, 8, 9, 10, 11]);
+    }
+
+    #[test]
+    fn to_vec_always_counts() {
+        let p: Payload = vec![1u8, 2, 3].into();
+        let before = payload_copies();
+        assert_eq!(p.to_vec(), vec![1, 2, 3]);
+        assert_eq!(payload_copies(), before + 1);
+    }
+
+    #[test]
+    #[should_panic]
+    fn out_of_range_view_is_rejected() {
+        let r = region(8);
+        let _ = Payload::view(r, 4, 8);
+    }
+
+    #[test]
+    fn region_outlives_its_store_via_the_handle() {
+        // the Arc in the handle is the only thing keeping the region alive
+        let p = {
+            let r = region(128);
+            Payload::view(r, 100, 28)
+        };
+        assert_eq!(p.len(), 28);
+        assert_eq!(p[0], 100);
+        assert_eq!(p[27], 127);
+    }
+}

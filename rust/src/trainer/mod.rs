@@ -238,6 +238,10 @@ pub fn train_cnn(
     let mut log = TrainLog::default();
     // per-node normalization state (BN-like buffers, never allreduced)
     let mut norm: Vec<NormStats> = (0..nodes).map(|_| NormStats::imagenet_prior()).collect();
+    // cross-epoch prefetch bookkeeping: entries at the head of the next
+    // epoch's draw order already scheduled while the previous epoch's tail
+    // drained (the top-of-epoch schedule skips them)
+    let mut scheduled_ahead: Vec<usize> = vec![0; nodes as usize];
 
     // steps per epoch: one epoch consumes the dataset once *across the
     // cluster* (Horovod semantics) — each node contributes 1/N of it,
@@ -261,23 +265,28 @@ pub fn train_cnn(
         for (node, handle) in pf_handles.iter().enumerate() {
             if let (Some(h), Some(table)) = (handle, &epoch_table) {
                 // sampler indices ARE table indices (the table was built
-                // from `train_paths` in order)
-                h.schedule_table(
-                    table,
-                    samplers[node].upcoming().iter().take(horizon).copied(),
-                );
+                // from `train_paths` in order).  `draw_window` resolves the
+                // effective order — at an exact epoch boundary that is the
+                // pre-committed next-epoch order the sampler adopts on its
+                // first draw; without it `upcoming()` is empty there and
+                // the whole epoch would read cold.  Skip whatever the
+                // cross-epoch hook below already queued.
+                let ahead = scheduled_ahead[node];
+                let order = samplers[node].draw_window(ahead, horizon.saturating_sub(ahead));
+                scheduled_ahead[node] = 0;
+                h.schedule_table(table, order);
             }
         }
         for _ in 0..steps_this_epoch {
             // each node draws + reads + steps; then allreduce
             let mut replicas = Vec::with_capacity(nodes as usize);
             for node in 0..nodes as usize {
-                // Note: when the sampler wraps (None -> reshuffle) mid-epoch,
-                // the post-wrap stretch reads synchronously until the next
-                // epoch's schedule.  Re-scheduling here would double-enqueue
-                // paths the top-of-epoch schedule also covers and slowly
-                // wedge the window with unclaimed pins; see ROADMAP
-                // "Cross-epoch prefetch" for the principled fix.
+                // Note: when the sampler wraps (None -> adopt/reshuffle)
+                // MID-epoch, the post-wrap stretch reads synchronously until
+                // the next schedule point.  Epoch-boundary wraps are covered:
+                // the cross-epoch hook below pre-commits the next order and
+                // warms its head, and the top-of-epoch schedule queues the
+                // rest.
                 let idx = match samplers[node].next_batch(batch) {
                     Some(idx) => idx,
                     None => samplers[node]
@@ -305,6 +314,22 @@ pub fn train_cnn(
             }
             params = allreduce_mean(&replicas)?;
             log.step_losses.push(*losses.last().unwrap());
+        }
+
+        // Cross-epoch prefetch: pre-commit epoch N+1's sampler order and
+        // schedule its head NOW, so the fetchers warm it while validation
+        // and checkpointing drain epoch N's tail — no per-epoch cold start.
+        // The head is capped at one prefetch window (the engine cannot pin
+        // more anyway); the top-of-epoch schedule skips these entries.
+        if epoch + 1 < cfg.epochs {
+            for (node, handle) in pf_handles.iter().enumerate() {
+                if let (Some(h), Some(table)) = (handle, &epoch_table) {
+                    let head = cluster.config.prefetch_window.min(horizon);
+                    let ids = samplers[node].draw_window(0, head);
+                    scheduled_ahead[node] = ids.len();
+                    h.schedule_table(table, ids);
+                }
+            }
         }
 
         // validation: rank 0 sweeps the (replicated) test set using ITS

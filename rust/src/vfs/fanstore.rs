@@ -8,8 +8,10 @@
 //! There is no node-global lock on this path: input metadata and the
 //! partition store are sealed immutable, the refcount cache is sharded, and
 //! stats are atomics — so K clients on one node proceed in parallel.  File
-//! content moves as `Arc<[u8]>` end to end; `read()` copies into the
-//! caller's buffer (the POSIX contract) but nothing else copies payloads.
+//! content moves as `Payload` handles end to end (for RAM/mmap-backed
+//! partitions a zero-copy view of the region itself); `read()` copies into
+//! the caller's buffer (the POSIX contract) but nothing else copies
+//! payloads.  Wire paths are `Arc<str>` handles, cloned per request.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;
@@ -23,12 +25,13 @@ use crate::net::transport::{
 };
 use crate::node::NodeShared;
 use crate::prefetch::PrefetchHandle;
+use crate::storage::payload::Payload;
 use crate::vfs::{Fd, OpenFlags, Vfs};
 
 enum OpenFile {
     Read {
         path: String,
-        data: Arc<[u8]>,
+        data: Payload,
         pos: usize,
     },
     Write {
@@ -52,7 +55,7 @@ pub struct FanStoreVfs {
     /// Pins warmed by [`Vfs::prefetch`] (the batched mini-batch hint),
     /// consumed by the subsequent `open`s.  Leftovers are released on the
     /// next hint or on drop.
-    warm: HashMap<String, Arc<[u8]>>,
+    warm: HashMap<Arc<str>, Payload>,
 }
 
 impl FanStoreVfs {
@@ -87,21 +90,29 @@ impl FanStoreVfs {
         }
     }
 
-    /// Drop this node's listing cache and tell every peer to do the same.
-    /// Awaited: once this returns, a `readdir` anywhere in the cluster
-    /// re-gathers and sees the mutation that prompted the call.  `home` is
-    /// skipped — its `CommitOutput`/`UnlinkOutput` serve arm already
-    /// invalidated its own listings when the mutation landed there.  Best
-    /// effort per peer — an unreachable node cannot be holding a *fresh*
-    /// stale listing, and it re-gathers once it recovers.
-    fn invalidate_listings_cluster_wide(&self, home: u32) {
-        self.shared.invalidate_listings();
+    /// Retire the mutated path's ancestor-chain listings on this node and
+    /// tell every peer to do the same (directory-granular: unrelated hot
+    /// listings stay cached across checkpoints).  Awaited: once this
+    /// returns, a `readdir` anywhere in the cluster re-gathers and sees
+    /// the mutation that prompted the call.  `home` is skipped — its
+    /// `CommitOutput`/`UnlinkOutput` serve arm already invalidated its own
+    /// listings when the mutation landed there.  Best effort per peer — an
+    /// unreachable node cannot be holding a *fresh* stale listing, and it
+    /// re-gathers once it recovers.
+    fn invalidate_listings_cluster_wide(&self, home: u32, path: &Arc<str>) {
+        self.shared.invalidate_listings_for(path);
         let n = self.transport.node_count();
         let pending: Vec<PendingReply> = (0..n)
             .filter(|&node| node != self.node_id && node != home)
             .filter_map(|node| {
                 self.transport
-                    .send(self.node_id, node, Request::InvalidateListings)
+                    .send(
+                        self.node_id,
+                        node,
+                        Request::InvalidateListings {
+                            path: Arc::clone(path),
+                        },
+                    )
                     .ok()
             })
             .collect();
@@ -113,7 +124,7 @@ impl FanStoreVfs {
     /// Fetch + decompress an input file's content, going through the node's
     /// refcount cache.  Returns a pinned Arc (caller must `release` on
     /// close — handled by [`Vfs::close`]).
-    fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Arc<[u8]>> {
+    fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Payload> {
         // 0) pin warmed by a batched prefetch() hint: already ours
         if let Some(pin) = self.warm.remove(path) {
             return Ok(pin);
@@ -129,7 +140,7 @@ impl FanStoreVfs {
         // shared batched-fetch body, degenerate single-path case
         let batch = self
             .shared
-            .fetch_inputs_batched(self.transport.as_ref(), vec![(path.to_string(), loc)]);
+            .fetch_inputs_batched(self.transport.as_ref(), vec![(path.into(), loc)]);
         let (_, outcome) = batch
             .outcomes
             .into_iter()
@@ -141,7 +152,7 @@ impl FanStoreVfs {
     /// Read an already-committed output file (checkpoint resume path),
     /// going through the refcount cache exactly like inputs do — repeated
     /// resume `open()`s on one node fetch from the origin once.
-    fn fetch_output(&mut self, path: &str, meta: &FileMeta) -> Result<Arc<[u8]>> {
+    fn fetch_output(&mut self, path: &str, meta: &FileMeta) -> Result<Payload> {
         if let Some(data) = self.shared.cache.acquire(path) {
             // Guard against a cached copy that predates an unlink+rewrite
             // on the home node (only the home invalidates its own cache):
@@ -163,7 +174,7 @@ impl FanStoreVfs {
         }
         let stats = &self.shared.stats;
         let origin = meta.location.node;
-        let data: Arc<[u8]> = if origin == self.node_id {
+        let data: Payload = if origin == self.node_id {
             let data = self
                 .shared
                 .output_data
@@ -176,7 +187,7 @@ impl FanStoreVfs {
             stats
                 .bytes_read_local
                 .fetch_add(data.len() as u64, Ordering::Relaxed);
-            data
+            data.into()
         } else {
             // batched-read request even for one file: its per-file result
             // keeps a gone-at-origin file distinguishable (ENOENT) from a
@@ -186,7 +197,7 @@ impl FanStoreVfs {
                 self.node_id,
                 origin,
                 Request::ReadFiles {
-                    paths: vec![path.to_string()],
+                    paths: vec![path.into()],
                 },
             )?;
             let fetch = resp
@@ -250,9 +261,7 @@ impl FanStoreVfs {
         match self.transport.call(
             self.node_id,
             home,
-            Request::StatOutput {
-                path: path.to_string(),
-            },
+            Request::StatOutput { path: path.into() },
         )? {
             Response::Meta {
                 stat,
@@ -354,8 +363,9 @@ impl Vfs for FanStoreVfs {
     fn read(&mut self, fd: Fd, buf: &mut [u8]) -> Result<usize> {
         match self.fds.get_mut(&fd) {
             Some(OpenFile::Read { data, pos, .. }) => {
-                let n = buf.len().min(data.len() - *pos);
-                buf[..n].copy_from_slice(&data[*pos..*pos + n]);
+                let bytes = data.as_slice();
+                let n = buf.len().min(bytes.len() - *pos);
+                buf[..n].copy_from_slice(&bytes[*pos..*pos + n]);
                 *pos += n;
                 Ok(n)
             }
@@ -411,11 +421,22 @@ impl Vfs for FanStoreVfs {
                     .unwrap()
                     .insert(path.clone(), buf.into());
                 let home = self.shared.placement.output_home(&path);
+                // one interned wire handle for the commit + the broadcast
+                let path: Arc<str> = path.into();
                 if home == self.node_id {
-                    self.shared.serve(&Request::CommitOutput { path, meta });
+                    self.shared.serve(&Request::CommitOutput {
+                        path: Arc::clone(&path),
+                        meta,
+                    });
                 } else {
-                    self.transport
-                        .call(self.node_id, home, Request::CommitOutput { path, meta })?;
+                    self.transport.call(
+                        self.node_id,
+                        home,
+                        Request::CommitOutput {
+                            path: Arc::clone(&path),
+                            meta,
+                        },
+                    )?;
                 }
                 // count only once the commit actually landed — a dead home
                 // node must not inflate the committed totals
@@ -427,9 +448,9 @@ impl Vfs for FanStoreVfs {
                     .stats
                     .output_bytes
                     .fetch_add(size, Ordering::Relaxed);
-                // the new name is listable everywhere: retire every node's
-                // cached listings before the close returns
-                self.invalidate_listings_cluster_wide(home);
+                // the new name is listable everywhere: retire its ancestor
+                // listings on every node before the close returns
+                self.invalidate_listings_cluster_wide(home, &path);
                 Ok(())
             }
             None => Err(FanError::BadFd(fd)),
@@ -458,7 +479,7 @@ impl Vfs for FanStoreVfs {
         }
         let normalized: Vec<String> = paths.iter().map(|p| normalize(p)).collect();
         let mut slots: Vec<Slot> = Vec::with_capacity(normalized.len());
-        let mut remote: HashMap<u32, Vec<(usize, String)>> = HashMap::new();
+        let mut remote: HashMap<u32, Vec<(usize, Arc<str>)>> = HashMap::new();
         for (i, path) in normalized.iter().enumerate() {
             if let Ok(s) = self.shared.input_meta.stat(path) {
                 slots.push(Slot::Done(Ok(s)));
@@ -490,17 +511,18 @@ impl Vfs for FanStoreVfs {
                 continue;
             }
             slots.push(Slot::Pending);
-            remote.entry(home).or_default().push((i, path.clone()));
+            remote.entry(home).or_default().push((i, path.as_str().into()));
         }
         // one batched request per remote home, all issued before any wait
-        let pending: Vec<(Vec<(usize, String)>, Result<PendingReply>)> = remote
+        // (Arc clones of the interned handles, no string copies)
+        let pending: Vec<(Vec<(usize, Arc<str>)>, Result<PendingReply>)> = remote
             .into_iter()
             .map(|(home, entries)| {
                 let reply = self.transport.send(
                     self.node_id,
                     home,
                     Request::StatOutputs {
-                        paths: entries.iter().map(|(_, p)| p.clone()).collect(),
+                        paths: entries.iter().map(|(_, p)| Arc::clone(p)).collect(),
                     },
                 );
                 (entries, reply)
@@ -514,9 +536,9 @@ impl Vfs for FanStoreVfs {
                 Ok(metas) => {
                     // looked up by `get`, never `remove`: duplicate (or
                     // alias-normalized) paths in one call must all resolve
-                    let by_path: HashMap<String, MetaFetch> = metas.into_iter().collect();
+                    let by_path: HashMap<Arc<str>, MetaFetch> = metas.into_iter().collect();
                     for (i, path) in entries {
-                        let outcome = match by_path.get(&path) {
+                        let outcome = match by_path.get(&*path) {
                             Some(MetaFetch::Meta {
                                 stat,
                                 origin,
@@ -528,10 +550,15 @@ impl Vfs for FanStoreVfs {
                                     .output_meta_cache
                                     .write()
                                     .unwrap()
-                                    .insert(path, output_meta(*stat, *origin, *generation));
+                                    .insert(
+                                        path.to_string(),
+                                        output_meta(*stat, *origin, *generation),
+                                    );
                                 Ok(*stat)
                             }
-                            Some(MetaFetch::NotFound) => Err(FanError::NotFound(path)),
+                            Some(MetaFetch::NotFound) => {
+                                Err(FanError::NotFound(path.to_string()))
+                            }
                             None => Err(FanError::Transport(format!(
                                 "home reply missing entry for {path}"
                             ))),
@@ -587,18 +614,22 @@ impl Vfs for FanStoreVfs {
         // Issue the request to every peer first, then collect: the N-1
         // round trips overlap instead of serializing.
         let n = self.transport.node_count();
+        // one interned handle for the whole gather: peers get Arc clones
+        let wire_dir: Arc<str> = dir.as_str().into();
         let mut pending: Vec<PendingReply> = Vec::with_capacity(n as usize);
         for node in 0..n {
             if node != self.node_id {
                 pending.push(self.transport.send(
                     self.node_id,
                     node,
-                    Request::ListOutputs { dir: dir.clone() },
+                    Request::ListOutputs {
+                        dir: Arc::clone(&wire_dir),
+                    },
                 )?);
             }
         }
         // serve the local share while the peers work
-        if let Response::Names(v) = self.shared.serve(&Request::ListOutputs { dir: dir.clone() }) {
+        if let Response::Names(v) = self.shared.serve(&Request::ListOutputs { dir: wire_dir }) {
             names.extend(v);
         }
         for p in pending {
@@ -631,11 +662,11 @@ impl Vfs for FanStoreVfs {
         // dedup inside one hint: a duplicated (or alias-normalized) path
         // would otherwise be fetched twice and its second cache pin leaked
         // when warm.insert overwrote the first
-        let mut seen: std::collections::HashSet<String> = std::collections::HashSet::new();
-        let mut items: Vec<(String, FileLocation)> = Vec::new();
+        let mut seen: std::collections::HashSet<Arc<str>> = std::collections::HashSet::new();
+        let mut items: Vec<(Arc<str>, FileLocation)> = Vec::new();
         for p in paths {
-            let path = normalize(p);
-            if self.warm.contains_key(&path) || seen.contains(&path) {
+            let path: Arc<str> = normalize(p).into();
+            if self.warm.contains_key(&*path) || seen.contains(&*path) {
                 continue; // duplicate inside this batch
             }
             // only inputs are hintable (outputs keep the per-open path);
@@ -651,7 +682,7 @@ impl Vfs for FanStoreVfs {
                     continue;
                 }
             }
-            seen.insert(path.clone());
+            seen.insert(Arc::clone(&path));
             items.push((path, loc));
         }
         let batch = self
@@ -659,7 +690,7 @@ impl Vfs for FanStoreVfs {
             .fetch_inputs_batched(self.transport.as_ref(), items);
         for (path, outcome) in batch.outcomes {
             let Ok((pin, _src)) = outcome else { continue };
-            if let Some(extra) = self.warm.insert(path.clone(), pin) {
+            if let Some(extra) = self.warm.insert(Arc::clone(&path), pin) {
                 // defensive: should be unreachable given the dedup above —
                 // drop the superseded pin so the entry still drains to zero
                 self.shared.cache.release(&path, &extra);
@@ -678,6 +709,8 @@ impl Vfs for FanStoreVfs {
         // 1) remove the authoritative metadata at the home node; the
         //    answer names the originating node holding the bytes
         let home = self.shared.placement.output_home(&path);
+        // one interned wire handle for the unlink + drop + broadcast
+        let wire_path: Arc<str> = path.as_str().into();
         let origin = if home == self.node_id {
             let meta = self.shared.output_meta.write().unwrap().remove(&path)?;
             meta.location.node
@@ -685,7 +718,9 @@ impl Vfs for FanStoreVfs {
             match self.transport.call(
                 self.node_id,
                 home,
-                Request::UnlinkOutput { path: path.clone() },
+                Request::UnlinkOutput {
+                    path: Arc::clone(&wire_path),
+                },
             )? {
                 Response::Meta { origin, .. } => origin,
                 Response::Err(_) => return Err(FanError::NotFound(path)),
@@ -703,15 +738,21 @@ impl Vfs for FanStoreVfs {
         //    leaks the buffer until shutdown.  Best effort: a dead origin
         //    cannot leak, and the name is already gone from the home.
         if origin == self.node_id {
-            self.shared.serve(&Request::DropOutput { path });
+            self.shared.serve(&Request::DropOutput {
+                path: Arc::clone(&wire_path),
+            });
         } else {
-            let _ = self
-                .transport
-                .call(self.node_id, origin, Request::DropOutput { path });
+            let _ = self.transport.call(
+                self.node_id,
+                origin,
+                Request::DropOutput {
+                    path: Arc::clone(&wire_path),
+                },
+            );
         }
-        // the name is gone from every listing: retire cached listings
-        // cluster-wide before unlink returns
-        self.invalidate_listings_cluster_wide(home);
+        // the name is gone from every listing: retire its ancestor-chain
+        // listings cluster-wide before unlink returns
+        self.invalidate_listings_cluster_wide(home, &wire_path);
         Ok(())
     }
 }

@@ -14,6 +14,12 @@ pub struct EpochSampler {
     order: Vec<u32>,
     cursor: usize,
     rng: Prng,
+    /// Next epoch's order, fixed ahead of the wrap by
+    /// [`EpochSampler::precommit_next`] (cross-epoch prefetch needs the
+    /// order *before* the epoch boundary).  Adopted by the wrap in
+    /// [`EpochSampler::next_batch`]; the RNG is drawn identically either
+    /// way, so pre-committing never changes the sampled sequence.
+    next_order: Option<Vec<u32>>,
 }
 
 impl EpochSampler {
@@ -25,7 +31,21 @@ impl EpochSampler {
             order,
             cursor: 0,
             rng,
+            next_order: None,
         }
+    }
+
+    /// Fix (and return) the next epoch's shuffled order without consuming
+    /// the current one.  Idempotent until the wrap adopts it.  Scheduling
+    /// the head of this order into the prefetch pipeline while the current
+    /// epoch's tail drains removes the per-epoch cold start.
+    pub fn precommit_next(&mut self) -> &[u32] {
+        if self.next_order.is_none() {
+            let mut next = self.order.clone();
+            self.rng.shuffle(&mut next);
+            self.next_order = Some(next);
+        }
+        self.next_order.as_deref().expect("just committed")
     }
 
     /// Remaining items this epoch.
@@ -39,12 +59,32 @@ impl EpochSampler {
         &self.order[self.cursor..]
     }
 
+    /// The next `take` indices of the *effective* draw order, starting
+    /// `skip` entries ahead of the cursor: the remainder of the current
+    /// epoch, or — at an exact epoch boundary — the pre-committed
+    /// next-epoch order the wrap will adopt.  Exactly what a prefetch
+    /// scheduler should queue; the `skip` lets it avoid re-queueing a
+    /// head it already warmed.
+    pub fn draw_window(&mut self, skip: usize, take: usize) -> Vec<u32> {
+        let order: &[u32] = if self.remaining() == 0 {
+            self.precommit_next()
+        } else {
+            self.upcoming()
+        };
+        order.iter().skip(skip).take(take).copied().collect()
+    }
+
     /// Next mini-batch of up to `batch` indices; reshuffles when the epoch
     /// ends (returns `None` exactly at the epoch boundary so callers can
     /// run validation/checkpointing, §3.1).
     pub fn next_batch(&mut self, batch: usize) -> Option<Vec<u32>> {
         if self.cursor >= self.order.len() {
-            self.rng.shuffle(&mut self.order);
+            // adopt a pre-committed order when one exists (same RNG draw
+            // the in-place reshuffle would have made)
+            match self.next_order.take() {
+                Some(next) => self.order = next,
+                None => self.rng.shuffle(&mut self.order),
+            }
             self.cursor = 0;
             return None;
         }
@@ -70,6 +110,7 @@ impl EpochSampler {
             order,
             cursor: 0,
             rng,
+            next_order: None,
         }
     }
 }
@@ -166,6 +207,54 @@ mod tests {
         assert_eq!(s.next_batch(4).unwrap().len(), 2); // tail
         assert!(s.next_batch(4).is_none()); // epoch boundary
         assert_eq!(s.next_batch(4).unwrap().len(), 4); // new epoch
+    }
+
+    #[test]
+    fn precommit_never_changes_the_sequence() {
+        // a sampler that pre-commits draws the exact sequence of one that
+        // reshuffles lazily at every wrap
+        let mut lazy = EpochSampler::new(37, 11);
+        let mut eager = EpochSampler::new(37, 11);
+        let mut lazy_seq = Vec::new();
+        let mut eager_seq = Vec::new();
+        for round in 0..5 {
+            // pre-commit at a different point each epoch (including before
+            // any draw, and twice — idempotence)
+            if round % 2 == 0 {
+                let head: Vec<u32> = eager.precommit_next().iter().take(4).copied().collect();
+                assert_eq!(head.len(), 4);
+                assert_eq!(&eager.precommit_next()[..4], &head[..], "idempotent");
+            }
+            loop {
+                let (a, b) = (lazy.next_batch(8), eager.next_batch(8));
+                assert_eq!(a, b, "sequences must match at every draw");
+                match a {
+                    Some(v) => {
+                        lazy_seq.extend(v);
+                        eager_seq.extend(b.unwrap_or_default());
+                    }
+                    None => break,
+                }
+            }
+        }
+        assert_eq!(lazy_seq, eager_seq);
+        assert_eq!(lazy_seq.len(), 5 * 37);
+    }
+
+    #[test]
+    fn precommitted_order_is_what_the_wrap_adopts() {
+        let mut s = EpochSampler::new(16, 3);
+        // drain epoch 0
+        while s.next_batch(16).is_some() {}
+        // cursor is at the boundary: commit epoch 1's order
+        let promised: Vec<u32> = s.precommit_next().to_vec();
+        // draw_window sees the committed order across the boundary, and
+        // skip composes with an already-warmed head
+        assert_eq!(s.draw_window(0, 4), &promised[..4]);
+        assert_eq!(s.draw_window(4, 16), &promised[4..]);
+        assert_eq!(s.next_batch(16), None, "boundary signal");
+        let drawn = s.next_batch(16).expect("fresh epoch");
+        assert_eq!(drawn, promised, "the wrap must adopt the committed order");
     }
 
     #[test]

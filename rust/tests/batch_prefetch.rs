@@ -11,6 +11,7 @@ use fanstore::config::ClusterConfig;
 use fanstore::coordinator::Cluster;
 use fanstore::net::transport::{FileFetch, Request, Response, Transport};
 use fanstore::partition::builder::InputFile;
+use fanstore::storage::disk::SpillReadMode;
 use fanstore::util::prng::Prng;
 use fanstore::vfs::Vfs;
 
@@ -103,7 +104,10 @@ fn readfiles_mixed_hit_enoent_and_duplicates_in_one_batch() {
 fn readfiles_io_fault_is_not_enoent() {
     // spill-to-disk cluster; deleting the spilled partition files turns
     // node 1's reads into real I/O faults, which must surface per file as
-    // Fault — never as NotFound
+    // Fault — never as NotFound.  Reopen mode is the one backing where a
+    // deleted file is visible per read (pooled pread fds and mmap regions
+    // deliberately keep the unlinked inode readable — the payload-handle
+    // lifetime tests prove that side).
     let files = inputs(8, 2);
     let spill = std::env::temp_dir().join(format!("fanstore_bp_{}", std::process::id()));
     let cluster = Cluster::launch(
@@ -112,6 +116,7 @@ fn readfiles_io_fault_is_not_enoent() {
             nodes: 2,
             partitions: 2,
             spill_dir: Some(spill.to_string_lossy().into_owned()),
+            spill_read_mode: SpillReadMode::Reopen,
             ..Default::default()
         },
     )

@@ -142,6 +142,122 @@ fn spill_backends_byte_identical_under_concurrent_reads() {
     }
 }
 
+/// Payload-handle lifetime: a `Payload` returned by `read_stored` must
+/// stay byte-valid after the backing file is unlinked AND after the store
+/// itself is dropped — the `Arc` inside the handle is what keeps the RAM
+/// blob alive / the mmap region mapped.  Concurrent readers hammering the
+/// held handles while the store goes away must never observe freed bytes.
+#[test]
+fn payload_handles_survive_unlink_and_store_drop() {
+    let files = dataset(32);
+    let (blobs, _) = build_partitions(&files, 4, Codec::Lzss(3)).unwrap();
+    let mut ram = DiskStore::in_memory();
+    for (pid, b) in blobs.iter().enumerate() {
+        ram.load_partition(pid as u32, b.clone(), "/m").unwrap();
+    }
+    let paths: Vec<String> = files.iter().map(|f| format!("/m/{}", f.path)).collect();
+    let expect: Arc<Vec<Vec<u8>>> = Arc::new(
+        paths
+            .iter()
+            .map(|p| ram.read_stored(p).unwrap().0.to_vec())
+            .collect(),
+    );
+
+    // RAM backing participates too: its payloads are views into the Arc'd
+    // partition blob, which the handles must keep alive past store drop
+    let ram_payloads: Vec<_> = paths.iter().map(|p| ram.read_stored(p).unwrap().0).collect();
+    drop(ram);
+    for (p, want) in ram_payloads.iter().zip(expect.iter()) {
+        assert_eq!(&p[..], &want[..], "RAM view outlives its store");
+    }
+
+    for mode in MODES {
+        let dir = TempDir::new(&format!("lifetime_{}", mode.name()));
+        let mut store = DiskStore::on_disk_with_mode(&dir.0, mode).unwrap();
+        for (pid, b) in blobs.iter().enumerate() {
+            store.load_partition(pid as u32, b.clone(), "/m").unwrap();
+        }
+        let payloads: Arc<Vec<_>> =
+            Arc::new(paths.iter().map(|p| store.read_stored(p).unwrap().0).collect());
+        // race 1: unlink the spilled partition files under the held maps
+        // (mapped pages stay valid after unlink; pooled fds keep the inode)
+        for entry in std::fs::read_dir(&dir.0).unwrap() {
+            std::fs::remove_file(entry.unwrap().path()).ok();
+        }
+        // race 2: drop the store itself while 8 threads verify the handles
+        let mut handles = Vec::new();
+        for t in 0..8usize {
+            let payloads = Arc::clone(&payloads);
+            let expect = Arc::clone(&expect);
+            let name = mode.name();
+            handles.push(std::thread::spawn(move || {
+                for round in 0..6 {
+                    for i in 0..payloads.len() {
+                        let k = (t * 13 + i) % payloads.len();
+                        assert_eq!(
+                            &payloads[k][..],
+                            &expect[k][..],
+                            "{name} round {round}: handle bytes diverged"
+                        );
+                    }
+                }
+            }));
+        }
+        drop(store); // SpillFiles + maps' own Arcs go away mid-verification
+        for h in handles {
+            h.join().expect("no reader observed freed bytes");
+        }
+        // the handles are the last owners now; still byte-identical
+        for (p, want) in payloads.iter().zip(expect.iter()) {
+            assert_eq!(&p[..], &want[..], "{} post-drop bytes", mode.name());
+        }
+    }
+}
+
+/// Spill-mode churn: stores over the same dataset are built and torn down
+/// in every mode, back to back, while payload handles from each dead
+/// incarnation are retained — all of them must stay byte-identical to the
+/// reference regardless of which backing produced them.
+#[test]
+fn payload_handles_byte_identical_across_mode_churn() {
+    let files = dataset(16);
+    let (blobs, _) = build_partitions(&files, 2, Codec::Lzss(3)).unwrap();
+    let mut ram = DiskStore::in_memory();
+    for (pid, b) in blobs.iter().enumerate() {
+        ram.load_partition(pid as u32, b.clone(), "/m").unwrap();
+    }
+    let paths: Vec<String> = files.iter().map(|f| format!("/m/{}", f.path)).collect();
+    let expect: Vec<Vec<u8>> = paths
+        .iter()
+        .map(|p| ram.read_stored(p).unwrap().0.to_vec())
+        .collect();
+
+    let mut retained = Vec::new();
+    for round in 0..3 {
+        for mode in MODES {
+            let dir = TempDir::new(&format!("churn_{round}_{}", mode.name()));
+            let mut store = DiskStore::on_disk_with_mode(&dir.0, mode).unwrap();
+            for (pid, b) in blobs.iter().enumerate() {
+                store.load_partition(pid as u32, b.clone(), "/m").unwrap();
+            }
+            for (i, p) in paths.iter().enumerate() {
+                let (payload, at) = store.read_stored(p).unwrap();
+                assert_eq!(payload.len() as u64, at.stored_len);
+                retained.push((i, mode.name(), payload));
+            }
+            // store (and its TempDir) die here; the handles live on
+        }
+    }
+    assert_eq!(retained.len(), 3 * MODES.len() * paths.len());
+    for (i, mode, payload) in &retained {
+        assert_eq!(
+            &payload[..],
+            &expect[*i][..],
+            "{mode}: retained handle diverged after churn"
+        );
+    }
+}
+
 #[test]
 fn cluster_reads_identical_across_spill_modes() {
     let files = dataset(24);

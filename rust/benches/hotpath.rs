@@ -32,7 +32,7 @@ use std::sync::Arc;
 use std::time::Instant;
 
 use fanstore::cache::{RefCountCache, ShardedCache};
-use fanstore::compress::lzss;
+use fanstore::compress::{lzss, Codec};
 use fanstore::config::ClusterConfig;
 use fanstore::coordinator::Cluster;
 use fanstore::metadata::record::{FileLocation, FileMeta, FileStat};
@@ -125,7 +125,7 @@ fn bench_metadata(out: &mut Entries, smoke: bool) {
                     partition: 0,
                     offset: 0,
                     stored_len: 1000,
-                    compressed: false,
+                    codec: Codec::None,
                 },
                 generation: 0,
             },
@@ -163,7 +163,7 @@ fn bench_cache(out: &mut Entries, smoke: bool) {
         let path = format!("/f{}", i % 1000);
         let pin = match c.acquire(&path) {
             Some(d) => d,
-            None => c.insert(&path, vec![0u8; 64].into()),
+            None => c.insert(path.as_str(), vec![0u8; 64].into()),
         };
         c.release(&path, &pin);
     }
@@ -184,7 +184,7 @@ fn bench_cache(out: &mut Entries, smoke: bool) {
                     let path = format!("/f{}", (t * 7 + i) % 1000);
                     let pin = match c.acquire(&path) {
                         Some(d) => d,
-                        None => c.insert(&path, vec![0u8; 64].into()),
+                        None => c.insert(path.as_str(), vec![0u8; 64].into()),
                     };
                     c.release(&path, &pin);
                 }
@@ -245,8 +245,6 @@ fn spawn_payload_echo(ep: NodeEndpoint) -> std::thread::JoinHandle<()> {
             }
             msg.reply.send(Response::FileData {
                 stored: payload.clone(),
-                raw_len: 128 * 1024,
-                compressed: false,
             });
         }
     })
@@ -657,16 +655,9 @@ fn bench_serve_path(out: &mut Entries, smoke: bool) {
     let mut bytes = 0u64;
     for _ in 0..rounds {
         for p in &paths {
-            let (payload, at) = store.read_stored(p).unwrap();
+            let (payload, _) = store.read_stored(p).unwrap();
             bytes += payload.len() as u64;
-            let frame = wire::encode_response(
-                1,
-                &Response::FileData {
-                    stored: payload,
-                    raw_len: at.raw_len,
-                    compressed: at.compressed,
-                },
-            );
+            let frame = wire::encode_response(1, &Response::FileData { stored: payload });
             frame.write_to(&mut sink).unwrap();
         }
     }
@@ -695,17 +686,10 @@ fn bench_serve_path(out: &mut Entries, smoke: bool) {
     let mut bytes = 0u64;
     for _ in 0..rounds {
         for p in &paths {
-            let (payload, at) = store.read_stored(p).unwrap();
+            let (payload, _) = store.read_stored(p).unwrap();
             bytes += payload.len() as u64;
             let owned: Payload = payload.into_arc().into(); // the counted copy
-            let frame = wire::encode_response(
-                1,
-                &Response::FileData {
-                    stored: owned,
-                    raw_len: at.raw_len,
-                    compressed: at.compressed,
-                },
-            );
+            let frame = wire::encode_response(1, &Response::FileData { stored: owned });
             frame.write_to(&mut sink).unwrap();
         }
     }
@@ -729,6 +713,150 @@ fn bench_serve_path(out: &mut Entries, smoke: bool) {
     );
     drop(store);
     std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Compressed serve path on an mmap-spilled store holding SRGAN-like
+/// `.npy` inputs (0.72 redundancy — the paper's compressible class).
+/// Three legs over the same files and the same framing sink:
+///
+/// * `raw` — partitions packed with `Codec::None`: every serve frames the
+///   full raw bytes (the no-compression baseline and the net-byte
+///   denominator).
+/// * `wire_compressed` — partitions packed with `Codec::Lzss(5)`: the
+///   serve frames the *stored* (compressed) bytes and decode belongs to
+///   the consuming node.  Still zero-copy — the payload-memcpy counter is
+///   emitted (`compress_serve/wire_compressed_payload_memcpys`) and must
+///   stay 0.
+/// * `rest_compressed` — same compressed store, but the server decodes
+///   before framing (`read_raw`): what a compressed-at-rest /
+///   raw-over-wire design would pay per serve.
+///
+/// Besides the rates, `compress_serve/raw_net_bytes` and
+/// `compress_serve/wire_net_bytes` record the total frame bytes (body +
+/// 4-byte prefix) each leg would put on the network; CI asserts the
+/// wire-compressed leg moves ≥2x fewer bytes on this workload.
+fn bench_compress_serve(out: &mut Entries, smoke: bool) {
+    println!("== compressed serve: raw vs wire-compressed vs rest-compressed (mmap spill) ==");
+    let (n_files, size, rounds) = if smoke {
+        (32usize, 64 << 10, 2u32)
+    } else {
+        (128usize, 64 << 10, 8u32)
+    };
+    let mut rng = Prng::new(53);
+    let files: Vec<InputFile> = (0..n_files)
+        .map(|i| InputFile {
+            path: format!("t/f{i:05}.npy"),
+            data: synth_content(&mut rng, size, 0.72),
+        })
+        .collect();
+    let raw_total: u64 = files.iter().map(|f| f.data.len() as u64).sum();
+    let base = std::env::temp_dir().join(format!("fanstore_bench_cserve_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+    let paths: Vec<String> = files.iter().map(|f| format!("/c/{}", f.path)).collect();
+    let total_ops = (rounds as usize * paths.len()) as u64;
+    let mut sink = std::io::sink();
+
+    // leg 1: no compression anywhere — the baseline and the denominator
+    let (blobs, _) = build_partitions(&files, 4, Codec::None).unwrap();
+    let mut store = DiskStore::on_disk_with_mode(&base.join("raw"), SpillReadMode::Mmap).unwrap();
+    for (pid, blob) in blobs.iter().enumerate() {
+        store.load_partition(pid as u32, blob.clone(), "/c").unwrap();
+    }
+    let mut raw_net_bytes = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for p in &paths {
+            let (payload, _) = store.read_stored(p).unwrap();
+            let frame = wire::encode_response(1, &Response::FileData { stored: payload });
+            raw_net_bytes += frame.body_len() as u64 + 4;
+            frame.write_to(&mut sink).unwrap();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  raw            : {:>12}, {:.0} serves/s, {raw_net_bytes} net bytes",
+        human_rate(raw_net_bytes as f64 / secs),
+        total_ops as f64 / secs
+    );
+    out.push(("compress_serve/raw".into(), total_ops as f64 / secs, raw_net_bytes as f64 / secs));
+    drop(store);
+
+    // leg 2: compressed at rest, compressed over the wire — the stored
+    // form goes straight from the map into the frame, uncopied
+    let (blobs, bstats) = build_partitions(&files, 4, Codec::Lzss(5)).unwrap();
+    let mut store = DiskStore::on_disk_with_mode(&base.join("wire"), SpillReadMode::Mmap).unwrap();
+    for (pid, blob) in blobs.iter().enumerate() {
+        store.load_partition(pid as u32, blob.clone(), "/c").unwrap();
+    }
+    let copies_before = payload_copies();
+    let mut wire_net_bytes = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for p in &paths {
+            let (payload, _) = store.read_stored(p).unwrap();
+            let frame = wire::encode_response(1, &Response::FileData { stored: payload });
+            wire_net_bytes += frame.body_len() as u64 + 4;
+            frame.write_to(&mut sink).unwrap();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    let wire_copies = payload_copies() - copies_before;
+    println!(
+        "  wire_compressed: {:>12}, {:.0} serves/s, {wire_net_bytes} net bytes \
+         ({:.2}x fewer, ratio {:.2}x, {wire_copies} payload memcpys)",
+        human_rate(wire_net_bytes as f64 / secs),
+        total_ops as f64 / secs,
+        raw_net_bytes as f64 / wire_net_bytes.max(1) as f64,
+        bstats.ratio()
+    );
+    out.push((
+        "compress_serve/wire_compressed".into(),
+        total_ops as f64 / secs,
+        wire_net_bytes as f64 / secs,
+    ));
+    out.push(("compress_serve/wire_compressed_payload_memcpys".into(), wire_copies as f64, 0.0));
+    assert_eq!(
+        wire_copies, 0,
+        "serving compressed stored bytes must not memcpy payloads"
+    );
+    assert!(
+        wire_net_bytes * 2 <= raw_net_bytes,
+        "wire-compressed serves must move >=2x fewer network bytes on \
+         compressible data: {wire_net_bytes} vs {raw_net_bytes}"
+    );
+
+    // leg 3: compressed at rest but decoded server-side before framing —
+    // every serve pays the decompress plus frames the full raw bytes
+    let mut rest_net_bytes = 0u64;
+    let t0 = Instant::now();
+    for _ in 0..rounds {
+        for p in &paths {
+            let raw = store.read_raw(p).unwrap();
+            let frame = wire::encode_response(1, &Response::FileData { stored: raw.into() });
+            rest_net_bytes += frame.body_len() as u64 + 4;
+            frame.write_to(&mut sink).unwrap();
+        }
+    }
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "  rest_compressed: {:>12}, {:.0} serves/s, {rest_net_bytes} net bytes \
+         (server-side decode)",
+        human_rate(rest_net_bytes as f64 / secs),
+        total_ops as f64 / secs
+    );
+    out.push((
+        "compress_serve/rest_compressed".into(),
+        total_ops as f64 / secs,
+        rest_net_bytes as f64 / secs,
+    ));
+    out.push(("compress_serve/raw_net_bytes".into(), raw_net_bytes as f64, 0.0));
+    out.push(("compress_serve/wire_net_bytes".into(), wire_net_bytes as f64, 0.0));
+    assert!(
+        rest_net_bytes as f64 >= raw_total as f64 * rounds as f64,
+        "server-side decode must frame the full raw bytes"
+    );
+    drop(store);
+    std::fs::remove_dir_all(&base).ok();
 }
 
 /// The worker's reply fan-in over a real loopback socket: a storm of small
@@ -831,6 +959,7 @@ fn main() {
     bench_partition(&mut entries, smoke);
     bench_spill_read(&mut entries, smoke);
     bench_serve_path(&mut entries, smoke);
+    bench_compress_serve(&mut entries, smoke);
     bench_wire_send(&mut entries, smoke);
     bench_reply_send(&mut entries, smoke);
     bench_transport(&mut entries, smoke);

@@ -23,7 +23,7 @@
 //!   same-file accesses only contend with each other.
 
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::storage::payload::Payload;
 
@@ -53,9 +53,14 @@ struct Entry {
 /// against a retired generation (the entry was [`Self::invalidate`]d or
 /// [`Self::retire`]d and possibly replaced) is a no-op, so stale
 /// descriptors can never evict a newer entry that reuses the path.
+///
+/// Keys are `Arc<str>`: an insert fed a path that already lives in an
+/// `Arc` (the wire decoder's per-connection interner hands those out)
+/// shares that allocation instead of copying the path into a fresh
+/// `String` per resident entry.
 #[derive(Default)]
 pub struct RefCountCache {
-    entries: HashMap<String, Entry>,
+    entries: HashMap<Arc<str>, Entry>,
     stats: CacheStats,
 }
 
@@ -82,15 +87,18 @@ impl RefCountCache {
 
     /// Insert freshly-fetched content with refcount 1 and return the shared
     /// handle.  If another thread inserted in the meantime, the existing
-    /// entry wins (its refcount rises instead).
-    pub fn insert(&mut self, path: &str, data: Payload) -> Payload {
-        if let Some(e) = self.entries.get_mut(path) {
+    /// entry wins (its refcount rises instead).  Passing an `Arc<str>`
+    /// (e.g. an interned wire path) keys the entry on that allocation —
+    /// no per-entry path copy.
+    pub fn insert(&mut self, path: impl Into<Arc<str>>, data: Payload) -> Payload {
+        let key: Arc<str> = path.into();
+        if let Some(e) = self.entries.get_mut(&*key) {
             e.refcount += 1;
             return e.data.clone();
         }
         let len = data.len() as u64;
         self.entries.insert(
-            path.to_string(),
+            key,
             Entry {
                 data: data.clone(),
                 refcount: 1,
@@ -216,8 +224,10 @@ impl ShardedCache {
         self.shard(path).acquire(path)
     }
 
-    pub fn insert(&self, path: &str, data: Payload) -> Payload {
-        self.shard(path).insert(path, data)
+    pub fn insert(&self, path: impl Into<Arc<str>>, data: Payload) -> Payload {
+        let key: Arc<str> = path.into();
+        let mut shard = self.shard(&key);
+        shard.insert(key, data)
     }
 
     pub fn release(&self, path: &str, pin: &Payload) {
@@ -314,6 +324,28 @@ mod tests {
         c.release("/a", &a);
         assert_eq!(c.stats().resident_bytes, 500);
         assert_eq!(c.stats().peak_bytes, 1500);
+    }
+
+    #[test]
+    fn arc_keys_interop_with_str_lookups() {
+        // an interned Arc<str> key and plain &str lookups address the same
+        // entry (Borrow<str> path), in both cache layers
+        let mut c = RefCountCache::new();
+        let key: Arc<str> = Arc::from("/interned/f1");
+        let pin = c.insert(Arc::clone(&key), vec![3; 4].into());
+        let hit = c.acquire("/interned/f1").expect("str lookup finds arc key");
+        assert!(pin.same(&hit));
+        assert_eq!(c.refcount(&key), 2);
+        c.release(&key, &pin);
+        c.release("/interned/f1", &hit);
+        assert_eq!(c.resident_files(), 0);
+
+        let s = ShardedCache::new();
+        let pin = s.insert(Arc::clone(&key), vec![4; 4].into());
+        assert!(s.acquire("/interned/f1").is_some());
+        s.release(&key, &pin);
+        s.release(&key, &pin);
+        assert_eq!(s.resident_files(), 0);
     }
 
     #[test]
@@ -427,7 +459,7 @@ mod tests {
             let pins: Vec<_> = (0..40)
                 .map(|i| {
                     let p = format!("/s{i}");
-                    (p.clone(), c.insert(&p, vec![i as u8; 8].into()))
+                    (p.clone(), c.insert(p.as_str(), vec![i as u8; 8].into()))
                 })
                 .collect();
             assert_eq!(c.resident_files(), 40);
@@ -461,7 +493,7 @@ mod tests {
                             assert!(d.iter().all(|&b| b == 9));
                             d
                         }
-                        None => c.insert(&path, vec![9u8; 16 + rng.index(16)].into()),
+                        None => c.insert(path.as_str(), vec![9u8; 16 + rng.index(16)].into()),
                     };
                     c.release(&path, &pin);
                 }

@@ -5,10 +5,17 @@
 //! implement the same algorithm family from scratch ([`lzss`]) with levels
 //! 1–9 trading match-search depth for ratio, plus a [`Codec`] abstraction so
 //! the ablation bench can compare against zstd-class ratios analytically.
+//!
+//! Compression is transparent end to end: partitions store per-entry codec
+//! metadata, the wire protocol carries a one-byte codec id next to every
+//! payload (see [`Codec::to_wire`]), and the consuming node performs the
+//! single decode at VFS pickup.  [`CompressPolicy`] implements the paper's
+//! per-extension rule — compress `.npy`/`.txt`-class data, skip formats that
+//! are already entropy-coded (`.jpeg`, `.png`, …).
 
 pub mod lzss;
 
-use crate::error::Result;
+use crate::error::{FanError, Result};
 
 /// Compression codec used by the partition builder and the node read path.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -37,9 +44,60 @@ impl Codec {
         }
     }
 
-    /// Decompress `stored` back to exactly `raw_len` bytes.
+    /// Decompress `stored` back to exactly `raw_len` bytes.  Dispatches on
+    /// the codec: `Codec::None` entries are stored verbatim and must NOT go
+    /// through the LZSS decoder (whose bitstream framing would reject or
+    /// corrupt them) — they are returned as-is after a length check.
     pub fn decompress(&self, stored: &[u8], raw_len: usize) -> Result<Vec<u8>> {
-        lzss::decompress(stored, raw_len)
+        match self {
+            Codec::None => {
+                if stored.len() != raw_len {
+                    return Err(FanError::Codec(format!(
+                        "raw entry length mismatch: stored {} bytes, expected {raw_len}",
+                        stored.len()
+                    )));
+                }
+                Ok(stored.to_vec())
+            }
+            Codec::Lzss(_) => lzss::decompress(stored, raw_len),
+        }
+    }
+
+    /// `true` when this codec stores bytes verbatim.
+    pub fn is_none(&self) -> bool {
+        matches!(self, Codec::None)
+    }
+
+    /// One-byte wire/partition id: 0 = none, 1..=9 = LZSS level.
+    pub fn to_wire(self) -> u8 {
+        match self {
+            Codec::None => 0,
+            Codec::Lzss(l) => l.clamp(1, 9),
+        }
+    }
+
+    /// Decode a wire/partition codec id; anything outside 0..=9 is a
+    /// malformed frame, never a silent fallback.
+    pub fn from_wire(b: u8) -> Result<Codec> {
+        match b {
+            0 => Ok(Codec::None),
+            1..=9 => Ok(Codec::Lzss(b)),
+            other => Err(FanError::Codec(format!("unknown codec id {other}"))),
+        }
+    }
+
+    /// Parse a CLI spec: `none`, `lzss` (level 5), or `lzss-N`.
+    pub fn parse(s: &str) -> Result<Codec> {
+        match s {
+            "none" => Ok(Codec::None),
+            "lzss" => Ok(Codec::Lzss(5)),
+            other => match other.strip_prefix("lzss-").and_then(|l| l.parse::<u8>().ok()) {
+                Some(l @ 1..=9) => Ok(Codec::Lzss(l)),
+                _ => Err(FanError::Config(format!(
+                    "unknown codec spec {s} (expected none | lzss | lzss-1..9)"
+                ))),
+            },
+        }
     }
 }
 
@@ -49,5 +107,116 @@ impl std::fmt::Display for Codec {
             Codec::None => write!(f, "none"),
             Codec::Lzss(l) => write!(f, "lzss-{l}"),
         }
+    }
+}
+
+/// Per-extension compression policy (paper §5.2): file formats that are
+/// already entropy-coded gain nothing from LZSS, so the partition builder
+/// stores them verbatim and spends the CPU only where bytes come back.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct CompressPolicy {
+    /// Lowercased extensions (no leading dot) stored verbatim.
+    skip: Vec<String>,
+}
+
+impl Default for CompressPolicy {
+    fn default() -> Self {
+        CompressPolicy::parse("jpg,jpeg,png,gif,webp,bmp,jp2,zip,gz,tgz,bz2,xz,zst,mp4")
+    }
+}
+
+impl CompressPolicy {
+    /// Policy that compresses everything (empty skip list).
+    pub fn compress_all() -> CompressPolicy {
+        CompressPolicy { skip: Vec::new() }
+    }
+
+    /// Parse a CLI spec: a comma-separated skip list of extensions, or
+    /// `none` to skip nothing (compress everything the codec is given).
+    pub fn parse(spec: &str) -> CompressPolicy {
+        if spec == "none" {
+            return CompressPolicy::compress_all();
+        }
+        CompressPolicy {
+            skip: spec
+                .split(',')
+                .map(|s| s.trim().trim_start_matches('.').to_ascii_lowercase())
+                .filter(|s| !s.is_empty())
+                .collect(),
+        }
+    }
+
+    /// Should `path` be compressed?  Extensionless paths are compressed;
+    /// the decision keys on the (lowercased) extension after the last dot.
+    pub fn should_compress(&self, path: &str) -> bool {
+        let name = path.rsplit('/').next().unwrap_or(path);
+        match name.rsplit_once('.') {
+            Some((stem, ext)) if !stem.is_empty() => {
+                let ext = ext.to_ascii_lowercase();
+                !self.skip.iter().any(|s| *s == ext)
+            }
+            _ => true,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decompress_dispatches_on_codec() {
+        // regression: Codec::None must return verbatim bytes, not feed them
+        // through the LZSS decoder
+        let raw = b"stored verbatim, not an LZSS bitstream".to_vec();
+        assert_eq!(Codec::None.decompress(&raw, raw.len()).unwrap(), raw);
+        assert!(Codec::None.decompress(&raw, raw.len() + 1).is_err());
+
+        let compressed = Codec::Lzss(5).compress(&vec![7u8; 4096]).unwrap();
+        assert_eq!(
+            Codec::Lzss(5).decompress(&compressed, 4096).unwrap(),
+            vec![7u8; 4096]
+        );
+    }
+
+    #[test]
+    fn wire_ids_roundtrip() {
+        for c in [Codec::None, Codec::Lzss(1), Codec::Lzss(5), Codec::Lzss(9)] {
+            assert_eq!(Codec::from_wire(c.to_wire()).unwrap(), c);
+        }
+        assert!(Codec::from_wire(10).is_err());
+        assert!(Codec::from_wire(0x7F).is_err());
+    }
+
+    #[test]
+    fn codec_spec_parses() {
+        assert_eq!(Codec::parse("none").unwrap(), Codec::None);
+        assert_eq!(Codec::parse("lzss").unwrap(), Codec::Lzss(5));
+        assert_eq!(Codec::parse("lzss-9").unwrap(), Codec::Lzss(9));
+        assert!(Codec::parse("lzss-0").is_err());
+        assert!(Codec::parse("lzss-10").is_err());
+        assert!(Codec::parse("zstd").is_err());
+    }
+
+    #[test]
+    fn policy_skips_entropy_coded_extensions() {
+        let p = CompressPolicy::default();
+        assert!(p.should_compress("train/c0/f0001.npy"));
+        assert!(p.should_compress("train/notes.txt"));
+        assert!(p.should_compress("train/no_extension"));
+        assert!(p.should_compress("train/.hidden")); // dotfile, not an ext
+        assert!(!p.should_compress("val/img0001.JPEG"));
+        assert!(!p.should_compress("val/img0001.png"));
+        assert!(!p.should_compress("ckpt/weights.zip"));
+    }
+
+    #[test]
+    fn policy_spec_parses() {
+        let p = CompressPolicy::parse("raw, .BIN");
+        assert!(!p.should_compress("a/b.raw"));
+        assert!(!p.should_compress("a/b.bin"));
+        assert!(p.should_compress("a/b.jpeg")); // custom list replaces default
+        let all = CompressPolicy::parse("none");
+        assert!(all.should_compress("a/b.jpeg"));
     }
 }

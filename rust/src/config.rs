@@ -5,7 +5,7 @@
 //! the knobs the paper exposes: node count, partition count, replication
 //! factor, compression on/off + level, and the replicated-directory list.
 
-use crate::compress::Codec;
+use crate::compress::{Codec, CompressPolicy};
 use crate::error::{FanError, Result};
 use crate::storage::disk::SpillReadMode;
 
@@ -44,6 +44,10 @@ pub struct ClusterConfig {
     pub replication: u32,
     /// Compression codec applied at prep time.
     pub codec: Codec,
+    /// Per-extension policy deciding which files `codec` actually applies
+    /// to — entropy-coded formats (JPEG, PNG, ...) are stored raw because
+    /// recompressing them wastes CPU for no size win (paper §6.6).
+    pub compress_policy: CompressPolicy,
     /// Mount-point prefix of the global namespace (§5.2).
     pub mount: String,
     /// Dataset-relative directories replicated to every node (§5.4 — the
@@ -75,6 +79,7 @@ impl Default for ClusterConfig {
             partitions: 8,
             replication: 1,
             codec: Codec::None,
+            compress_policy: CompressPolicy::default(),
             mount: "/fanstore/user".into(),
             replicate_dirs: Vec::new(),
             spill_dir: None,

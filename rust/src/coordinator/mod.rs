@@ -25,7 +25,7 @@ use crate::metadata::table::MetaTable;
 use crate::net::tcp::{TcpServer, TcpTransport};
 use crate::net::transport::{InProcTransport, NodeEndpoint, Transport};
 use crate::node::{FanStoreNode, NodeBuilder, NodeShared, NodeStats};
-use crate::partition::builder::{build_partitions, BuildStats, InputFile};
+use crate::partition::builder::{build_partitions_with, BuildStats, InputFile};
 use crate::partition::format::PartitionReader;
 use crate::prefetch::{PrefetchConfig, PrefetchHandle, PrefetchStats, Prefetcher};
 use crate::storage::disk::DiskStore;
@@ -51,7 +51,12 @@ pub fn prepare_partitions(files: &[InputFile], config: &ClusterConfig) -> Result
             .any(|d| f.path.starts_with(d.trim_end_matches('/')))
     });
 
-    let (blobs, mut prep_stats) = build_partitions(&partitioned, config.partitions, config.codec)?;
+    let (blobs, mut prep_stats) = build_partitions_with(
+        &partitioned,
+        config.partitions,
+        config.codec,
+        &config.compress_policy,
+    )?;
     let blobs: Vec<(u32, Vec<u8>)> = blobs
         .into_iter()
         .enumerate()
@@ -61,7 +66,8 @@ pub fn prepare_partitions(files: &[InputFile], config: &ClusterConfig) -> Result
     let repl_blob = if replicated.is_empty() {
         None
     } else {
-        let (mut rb, rstats) = build_partitions(&replicated, 1, config.codec)?;
+        let (mut rb, rstats) =
+            build_partitions_with(&replicated, 1, config.codec, &config.compress_policy)?;
         prep_stats.files += rstats.files;
         prep_stats.raw_bytes += rstats.raw_bytes;
         prep_stats.stored_bytes += rstats.stored_bytes;
@@ -97,7 +103,7 @@ pub fn build_global_meta(
                         partition: REPLICATED_PARTITION,
                         offset: data_off,
                         stored_len: e.stored_len(),
-                        compressed: e.is_compressed(),
+                        codec: e.codec,
                     },
                     generation: 0,
                 },

@@ -1,7 +1,7 @@
 //! FanStore CLI — the leader entrypoint.
 //!
 //! ```text
-//! fanstore prepare   --files N --partitions P [--codec lzss --level L]
+//! fanstore prepare   --files N --partitions P [--compress lzss-L] [--compress-ext jpg,png|none]
 //! fanstore bench-io  --nodes N [--cluster gpu|cpu] [--scale S] [--ratio R]
 //! fanstore train     --nodes N --epochs E [--view global|partitioned]
 //! fanstore cluster   serve --node-id I --nodes N --listen HOST:PORT
@@ -11,7 +11,7 @@
 
 use std::sync::Arc;
 
-use fanstore::compress::Codec;
+use fanstore::compress::{Codec, CompressPolicy};
 use fanstore::config::{ArgMap, ClusterConfig, TransportKind};
 use fanstore::coordinator::Cluster;
 use fanstore::error::Result;
@@ -33,6 +33,9 @@ fn usage() {
         "usage: fanstore <prepare|bench-io|train|cluster|experiment> [--key value ...]\n\
          \n\
          prepare     pack a synthetic dataset into partitions (§5.2)\n\
+                     (--compress none|lzss|lzss-1..9 picks the codec;\n\
+                      --compress-ext jpg,png,... overrides the skip list,\n\
+                      --compress-ext none compresses every file)\n\
          bench-io    run the §6.2 benchmark on the in-proc cluster\n\
                      (--spill-dir DIR --spill-read-mode reopen|pread|mmap\n\
                       for real file I/O instead of RAM backing)\n\
@@ -47,6 +50,11 @@ fn usage() {
 }
 
 fn codec_of(m: &ArgMap) -> Result<Codec> {
+    // `--compress lzss-7` is the one-knob spelling; `--codec lzss --level 7`
+    // stays supported for older scripts.
+    if let Some(spec) = m.get("compress") {
+        return Codec::parse(spec);
+    }
     Ok(match m.get("codec") {
         Some("lzss") => Codec::Lzss(m.get_u32("level", 5)? as u8),
         Some("none") | None => Codec::None,
@@ -56,6 +64,16 @@ fn codec_of(m: &ArgMap) -> Result<Codec> {
             )))
         }
     })
+}
+
+/// `--compress-ext jpg,png,...` (skip list) or `--compress-ext none`
+/// (compress everything) — which extensions the codec is applied to.
+/// Unset means the default skip list of entropy-coded formats.
+fn compress_policy_of(m: &ArgMap) -> CompressPolicy {
+    match m.get("compress-ext") {
+        None => CompressPolicy::default(),
+        Some(spec) => CompressPolicy::parse(spec),
+    }
 }
 
 /// `--spill-dir DIR` / `--spill-read-mode reopen|pread|mmap` options for
@@ -147,6 +165,7 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
         nodes,
         partitions: m.get_u32("partitions", nodes * 2)?,
         codec: codec_of(m)?,
+        compress_policy: compress_policy_of(m),
         ..Default::default()
     };
     cfg.validate()?;
@@ -286,8 +305,12 @@ fn cmd_prepare(m: &ArgMap) -> Result<()> {
     let divisor = m.get_u64("size-divisor", 64)?;
     println!("generating {files} files ({} profile)...", spec.name);
     let data = spec.generate(files, divisor, m.get_u64("seed", 1)?);
-    let (blobs, stats) =
-        fanstore::partition::builder::build_partitions(&data, partitions, codec)?;
+    let (blobs, stats) = fanstore::partition::builder::build_partitions_with(
+        &data,
+        partitions,
+        codec,
+        &compress_policy_of(m),
+    )?;
     println!(
         "packed {} files ({}) into {} partitions in {:.2}s — stored {} (ratio {:.2}x)",
         stats.files,
@@ -327,6 +350,7 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
         nodes,
         partitions: nodes * 2,
         codec,
+        compress_policy: compress_policy_of(m),
         spill_dir,
         spill_read_mode,
         ..Default::default()
@@ -386,6 +410,7 @@ fn cmd_train(m: &ArgMap) -> Result<()> {
         nodes,
         partitions: nodes * 2,
         codec: codec_of(m)?,
+        compress_policy: compress_policy_of(m),
         replicate_dirs: vec!["test".into()],
         ..Default::default()
     };

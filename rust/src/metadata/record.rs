@@ -3,8 +3,9 @@
 //! [`FileStat`] is the 144-byte POSIX `struct stat` image stored verbatim in
 //! every partition entry (paper Table 3: bytes 260–403).  [`FileMeta`] is the
 //! RAM record: the stat plus FanStore's location fields (which node holds the
-//! bytes, at which partition offset, compressed or not).
+//! bytes, at which partition offset, under which codec).
 
+use crate::compress::Codec;
 use crate::error::{FanError, Result};
 
 /// Size of the serialized stat record — matches x86-64 glibc `struct stat`.
@@ -142,10 +143,10 @@ pub struct FileLocation {
     pub partition: u32,
     /// Byte offset of the data inside the dumped partition blob.
     pub offset: u64,
-    /// Stored length (== compressed length when `compressed`).
+    /// Stored length (== compressed length when a codec applies).
     pub stored_len: u64,
-    /// Whether the stored bytes are LZSS-compressed.
-    pub compressed: bool,
+    /// Codec the stored bytes are encoded under (`Codec::None` = verbatim).
+    pub codec: Codec,
 }
 
 /// RAM metadata record: POSIX stat + FanStore location (paper §5.3 "besides

@@ -181,6 +181,7 @@ impl MetaTable {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::compress::Codec;
     use crate::metadata::record::{FileLocation, FileStat};
 
     fn meta(size: u64) -> FileMeta {
@@ -191,7 +192,7 @@ mod tests {
                 partition: 0,
                 offset: 0,
                 stored_len: size,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         }

@@ -498,8 +498,6 @@ mod tests {
                         served += 1;
                         msg.reply.send(Response::FileData {
                             stored: path.as_bytes().to_vec().into(),
-                            raw_len: 0,
-                            compressed: false,
                         });
                     }
                     Request::ReadFiles { paths } => {
@@ -512,8 +510,6 @@ mod tests {
                                 } else {
                                     FileFetch::Data {
                                         stored: p.as_bytes().to_vec().into(),
-                                        raw_len: 0,
-                                        compressed: false,
                                     }
                                 };
                                 (p, fetch)
@@ -549,7 +545,7 @@ mod tests {
         let resp = tp
             .call(0, 2, Request::ReadFile { path: "/x/y".into() })
             .unwrap();
-        let (data, _, _) = resp.into_file_data().unwrap();
+        let data = resp.into_file_data().unwrap();
         assert_eq!(&data[..], &b"/x/y"[..]);
         tp.shutdown_all();
         let served: u32 = workers.into_iter().map(|h| h.join().unwrap()).sum();
@@ -583,7 +579,7 @@ mod tests {
             })
             .collect();
         for (i, p) in pending.into_iter().enumerate() {
-            let (data, _, _) = p.wait().unwrap().into_file_data().unwrap();
+            let data = p.wait().unwrap().into_file_data().unwrap();
             assert_eq!(&data[..], format!("/p{}", i + 1).as_bytes());
         }
         tp.shutdown_all();
@@ -606,7 +602,7 @@ mod tests {
                             path: format!("/f/{i}_{j}").into(),
                         })
                         .unwrap();
-                    let (d, _, _) = r.into_file_data().unwrap();
+                    let d = r.into_file_data().unwrap();
                     assert_eq!(&d[..], format!("/f/{i}_{j}").as_bytes());
                 }
             }));
@@ -670,17 +666,66 @@ mod tests {
                 })
                 .collect();
             for (i, pnd) in pending.into_iter().enumerate() {
-                let (d, _, _) = pnd.wait().unwrap().into_file_data().unwrap();
+                let d = pnd.wait().unwrap().into_file_data().unwrap();
                 assert_eq!(&d[..], format!("/r{round}/f{i}").as_bytes());
             }
             // lone request after the burst: flush-when-served keeps it prompt
-            let (d, _, _) = tp
+            let d = tp
                 .call(0, 0, Request::ReadFile { path: "/lone".into() })
                 .unwrap()
                 .into_file_data()
                 .unwrap();
             assert_eq!(&d[..], b"/lone");
         }
+        tp.shutdown_all();
+        worker.join().unwrap();
+        drop(srv);
+    }
+
+    #[test]
+    fn compressed_payload_survives_the_socket() {
+        use crate::compress::Codec;
+        use crate::storage::payload::Payload;
+
+        // server compresses once; the socket must carry the stored form and
+        // the frame must preserve codec + raw_len for the consuming node
+        let raw: Vec<u8> = (0..32 * 1024u32).map(|i| (i % 97) as u8).collect();
+        let codec = Codec::Lzss(5);
+        let packed = codec.compress(&raw).expect("synthetic data compresses");
+        assert!(packed.len() * 2 < raw.len());
+        let stored = Payload::compressed(codec, raw.len() as u64, packed.into());
+
+        let (srv, ep) = TcpServer::bind(0, "127.0.0.1:0").unwrap();
+        let worker = {
+            let stored = stored.clone();
+            thread::spawn(move || {
+                while let Ok(msg) = ep.inbox.recv() {
+                    match msg.req {
+                        Request::Shutdown => {
+                            msg.reply.send(Response::Ok);
+                            break;
+                        }
+                        _ => msg.reply.send(Response::FileData {
+                            stored: stored.clone(),
+                        }),
+                    }
+                }
+            })
+        };
+        let tp = TcpTransport::connect(&[srv.local_addr()]).unwrap();
+        let got = tp
+            .call(0, 0, Request::ReadFile { path: "/c".into() })
+            .unwrap()
+            .into_file_data()
+            .unwrap();
+        assert_eq!(got.codec(), codec);
+        assert_eq!(got.raw_len(), raw.len() as u64);
+        assert!(
+            got.len() * 2 < raw.len(),
+            "wire must ship compressed bytes, not the decoded file"
+        );
+        let back = got.codec().decompress(&got, raw.len()).unwrap();
+        assert_eq!(back, raw);
         tp.shutdown_all();
         worker.join().unwrap();
         drop(srv);

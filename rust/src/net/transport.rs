@@ -75,11 +75,11 @@ pub enum Request {
 /// file, so callers can retry or surface exactly the right errno.
 #[derive(Debug)]
 pub enum FileFetch {
-    Data {
-        stored: Payload,
-        raw_len: u64,
-        compressed: bool,
-    },
+    /// The stored bytes, self-describing: a [`Payload::Compressed`] handle
+    /// carries its codec and raw length with it, so compressed data rides
+    /// the wire (and the cache) compressed and the single decode happens at
+    /// the consuming side's pickup.
+    Data { stored: Payload },
     /// The path is not stored (and not buffered) on the serving node.
     NotFound,
     /// The path exists but reading it failed (spilled-file I/O error,
@@ -89,13 +89,9 @@ pub enum FileFetch {
 
 impl FileFetch {
     /// Caller-facing conversion preserving the errno distinction.
-    pub fn into_result(self, path: &str) -> Result<(Payload, u64, bool)> {
+    pub fn into_result(self, path: &str) -> Result<Payload> {
         match self {
-            FileFetch::Data {
-                stored,
-                raw_len,
-                compressed,
-            } => Ok((stored, raw_len, compressed)),
+            FileFetch::Data { stored } => Ok(stored),
             FileFetch::NotFound => Err(FanError::NotFound(path.to_string())),
             FileFetch::Fault(e) => Err(FanError::Transport(format!("EIO {path}: {e}"))),
         }
@@ -122,11 +118,9 @@ pub enum MetaFetch {
 /// Worker replies.
 #[derive(Debug)]
 pub enum Response {
-    FileData {
-        stored: Payload,
-        raw_len: u64,
-        compressed: bool,
-    },
+    /// Stored bytes of one file (self-describing [`Payload`], like
+    /// [`FileFetch::Data`]).
+    FileData { stored: Payload },
     /// Batched read reply: one entry per requested path, request order.
     /// Paths are `Arc` clones of the request's — no string copies.
     FilesData(Vec<(Arc<str>, FileFetch)>),
@@ -310,13 +304,9 @@ impl Transport for InProcTransport {
 
 impl Response {
     /// Unwrap a `FileData` response.
-    pub fn into_file_data(self) -> Result<(Payload, u64, bool)> {
+    pub fn into_file_data(self) -> Result<Payload> {
         match self {
-            Response::FileData {
-                stored,
-                raw_len,
-                compressed,
-            } => Ok((stored, raw_len, compressed)),
+            Response::FileData { stored } => Ok(stored),
             Response::Err(e) => Err(FanError::Transport(e)),
             other => Err(FanError::Transport(format!(
                 "expected FileData, got {other:?}"
@@ -363,8 +353,6 @@ mod tests {
                         served += 1;
                         msg.reply.send(Response::FileData {
                             stored: path.as_bytes().to_vec().into(),
-                            raw_len: 0,
-                            compressed: false,
                         });
                     }
                     Request::ReadFiles { paths } => {
@@ -377,8 +365,6 @@ mod tests {
                                 } else {
                                     FileFetch::Data {
                                         stored: p.as_bytes().to_vec().into(),
-                                        raw_len: 0,
-                                        compressed: false,
                                     }
                                 };
                                 (p, fetch)
@@ -402,7 +388,7 @@ mod tests {
         let resp = tp
             .call(0, 2, Request::ReadFile { path: "/x/y".into() })
             .unwrap();
-        let (data, _, _) = resp.into_file_data().unwrap();
+        let data = resp.into_file_data().unwrap();
         assert_eq!(&data[..], &b"/x/y"[..]);
         tp.shutdown_all();
         let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();
@@ -431,7 +417,7 @@ mod tests {
         // one missing file does not poison the rest of the batch
         let (path, fetch) = files.into_iter().nth(2).unwrap();
         assert_eq!(&*path, "/b");
-        let (data, _, _) = fetch.into_result(&path).unwrap();
+        let data = fetch.into_result(&path).unwrap();
         assert_eq!(&data[..], b"/b");
         // ENOENT maps to NotFound, not a transport fault
         assert!(matches!(
@@ -465,7 +451,7 @@ mod tests {
             })
             .collect();
         for (i, p) in pending.into_iter().enumerate() {
-            let (data, _, _) = p.wait().unwrap().into_file_data().unwrap();
+            let data = p.wait().unwrap().into_file_data().unwrap();
             assert_eq!(&data[..], format!("/p{}", i + 1).as_bytes());
         }
         tp.shutdown_all();
@@ -487,7 +473,7 @@ mod tests {
                             path: format!("/f/{i}_{j}").into(),
                         })
                         .unwrap();
-                    let (d, _, _) = r.into_file_data().unwrap();
+                    let d = r.into_file_data().unwrap();
                     assert_eq!(&d[..], format!("/f/{i}_{j}").as_bytes());
                 }
             }));
@@ -509,7 +495,7 @@ mod tests {
         let resp = dynt
             .call(0, 1, Request::ReadFile { path: "/dyn".into() })
             .unwrap();
-        let (data, _, _) = resp.into_file_data().unwrap();
+        let data = resp.into_file_data().unwrap();
         assert_eq!(&data[..], b"/dyn");
         dynt.shutdown_all();
         let served: u32 = handles.into_iter().map(|h| h.join().unwrap()).sum();

@@ -31,6 +31,7 @@ use std::collections::HashSet;
 use std::io::{IoSlice, Read, Write};
 use std::sync::Arc;
 
+use crate::compress::Codec;
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileMeta, FileStat, STAT_BYTES};
 use crate::net::transport::{FileFetch, MetaFetch, Request, Response};
@@ -540,7 +541,7 @@ fn put_meta(f: &mut Frame, meta: &FileMeta) {
     f.put_u32(meta.location.partition);
     f.put_varint(meta.location.offset);
     f.put_varint(meta.location.stored_len);
-    f.put_u8(meta.location.compressed as u8);
+    f.put_u8(meta.location.codec.to_wire());
     f.put_varint(meta.generation);
 }
 
@@ -550,7 +551,7 @@ fn get_meta(r: &mut WireReader) -> Result<FileMeta> {
     let partition = r.get_u32()?;
     let offset = r.get_varint()?;
     let stored_len = r.get_varint()?;
-    let compressed = r.get_u8()? != 0;
+    let codec = Codec::from_wire(r.get_u8()?)?;
     let generation = r.get_varint()?;
     Ok(FileMeta {
         stat,
@@ -559,7 +560,7 @@ fn get_meta(r: &mut WireReader) -> Result<FileMeta> {
             partition,
             offset,
             stored_len,
-            compressed,
+            codec,
         },
         generation,
     })
@@ -567,14 +568,10 @@ fn get_meta(r: &mut WireReader) -> Result<FileMeta> {
 
 fn put_fetch(f: &mut Frame, fetch: &FileFetch) {
     match fetch {
-        FileFetch::Data {
-            stored,
-            raw_len,
-            compressed,
-        } => {
+        FileFetch::Data { stored } => {
             f.put_u8(FETCH_DATA);
-            f.put_varint(*raw_len);
-            f.put_u8(*compressed as u8);
+            f.put_varint(stored.raw_len());
+            f.put_u8(stored.codec().to_wire());
             f.put_shared(stored.clone());
         }
         FileFetch::NotFound => f.put_u8(FETCH_NOT_FOUND),
@@ -590,12 +587,10 @@ fn get_fetch(r: &mut WireReader) -> Result<FileFetch> {
     match r.get_u8()? {
         FETCH_DATA => {
             let raw_len = r.get_varint()?;
-            let compressed = r.get_u8()? != 0;
+            let codec = Codec::from_wire(r.get_u8()?)?;
             let stored = r.get_bytes()?;
             Ok(FileFetch::Data {
-                stored,
-                raw_len,
-                compressed,
+                stored: Payload::compressed(codec, raw_len, stored),
             })
         }
         FETCH_NOT_FOUND => Ok(FileFetch::NotFound),
@@ -722,14 +717,10 @@ pub fn encode_response(corr: u64, resp: &Response) -> Frame {
     f.put_u8(KIND_RESPONSE);
     f.put_u64(corr);
     match resp {
-        Response::FileData {
-            stored,
-            raw_len,
-            compressed,
-        } => {
+        Response::FileData { stored } => {
             f.put_u8(RESP_FILE_DATA);
-            f.put_varint(*raw_len);
-            f.put_u8(*compressed as u8);
+            f.put_varint(stored.raw_len());
+            f.put_u8(stored.codec().to_wire());
             f.put_shared(stored.clone());
         }
         Response::FilesData(files) => {
@@ -797,12 +788,10 @@ pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Re
     let resp = match r.get_u8()? {
         RESP_FILE_DATA => {
             let raw_len = r.get_varint()?;
-            let compressed = r.get_u8()? != 0;
+            let codec = Codec::from_wire(r.get_u8()?)?;
             let stored = r.get_bytes()?;
             Response::FileData {
-                stored,
-                raw_len,
-                compressed,
+                stored: Payload::compressed(codec, raw_len, stored),
             }
         }
         RESP_FILES_DATA => {
@@ -877,7 +866,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 9_000_000_123,
                 stored_len: 1234,
-                compressed: true,
+                codec: Codec::Lzss(5),
             },
             generation: gen,
         }
@@ -950,22 +939,16 @@ mod tests {
 
     #[test]
     fn response_variants_roundtrip() {
-        let payload: Payload = vec![7u8; 300].into();
+        let payload = Payload::compressed(Codec::Lzss(5), 4096, vec![7u8; 300].into());
         let (corr, resp) = roundtrip_response(&Response::FileData {
             stored: payload.clone(),
-            raw_len: 4096,
-            compressed: true,
         });
         assert_eq!(corr, 0xDECAF);
         match resp {
-            Response::FileData {
-                stored,
-                raw_len,
-                compressed,
-            } => {
+            Response::FileData { stored } => {
                 assert_eq!(&stored[..], &payload[..]);
-                assert_eq!(raw_len, 4096);
-                assert!(compressed);
+                assert_eq!(stored.raw_len(), 4096);
+                assert_eq!(stored.codec(), Codec::Lzss(5));
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -975,8 +958,6 @@ mod tests {
                 "/a".into(),
                 FileFetch::Data {
                     stored: vec![1, 2, 3].into(),
-                    raw_len: 3,
-                    compressed: false,
                 },
             ),
             ("/b".into(), FileFetch::NotFound),
@@ -986,14 +967,10 @@ mod tests {
             Response::FilesData(files) => {
                 assert_eq!(files.len(), 3);
                 match &files[0].1 {
-                    FileFetch::Data {
-                        stored,
-                        raw_len,
-                        compressed,
-                    } => {
+                    FileFetch::Data { stored } => {
                         assert_eq!(&stored[..], &[1, 2, 3]);
-                        assert_eq!(*raw_len, 3);
-                        assert!(!compressed);
+                        assert_eq!(stored.raw_len(), 3);
+                        assert_eq!(stored.codec(), Codec::None);
                     }
                     other => panic!("unexpected {other:?}"),
                 }
@@ -1111,8 +1088,6 @@ mod tests {
             "/p".into(),
             FileFetch::Data {
                 stored: vec![9u8; 64].into(),
-                raw_len: 64,
-                compressed: false,
             },
         )]);
         let body = encode_response(2, &resp).to_body_bytes();
@@ -1157,13 +1132,93 @@ mod tests {
     }
 
     #[test]
+    fn unknown_codec_byte_is_rejected_at_decode() {
+        // a FileData frame whose codec id is outside 0..=9 must error, not
+        // decode into a payload nobody can interpret
+        let mut it = PathInterner::default();
+        let mut f = Frame::new();
+        f.put_u8(KIND_RESPONSE);
+        f.put_u64(1);
+        f.put_u8(RESP_FILE_DATA);
+        f.put_varint(8);
+        f.put_u8(0x7F); // not a codec id
+        f.put_varint(3);
+        f.put_slice(&[1, 2, 3]);
+        let err = decode_response(&f.to_body_bytes(), &mut it).unwrap_err();
+        assert!(matches!(err, FanError::Codec(_)), "got {err:?}");
+        // same guard on the batched fetch arm
+        let mut f = Frame::new();
+        f.put_u8(KIND_RESPONSE);
+        f.put_u64(2);
+        f.put_u8(RESP_FILES_DATA);
+        f.put_varint(1);
+        f.put_str("/p");
+        f.put_u8(FETCH_DATA);
+        f.put_varint(8);
+        f.put_u8(0xEE);
+        f.put_varint(1);
+        f.put_slice(&[0]);
+        assert!(decode_response(&f.to_body_bytes(), &mut it).is_err());
+    }
+
+    #[test]
+    fn compressed_payloads_ride_the_wire_compressed() {
+        // encode a genuinely LZSS-compressed file: the frame carries the
+        // small representation, and the decoded handle still knows how to
+        // expand it on the consuming side
+        let raw = vec![0x5Au8; 8192];
+        let codec = Codec::Lzss(5);
+        let stored = codec.compress(&raw).expect("compressible");
+        assert!(stored.len() < raw.len() / 4);
+        let payload = Payload::compressed(codec, raw.len() as u64, stored.clone().into());
+        let frame = encode_response(7, &Response::FileData { stored: payload });
+        // the frame body carries stored bytes, not raw bytes
+        assert!(frame.body_len() < raw.len() / 2, "wire must stay compressed");
+        let (_, resp) =
+            decode_response(&frame.to_body_bytes(), &mut PathInterner::default()).unwrap();
+        let got = resp.into_file_data().unwrap();
+        assert_eq!(got.codec(), codec);
+        assert_eq!(got.raw_len(), raw.len() as u64);
+        assert_eq!(&got[..], &stored[..]);
+        assert_eq!(got.codec().decompress(&got, raw.len()).unwrap(), raw);
+
+        // and through the batched arm
+        let payload = Payload::compressed(codec, raw.len() as u64, stored.clone().into());
+        let resp = Response::FilesData(vec![("/d/f".into(), FileFetch::Data { stored: payload })]);
+        let body = encode_response(8, &resp).to_body_bytes();
+        let (_, decoded) = decode_response(&body, &mut PathInterner::default()).unwrap();
+        match decoded {
+            Response::FilesData(files) => {
+                let fetch = files.into_iter().next().unwrap().1;
+                let got = fetch.into_result("/d/f").unwrap();
+                assert_eq!(got.codec(), codec);
+                assert_eq!(got.codec().decompress(&got, raw.len()).unwrap(), raw);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn truncated_compressed_frame_fails_at_decompress_not_decode() {
+        // wire framing cannot see inside the compressed stream: a payload
+        // cut short still decodes as a frame, but the codec must reject it
+        let raw = vec![0x33u8; 4096];
+        let codec = Codec::Lzss(5);
+        let stored = codec.compress(&raw).expect("compressible");
+        let cut = &stored[..stored.len() - 1];
+        let payload = Payload::compressed(codec, raw.len() as u64, cut.to_vec().into());
+        let body = encode_response(9, &Response::FileData { stored: payload }).to_body_bytes();
+        let (_, resp) = decode_response(&body, &mut PathInterner::default()).unwrap();
+        let got = resp.into_file_data().unwrap();
+        assert!(got.codec().decompress(&got, raw.len()).is_err());
+    }
+
+    #[test]
     fn framing_roundtrips_over_a_stream() {
         let frame = encode_response(
             99,
             &Response::FileData {
                 stored: vec![5u8; 1000].into(),
-                raw_len: 1000,
-                compressed: false,
             },
         );
         let mut buf = Vec::new();
@@ -1173,7 +1228,7 @@ mod tests {
         let body = read_frame(&mut cur).unwrap();
         let (corr, resp) = decode_response(&body, &mut PathInterner::default()).unwrap();
         assert_eq!(corr, 99);
-        let (data, _, _) = resp.into_file_data().unwrap();
+        let data = resp.into_file_data().unwrap();
         assert_eq!(&data[..], &[5u8; 1000]);
     }
 
@@ -1228,8 +1283,6 @@ mod tests {
             99,
             &Response::FileData {
                 stored: vec![0xAB; 4096].into(),
-                raw_len: 4096,
-                compressed: false,
             },
         ));
         for i in 40..60u64 {
@@ -1332,8 +1385,6 @@ mod tests {
             1,
             &Response::FileData {
                 stored: payload.clone(),
-                raw_len: 1 << 16,
-                compressed: false,
             },
         );
         let shared_ptrs: Vec<*const u8> = frame

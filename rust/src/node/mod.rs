@@ -30,6 +30,7 @@ use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, RwLock};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::cache::ShardedCache;
 use crate::error::{FanError, Result};
@@ -68,6 +69,11 @@ pub struct NodeStats {
     pub bytes_served_remote: u64,
     pub bytes_fetched_remote: u64,
     pub decompressions: u64,
+    /// Bytes the compressed representation saved end to end: Σ over decodes
+    /// of `raw_len - stored_len` (network + cache carried the small form).
+    pub compressed_bytes_saved: u64,
+    /// Wall time spent decompressing at pickup, in nanoseconds.
+    pub decode_nanos: u64,
     pub outputs_committed: u64,
     pub output_bytes: u64,
 }
@@ -86,6 +92,8 @@ pub struct AtomicNodeStats {
     pub bytes_served_remote: AtomicU64,
     pub bytes_fetched_remote: AtomicU64,
     pub decompressions: AtomicU64,
+    pub compressed_bytes_saved: AtomicU64,
+    pub decode_nanos: AtomicU64,
     pub outputs_committed: AtomicU64,
     pub output_bytes: AtomicU64,
 }
@@ -115,6 +123,8 @@ impl AtomicNodeStats {
             bytes_served_remote: ld(&self.bytes_served_remote),
             bytes_fetched_remote: ld(&self.bytes_fetched_remote),
             decompressions: ld(&self.decompressions),
+            compressed_bytes_saved: ld(&self.compressed_bytes_saved),
+            decode_nanos: ld(&self.decode_nanos),
             outputs_committed: ld(&self.outputs_committed),
             output_bytes: ld(&self.output_bytes),
         }
@@ -184,7 +194,10 @@ pub struct NodeShared {
     /// immutable after launch, shared lock-free.
     pub input_meta: Arc<MetaTable>,
     pub placement: Placement,
-    /// Refcount cache of decompressed input content (§5.4), sharded 16 ways.
+    /// Refcount cache of input content in *stored* form (§5.4), sharded 16
+    /// ways.  Compressed entries stay compressed while resident — the RAM
+    /// budget scales with the compressed dataset; `decode_payload` expands
+    /// a pinned entry at descriptor pickup.
     pub cache: ShardedCache,
     /// Output metadata homed on this node by the consistent hash (§5.3).
     pub output_meta: RwLock<MetaTable>,
@@ -308,15 +321,7 @@ impl NodeShared {
     pub fn serve(&self, req: &Request) -> Response {
         match req {
             Request::ReadFile { path } => match self.fetch_stored(path) {
-                FileFetch::Data {
-                    stored,
-                    raw_len,
-                    compressed,
-                } => Response::FileData {
-                    stored,
-                    raw_len,
-                    compressed,
-                },
+                FileFetch::Data { stored } => Response::FileData { stored },
                 FileFetch::NotFound => Response::Err(format!("ENOENT {path}")),
                 FileFetch::Fault(e) => Response::Err(format!("EIO {path}: {e}")),
             },
@@ -425,18 +430,17 @@ impl NodeShared {
 
     /// Read one stored (or output-buffered) file for a peer, reporting the
     /// outcome per file.  Shared by the single and batched serve paths.
+    /// The returned payload is self-describing: a compressed-at-rest entry
+    /// ships as [`Payload::Compressed`], so the wire carries the small
+    /// representation and the *reader* decides when to expand it.
     pub fn fetch_stored(&self, path: &str) -> FileFetch {
         match self.store.read_stored(path) {
-            Ok((stored, at)) => {
+            Ok((stored, _at)) => {
                 self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
                 self.stats
                     .bytes_served_remote
                     .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                FileFetch::Data {
-                    stored,
-                    raw_len: at.raw_len,
-                    compressed: at.compressed,
-                }
+                FileFetch::Data { stored }
             }
             // not in the store: maybe an output buffered on this node
             Err(crate::error::FanError::NotFound(_)) => {
@@ -447,11 +451,8 @@ impl NodeShared {
                         self.stats
                             .bytes_served_remote
                             .fetch_add(data.len() as u64, Ordering::Relaxed);
-                        let raw_len = data.len() as u64;
                         FileFetch::Data {
                             stored: data.into(),
-                            raw_len,
-                            compressed: false,
                         }
                     }
                     None => FileFetch::NotFound,
@@ -475,22 +476,33 @@ impl NodeShared {
         }
     }
 
-    /// Decompress a fetched payload on the reading node if needed (§5.4),
-    /// counting the decompression.  Shared by the VFS and the prefetcher.
-    pub fn decode_stored(
-        &self,
-        stored: Payload,
-        raw_len: u64,
-        compressed: bool,
-    ) -> Result<Payload> {
-        if !compressed {
+    /// The single decode point (§5.4: decompression happens on the reading
+    /// node): expand a [`Payload::Compressed`] handle at descriptor pickup,
+    /// counting the decompression, its wall time, and the bytes the
+    /// compressed representation saved on the way here.  Everything before
+    /// this call — serve, wire, refcount cache — carries the stored form.
+    pub fn decode_payload(&self, stored: &Payload) -> Result<Payload> {
+        match stored {
+            Payload::Compressed {
+                codec,
+                raw_len,
+                inner,
+            } => {
+                let t0 = Instant::now();
+                let out = codec.decompress(inner.as_slice(), *raw_len as usize)?;
+                self.stats.decompressions.fetch_add(1, Ordering::Relaxed);
+                self.stats
+                    .decode_nanos
+                    .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                self.stats
+                    .compressed_bytes_saved
+                    .fetch_add(raw_len.saturating_sub(inner.len() as u64), Ordering::Relaxed);
+                Ok(out.into())
+            }
             // uncompressed content is served as-is: an mmap/RAM view stays
             // a view all the way into the cache and the descriptors
-            return Ok(stored);
+            other => Ok(other.clone()),
         }
-        let out = crate::compress::lzss::decompress(&stored, raw_len as usize)?;
-        self.stats.decompressions.fetch_add(1, Ordering::Relaxed);
-        Ok(out.into())
     }
 
     /// The one batched input-fetch body every read path shares
@@ -498,11 +510,13 @@ impl NodeShared {
     /// pickups): resolve each path against the refcount cache, read the
     /// local share directly, and fetch the rest with **one `ReadFiles`
     /// round trip per holder node**, all requests in flight before any
-    /// reply is awaited.  Fetched payloads are decoded on this (reading)
-    /// node and inserted into the cache; every `Ok` outcome transfers that
-    /// pin to the caller.  Exactly one cache acquire happens per item, and
-    /// every miss is exactly one fetch, so the node-wide counter algebra
-    /// the stress tests assert holds no matter which caller runs this.
+    /// reply is awaited.  Payloads are cached *in stored form* — a
+    /// compressed entry stays compressed through the fetch and the cache,
+    /// and [`NodeShared::decode_payload`] expands it once at descriptor
+    /// pickup; every `Ok` outcome transfers that pin to the caller.
+    /// Exactly one cache acquire happens per item, and every miss is
+    /// exactly one fetch, so the node-wide counter algebra the stress
+    /// tests assert holds no matter which caller runs this.
     ///
     /// `items` must not contain duplicate paths (every caller dedups or
     /// coalesces first): a duplicated remote path would collapse in the
@@ -551,13 +565,12 @@ impl NodeShared {
         // serve the local share while the peers work
         for path in local {
             let outcome = match self.store.read_stored(&path) {
-                Ok((stored, at)) => {
+                Ok((stored, _)) => {
                     stats.local_reads.fetch_add(1, Ordering::Relaxed);
                     stats
                         .bytes_read_local
                         .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                    self.decode_stored(stored, at.raw_len, at.compressed)
-                        .map(|raw| (self.cache.insert(&path, raw), FetchSource::Local))
+                    Ok((self.cache.insert(Arc::clone(&path), stored), FetchSource::Local))
                 }
                 Err(e) => Err(e),
             };
@@ -574,17 +587,15 @@ impl NodeShared {
                     let mut by_path: HashMap<Arc<str>, FileFetch> = files.into_iter().collect();
                     for path in paths {
                         let outcome = match by_path.remove(&*path) {
-                            Some(FileFetch::Data {
-                                stored,
-                                raw_len,
-                                compressed,
-                            }) => {
+                            Some(FileFetch::Data { stored }) => {
                                 stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
                                 stats
                                     .bytes_fetched_remote
                                     .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                                self.decode_stored(stored, raw_len, compressed)
-                                    .map(|raw| (self.cache.insert(&path, raw), FetchSource::Remote))
+                                Ok((
+                                    self.cache.insert(Arc::clone(&path), stored),
+                                    FetchSource::Remote,
+                                ))
                             }
                             Some(FileFetch::NotFound) => Err(FanError::NotFound(path.to_string())),
                             Some(FileFetch::Fault(e)) => {
@@ -694,7 +705,7 @@ pub fn index_input_metadata(
                         partition: *pid,
                         offset: data_off,
                         stored_len: e.stored_len(),
-                        compressed: e.is_compressed(),
+                        codec: e.codec,
                     },
                     generation: 0,
                 },
@@ -733,10 +744,10 @@ mod tests {
             path: "/m/train/f2".into(),
         });
         match resp {
-            Response::FileData { stored, raw_len, compressed } => {
+            Response::FileData { stored } => {
                 assert_eq!(&stored[..], &vec![2u8; 102][..]);
-                assert_eq!(raw_len, 102);
-                assert!(!compressed);
+                assert_eq!(stored.raw_len(), 102);
+                assert_eq!(stored.codec(), Codec::None);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -803,10 +814,10 @@ mod tests {
         let resp = tp
             .call(0, 1, Request::ReadFile { path: "/m/train/f3".into() })
             .unwrap();
-        let (stored, raw_len, compressed) = resp.into_file_data().unwrap();
+        let stored = resp.into_file_data().unwrap();
         assert_eq!(&stored[..], &vec![3u8; 103][..]);
-        assert_eq!(raw_len, 103);
-        assert!(!compressed);
+        assert_eq!(stored.raw_len(), 103);
+        assert_eq!(stored.codec(), Codec::None);
 
         tp.shutdown_all();
         assert_eq!(node1.join(), 1);
@@ -823,7 +834,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 0,
                 stored_len: 42,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         };
@@ -858,7 +869,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 0,
                 stored_len: 9,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         };
@@ -887,7 +898,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 0,
                 stored_len: 77,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         };
@@ -928,7 +939,7 @@ mod tests {
             partition: 0,
             offset: 0,
             stored_len: 0,
-            compressed: false,
+            codec: Codec::None,
         };
         let batch = node.fetch_inputs_batched(
             &tp,
@@ -961,6 +972,48 @@ mod tests {
         assert_eq!(node.cache.resident_files(), 0, "all helper pins released");
         let st = node.stats.snapshot();
         assert_eq!(st.local_reads, 1, "one fetch despite two acquires");
+    }
+
+    #[test]
+    fn batched_fetch_caches_stored_form_and_decodes_at_pickup() {
+        // LZSS-at-rest files: the fetch inserts the *compressed* bytes into
+        // the refcount cache (RAM scales with the compressed dataset) and
+        // decode_payload is the single expand, with its counters
+        let fs: Vec<InputFile> = (0..3)
+            .map(|i| InputFile {
+                path: format!("train/f{i}"),
+                data: vec![i as u8; 4096],
+            })
+            .collect();
+        let (blobs, bstats) = build_partitions(&fs, 1, Codec::Lzss(5)).unwrap();
+        assert_eq!(bstats.compressed_files, 3);
+        let placement = Placement::new(1, 1, 1);
+        let mut b = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        let node = b.seal();
+        let (tp, _eps) = InProcTransport::fully_connected(1);
+        let loc = FileLocation {
+            node: 0,
+            partition: 0,
+            offset: 0,
+            stored_len: 0,
+            codec: Codec::None,
+        };
+        let batch = node.fetch_inputs_batched(&tp, vec![("/m/train/f2".into(), loc)]);
+        let (path, outcome) = batch.outcomes.into_iter().next().unwrap();
+        let (pin, src) = outcome.unwrap();
+        assert_eq!(src, FetchSource::Local);
+        assert_eq!(pin.codec(), Codec::Lzss(5));
+        assert_eq!(pin.raw_len(), 4096);
+        assert!(pin.len() < 4096 / 8, "cache pin holds the compressed bytes");
+        assert!(node.cache.stats().resident_bytes < 4096 / 8);
+        let raw = node.decode_payload(&pin).unwrap();
+        assert_eq!(&raw[..], &vec![2u8; 4096][..]);
+        let st = node.stats.snapshot();
+        assert_eq!(st.decompressions, 1);
+        assert_eq!(st.compressed_bytes_saved, 4096 - pin.len() as u64);
+        node.cache.release(&path, &pin);
+        assert_eq!(node.cache.resident_files(), 0);
     }
 
     #[test]
@@ -1025,7 +1078,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 0,
                 stored_len: 5,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         };
@@ -1073,7 +1126,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 0,
                 stored_len: 3,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         };
@@ -1117,7 +1170,7 @@ mod tests {
                 partition: u32::MAX,
                 offset: 0,
                 stored_len: 3,
-                compressed: false,
+                codec: Codec::None,
             },
             generation: 0,
         };

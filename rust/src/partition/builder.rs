@@ -12,7 +12,7 @@
 
 use std::time::Instant;
 
-use crate::compress::Codec;
+use crate::compress::{Codec, CompressPolicy};
 use crate::error::Result;
 use crate::metadata::record::FileStat;
 use crate::partition::format::PartitionWriter;
@@ -55,6 +55,18 @@ pub fn build_partitions(
     n_partitions: u32,
     codec: Codec,
 ) -> Result<(Vec<Vec<u8>>, BuildStats)> {
+    build_partitions_with(files, n_partitions, codec, &CompressPolicy::default())
+}
+
+/// [`build_partitions`] with an explicit per-extension compression policy
+/// (paper §5.2): files whose extension the policy skips are stored verbatim
+/// regardless of `codec`.
+pub fn build_partitions_with(
+    files: &[InputFile],
+    n_partitions: u32,
+    codec: Codec,
+    policy: &CompressPolicy,
+) -> Result<(Vec<Vec<u8>>, BuildStats)> {
     assert!(n_partitions > 0);
     let start = Instant::now();
     let mut writers: Vec<PartitionWriter> =
@@ -66,8 +78,13 @@ pub fn build_partitions(
     for (i, f) in files.iter().enumerate() {
         let w = &mut writers[i % n_partitions as usize];
         let stat = FileStat::regular(i as u64 + 1, f.data.len() as u64);
+        let file_codec = if policy.should_compress(&f.path) {
+            codec
+        } else {
+            Codec::None
+        };
         let before = w.len();
-        w.push(&f.path, stat, &f.data, codec)?;
+        w.push(&f.path, stat, &f.data, file_codec)?;
         stats.raw_bytes += f.data.len() as u64;
         let entry_bytes = w.len() - before;
         let stored = entry_bytes - super::format::ENTRY_FIXED_BYTES;
@@ -151,6 +168,27 @@ mod tests {
                 assert!(raw.iter().all(|&b| b == raw[0]));
                 assert_eq!(raw.len(), 4096);
             }
+        }
+    }
+
+    #[test]
+    fn policy_keeps_skip_listed_extensions_raw() {
+        // same compressible bytes, different extensions: the policy decides
+        let files: Vec<InputFile> = ["train/a.npy", "train/b.JPEG", "train/c.png", "train/d"]
+            .iter()
+            .map(|p| InputFile {
+                path: p.to_string(),
+                data: vec![0x42u8; 4096],
+            })
+            .collect();
+        let (blobs, stats) =
+            build_partitions_with(&files, 1, Codec::Lzss(5), &CompressPolicy::default()).unwrap();
+        assert_eq!(stats.compressed_files, 2, "only .npy and extensionless");
+        let entries = PartitionReader::new(&blobs[0]).unwrap().read_all().unwrap();
+        for e in &entries {
+            let skip = e.name.ends_with(".JPEG") || e.name.ends_with(".png");
+            assert_eq!(e.is_compressed(), !skip, "{}", e.name);
+            assert_eq!(e.codec.is_none(), skip, "{}", e.name);
         }
     }
 

@@ -9,6 +9,13 @@
 //! Each entry is a 256-byte NUL-padded path, the 144-byte stat image, an
 //! 8-byte `compressed_size` (0 = stored raw; otherwise the stored length),
 //! then the data bytes.  Entries repeat back-to-back.
+//!
+//! Compressed entries additionally record *which* codec produced them in
+//! byte [`CODEC_STAT_OFFSET`] of the stat image (the first reserved byte,
+//! 120..144 being zeros in every stat we write).  Raw entries keep the byte
+//! at 0, so Table 3's exact offsets and raw-entry images are unchanged;
+//! legacy compressed blobs with a zero byte decode under the historical
+//! default `Lzss(5)`.
 
 use crate::compress::Codec;
 use crate::error::{FanError, Result};
@@ -20,6 +27,9 @@ pub const NAME_BYTES: usize = 256;
 pub const HEADER_BYTES: usize = 4;
 /// Per-entry fixed overhead before the data bytes.
 pub const ENTRY_FIXED_BYTES: usize = NAME_BYTES + STAT_BYTES + 8;
+/// Offset inside the 144-byte stat image where a compressed entry records
+/// its codec id (`Codec::to_wire`); the stat's reserved region starts here.
+pub const CODEC_STAT_OFFSET: usize = 120;
 
 /// One packed file.
 #[derive(Clone, Debug, PartialEq)]
@@ -30,6 +40,9 @@ pub struct PartitionEntry {
     pub stat: FileStat,
     /// 0 when `data` holds raw bytes; else the stored (compressed) length.
     pub compressed_size: u64,
+    /// Codec the stored bytes are encoded under (`Codec::None` when
+    /// `compressed_size == 0`).
+    pub codec: Codec,
     /// Stored bytes (compressed when `compressed_size != 0`).
     pub data: Vec<u8>,
 }
@@ -75,13 +88,18 @@ impl PartitionWriter {
         let mut namebuf = [0u8; NAME_BYTES];
         namebuf[..name.len()].copy_from_slice(name.as_bytes());
         self.buf.extend_from_slice(&namebuf);
-        self.buf.extend_from_slice(&stat.encode());
+        let mut statbuf = stat.encode();
         match codec.compress(raw) {
             Some(c) => {
+                // stamp the codec id into the stat image's reserved region
+                // (raw entries keep the zero, so their images are unchanged)
+                statbuf[CODEC_STAT_OFFSET] = codec.to_wire();
+                self.buf.extend_from_slice(&statbuf);
                 self.buf.extend_from_slice(&(c.len() as u64).to_le_bytes());
                 self.buf.extend_from_slice(&c);
             }
             None => {
+                self.buf.extend_from_slice(&statbuf);
                 self.buf.extend_from_slice(&0u64.to_le_bytes());
                 self.buf.extend_from_slice(raw);
             }
@@ -159,6 +177,15 @@ impl<'a> PartitionReader<'a> {
         let stat = FileStat::decode(&b[self.pos + NAME_BYTES..self.pos + NAME_BYTES + STAT_BYTES])?;
         let cs_off = self.pos + NAME_BYTES + STAT_BYTES;
         let compressed_size = u64::from_le_bytes(b[cs_off..cs_off + 8].try_into().unwrap());
+        let codec = if compressed_size == 0 {
+            Codec::None
+        } else {
+            match b[self.pos + NAME_BYTES + CODEC_STAT_OFFSET] {
+                // legacy compressed blobs predate the codec byte
+                0 => Codec::Lzss(5),
+                id => Codec::from_wire(id)?,
+            }
+        };
         let data_off = cs_off + 8;
         let stored = if compressed_size != 0 {
             compressed_size
@@ -179,6 +206,7 @@ impl<'a> PartitionReader<'a> {
                 name,
                 stat,
                 compressed_size,
+                codec,
                 data,
             },
             data_off as u64,
@@ -256,8 +284,30 @@ mod tests {
         let (e, _) = r.next_entry().unwrap().unwrap();
         assert!(e.is_compressed());
         assert!(e.stored_len() < 4096);
-        let raw = crate::compress::lzss::decompress(&e.data, 4096).unwrap();
+        assert_eq!(e.codec, Codec::Lzss(5));
+        let raw = e.codec.decompress(&e.data, 4096).unwrap();
         assert_eq!(raw, data);
+    }
+
+    #[test]
+    fn codec_byte_rides_the_stat_reserved_region() {
+        let data: Vec<u8> = b"0123456789".iter().cycle().take(4096).copied().collect();
+        for level in [1u8, 3, 9] {
+            let mut w = PartitionWriter::new();
+            w.push("c.bin", FileStat::regular(1, 4096), &data, Codec::Lzss(level)).unwrap();
+            w.push("r.bin", FileStat::regular(2, 0), b"", Codec::None).unwrap();
+            let blob = w.finish();
+            // compressed entry: byte 120 of the stat image carries the level
+            assert_eq!(blob[HEADER_BYTES + NAME_BYTES + CODEC_STAT_OFFSET], level);
+            let mut r = PartitionReader::new(&blob).unwrap();
+            let (e, _) = r.next_entry().unwrap().unwrap();
+            assert_eq!(e.codec, Codec::Lzss(level));
+            // the stat decodes identically despite the stamped byte
+            assert_eq!(e.stat, FileStat::regular(1, 4096));
+            // raw entry: codec byte stays zero, codec is None
+            let (raw_e, _) = r.next_entry().unwrap().unwrap();
+            assert_eq!(raw_e.codec, Codec::None);
+        }
     }
 
     #[test]
@@ -271,6 +321,7 @@ mod tests {
         let blob = w.finish();
         let (e, _) = PartitionReader::new(&blob).unwrap().next_entry().unwrap().unwrap();
         assert_eq!(e.compressed_size, 0, "random data must be stored raw");
+        assert_eq!(e.codec, Codec::None);
         assert_eq!(e.data, data);
     }
 

@@ -14,5 +14,5 @@
 pub mod builder;
 pub mod format;
 
-pub use builder::{build_partitions, BuildStats, InputFile};
+pub use builder::{build_partitions, build_partitions_with, BuildStats, InputFile};
 pub use format::{PartitionEntry, PartitionReader, PartitionWriter, NAME_BYTES};

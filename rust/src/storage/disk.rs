@@ -35,6 +35,7 @@ use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::compress::Codec;
 use crate::error::{FanError, Result};
 use crate::metadata::record::FileStat;
 use crate::partition::format::PartitionReader;
@@ -164,7 +165,7 @@ pub struct StoredAt {
     pub offset: u64,
     pub stored_len: u64,
     pub raw_len: u64,
-    pub compressed: bool,
+    pub codec: Codec,
 }
 
 /// Persistent read handles for one spilled partition: the blob path (for
@@ -291,7 +292,7 @@ impl DiskStore {
                     offset: data_off,
                     stored_len: e.stored_len(),
                     raw_len: e.stat.size,
-                    compressed: e.is_compressed(),
+                    codec: e.codec,
                 },
                 e.stat,
             ));
@@ -412,21 +413,24 @@ impl DiskStore {
     /// Returns a [`Payload`] handle: RAM and mmap backings serve a
     /// **zero-copy view** whose `Arc` keeps the blob/region alive for the
     /// handle's lifetime; pooled-pread/reopen backings serve owned bytes
-    /// materialized by the disk read itself.  Everything downstream
-    /// (worker serve path, transport response, refcount cache, VFS
-    /// descriptors, the frame encoder's vectored send) clones the handle,
-    /// never the bytes.
+    /// materialized by the disk read itself.  Compressed entries come back
+    /// as a self-describing [`Payload::Compressed`] wrapper around that
+    /// view, so the wire, the refcount cache and the VFS all know how (and
+    /// how much) to decode without consulting the index again.  Everything
+    /// downstream (worker serve path, transport response, refcount cache,
+    /// VFS descriptors, the frame encoder's vectored send) clones the
+    /// handle, never the bytes.
     pub fn read_stored(&self, path: &str) -> Result<(Payload, StoredAt)> {
-        self.read_payload(path)
+        let (payload, at) = self.read_payload(path)?;
+        Ok((Payload::compressed(at.codec, at.raw_len, payload), at))
     }
 
     /// Read + decompress to raw file contents.
     pub fn read_raw(&self, path: &str) -> Result<Vec<u8>> {
         let (stored, at) = self.read_payload(path)?;
-        if at.compressed {
-            crate::compress::lzss::decompress(&stored, at.raw_len as usize)
-        } else {
-            Ok(stored.to_vec())
+        match at.codec {
+            Codec::None => Ok(stored.to_vec()),
+            codec => codec.decompress(&stored, at.raw_len as usize),
         }
     }
 
@@ -606,7 +610,9 @@ mod tests {
             .load_partition(0, blobs.into_iter().next().unwrap(), "/m")
             .unwrap();
         let (stored, at) = store.read_stored("/m/a/rle.bin").unwrap();
-        assert!(at.compressed);
+        assert_eq!(at.codec, Codec::Lzss(5));
+        assert_eq!(stored.codec(), Codec::Lzss(5));
+        assert_eq!(stored.raw_len(), 8192);
         assert!(stored.len() < 8192 / 10);
         assert_eq!(store.read_raw("/m/a/rle.bin").unwrap(), vec![7u8; 8192]);
     }

@@ -34,6 +34,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use crate::compress::Codec;
+
 /// Process-wide tally of payload byte duplications (relaxed; see the
 /// module docs).  Monotonic — benches snapshot before/after and diff.
 static PAYLOAD_COPIES: AtomicU64 = AtomicU64::new(0);
@@ -78,6 +80,16 @@ pub enum Payload {
         off: usize,
         len: usize,
     },
+    /// Compressed representation of a `raw_len`-byte file: `inner` holds
+    /// the stored (compressed) bytes — still zero-copy, typically a view
+    /// of a partition region — and `codec` decodes them.  This is what
+    /// rides the wire and sits in the refcount cache; the consuming side
+    /// performs the single decode at VFS/prefetch pickup.
+    Compressed {
+        codec: Codec,
+        raw_len: u64,
+        inner: Box<Payload>,
+    },
 }
 
 impl Payload {
@@ -91,17 +103,54 @@ impl Payload {
         Payload::View { region, off, len }
     }
 
+    /// Wrap stored bytes in their compressed identity.  Collapses to the
+    /// plain payload when `codec` is `None` (nothing to decode), so raw
+    /// entries pay no wrapper anywhere in the plane.
+    pub fn compressed(codec: Codec, raw_len: u64, inner: Payload) -> Payload {
+        if codec.is_none() {
+            inner
+        } else {
+            Payload::Compressed {
+                codec,
+                raw_len,
+                inner: Box::new(inner),
+            }
+        }
+    }
+
+    /// Slice of the bytes this handle carries: the *stored* representation
+    /// (compressed bytes for a `Compressed` payload).
     pub fn as_slice(&self) -> &[u8] {
         match self {
             Payload::Owned(a) => a,
             Payload::View { region, off, len } => &region.bytes()[*off..*off + *len],
+            Payload::Compressed { inner, .. } => inner.as_slice(),
         }
     }
 
+    /// Stored length in bytes (compressed size for `Compressed` payloads).
     pub fn len(&self) -> usize {
         match self {
             Payload::Owned(a) => a.len(),
             Payload::View { len, .. } => *len,
+            Payload::Compressed { inner, .. } => inner.len(),
+        }
+    }
+
+    /// Codec these bytes are stored under (`None` for plain payloads).
+    pub fn codec(&self) -> Codec {
+        match self {
+            Payload::Compressed { codec, .. } => *codec,
+            _ => Codec::None,
+        }
+    }
+
+    /// Decoded length: `raw_len` for `Compressed` payloads, the stored
+    /// length otherwise (plain payloads are already decoded).
+    pub fn raw_len(&self) -> u64 {
+        match self {
+            Payload::Compressed { raw_len, .. } => *raw_len,
+            _ => self.len() as u64,
         }
     }
 
@@ -126,6 +175,18 @@ impl Payload {
                 ) && oa == ob
                     && la == lb
             }
+            (
+                Payload::Compressed {
+                    codec: ca,
+                    raw_len: la,
+                    inner: ia,
+                },
+                Payload::Compressed {
+                    codec: cb,
+                    raw_len: lb,
+                    inner: ib,
+                },
+            ) => ca == cb && la == lb && ia.same(ib),
             _ => false,
         }
     }
@@ -140,6 +201,7 @@ impl Payload {
                 record_copy();
                 Arc::from(&region.bytes()[off..off + len])
             }
+            Payload::Compressed { inner, .. } => inner.into_arc(),
         }
     }
 
@@ -183,6 +245,11 @@ impl std::fmt::Debug for Payload {
             Payload::View { off, len, .. } => {
                 write!(f, "Payload::View({off}+{len} bytes)")
             }
+            Payload::Compressed {
+                codec,
+                raw_len,
+                inner,
+            } => write!(f, "Payload::Compressed({codec}, {raw_len} raw, {inner:?})"),
         }
     }
 }
@@ -256,6 +323,34 @@ mod tests {
     fn out_of_range_view_is_rejected() {
         let r = region(8);
         let _ = Payload::view(r, 4, 8);
+    }
+
+    #[test]
+    fn compressed_wrapper_delegates_and_collapses() {
+        let r = region(64);
+        let before = payload_copies();
+        let stored = Payload::view(Arc::clone(&r), 8, 16);
+        let p = Payload::compressed(Codec::Lzss(5), 4096, stored.clone());
+        // the wrapper exposes the STORED bytes and length...
+        assert_eq!(&p[..], &r.bytes()[8..24]);
+        assert_eq!(p.len(), 16);
+        // ...while carrying the decode metadata
+        assert_eq!(p.codec(), Codec::Lzss(5));
+        assert_eq!(p.raw_len(), 4096);
+        assert_eq!(payload_copies(), before, "wrapping costs no copy");
+
+        // Codec::None collapses to the plain payload
+        let plain = Payload::compressed(Codec::None, 16, stored.clone());
+        assert!(plain.same(&stored));
+        assert_eq!(plain.codec(), Codec::None);
+        assert_eq!(plain.raw_len(), 16);
+
+        // pin identity: same codec + raw_len + inner pin
+        let q = Payload::compressed(Codec::Lzss(5), 4096, stored.clone());
+        assert!(p.same(&q));
+        assert!(!p.same(&Payload::compressed(Codec::Lzss(3), 4096, stored.clone())));
+        assert!(!p.same(&Payload::compressed(Codec::Lzss(5), 4095, stored.clone())));
+        assert!(!p.same(&stored), "wrapped and bare pins differ");
     }
 
     #[test]

@@ -17,6 +17,7 @@ use std::collections::HashMap;
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
+use crate::compress::Codec;
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileLocation, FileMeta, FileStat};
 use crate::metadata::table::normalize;
@@ -31,6 +32,11 @@ use crate::vfs::{Fd, OpenFlags, Vfs};
 enum OpenFile {
     Read {
         path: String,
+        /// The refcount-cache pin, in *stored* (possibly compressed) form —
+        /// the handle `close()` releases.  Cache identity, not content.
+        pin: Payload,
+        /// Decoded content served to `read()` (the pin itself when the
+        /// entry is uncompressed — no copy).
         data: Payload,
         pos: usize,
     },
@@ -121,9 +127,10 @@ impl FanStoreVfs {
         }
     }
 
-    /// Fetch + decompress an input file's content, going through the node's
-    /// refcount cache.  Returns a pinned Arc (caller must `release` on
-    /// close — handled by [`Vfs::close`]).
+    /// Fetch an input file's content in stored form, going through the
+    /// node's refcount cache.  Returns a pinned handle (caller must
+    /// `release` on close — handled by [`Vfs::close`]); a compressed entry
+    /// is expanded once, at `open`, by [`NodeShared::decode_payload`].
     fn fetch_input(&mut self, path: &str, loc: FileLocation) -> Result<Payload> {
         // 0) pin warmed by a batched prefetch() hint: already ours
         if let Some(pin) = self.warm.remove(path) {
@@ -206,7 +213,7 @@ impl FanStoreVfs {
                 .next()
                 .map(|(_, f)| f)
                 .unwrap_or(FileFetch::NotFound);
-            let (stored, _, _) = fetch.into_result(path)?;
+            let stored = fetch.into_result(path)?;
             stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
             stats
                 .bytes_fetched_remote
@@ -291,7 +298,7 @@ fn output_meta(stat: FileStat, origin: u32, generation: u64) -> FileMeta {
             partition: u32::MAX,
             offset: 0,
             stored_len: stat.size,
-            compressed: false,
+            codec: Codec::None,
         },
         generation,
     }
@@ -303,7 +310,7 @@ impl Vfs for FanStoreVfs {
         match flags {
             OpenFlags::Read => {
                 let loc = self.shared.input_meta.get(&path).map(|m| m.location);
-                let data = match loc {
+                let pin = match loc {
                     Some(loc) => self.fetch_input(&path, loc)?,
                     None => {
                         // Not an input: a committed output file.  When its
@@ -335,8 +342,26 @@ impl Vfs for FanStoreVfs {
                         }
                     }
                 };
+                // the single decode point (§5.4): the cache pin stays in
+                // stored form; this descriptor gets the expanded content.
+                // On a codec fault the pin must not leak its refcount.
+                let data = match self.shared.decode_payload(&pin) {
+                    Ok(data) => data,
+                    Err(e) => {
+                        self.shared.cache.release(&path, &pin);
+                        return Err(e);
+                    }
+                };
                 let fd = self.alloc_fd();
-                self.fds.insert(fd, OpenFile::Read { path, data, pos: 0 });
+                self.fds.insert(
+                    fd,
+                    OpenFile::Read {
+                        path,
+                        pin,
+                        data,
+                        pos: 0,
+                    },
+                );
                 Ok(fd)
             }
             OpenFlags::Write => {
@@ -392,8 +417,8 @@ impl Vfs for FanStoreVfs {
 
     fn close(&mut self, fd: Fd) -> Result<()> {
         match self.fds.remove(&fd) {
-            Some(OpenFile::Read { path, data, .. }) => {
-                self.shared.cache.release(&path, &data);
+            Some(OpenFile::Read { path, pin, .. }) => {
+                self.shared.cache.release(&path, &pin);
                 Ok(())
             }
             Some(OpenFile::Write { path, buf }) => {
@@ -407,7 +432,7 @@ impl Vfs for FanStoreVfs {
                         partition: u32::MAX,
                         offset: 0,
                         stored_len: size,
-                        compressed: false,
+                        codec: Codec::None,
                     },
                     // stamped by the home node when the commit lands
                     generation: 0,

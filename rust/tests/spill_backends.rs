@@ -258,6 +258,80 @@ fn payload_handles_byte_identical_across_mode_churn() {
     }
 }
 
+/// Every LZSS level × every backing (RAM + the three spilled modes) must
+/// round-trip byte-identically, with the stored codec visible on the
+/// payload handle: the compressible half of the dataset comes back
+/// `Codec::Lzss(l)`-tagged and smaller than raw, while the incompressible
+/// half rides the reject path and is stored verbatim (`Codec::None`).
+/// Returns (compressed, verbatim) file counts so the caller can prove
+/// both shapes were exercised.
+fn check_roundtrip(
+    store: &DiskStore,
+    files: &[InputFile],
+    codec: Codec,
+    tag: &str,
+) -> (usize, usize) {
+    let mut compressed = 0;
+    let mut verbatim = 0;
+    for f in files {
+        let p = format!("/m/{}", f.path);
+        let (stored, at) = store.read_stored(&p).unwrap();
+        assert_eq!(at.raw_len as usize, f.data.len(), "{tag} {p} raw_len");
+        assert_eq!(stored.codec(), at.codec, "{tag} {p} codec tag");
+        match stored.codec() {
+            Codec::None => {
+                verbatim += 1;
+                assert_eq!(&stored[..], &f.data[..], "{tag} {p} verbatim bytes");
+            }
+            c => {
+                compressed += 1;
+                assert_eq!(c, codec, "{tag} {p} stored under the wrong codec");
+                assert!(stored.len() < f.data.len(), "{tag} {p} did not shrink");
+                assert_eq!(
+                    c.decompress(&stored, f.data.len()).unwrap(),
+                    f.data,
+                    "{tag} {p} decode mismatch"
+                );
+            }
+        }
+        assert_eq!(store.read_raw(&p).unwrap(), f.data, "{tag} {p} read_raw");
+    }
+    (compressed, verbatim)
+}
+
+#[test]
+fn lzss_all_levels_roundtrip_across_all_spill_modes() {
+    let files = dataset(8);
+    for level in 1..=9u8 {
+        let codec = Codec::Lzss(level);
+        let (blobs, _) = build_partitions(&files, 2, codec).unwrap();
+
+        let mut ram = DiskStore::in_memory();
+        for (pid, b) in blobs.iter().enumerate() {
+            ram.load_partition(pid as u32, b.clone(), "/m").unwrap();
+        }
+        let shapes = check_roundtrip(&ram, &files, codec, &format!("ram l{level}"));
+        assert!(
+            shapes.0 > 0 && shapes.1 > 0,
+            "level {level}: the dataset must exercise both stored shapes, got {shapes:?}"
+        );
+
+        for mode in MODES {
+            let dir = TempDir::new(&format!("lvl{level}_{}", mode.name()));
+            let mut store = DiskStore::on_disk_with_mode(&dir.0, mode).unwrap();
+            for (pid, b) in blobs.iter().enumerate() {
+                store.load_partition(pid as u32, b.clone(), "/m").unwrap();
+            }
+            let tag = format!("{} l{level}", mode.name());
+            assert_eq!(
+                check_roundtrip(&store, &files, codec, &tag),
+                shapes,
+                "{tag}: stored shapes diverge from the RAM backing"
+            );
+        }
+    }
+}
+
 #[test]
 fn cluster_reads_identical_across_spill_modes() {
     let files = dataset(24);

@@ -22,7 +22,10 @@
 //!     handles vs the materialize-an-owned-buffer baseline, with the
 //!     global payload-memcpy counter proving 0 copies on the former;
 //!   * reply send: the worker's reply fan-in, one write per reply vs the
-//!     bridge's coalescing reply writer.
+//!     bridge's coalescing reply writer;
+//!   * failover wrapper: round trips on the bare transport vs through a
+//!     zero-probability `FaultInjector` (the healthy-path overhead of the
+//!     PR 7 robustness layer — CI holds it within 5% of baseline).
 //!
 //! Besides the human-readable log, emits `BENCH_hotpath.json`
 //! (section → ops/s and bytes/s) so the perf trajectory is tracked across
@@ -303,6 +306,46 @@ fn bench_transport(out: &mut Entries, smoke: bool) {
     tcp.shutdown_all();
     handle.join().unwrap();
     drop(srv);
+}
+
+/// Healthy-path overhead of the PR 7 robustness layer: the same in-proc
+/// round-trip storm on the bare transport vs wrapped in a zero-probability
+/// [`FaultInjector`] (kills only, none scheduled — the chaos tests' no-op
+/// configuration).  The wrapper adds one PRNG roll plus a kill-vector
+/// check per send; CI asserts `failover/healthy_path` stays >= 0.95x
+/// `failover/baseline` ops/s.
+fn bench_failover_overhead(out: &mut Entries, smoke: bool) {
+    use fanstore::net::fault::{FaultInjector, FaultPlan};
+    println!("== failover wrapper: bare transport vs zero-plan FaultInjector ==");
+    let iters = if smoke { 4_000 } else { 20_000 };
+
+    let (tp, eps) = InProcTransport::fully_connected(2);
+    let mut eps = eps.into_iter();
+    let _e0 = eps.next().unwrap();
+    let handle = spawn_payload_echo(eps.next().unwrap());
+    let per = time_roundtrips(&tp, iters);
+    let base = 1.0 / per;
+    println!("  baseline    : {:.1} µs, {base:.0} req/s", per * 1e6);
+    out.push(("failover/baseline".into(), base, 128.0 * 1024.0 / per));
+    tp.shutdown_all();
+    handle.join().unwrap();
+
+    let (tp, eps) = InProcTransport::fully_connected(2);
+    let mut eps = eps.into_iter();
+    let _e0 = eps.next().unwrap();
+    let handle = spawn_payload_echo(eps.next().unwrap());
+    let tp: Arc<dyn Transport> = Arc::new(tp);
+    let inj = FaultInjector::new(Arc::clone(&tp), FaultPlan::none(), 0x7E57);
+    let per = time_roundtrips(&inj, iters);
+    let hp = 1.0 / per;
+    println!(
+        "  healthy_path: {:.1} µs, {hp:.0} req/s ({:.3}x of baseline)",
+        per * 1e6,
+        hp / base.max(1e-9)
+    );
+    out.push(("failover/healthy_path".into(), hp, 128.0 * 1024.0 / per));
+    inj.shutdown_all();
+    handle.join().unwrap();
 }
 
 fn bench_read_path(out: &mut Entries, smoke: bool) {
@@ -963,6 +1006,7 @@ fn main() {
     bench_wire_send(&mut entries, smoke);
     bench_reply_send(&mut entries, smoke);
     bench_transport(&mut entries, smoke);
+    bench_failover_overhead(&mut entries, smoke);
     bench_read_path(&mut entries, smoke);
     bench_multithread_reads(&mut entries, smoke);
     bench_remote_pipeline(&mut entries, smoke);

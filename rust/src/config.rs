@@ -70,6 +70,12 @@ pub struct ClusterConfig {
     pub prefetch_fetchers: usize,
     /// Fabric the cluster's protocol runs over (mpsc vs loopback TCP).
     pub transport: TransportKind,
+    /// How many times a single logical read may be re-routed to another
+    /// live holder before degrading to an error (`--retry-budget`).
+    pub retry_budget: u32,
+    /// Bounded per-call reply wait in milliseconds (`--call-timeout-ms`);
+    /// `0` waits forever (the pre-PR-7 behavior).
+    pub call_timeout_ms: u64,
 }
 
 impl Default for ClusterConfig {
@@ -88,6 +94,8 @@ impl Default for ClusterConfig {
             prefetch_window: 64,
             prefetch_fetchers: 4,
             transport: TransportKind::InProc,
+            retry_budget: 2,
+            call_timeout_ms: 5000,
         }
     }
 }
@@ -119,6 +127,12 @@ impl ClusterConfig {
             return Err(FanError::Config(format!(
                 "prefetch_fetchers must be in 1..=128, got {}",
                 self.prefetch_fetchers
+            )));
+        }
+        if self.retry_budget > 64 {
+            return Err(FanError::Config(format!(
+                "retry_budget must be <= 64, got {}",
+                self.retry_budget
             )));
         }
         if self.prefetch_window < self.prefetch_fetchers {
@@ -234,6 +248,10 @@ mod tests {
             ClusterConfig {
                 prefetch_window: 2,
                 prefetch_fetchers: 8,
+                ..Default::default()
+            },
+            ClusterConfig {
+                retry_budget: 65,
                 ..Default::default()
             },
         ] {

@@ -16,14 +16,15 @@
 //! exactly one node of the same pipeline.
 
 use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use crate::config::{ClusterConfig, TransportKind};
 use crate::error::Result;
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta, REPLICATED_PARTITION};
 use crate::metadata::table::MetaTable;
-use crate::net::tcp::{TcpServer, TcpTransport};
-use crate::net::transport::{InProcTransport, NodeEndpoint, Transport};
+use crate::net::tcp::{TcpServer, TcpTransport, DEFAULT_POOL_SIZE};
+use crate::net::transport::{InProcTransport, NodeEndpoint, Request, Transport};
 use crate::node::{FanStoreNode, NodeBuilder, NodeShared, NodeStats};
 use crate::partition::builder::{build_partitions_with, BuildStats, InputFile};
 use crate::partition::format::PartitionReader;
@@ -132,6 +133,7 @@ pub fn build_node_shared(
     };
     let mut builder = NodeBuilder::new(id, store, placement.clone());
     builder.cache_shards = config.cache_shards;
+    builder.health_policy.retry_budget = config.retry_budget;
     // dump the partitions this node hosts
     for (pid, blob) in &data.blobs {
         if placement.is_local(*pid, id) {
@@ -160,11 +162,12 @@ pub struct Cluster {
     /// Per-node background prefetch engines, started on first use and
     /// stopped (pins released) before the workers shut down.
     prefetchers: Mutex<Vec<Option<Arc<Prefetcher>>>>,
-    /// Loopback-TCP listeners (one per node; empty in `InProc` mode).
-    /// Stopped in `shutdown` after the shutdown broadcast but *before* the
-    /// worker joins, so a worker whose `Shutdown` message was lost still
-    /// exits via inbox-channel close instead of deadlocking the join.
-    tcp_servers: Vec<TcpServer>,
+    /// Loopback-TCP listeners (one slot per node; empty in `InProc` mode,
+    /// `None` once [`Cluster::kill_node`] took that node down).  Stopped in
+    /// `shutdown` after the shutdown broadcast but *before* the worker
+    /// joins, so a worker whose `Shutdown` message was lost still exits
+    /// via inbox-channel close instead of deadlocking the join.
+    tcp_servers: Vec<Option<TcpServer>>,
 }
 
 /// Post-shutdown accounting.
@@ -187,12 +190,20 @@ impl Cluster {
         let placement = Placement::new(config.nodes, config.partitions, config.replication);
 
         // fabric bring-up: the endpoints feed the worker threads the same
-        // way whichever transport delivers into them
-        let mut tcp_servers: Vec<TcpServer> = Vec::new();
+        // way whichever transport delivers into them.  Both fabrics honor
+        // the bounded per-call reply wait (`--call-timeout-ms`; 0 = never).
+        let call_timeout = match config.call_timeout_ms {
+            0 => None,
+            ms => Some(Duration::from_millis(ms)),
+        };
+        let mut tcp_servers: Vec<Option<TcpServer>> = Vec::new();
         let (transport, endpoints): (Arc<dyn Transport>, Vec<NodeEndpoint>) =
             match config.transport {
                 TransportKind::InProc => {
-                    let (t, eps) = InProcTransport::fully_connected(config.nodes);
+                    let (mut t, eps) = InProcTransport::fully_connected(config.nodes);
+                    if let Some(timeout) = call_timeout {
+                        t = t.with_call_timeout(timeout);
+                    }
                     let t: Arc<dyn Transport> = Arc::new(t);
                     (t, eps)
                 }
@@ -202,10 +213,14 @@ impl Cluster {
                     for id in 0..config.nodes {
                         let (srv, ep) = TcpServer::bind(id, "127.0.0.1:0")?;
                         addrs.push(srv.local_addr());
-                        tcp_servers.push(srv);
+                        tcp_servers.push(Some(srv));
                         endpoints.push(ep);
                     }
-                    let t: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&addrs)?);
+                    let t: Arc<dyn Transport> = Arc::new(TcpTransport::connect_with(
+                        &addrs,
+                        DEFAULT_POOL_SIZE,
+                        call_timeout,
+                    )?);
                     (t, endpoints)
                 }
             };
@@ -302,6 +317,24 @@ impl Cluster {
     /// [`NodeShared`] synchronize individually.
     pub fn node_state(&self, node: u32) -> Arc<NodeShared> {
         Arc::clone(&self.nodes[node as usize].shared)
+    }
+
+    /// Kill node `n` mid-run (the chaos tests' node failure): ask its
+    /// worker to exit, stop its TCP listener, evict its pooled sockets,
+    /// and join the worker thread.  Surviving readers fail over to the
+    /// partition replicas; reads whose every holder is gone degrade with
+    /// an error.  Returns the requests the dead worker had served.
+    pub fn kill_node(&mut self, n: u32) -> u64 {
+        // best-effort shutdown request — over TCP the worker may already be
+        // unreachable, and the listener teardown below covers that case
+        let _ = self.transport.call(u32::MAX, n, Request::Shutdown);
+        if let Some(slot) = self.tcp_servers.get_mut(n as usize) {
+            *slot = None;
+        }
+        // dropping pooled sockets makes the bridge threads EOF, so the
+        // worker's inbox senders vanish even if the Shutdown frame was lost
+        self.transport.evict(n);
+        self.nodes[n as usize].join_worker()
     }
 
     /// Orderly shutdown; returns per-node stats.

@@ -1,0 +1,196 @@
+//! Failover drill (PR 7): kill a node mid-sweep and prove the read path
+//! survives on the replicas.
+//!
+//! One reader (node 0) sweeps the whole namespace twice on identically
+//! configured clusters — once healthy, once with node 1 killed halfway
+//! through the sweep.  The topology (3 nodes, 3 partitions, replication 2)
+//! makes node 1 the preferred holder of exactly the one partition node 0
+//! must fetch remotely, so the kill lands on the hot remote path.  With a
+//! surviving replica for every partition the chaos sweep must return
+//! byte-identical data (same FNV-1a digest as the healthy sweep) while the
+//! `failovers`/`retries`/`peers_marked_down` counters light up and
+//! `degraded_reads` stays zero.
+
+use crate::config::{ClusterConfig, TransportKind};
+use crate::coordinator::Cluster;
+use crate::error::Result;
+use crate::experiments::report::{f1, shape_check, Table};
+use crate::node::NodeStats;
+use crate::partition::builder::InputFile;
+use crate::util::prng::Prng;
+use crate::vfs::Vfs;
+
+/// One fabric's healthy-vs-chaos pair over the identical workload.
+#[derive(Clone, Debug)]
+pub struct FailoverRun {
+    pub kind: TransportKind,
+    pub files: u64,
+    pub bytes: u64,
+    pub healthy_digest: u64,
+    pub chaos_digest: u64,
+    pub healthy_seconds: f64,
+    pub chaos_seconds: f64,
+    /// Reader-node (node 0) stats of the chaos sweep.
+    pub chaos_stats: NodeStats,
+}
+
+impl FailoverRun {
+    pub fn survived(&self) -> bool {
+        self.chaos_digest == self.healthy_digest
+            && self.chaos_stats.failovers > 0
+            && self.chaos_stats.degraded_reads == 0
+    }
+}
+
+fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01B3);
+    }
+    h
+}
+
+fn drill_config(kind: TransportKind) -> ClusterConfig {
+    ClusterConfig {
+        nodes: 3,
+        partitions: 3,
+        replication: 2,
+        transport: kind,
+        ..Default::default()
+    }
+}
+
+fn drill_dataset(file_count: usize, file_size: usize) -> Vec<InputFile> {
+    let mut rng = Prng::new(0xFA11);
+    (0..file_count)
+        .map(|i| {
+            let mut data = vec![0u8; file_size];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/f{i:05}"),
+                data,
+            }
+        })
+        .collect()
+}
+
+/// Run the drill on a fresh cluster per fabric.  `file_count` files of
+/// `file_size` bytes; the kill lands after half the (shuffled) sweep.
+pub fn run_failover(
+    kinds: &[TransportKind],
+    file_count: usize,
+    file_size: usize,
+) -> Result<Vec<FailoverRun>> {
+    let files = drill_dataset(file_count, file_size);
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("/fanstore/user/{}", f.path))
+        .collect();
+    // deterministic shuffled order: remote reads of the doomed holder's
+    // partition land on both sides of the kill
+    let mut order: Vec<u32> = (0..file_count as u32).collect();
+    Prng::new(0x5EED).shuffle(&mut order);
+
+    let mut out = Vec::new();
+    for &kind in kinds {
+        // healthy sweep
+        let cluster = Cluster::launch(&files, drill_config(kind))?;
+        let mut vfs = cluster.client(0);
+        let t0 = std::time::Instant::now();
+        let mut healthy_digest = 0xCBF2_9CE4_8422_2325u64;
+        let mut bytes = 0u64;
+        for &i in &order {
+            let data = vfs.read_all(&paths[i as usize])?;
+            bytes += data.len() as u64;
+            healthy_digest = fnv1a(healthy_digest, &data);
+        }
+        let healthy_seconds = t0.elapsed().as_secs_f64();
+        drop(vfs);
+        cluster.shutdown();
+
+        // chaos sweep: same workload, node 1 dies at the halfway mark
+        let mut cluster = Cluster::launch(&files, drill_config(kind))?;
+        let mut vfs = cluster.client(0);
+        let t0 = std::time::Instant::now();
+        let mut chaos_digest = 0xCBF2_9CE4_8422_2325u64;
+        for (k, &i) in order.iter().enumerate() {
+            if k == order.len() / 2 {
+                cluster.kill_node(1);
+            }
+            let data = vfs.read_all(&paths[i as usize])?;
+            chaos_digest = fnv1a(chaos_digest, &data);
+        }
+        let chaos_seconds = t0.elapsed().as_secs_f64();
+        drop(vfs);
+        let report = cluster.shutdown();
+        out.push(FailoverRun {
+            kind,
+            files: file_count as u64,
+            bytes,
+            healthy_digest,
+            chaos_digest,
+            healthy_seconds,
+            chaos_seconds,
+            chaos_stats: report.per_node[0],
+        });
+    }
+    Ok(out)
+}
+
+pub fn report_failover(runs: &[FailoverRun]) {
+    let mut t = Table::new(
+        "Failover drill — node 1 killed mid-sweep (3 nodes, r=2)",
+        &[
+            "fabric",
+            "files",
+            "healthy MB/s",
+            "chaos MB/s",
+            "digest match",
+            "failovers",
+            "retries",
+            "marked down",
+            "degraded",
+        ],
+    );
+    for r in runs {
+        t.row(&[
+            r.kind.name().to_string(),
+            r.files.to_string(),
+            f1(r.bytes as f64 / r.healthy_seconds.max(1e-9) / 1e6),
+            f1(r.bytes as f64 / r.chaos_seconds.max(1e-9) / 1e6),
+            if r.chaos_digest == r.healthy_digest {
+                "yes".into()
+            } else {
+                "NO".into()
+            },
+            r.chaos_stats.failovers.to_string(),
+            r.chaos_stats.retries.to_string(),
+            r.chaos_stats.peers_marked_down.to_string(),
+            r.chaos_stats.degraded_reads.to_string(),
+        ]);
+    }
+    t.print();
+    for r in runs {
+        shape_check(
+            &format!("{}: chaos sweep byte-identical with failovers>0", r.kind.name()),
+            if r.survived() { 1.0 } else { 0.0 },
+            0.5,
+            1.5,
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn drill_survives_the_kill_on_the_inproc_fabric() {
+        let runs = run_failover(&[TransportKind::InProc], 48, 512).unwrap();
+        let r = &runs[0];
+        assert_eq!(r.chaos_digest, r.healthy_digest, "reads must stay byte-identical");
+        assert!(r.chaos_stats.failovers > 0, "{:?}", r.chaos_stats);
+        assert_eq!(r.chaos_stats.degraded_reads, 0, "{:?}", r.chaos_stats);
+        assert!(r.survived());
+    }
+}

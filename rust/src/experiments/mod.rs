@@ -9,6 +9,7 @@
 //! | [`apps_scaling`] | Fig 7/8/9 — app weak scaling                       |
 //! | [`compression`]  | Fig 10/11 — compressed-data performance            |
 //! | [`prep`]         | §6.3 — data-preparation cost                       |
+//! | [`failover`]     | PR 7 — kill-a-node-mid-sweep survival drill        |
 //!
 //! All figures are regenerated on the virtual-time simulator ([`iosim`])
 //! except Fig 1 (real training through PJRT) and the prep table (real
@@ -18,6 +19,7 @@
 pub mod apps;
 pub mod apps_scaling;
 pub mod compression;
+pub mod failover;
 pub mod iosim;
 pub mod prep;
 pub mod report;

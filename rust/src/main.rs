@@ -6,7 +6,7 @@
 //! fanstore train     --nodes N --epochs E [--view global|partitioned]
 //! fanstore cluster   serve --node-id I --nodes N --listen HOST:PORT
 //! fanstore cluster   join  --node-id I --nodes N --peers a:p,b:p,... [--shutdown]
-//! fanstore experiment <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|prep-cost|pipeline|transport|all>
+//! fanstore experiment <fig1|fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|prep-cost|pipeline|transport|failover|all>
 //! ```
 
 use std::sync::Arc;
@@ -38,14 +38,17 @@ fn usage() {
                       --compress-ext none compresses every file)\n\
          bench-io    run the §6.2 benchmark on the in-proc cluster\n\
                      (--spill-dir DIR --spill-read-mode reopen|pread|mmap\n\
-                      for real file I/O instead of RAM backing)\n\
+                      for real file I/O instead of RAM backing;\n\
+                      --replication R --retry-budget N --call-timeout-ms MS\n\
+                      tune read-path failover)\n\
          train       train the CNN surrogate through FanStore + PJRT\n\
          cluster     run one FanStore node over real TCP:\n\
                        serve --node-id I --nodes N --listen HOST:PORT\n\
                        join  --node-id I --nodes N --peers a:p,b:p,... [--shutdown]\n\
                      (every host passes the same --files/--size/--seed/--partitions)\n\
          experiment  regenerate a paper figure: fig1 fig3 fig4 fig5 fig6\n\
-                     fig7 fig8 fig9 fig10 fig11 prep-cost pipeline transport all"
+                     fig7 fig8 fig9 fig10 fig11 prep-cost pipeline transport\n\
+                     failover all"
     );
 }
 
@@ -161,11 +164,15 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
     let n_files = m.get_u64("files", 256)? as usize;
     let size = m.get_u64("size", 64 << 10)? as usize;
     let seed = m.get_u64("seed", 0xFA57)?;
+    let defaults = ClusterConfig::default();
     let cfg = ClusterConfig {
         nodes,
         partitions: m.get_u32("partitions", nodes * 2)?,
+        replication: m.get_u32("replication", 1)?,
         codec: codec_of(m)?,
         compress_policy: compress_policy_of(m),
+        retry_budget: m.get_u32("retry-budget", defaults.retry_budget)?,
+        call_timeout_ms: m.get_u64("call-timeout-ms", defaults.call_timeout_ms)?,
         ..Default::default()
     };
     cfg.validate()?;
@@ -346,13 +353,17 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
     };
     let data = spec.generate_point(spec.points[0], 3);
     let (spill_dir, spill_read_mode) = spill_opts(m)?;
+    let defaults = ClusterConfig::default();
     let cfg = ClusterConfig {
         nodes,
         partitions: nodes * 2,
+        replication: m.get_u32("replication", 1)?,
         codec,
         compress_policy: compress_policy_of(m),
         spill_dir,
         spill_read_mode,
+        retry_budget: m.get_u32("retry-budget", defaults.retry_budget)?,
+        call_timeout_ms: m.get_u64("call-timeout-ms", defaults.call_timeout_ms)?,
         ..Default::default()
     };
     let mount = cfg.mount.clone();
@@ -409,6 +420,7 @@ fn cmd_train(m: &ArgMap) -> Result<()> {
     let cfg = ClusterConfig {
         nodes,
         partitions: nodes * 2,
+        replication: m.get_u32("replication", 1)?,
         codec: codec_of(m)?,
         compress_policy: compress_policy_of(m),
         replicate_dirs: vec!["test".into()],
@@ -525,6 +537,16 @@ fn cmd_experiment(m: &ArgMap) -> Result<()> {
                 )?;
                 exp::scaling::report_transport_equivalence(&runs);
             }
+            "failover" => {
+                // kill node 1 mid-sweep on both fabrics: replicas must keep
+                // the reads byte-identical while the failover counters fire
+                let runs = exp::failover::run_failover(
+                    &[TransportKind::InProc, TransportKind::TcpLoopback],
+                    128,
+                    16 << 10,
+                )?;
+                exp::failover::report_failover(&runs);
+            }
             other => {
                 return Err(fanstore::FanError::Config(format!(
                     "unknown experiment {other}"
@@ -536,7 +558,7 @@ fn cmd_experiment(m: &ArgMap) -> Result<()> {
     if which == "all" {
         for id in [
             "fig3", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11",
-            "prep-cost", "pipeline", "transport", "fig1",
+            "prep-cost", "pipeline", "transport", "failover", "fig1",
         ] {
             run_one(id)?;
         }

@@ -1,0 +1,276 @@
+//! Deterministic fault injection: a [`Transport`] wrapper that makes chaos
+//! replayable (PR 7).
+//!
+//! [`FaultInjector`] wraps any `Arc<dyn Transport>` and injects, per
+//! message, from a seeded [`Prng`]:
+//!
+//! - **drops** — the request is never forwarded; the caller gets an
+//!   immediate transport error (a lost packet / refused connect),
+//! - **delays** — the send is held for a bounded number of milliseconds
+//!   (a congested link),
+//! - **resets** — the request *is* delivered but the reply channel is
+//!   torn down (a connection reset mid-round-trip: the peer did the work,
+//!   the caller never learns), and
+//! - **whole-node kills** — [`FaultInjector::kill_node`] makes every
+//!   subsequent message to that node fail like a dead host.
+//!
+//! Same seed + same message sequence ⇒ the exact same injected schedule,
+//! recorded in an event log ([`FaultInjector::events`]) so tests can
+//! assert the replay.  With all probabilities zero the wrapper is a thin
+//! pass-through — the `failover/` bench sections measure exactly that
+//! overhead on the healthy path.
+
+use std::sync::mpsc::channel;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::error::{FanError, Result};
+use crate::net::transport::{PendingReply, Request, Transport};
+use crate::util::prng::Prng;
+
+/// Per-message fault probabilities (each rolled independently, in
+/// drop → reset → delay order).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultPlan {
+    /// P(request silently dropped before the wire).
+    pub drop_p: f64,
+    /// P(request delivered, reply lost).
+    pub reset_p: f64,
+    /// P(send delayed); delay is uniform in `1..=max_delay_ms`.
+    pub delay_p: f64,
+    pub max_delay_ms: u64,
+}
+
+impl FaultPlan {
+    /// No probabilistic faults — kills only.  The healthy-path baseline.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+}
+
+/// One injected fault, in injection order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultEvent {
+    Dropped { to: u32 },
+    Reset { to: u32 },
+    Delayed { to: u32, ms: u64 },
+    Killed { node: u32 },
+}
+
+/// The chaos wrapper.  See module docs.
+pub struct FaultInjector {
+    inner: Arc<dyn Transport>,
+    plan: FaultPlan,
+    rng: Mutex<Prng>,
+    killed: Mutex<Vec<bool>>,
+    events: Mutex<Vec<FaultEvent>>,
+}
+
+impl FaultInjector {
+    pub fn new(inner: Arc<dyn Transport>, plan: FaultPlan, seed: u64) -> FaultInjector {
+        let nodes = inner.node_count() as usize;
+        FaultInjector {
+            inner,
+            plan,
+            rng: Mutex::new(Prng::new(seed)),
+            killed: Mutex::new(vec![false; nodes]),
+            events: Mutex::new(Vec::new()),
+        }
+    }
+
+    /// Make `node` unreachable: every later message to it errors like a
+    /// dead host, and its pooled connections are evicted from the inner
+    /// transport.  (The node's worker itself is not touched — pair with
+    /// `Cluster::kill_node` to actually stop it.)
+    pub fn kill_node(&self, node: u32) {
+        if let Some(k) = self.killed.lock().unwrap().get_mut(node as usize) {
+            *k = true;
+        }
+        self.inner.evict(node);
+        self.events.lock().unwrap().push(FaultEvent::Killed { node });
+    }
+
+    /// The injected schedule so far, in order.
+    pub fn events(&self) -> Vec<FaultEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Decide this message's fate.  One lock scope so concurrent senders
+    /// serialize their draws; within a single-threaded send sequence the
+    /// draw order — and therefore the schedule — is fully deterministic.
+    fn roll(&self, to: u32) -> Option<FaultEvent> {
+        let mut rng = self.rng.lock().unwrap();
+        // fixed draw count per message keeps schedules aligned across runs
+        let drop_roll = rng.chance(self.plan.drop_p);
+        let reset_roll = rng.chance(self.plan.reset_p);
+        let delay_roll = rng.chance(self.plan.delay_p);
+        let delay_ms = 1 + rng.below(self.plan.max_delay_ms.max(1));
+        let ev = if drop_roll {
+            Some(FaultEvent::Dropped { to })
+        } else if reset_roll {
+            Some(FaultEvent::Reset { to })
+        } else if delay_roll {
+            Some(FaultEvent::Delayed { to, ms: delay_ms })
+        } else {
+            None
+        };
+        if let Some(ev) = ev {
+            self.events.lock().unwrap().push(ev);
+        }
+        ev
+    }
+
+    fn is_killed(&self, to: u32) -> bool {
+        self.killed
+            .lock()
+            .unwrap()
+            .get(to as usize)
+            .copied()
+            .unwrap_or(false)
+    }
+}
+
+impl Transport for FaultInjector {
+    fn node_count(&self) -> u32 {
+        self.inner.node_count()
+    }
+
+    fn send(&self, from: u32, to: u32, req: Request) -> Result<PendingReply> {
+        if self.is_killed(to) {
+            return Err(FanError::Transport(format!("node {to} is down (killed)")));
+        }
+        match self.roll(to) {
+            Some(FaultEvent::Dropped { .. }) => {
+                Err(FanError::Transport(format!("fault: dropped send to {to}")))
+            }
+            Some(FaultEvent::Reset { .. }) => {
+                // delivered but the reply path is torn down: forward, then
+                // hand back a reply whose sender is already gone
+                let _delivered = self.inner.send(from, to, req)?;
+                let (tx, rx) = channel();
+                drop(tx);
+                Ok(PendingReply::from_channel(to, rx))
+            }
+            Some(FaultEvent::Delayed { ms, .. }) => {
+                std::thread::sleep(Duration::from_millis(ms));
+                self.inner.send(from, to, req)
+            }
+            _ => self.inner.send(from, to, req),
+        }
+    }
+
+    fn shutdown_all(&self) {
+        self.inner.shutdown_all()
+    }
+
+    fn evict(&self, node: u32) {
+        self.inner.evict(node)
+    }
+
+    fn call_timeout(&self) -> Option<Duration> {
+        self.inner.call_timeout()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::net::transport::{InProcTransport, Response};
+    use std::thread;
+
+    fn echo_cluster(n: u32) -> (Arc<dyn Transport>, Vec<thread::JoinHandle<()>>) {
+        let (tp, eps) = InProcTransport::fully_connected(n);
+        let handles = eps
+            .into_iter()
+            .map(|ep| {
+                thread::spawn(move || {
+                    while let Ok(msg) = ep.inbox.recv() {
+                        match msg.req {
+                            Request::Shutdown => break,
+                            _ => msg.reply.send(Response::Ok),
+                        }
+                    }
+                })
+            })
+            .collect();
+        (Arc::new(tp.with_call_timeout(Duration::from_secs(5))), handles)
+    }
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let plan = FaultPlan {
+            drop_p: 0.3,
+            reset_p: 0.2,
+            delay_p: 0.3,
+            max_delay_ms: 2,
+        };
+        let mut schedules = Vec::new();
+        for _ in 0..2 {
+            let (tp, handles) = echo_cluster(2);
+            let inj = FaultInjector::new(tp.clone(), plan, 0xC4A05);
+            for i in 0..40 {
+                let _ = inj.call(0, 1, Request::ReadFile {
+                    path: format!("/f{i}").into(),
+                });
+            }
+            schedules.push(inj.events());
+            tp.shutdown_all();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+        assert!(!schedules[0].is_empty(), "0.8 fault mass must fire in 40 sends");
+        assert_eq!(schedules[0], schedules[1], "same seed ⇒ same schedule");
+        // a different seed produces a different schedule
+        let (tp, handles) = echo_cluster(2);
+        let inj = FaultInjector::new(tp.clone(), plan, 0x0DD5EED);
+        for i in 0..40 {
+            let _ = inj.call(0, 1, Request::ReadFile {
+                path: format!("/f{i}").into(),
+            });
+        }
+        assert_ne!(schedules[0], inj.events());
+        tp.shutdown_all();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn drops_and_resets_error_kills_are_sticky_and_zero_plan_is_transparent() {
+        let (tp, handles) = echo_cluster(3);
+        let inj = FaultInjector::new(tp.clone(), FaultPlan::none(), 7);
+        // zero plan: every call goes through
+        for _ in 0..20 {
+            let r = inj.call(0, 1, Request::ListOutputs { dir: "/".into() });
+            assert!(matches!(r, Ok(Response::Ok)), "{r:?}");
+        }
+        assert!(inj.events().is_empty());
+        // kill: sticky, immediate, and logged
+        inj.kill_node(2);
+        let err = inj.call(0, 2, Request::ListOutputs { dir: "/".into() });
+        assert!(matches!(err, Err(FanError::Transport(_))), "{err:?}");
+        assert_eq!(inj.events(), vec![FaultEvent::Killed { node: 2 }]);
+        // a reset delivers the request but loses the reply
+        let reset_only = FaultPlan {
+            reset_p: 1.0,
+            ..FaultPlan::none()
+        };
+        let inj = FaultInjector::new(tp.clone(), reset_only, 7);
+        let err = inj.call(0, 1, Request::ListOutputs { dir: "/".into() });
+        assert!(matches!(err, Err(FanError::Transport(_))), "{err:?}");
+        assert_eq!(inj.events(), vec![FaultEvent::Reset { to: 1 }]);
+        // a drop never reaches the peer
+        let drop_only = FaultPlan {
+            drop_p: 1.0,
+            ..FaultPlan::none()
+        };
+        let inj = FaultInjector::new(tp.clone(), drop_only, 7);
+        let err = inj.call(0, 1, Request::ListOutputs { dir: "/".into() });
+        assert!(matches!(err, Err(FanError::Transport(_))), "{err:?}");
+        tp.shutdown_all();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}

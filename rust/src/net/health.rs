@@ -1,0 +1,295 @@
+//! Per-peer failure detection: the Up → Suspect → Down state machine that
+//! drives read-path failover (PR 7).
+//!
+//! Production clusters lose nodes; the paper's static placement assumes
+//! they don't.  [`HealthMap`] closes the gap: every transport error against
+//! a peer feeds [`HealthMap::record_failure`], consecutive failures walk
+//! the peer Up → Suspect → Down, and the read path consults
+//! [`HealthMap::order_candidates`] to try live replicas first.  Successes
+//! (a served batch, a [`Response::Pong`]) reset the peer to Up.
+//!
+//! **Peer epochs** keep a restarted peer distinct from the incarnation
+//! that failed: every sealed node stamps a process-unique epoch number
+//! (see `NodeBuilder::seal`), `Ping`/`Pong` carry it, and a pong whose
+//! epoch differs from the last one seen means "same address, new node" —
+//! the health layer resets its view rather than trusting stale state.
+//!
+//! **Backoff** between retry rounds is exponential with deterministic
+//! jitter from [`crate::util::prng::Prng`], so chaos tests replay the
+//! exact same schedule from the same seed.
+//!
+//! The map is deliberately cheap: one mutex around a small `Vec` (peers
+//! number in the hundreds, touches happen only on failures and probe
+//! replies — the healthy hot path never takes this lock).
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::prng::Prng;
+
+/// Liveness verdict for one peer.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PeerState {
+    /// No reason to doubt the peer.
+    Up,
+    /// Recent failures; still tried, but deprioritized behind Up peers.
+    Suspect,
+    /// Failure budget exhausted; skipped until evidence of life (a
+    /// successful call or a pong) resurrects it.
+    Down,
+}
+
+/// Tunables for the state machine and the retry/backoff schedule.
+#[derive(Clone, Copy, Debug)]
+pub struct HealthPolicy {
+    /// Consecutive failures before Up → Suspect.
+    pub suspect_after: u32,
+    /// Consecutive failures before → Down.
+    pub down_after: u32,
+    /// How many times a single logical read may be re-routed to another
+    /// holder before degrading to an error (`--retry-budget`).
+    pub retry_budget: u32,
+    /// Base backoff before retry round `n` is `base << n`, capped.
+    pub backoff_base_ms: u64,
+    pub backoff_cap_ms: u64,
+}
+
+impl Default for HealthPolicy {
+    fn default() -> Self {
+        HealthPolicy {
+            suspect_after: 1,
+            down_after: 2,
+            retry_budget: 2,
+            backoff_base_ms: 1,
+            backoff_cap_ms: 100,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug)]
+struct PeerHealth {
+    state: PeerState,
+    /// Consecutive failures since the last success.
+    failures: u32,
+    /// Last epoch seen in a pong from this peer, if any.
+    epoch: Option<u64>,
+}
+
+impl PeerHealth {
+    fn fresh() -> PeerHealth {
+        PeerHealth {
+            state: PeerState::Up,
+            failures: 0,
+            epoch: None,
+        }
+    }
+}
+
+/// Cluster-wide peer health, shared by every reader thread of a node.
+pub struct HealthMap {
+    policy: HealthPolicy,
+    peers: Mutex<Vec<PeerHealth>>,
+    /// Jitter source for [`HealthMap::backoff`]; seeded per node so two
+    /// nodes never thundering-herd a recovering peer in lockstep, yet each
+    /// node's schedule is deterministic and replayable.
+    jitter: Mutex<Prng>,
+}
+
+impl HealthMap {
+    pub fn new(nodes: u32, policy: HealthPolicy, seed: u64) -> HealthMap {
+        HealthMap {
+            policy,
+            peers: Mutex::new(vec![PeerHealth::fresh(); nodes as usize]),
+            jitter: Mutex::new(Prng::new(seed)),
+        }
+    }
+
+    pub fn policy(&self) -> &HealthPolicy {
+        &self.policy
+    }
+
+    pub fn state(&self, peer: u32) -> PeerState {
+        let peers = self.peers.lock().unwrap();
+        peers.get(peer as usize).map_or(PeerState::Down, |p| p.state)
+    }
+
+    /// Record a transport error against `peer`.  Returns `true` exactly on
+    /// the transition *into* Down (so the caller can count
+    /// `peers_marked_down` and evict pooled sockets once, not per error).
+    pub fn record_failure(&self, peer: u32) -> bool {
+        let mut peers = self.peers.lock().unwrap();
+        let Some(p) = peers.get_mut(peer as usize) else {
+            return false;
+        };
+        p.failures = p.failures.saturating_add(1);
+        let was = p.state;
+        p.state = if p.failures >= self.policy.down_after {
+            PeerState::Down
+        } else if p.failures >= self.policy.suspect_after {
+            PeerState::Suspect
+        } else {
+            PeerState::Up
+        };
+        was != PeerState::Down && p.state == PeerState::Down
+    }
+
+    /// Record a successful round trip with `peer`; resets it to Up.  Pass
+    /// the peer's epoch when the reply carried one (a pong) — `None` for
+    /// ordinary data replies, which prove liveness but not identity.
+    pub fn record_success(&self, peer: u32, epoch: Option<u64>) {
+        let mut peers = self.peers.lock().unwrap();
+        if let Some(p) = peers.get_mut(peer as usize) {
+            p.failures = 0;
+            p.state = PeerState::Up;
+            if epoch.is_some() {
+                p.epoch = epoch;
+            }
+        }
+    }
+
+    /// Digest a [`Response::Pong`]: marks the peer Up and returns `true`
+    /// iff the epoch changed from a previously-seen one — i.e. the peer
+    /// restarted since we last identified it.
+    pub fn note_pong(&self, peer: u32, epoch: u64) -> bool {
+        let mut peers = self.peers.lock().unwrap();
+        let Some(p) = peers.get_mut(peer as usize) else {
+            return false;
+        };
+        let restarted = matches!(p.epoch, Some(prev) if prev != epoch);
+        p.failures = 0;
+        p.state = PeerState::Up;
+        p.epoch = Some(epoch);
+        restarted
+    }
+
+    /// Exponential backoff with deterministic jitter before retry round
+    /// `attempt` (0-based): `base << attempt`, capped, plus up to +50%
+    /// jitter so recovering peers aren't hammered in phase.
+    pub fn backoff(&self, attempt: u32) -> Duration {
+        let base = self
+            .policy
+            .backoff_base_ms
+            .saturating_shl(attempt.min(16))
+            .min(self.policy.backoff_cap_ms)
+            .max(1);
+        let jitter = self.jitter.lock().unwrap().below(base / 2 + 1);
+        Duration::from_millis(base + jitter)
+    }
+
+    /// Order replica holders for a read: `preferred` first if live, then
+    /// the remaining Up/Suspect holders, Down holders last (still present —
+    /// when *every* holder is down they are the only thing left to try
+    /// before degrading).
+    pub fn order_candidates(&self, holders: &[u32], preferred: u32) -> Vec<u32> {
+        let peers = self.peers.lock().unwrap();
+        let state = |n: u32| {
+            peers
+                .get(n as usize)
+                .map_or(PeerState::Down, |p| p.state)
+        };
+        let mut live: Vec<u32> = Vec::with_capacity(holders.len());
+        let mut down: Vec<u32> = Vec::new();
+        // stable preferred-first rotation keeps load spread across holders
+        let start = holders.iter().position(|&h| h == preferred).unwrap_or(0);
+        for i in 0..holders.len() {
+            let h = holders[(start + i) % holders.len()];
+            if state(h) == PeerState::Down {
+                down.push(h);
+            } else {
+                live.push(h);
+            }
+        }
+        live.extend_from_slice(&down);
+        live
+    }
+}
+
+trait SaturatingShl {
+    fn saturating_shl(self, rhs: u32) -> Self;
+}
+
+impl SaturatingShl for u64 {
+    fn saturating_shl(self, rhs: u32) -> u64 {
+        self.checked_shl(rhs).unwrap_or(u64::MAX)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map() -> HealthMap {
+        HealthMap::new(4, HealthPolicy::default(), 0xFEED)
+    }
+
+    #[test]
+    fn failures_walk_up_suspect_down_and_success_resets() {
+        let h = map();
+        assert_eq!(h.state(1), PeerState::Up);
+        assert!(!h.record_failure(1), "first failure only suspects");
+        assert_eq!(h.state(1), PeerState::Suspect);
+        assert!(h.record_failure(1), "second failure transitions into Down");
+        assert_eq!(h.state(1), PeerState::Down);
+        assert!(!h.record_failure(1), "already Down: no second transition");
+        h.record_success(1, None);
+        assert_eq!(h.state(1), PeerState::Up);
+        // out-of-range peers are reported Down, never panic
+        assert_eq!(h.state(99), PeerState::Down);
+        assert!(!h.record_failure(99));
+    }
+
+    #[test]
+    fn pong_epoch_change_detects_restart() {
+        let h = map();
+        assert!(!h.note_pong(2, 100), "first sighting is not a restart");
+        assert!(!h.note_pong(2, 100), "same epoch, same incarnation");
+        assert!(h.note_pong(2, 101), "new epoch = restarted peer");
+        assert_eq!(h.state(2), PeerState::Up);
+        // a pong resurrects a Down peer
+        h.record_failure(3);
+        h.record_failure(3);
+        assert_eq!(h.state(3), PeerState::Down);
+        h.note_pong(3, 7);
+        assert_eq!(h.state(3), PeerState::Up);
+    }
+
+    #[test]
+    fn backoff_grows_caps_and_is_deterministic_per_seed() {
+        let policy = HealthPolicy {
+            backoff_base_ms: 2,
+            backoff_cap_ms: 50,
+            ..HealthPolicy::default()
+        };
+        let a = HealthMap::new(2, policy, 42);
+        let b = HealthMap::new(2, policy, 42);
+        let sched_a: Vec<Duration> = (0..8).map(|n| a.backoff(n)).collect();
+        let sched_b: Vec<Duration> = (0..8).map(|n| b.backoff(n)).collect();
+        assert_eq!(sched_a, sched_b, "same seed, same jittered schedule");
+        // base doubles until the cap; jitter adds at most +50%
+        for (n, d) in sched_a.iter().enumerate() {
+            let base = (2u64 << n.min(16)).min(50);
+            assert!(d.as_millis() as u64 >= base, "round {n}: {d:?} < {base}");
+            assert!(d.as_millis() as u64 <= base + base / 2, "round {n}: {d:?}");
+        }
+        let c = HealthMap::new(2, policy, 43);
+        let sched_c: Vec<Duration> = (0..8).map(|n| c.backoff(n)).collect();
+        assert_ne!(sched_a, sched_c, "different seed, different jitter");
+    }
+
+    #[test]
+    fn candidate_order_prefers_live_peers_and_rotates_from_preferred() {
+        let h = map();
+        // all up: preferred-first rotation
+        assert_eq!(h.order_candidates(&[0, 1, 2], 1), vec![1, 2, 0]);
+        // unknown preferred falls back to holder order
+        assert_eq!(h.order_candidates(&[0, 1, 2], 9), vec![0, 1, 2]);
+        // a Down peer sinks to the back but is never dropped
+        h.record_failure(1);
+        h.record_failure(1);
+        assert_eq!(h.order_candidates(&[0, 1, 2], 1), vec![2, 0, 1]);
+        // Suspect peers still count as live (they may just be slow)
+        h.record_failure(2);
+        assert_eq!(h.state(2), PeerState::Suspect);
+        assert_eq!(h.order_candidates(&[0, 1, 2], 0), vec![0, 2, 1]);
+    }
+}

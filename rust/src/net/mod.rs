@@ -8,14 +8,21 @@
 //! (std::sync::mpsc standing in for MPI point-to-point); [`wire`] is the
 //! length-prefixed frame codec for the same protocol; [`tcp`] runs it over
 //! real sockets (loopback single-process or multi-host via the
-//! `fanstore cluster` CLI).
+//! `fanstore cluster` CLI); [`health`] is the per-peer failure detector
+//! (Up → Suspect → Down, peer epochs, jittered backoff) behind read-path
+//! failover; [`fault`] wraps any transport in deterministic, replayable
+//! chaos for the kill-a-node tests.
 
 pub mod fabric;
+pub mod fault;
+pub mod health;
 pub mod tcp;
 pub mod transport;
 pub mod wire;
 
 pub use fabric::Fabric;
+pub use fault::{FaultEvent, FaultInjector, FaultPlan};
+pub use health::{HealthMap, HealthPolicy, PeerState};
 pub use tcp::{TcpServer, TcpTransport};
 pub use transport::{
     InProcTransport, Message, NodeEndpoint, Request, Response, Transport,

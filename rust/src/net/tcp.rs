@@ -50,6 +50,7 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Duration;
 
 use crate::error::{FanError, Result};
 use crate::net::transport::{
@@ -273,6 +274,19 @@ impl TcpConn {
         Ok(conn)
     }
 
+    /// Tear down the demux map: every still-pending sender is dropped, so
+    /// each parked `PendingReply::wait` gets an immediate transport error
+    /// instead of hanging, and the map's `None` state rejects new requests.
+    /// Called wherever the connection dies: demux EOF, a failed write
+    /// (frames of OTHER requests may be stranded in the coalescing
+    /// buffer), and explicit close/eviction.
+    fn fail_pending(&self) {
+        self.dead.store(true, Ordering::SeqCst);
+        if let Ok(mut p) = self.pending.lock() {
+            *p = None;
+        }
+    }
+
     /// Demux loop: route each response frame to the request that owns its
     /// correlation id.  On connection teardown, fail everything pending.
     /// Batched-reply paths intern per connection, mirroring the server.
@@ -296,12 +310,9 @@ impl TcpConn {
                 let _ = tx.send(resp);
             }
         }
-        self.dead.store(true, Ordering::SeqCst);
         // dropping the map drops every pending sender: their PendingReply
         // channels error out instead of hanging forever
-        if let Ok(mut p) = self.pending.lock() {
-            *p = None;
-        }
+        self.fail_pending();
         let _ = stream.shutdown(Shutdown::Both);
     }
 
@@ -335,15 +346,12 @@ impl TcpConn {
             w.write_frame(&frame, more_queued)
         };
         if let Err(e) = write_result {
-            if let Ok(mut p) = self.pending.lock() {
-                if let Some(m) = p.as_mut() {
-                    m.remove(&corr);
-                }
-            }
-            self.dead.store(true, Ordering::SeqCst);
             // a failed coalesced write may strand OTHER requests' frames in
-            // the buffer: kill the socket so the demux reader fails every
-            // outstanding wait instead of leaving them hanging
+            // the buffer, and replies already in flight will never resolve:
+            // drain the WHOLE demux map (every parked waiter errors now, not
+            // when some far-off timeout fires) and kill the socket so the
+            // demux reader exits too
+            self.fail_pending();
             if let Ok(w) = self.writer.lock() {
                 let _ = w.get_ref().shutdown(Shutdown::Both);
             }
@@ -353,7 +361,9 @@ impl TcpConn {
     }
 
     fn close(&self) {
-        self.dead.store(true, Ordering::SeqCst);
+        // fail parked waiters synchronously — eviction of a Down peer's
+        // sockets must not wait for the demux reader to notice the EOF
+        self.fail_pending();
         if let Ok(mut w) = self.writer.lock() {
             let _ = w.flush();
             let _ = w.get_ref().shutdown(Shutdown::Both);
@@ -406,17 +416,29 @@ impl Peer {
 pub struct TcpTransport {
     peers: Vec<Peer>,
     pool_size: usize,
+    /// Per-call reply deadline (`--call-timeout-ms`); `None` waits forever.
+    call_timeout: Option<Duration>,
 }
 
 impl TcpTransport {
     /// Address the cluster: `addrs[i]` is node `i`'s listener.  No sockets
     /// are opened until the first send to each peer.
     pub fn connect(addrs: &[SocketAddr]) -> Result<TcpTransport> {
-        Self::connect_pooled(addrs, DEFAULT_POOL_SIZE)
+        Self::connect_with(addrs, DEFAULT_POOL_SIZE, None)
     }
 
     /// [`TcpTransport::connect`] with an explicit per-peer pool size.
     pub fn connect_pooled(addrs: &[SocketAddr], pool_size: usize) -> Result<TcpTransport> {
+        Self::connect_with(addrs, pool_size, None)
+    }
+
+    /// Full-knob constructor: pool size plus the bounded per-call reply
+    /// wait every `call` through this transport honors.
+    pub fn connect_with(
+        addrs: &[SocketAddr],
+        pool_size: usize,
+        call_timeout: Option<Duration>,
+    ) -> Result<TcpTransport> {
         if addrs.is_empty() {
             return Err(FanError::Transport("empty peer address list".into()));
         }
@@ -430,6 +452,7 @@ impl TcpTransport {
                 })
                 .collect(),
             pool_size: pool_size.max(1),
+            call_timeout,
         })
     }
 
@@ -469,6 +492,19 @@ impl Transport for TcpTransport {
             let _ = self.send(u32::MAX, to, Request::Shutdown);
         }
         self.disconnect();
+    }
+
+    /// Drop `node`'s pooled sockets (failing its parked waiters now).  The
+    /// health layer calls this on the transition into Down so no reader
+    /// keeps queueing onto a dead peer's demux; a later send re-dials.
+    fn evict(&self, node: u32) {
+        if let Ok(peer) = self.peer(node) {
+            peer.close_all();
+        }
+    }
+
+    fn call_timeout(&self) -> Option<Duration> {
+        self.call_timeout
     }
 }
 
@@ -680,6 +716,103 @@ mod tests {
         tp.shutdown_all();
         worker.join().unwrap();
         drop(srv);
+    }
+
+    #[test]
+    fn write_error_drains_every_parked_waiter() {
+        // a sink peer: accepts, swallows request bytes, never replies, and
+        // keeps its end open — so the client's demux reader sees no EOF and
+        // ONLY the failed-write teardown can free a parked waiter
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (done_tx, done_rx) = channel::<()>();
+        let sink = thread::spawn(move || {
+            let (mut s, _) = listener.accept().unwrap();
+            let mut buf = [0u8; 4096];
+            loop {
+                match std::io::Read::read(&mut s, &mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+            let _ = done_rx.recv();
+            drop(s);
+        });
+        let tp = TcpTransport::connect_pooled(&[addr], 1).unwrap();
+        let parked = tp
+            .send(0, 0, Request::ReadFile { path: "/a".into() })
+            .unwrap();
+        // force the NEXT write on this connection to fail: Rust ignores
+        // SIGPIPE, so writing after SHUT_WR returns BrokenPipe instead of
+        // killing the process
+        let conn = Arc::clone(&tp.peers[0].pool.lock().unwrap()[0]);
+        let _ = conn.writer.lock().unwrap().get_ref().shutdown(Shutdown::Write);
+        let b = conn.request(0, 0, &Request::ReadFile { path: "/b".into() });
+        assert!(b.is_err(), "write after SHUT_WR must error");
+        // the failed write drained the whole demux map: request A fails NOW,
+        // not when some far-off timeout fires
+        let t0 = std::time::Instant::now();
+        let err = parked.wait_timeout(Duration::from_secs(10)).unwrap_err();
+        assert!(matches!(err, FanError::Transport(_)), "{err}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(5),
+            "parked waiter must fail at teardown: {:?}",
+            t0.elapsed()
+        );
+        done_tx.send(()).unwrap();
+        sink.join().unwrap();
+    }
+
+    #[test]
+    fn call_timeout_bounds_a_silent_peer() {
+        // peer accepts but never replies: `call` must return in ~timeout
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (done_tx, done_rx) = channel::<()>();
+        let sink = thread::spawn(move || {
+            let (s, _) = listener.accept().unwrap();
+            let _ = done_rx.recv();
+            drop(s);
+        });
+        let tp =
+            TcpTransport::connect_with(&[addr], 1, Some(Duration::from_millis(100))).unwrap();
+        let t0 = std::time::Instant::now();
+        let err = tp
+            .call(0, 0, Request::ReadFile { path: "/t".into() })
+            .unwrap_err();
+        assert!(matches!(err, FanError::Transport(_)), "{err}");
+        let dt = t0.elapsed();
+        assert!(dt >= Duration::from_millis(100), "early return: {dt:?}");
+        assert!(dt < Duration::from_secs(5), "deadline not honored: {dt:?}");
+        done_tx.send(()).unwrap();
+        sink.join().unwrap();
+    }
+
+    #[test]
+    fn evict_closes_the_pool_and_a_later_send_redials() {
+        let (tp, servers, workers) = loopback(2);
+        let d = tp
+            .call(0, 1, Request::ReadFile { path: "/warm".into() })
+            .unwrap()
+            .into_file_data()
+            .unwrap();
+        assert_eq!(&d[..], b"/warm");
+        let pooled = Arc::clone(&tp.peers[1].pool.lock().unwrap()[0]);
+        tp.evict(1);
+        assert!(pooled.dead.load(Ordering::SeqCst), "evicted conn must die");
+        assert!(tp.peers[1].pool.lock().unwrap().is_empty(), "pool drained");
+        // the peer itself is alive: the next call re-dials transparently
+        let d = tp
+            .call(0, 1, Request::ReadFile { path: "/again".into() })
+            .unwrap()
+            .into_file_data()
+            .unwrap();
+        assert_eq!(&d[..], b"/again");
+        tp.shutdown_all();
+        for w in workers {
+            w.join().unwrap();
+        }
+        drop(servers);
     }
 
     #[test]

@@ -25,8 +25,9 @@
 //! collecting `ListOutputs` from every node) can issue all requests first
 //! and overlap the waits.
 
-use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::Arc;
+use std::time::Duration;
 
 use crate::error::{FanError, Result};
 use crate::metadata::record::{FileMeta, FileStat};
@@ -66,6 +67,10 @@ pub enum Request {
     /// the writer once a commit/unlink lands, so the steady-state
     /// `readdir` on every node can be a local cache lookup.
     InvalidateListings { path: Arc<str> },
+    /// Liveness probe (PR 7 health layer).  Carries the sender's node
+    /// epoch; the reply carries the receiver's, so a restarted peer (new
+    /// epoch) is distinguishable from the incarnation that was probed.
+    Ping { epoch: u64 },
     /// Orderly shutdown of the worker thread.
     Shutdown,
 }
@@ -135,6 +140,10 @@ pub enum Response {
     /// Batched stat reply: one entry per requested path, request order.
     Metas(Vec<(Arc<str>, MetaFetch)>),
     Names(Vec<String>),
+    /// Liveness probe reply: the responding node's epoch number (stamped
+    /// once per incarnation at seal time).  A changed epoch means the peer
+    /// restarted since it was last seen.
+    Pong { epoch: u64 },
     Ok,
     Err(String),
 }
@@ -208,6 +217,23 @@ impl PendingReply {
             .recv()
             .map_err(|_| FanError::Transport(format!("node {} dropped the reply", self.to)))
     }
+
+    /// Block at most `timeout` for the reply.  A timeout maps to
+    /// [`FanError::Transport`] just like a dropped reply — the caller can
+    /// not tell a slow peer from a dead one, and the health layer treats
+    /// both identically.
+    pub fn wait_timeout(self, timeout: Duration) -> Result<Response> {
+        self.rx.recv_timeout(timeout).map_err(|e| match e {
+            RecvTimeoutError::Timeout => FanError::Transport(format!(
+                "node {} reply timed out after {}ms",
+                self.to,
+                timeout.as_millis()
+            )),
+            RecvTimeoutError::Disconnected => {
+                FanError::Transport(format!("node {} dropped the reply", self.to))
+            }
+        })
+    }
 }
 
 /// The fabric abstraction every consumer programs against: synchronous
@@ -225,9 +251,28 @@ pub trait Transport: Send + Sync {
     /// Fire-and-forget shutdown to every node.
     fn shutdown_all(&self);
 
-    /// Round-trip request to `to`; blocks until the worker replies.
+    /// Drop any cached connection state to `node` (pooled sockets, ...).
+    /// Called by the health layer when a peer is marked Down so the next
+    /// contact re-dials instead of reusing a dead socket.  No-op for
+    /// transports without connection state.
+    fn evict(&self, _node: u32) {}
+
+    /// Upper bound every [`Transport::call`] waits for a reply, if the
+    /// transport was configured with one.  `None` = wait forever (the
+    /// pre-PR-7 behaviour, still the default for tests that want strict
+    /// blocking semantics).
+    fn call_timeout(&self) -> Option<Duration> {
+        None
+    }
+
+    /// Round-trip request to `to`; blocks until the worker replies or the
+    /// configured [`Transport::call_timeout`] elapses.
     fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
-        self.send(from, to, req)?.wait()
+        let pending = self.send(from, to, req)?;
+        match self.call_timeout() {
+            Some(t) => pending.wait_timeout(t),
+            None => pending.wait(),
+        }
     }
 }
 
@@ -235,6 +280,11 @@ pub trait Transport: Send + Sync {
 #[derive(Clone)]
 pub struct InProcTransport {
     peers: Vec<Sender<Message>>,
+    /// Bounded wait for `call` round trips.  A cleanly-killed in-proc node
+    /// fails fast anyway (its inbox `Receiver` drops, so `peer.send` and
+    /// parked reply waits both error), but a wedged worker that still owns
+    /// its endpoint would block forever without this bound.
+    call_timeout: Option<Duration>,
 }
 
 impl InProcTransport {
@@ -248,7 +298,19 @@ impl InProcTransport {
             peers.push(tx);
             endpoints.push(NodeEndpoint { node_id, inbox: rx });
         }
-        (InProcTransport { peers }, endpoints)
+        (
+            InProcTransport {
+                peers,
+                call_timeout: None,
+            },
+            endpoints,
+        )
+    }
+
+    /// Bound every `call` round trip to `timeout` (builder-style).
+    pub fn with_call_timeout(mut self, timeout: Duration) -> InProcTransport {
+        self.call_timeout = Some(timeout);
+        self
     }
 
     pub fn node_count(&self) -> u32 {
@@ -273,7 +335,11 @@ impl InProcTransport {
 
     /// See [`Transport::call`].
     pub fn call(&self, from: u32, to: u32, req: Request) -> Result<Response> {
-        self.send(from, to, req)?.wait()
+        let pending = self.send(from, to, req)?;
+        match self.call_timeout {
+            Some(t) => pending.wait_timeout(t),
+            None => pending.wait(),
+        }
     }
 
     /// See [`Transport::shutdown_all`].
@@ -299,6 +365,10 @@ impl Transport for InProcTransport {
 
     fn shutdown_all(&self) {
         InProcTransport::shutdown_all(self)
+    }
+
+    fn call_timeout(&self) -> Option<Duration> {
+        self.call_timeout
     }
 }
 
@@ -354,6 +424,9 @@ mod tests {
                         msg.reply.send(Response::FileData {
                             stored: path.as_bytes().to_vec().into(),
                         });
+                    }
+                    Request::Ping { epoch } => {
+                        msg.reply.send(Response::Pong { epoch: epoch + 100 });
                     }
                     Request::ReadFiles { paths } => {
                         served += 1;
@@ -437,6 +510,54 @@ mod tests {
     fn unknown_node_is_error() {
         let (tp, _eps) = InProcTransport::fully_connected(2);
         assert!(tp.call(0, 9, Request::Shutdown).is_err());
+    }
+
+    #[test]
+    fn ping_pong_roundtrip_carries_epochs() {
+        let (tp, eps) = InProcTransport::fully_connected(2);
+        let handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        match tp.call(0, 1, Request::Ping { epoch: 7 }).unwrap() {
+            Response::Pong { epoch } => assert_eq!(epoch, 107),
+            other => panic!("expected Pong, got {other:?}"),
+        }
+        tp.shutdown_all();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+
+    #[test]
+    fn killed_inproc_node_errors_instead_of_blocking() {
+        let (tp, eps) = InProcTransport::fully_connected(2);
+        let tp = tp.with_call_timeout(Duration::from_secs(5));
+        let mut handles: Vec<_> = eps.into_iter().map(spawn_echo).collect();
+        // kill node 1 only: its worker breaks, dropping the inbox Receiver
+        tp.call(0, 1, Request::Shutdown).ok();
+        handles.pop().unwrap().join().unwrap();
+        // a send to the dead node fails fast — no hang, a real error
+        let t0 = std::time::Instant::now();
+        let err = tp.call(0, 1, Request::ReadFile { path: "/x".into() });
+        assert!(matches!(err, Err(FanError::Transport(_))), "{err:?}");
+        assert!(
+            t0.elapsed() < Duration::from_secs(4),
+            "dead-node call must not block to the timeout"
+        );
+        tp.shutdown_all();
+        handles.pop().unwrap().join().unwrap();
+    }
+
+    #[test]
+    fn wedged_worker_trips_the_call_timeout() {
+        let (tp, mut eps) = InProcTransport::fully_connected(2);
+        let tp = tp.with_call_timeout(Duration::from_millis(50));
+        // node 1's endpoint stays alive but nobody drains it: the wedged-
+        // worker case the bounded wait exists for.
+        let _wedged = eps.pop().unwrap();
+        let t0 = std::time::Instant::now();
+        let err = tp.call(0, 1, Request::ReadFile { path: "/x".into() });
+        assert!(matches!(err, Err(FanError::Transport(_))), "{err:?}");
+        assert!(t0.elapsed() >= Duration::from_millis(50));
+        assert!(t0.elapsed() < Duration::from_secs(5));
     }
 
     #[test]

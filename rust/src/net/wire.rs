@@ -55,6 +55,7 @@ const REQ_UNLINK_OUTPUT: u8 = 6;
 const REQ_DROP_OUTPUT: u8 = 7;
 const REQ_SHUTDOWN: u8 = 8;
 const REQ_INVALIDATE_LISTINGS: u8 = 9;
+const REQ_PING: u8 = 10;
 
 const RESP_FILE_DATA: u8 = 0;
 const RESP_FILES_DATA: u8 = 1;
@@ -63,6 +64,7 @@ const RESP_METAS: u8 = 3;
 const RESP_NAMES: u8 = 4;
 const RESP_OK: u8 = 5;
 const RESP_ERR: u8 = 6;
+const RESP_PONG: u8 = 7;
 
 const FETCH_DATA: u8 = 0;
 const FETCH_NOT_FOUND: u8 = 1;
@@ -649,6 +651,10 @@ pub fn encode_request(corr: u64, from: u32, req: &Request) -> Frame {
             f.put_u8(REQ_INVALIDATE_LISTINGS);
             f.put_str(path);
         }
+        Request::Ping { epoch } => {
+            f.put_u8(REQ_PING);
+            f.put_u64(*epoch);
+        }
         Request::Shutdown => f.put_u8(REQ_SHUTDOWN),
     }
     f
@@ -703,6 +709,9 @@ pub fn decode_request(body: &[u8], paths: &mut PathInterner) -> Result<(u64, u32
         },
         REQ_INVALIDATE_LISTINGS => Request::InvalidateListings {
             path: r.get_path(paths)?,
+        },
+        REQ_PING => Request::Ping {
+            epoch: r.get_u64()?,
         },
         REQ_SHUTDOWN => Request::Shutdown,
         t => return Err(FanError::Format(format!("unknown request tag {t}"))),
@@ -767,6 +776,10 @@ pub fn encode_response(corr: u64, resp: &Response) -> Frame {
             for n in names {
                 f.put_str(n);
             }
+        }
+        Response::Pong { epoch } => {
+            f.put_u8(RESP_PONG);
+            f.put_u64(*epoch);
         }
         Response::Ok => f.put_u8(RESP_OK),
         Response::Err(e) => {
@@ -845,6 +858,9 @@ pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Re
             }
             Response::Names(names)
         }
+        RESP_PONG => Response::Pong {
+            epoch: r.get_u64()?,
+        },
         RESP_OK => Response::Ok,
         RESP_ERR => Response::Err(r.get_str()?),
         t => return Err(FanError::Format(format!("unknown response tag {t}"))),
@@ -933,6 +949,8 @@ mod tests {
         let (_, _, req) =
             roundtrip_request(&Request::InvalidateListings { path: "/ckpt/new.bin".into() });
         assert!(matches!(req, Request::InvalidateListings { path } if &*path == "/ckpt/new.bin"));
+        let (_, _, req) = roundtrip_request(&Request::Ping { epoch: u64::MAX - 1 });
+        assert!(matches!(req, Request::Ping { epoch } if epoch == u64::MAX - 1));
         let (_, _, req) = roundtrip_request(&Request::Shutdown);
         assert!(matches!(req, Request::Shutdown));
     }
@@ -1037,6 +1055,8 @@ mod tests {
             other => panic!("unexpected {other:?}"),
         }
 
+        let (_, resp) = roundtrip_response(&Response::Pong { epoch: 0x8000_0000_0001 });
+        assert!(matches!(resp, Response::Pong { epoch } if epoch == 0x8000_0000_0001));
         let (_, resp) = roundtrip_response(&Response::Ok);
         assert!(matches!(resp, Response::Ok));
         let (_, resp) = roundtrip_response(&Response::Err("nope".into()));
@@ -1097,6 +1117,22 @@ mod tests {
                 "cut at {cut} must fail"
             );
         }
+        // health-probe frames under the knife too: the fixed-width epoch
+        // must be rejected at every partial width
+        let body = encode_request(3, 1, &Request::Ping { epoch: 0xAB }).to_body_bytes();
+        for cut in 0..body.len() {
+            assert!(
+                decode_request(&body[..cut], &mut it).is_err(),
+                "ping cut at {cut} must fail"
+            );
+        }
+        let body = encode_response(4, &Response::Pong { epoch: 0xCD }).to_body_bytes();
+        for cut in 0..body.len() {
+            assert!(
+                decode_response(&body[..cut], &mut it).is_err(),
+                "pong cut at {cut} must fail"
+            );
+        }
     }
 
     #[test]
@@ -1114,6 +1150,13 @@ mod tests {
         // trailing garbage
         let mut body = encode_response(1, &Response::Ok).to_body_bytes();
         body.push(0);
+        assert!(decode_response(&body, &mut it).is_err());
+        // trailing garbage after a well-formed ping/pong epoch
+        let mut body = encode_request(1, 0, &Request::Ping { epoch: 9 }).to_body_bytes();
+        body.push(0xFF);
+        assert!(decode_request(&body, &mut it).is_err());
+        let mut body = encode_response(1, &Response::Pong { epoch: 9 }).to_body_bytes();
+        body.push(0xFF);
         assert!(decode_response(&body, &mut it).is_err());
         // payload length pointing past the end of the frame
         let mut f = Frame::new();

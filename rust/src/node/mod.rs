@@ -37,6 +37,7 @@ use crate::error::{FanError, Result};
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta};
 use crate::metadata::table::MetaTable;
+use crate::net::health::{HealthMap, HealthPolicy};
 use crate::net::transport::{
     FileFetch, MetaFetch, NodeEndpoint, PendingReply, Request, Response, Transport,
 };
@@ -76,6 +77,17 @@ pub struct NodeStats {
     pub decode_nanos: u64,
     pub outputs_committed: u64,
     pub output_bytes: u64,
+    /// Reads that succeeded on a *different* holder after the preferred one
+    /// failed (the PR 7 recovery path actually recovering).
+    pub failovers: u64,
+    /// Re-routed fetch attempts (one per path re-queued to another holder;
+    /// a read that fails over twice counts two retries, one failover).
+    pub retries: u64,
+    /// Up/Suspect → Down transitions observed by this node's health map.
+    pub peers_marked_down: u64,
+    /// Reads that exhausted every holder / the retry budget and degraded
+    /// to a real error (EIO to the caller — never a hang).
+    pub degraded_reads: u64,
 }
 
 /// Lock-free accounting: every counter is a relaxed `AtomicU64`, updated on
@@ -96,6 +108,10 @@ pub struct AtomicNodeStats {
     pub decode_nanos: AtomicU64,
     pub outputs_committed: AtomicU64,
     pub output_bytes: AtomicU64,
+    pub failovers: AtomicU64,
+    pub retries: AtomicU64,
+    pub peers_marked_down: AtomicU64,
+    pub degraded_reads: AtomicU64,
 }
 
 impl AtomicNodeStats {
@@ -127,6 +143,10 @@ impl AtomicNodeStats {
             decode_nanos: ld(&self.decode_nanos),
             outputs_committed: ld(&self.outputs_committed),
             output_bytes: ld(&self.output_bytes),
+            failovers: ld(&self.failovers),
+            retries: ld(&self.retries),
+            peers_marked_down: ld(&self.peers_marked_down),
+            degraded_reads: ld(&self.degraded_reads),
         }
     }
 }
@@ -147,7 +167,17 @@ pub struct NodeBuilder {
     /// Refcount-cache shard count (lock domains); tunable per cluster via
     /// [`crate::config::ClusterConfig::cache_shards`].
     pub cache_shards: usize,
+    /// Failure-detection tunables (retry budget, Suspect/Down thresholds,
+    /// backoff); see [`crate::config::ClusterConfig::retry_budget`].
+    pub health_policy: HealthPolicy,
 }
+
+/// Process-global node-epoch source: every sealed [`NodeShared`] gets a
+/// unique, monotonically increasing epoch, so a node restarted in the same
+/// process (chaos tests, future re-launch) is a *different incarnation* to
+/// the health layer — `Ping`/`Pong` carry it (ROADMAP: "peer epoch numbers
+/// so a restarted peer isn't confused with a live one").
+static NODE_EPOCH_SEQ: AtomicU64 = AtomicU64::new(1);
 
 impl NodeBuilder {
     pub fn new(id: u32, store: DiskStore, placement: Placement) -> Self {
@@ -157,16 +187,22 @@ impl NodeBuilder {
             input_meta: Arc::new(MetaTable::new()),
             placement,
             cache_shards: crate::cache::CACHE_SHARDS,
+            health_policy: HealthPolicy::default(),
         }
     }
 
     /// Freeze the launch-time state into the shared node handle.
     pub fn seal(self) -> Arc<NodeShared> {
+        let peer_count = self.placement.nodes;
+        // deterministic per-node jitter seed: replayable backoff schedules
+        let health_seed = 0x9E37_79B9_7F4A_7C15u64 ^ self.id as u64;
         Arc::new(NodeShared {
             id: self.id,
+            epoch: NODE_EPOCH_SEQ.fetch_add(1, Ordering::Relaxed),
             store: self.store,
             input_meta: self.input_meta,
             placement: self.placement,
+            health: HealthMap::new(peer_count, self.health_policy, health_seed),
             cache: ShardedCache::with_shards(self.cache_shards),
             output_meta: RwLock::new(MetaTable::new()),
             output_data: RwLock::new(HashMap::new()),
@@ -187,6 +223,12 @@ impl NodeBuilder {
 /// proceed in parallel except where they genuinely touch the same data.
 pub struct NodeShared {
     pub id: u32,
+    /// This incarnation's epoch (unique per sealed node, carried by
+    /// `Ping`/`Pong` — see [`NODE_EPOCH_SEQ`]).
+    pub epoch: u64,
+    /// Per-peer failure detector driving read-path failover (PR 7).
+    /// Internally synchronized; the healthy hot path never touches it.
+    pub health: HealthMap,
     /// Dumped input partitions + path index (paper §5.2).  Immutable after
     /// [`NodeBuilder::seal`] — reads need no lock.
     pub store: DiskStore,
@@ -424,6 +466,7 @@ impl NodeShared {
                 self.invalidate_listings_for(path);
                 Response::Ok
             }
+            Request::Ping { .. } => Response::Pong { epoch: self.epoch },
             Request::Shutdown => Response::Ok,
         }
     }
@@ -521,16 +564,32 @@ impl NodeShared {
     /// `items` must not contain duplicate paths (every caller dedups or
     /// coalesces first): a duplicated remote path would collapse in the
     /// reply map and report a spurious transport error for its second slot.
+    ///
+    /// # Failure handling (PR 7)
+    ///
+    /// A *transport-level* batch failure (send error, timed-out or dropped
+    /// reply, malformed frame) feeds the [`HealthMap`] and re-routes the
+    /// batch's paths to the next replica in their health-ordered
+    /// [`Placement::partition_holders`] list — counted per path in
+    /// `retries`, and in `failovers` when the re-route actually delivers
+    /// bytes.  A path that exhausts its holders or the retry budget
+    /// degrades to `FanError::Transport` (EIO at the VFS boundary —
+    /// a real errno, never a hang; counted in `degraded_reads`).  Per-file
+    /// `NotFound`/`Fault` outcomes inside a *delivered* reply are final:
+    /// the holder answered authoritatively, so no failover is attempted.
     pub fn fetch_inputs_batched(
         &self,
         transport: &dyn Transport,
         items: Vec<(Arc<str>, FileLocation)>,
     ) -> BatchedFetch {
         let stats = &self.stats;
+        let retry_budget = self.health.policy().retry_budget;
         let mut outcomes: Vec<(Arc<str>, Result<(Payload, FetchSource)>)> =
             Vec::with_capacity(items.len());
         let mut local: Vec<Arc<str>> = Vec::new();
-        let mut remote: HashMap<u32, Vec<Arc<str>>> = HashMap::new();
+        // each remote item carries its remaining failover candidates
+        // (health-ordered holders, preferred first) and its attempt count
+        let mut work: Vec<(Arc<str>, Vec<u32>, u32)> = Vec::new();
         for (path, loc) in items {
             if let Some(pin) = self.cache.acquire(&path) {
                 outcomes.push((path, Ok((pin, FetchSource::Cache))));
@@ -540,86 +599,155 @@ impl NodeShared {
             if holder == self.id {
                 local.push(path);
             } else {
-                remote.entry(holder).or_default().push(path);
+                let holders = self.placement.partition_holders(loc.partition);
+                let candidates = self.health.order_candidates(&holders, holder);
+                work.push((path, candidates, 0));
             }
         }
 
-        // every remote batch in flight before any local work or wait: the
-        // per-peer round trips overlap with each other AND the local reads
-        // (the request clones Arc handles, not strings)
-        let pending: Vec<(Vec<Arc<str>>, Result<PendingReply>)> = remote
-            .into_iter()
-            .map(|(holder, paths)| {
-                let reply = transport.send(
-                    self.id,
-                    holder,
-                    Request::ReadFiles {
-                        paths: paths.clone(),
-                    },
-                );
-                (paths, reply)
-            })
-            .collect();
-        let remote_batches = pending.iter().filter(|(_, r)| r.is_ok()).count() as u64;
+        let mut remote_batches = 0u64;
+        let mut round = 0u32;
+        while !work.is_empty() || round == 0 {
+            if round > 0 {
+                // jittered exponential backoff before each retry round
+                std::thread::sleep(self.health.backoff(round - 1));
+            }
+            // group this round's items by their next candidate holder
+            let mut groups: HashMap<u32, Vec<(Arc<str>, Vec<u32>, u32)>> = HashMap::new();
+            for (path, mut candidates, attempts) in work.drain(..) {
+                // non-empty by construction: items out of candidates
+                // degraded instead of being re-queued
+                let holder = candidates.remove(0);
+                groups.entry(holder).or_default().push((path, candidates, attempts));
+            }
 
-        // serve the local share while the peers work
-        for path in local {
-            let outcome = match self.store.read_stored(&path) {
-                Ok((stored, _)) => {
-                    stats.local_reads.fetch_add(1, Ordering::Relaxed);
-                    stats
-                        .bytes_read_local
-                        .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                    Ok((self.cache.insert(Arc::clone(&path), stored), FetchSource::Local))
+            // every batch in flight before any local work or wait: the
+            // per-peer round trips overlap with each other AND the local
+            // reads (the request clones Arc handles, not strings)
+            let pending: Vec<(u32, Vec<(Arc<str>, Vec<u32>, u32)>, Result<PendingReply>)> = groups
+                .into_iter()
+                .map(|(holder, batch)| {
+                    let reply = transport.send(
+                        self.id,
+                        holder,
+                        Request::ReadFiles {
+                            paths: batch.iter().map(|(p, _, _)| Arc::clone(p)).collect(),
+                        },
+                    );
+                    (holder, batch, reply)
+                })
+                .collect();
+            remote_batches += pending.iter().filter(|(_, _, r)| r.is_ok()).count() as u64;
+
+            // serve the local share while the peers work (first round only)
+            if round == 0 {
+                for path in std::mem::take(&mut local) {
+                    let outcome = match self.store.read_stored(&path) {
+                        Ok((stored, _)) => {
+                            stats.local_reads.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .bytes_read_local
+                                .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                            Ok((self.cache.insert(Arc::clone(&path), stored), FetchSource::Local))
+                        }
+                        Err(e) => Err(e),
+                    };
+                    outcomes.push((path, outcome));
                 }
-                Err(e) => Err(e),
-            };
-            outcomes.push((path, outcome));
-        }
+            }
 
-        // collect the batched replies
-        for (paths, reply) in pending {
-            let files = reply
-                .and_then(|r| r.wait())
-                .and_then(|resp| resp.into_files_data());
-            match files {
-                Ok(files) => {
-                    let mut by_path: HashMap<Arc<str>, FileFetch> = files.into_iter().collect();
-                    for path in paths {
-                        let outcome = match by_path.remove(&*path) {
-                            Some(FileFetch::Data { stored }) => {
-                                stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
-                                stats
-                                    .bytes_fetched_remote
-                                    .fetch_add(stored.len() as u64, Ordering::Relaxed);
-                                Ok((
-                                    self.cache.insert(Arc::clone(&path), stored),
-                                    FetchSource::Remote,
-                                ))
-                            }
-                            Some(FileFetch::NotFound) => Err(FanError::NotFound(path.to_string())),
-                            Some(FileFetch::Fault(e)) => {
-                                Err(FanError::Transport(format!("EIO {path}: {e}")))
-                            }
-                            None => Err(FanError::Transport(format!(
-                                "peer reply missing entry for {path}"
-                            ))),
-                        };
-                        outcomes.push((path, outcome));
+            // collect the batched replies, bounded by the call timeout
+            for (holder, batch, reply) in pending {
+                let files = reply
+                    .and_then(|r| match transport.call_timeout() {
+                        Some(t) => r.wait_timeout(t),
+                        None => r.wait(),
+                    })
+                    .and_then(|resp| resp.into_files_data());
+                match files {
+                    Ok(files) => {
+                        self.health.record_success(holder, None);
+                        let mut by_path: HashMap<Arc<str>, FileFetch> = files.into_iter().collect();
+                        for (path, _, attempts) in batch {
+                            let outcome = match by_path.remove(&*path) {
+                                Some(FileFetch::Data { stored }) => {
+                                    stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+                                    stats
+                                        .bytes_fetched_remote
+                                        .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                                    if attempts > 0 {
+                                        stats.failovers.fetch_add(1, Ordering::Relaxed);
+                                    }
+                                    Ok((
+                                        self.cache.insert(Arc::clone(&path), stored),
+                                        FetchSource::Remote,
+                                    ))
+                                }
+                                Some(FileFetch::NotFound) => {
+                                    Err(FanError::NotFound(path.to_string()))
+                                }
+                                Some(FileFetch::Fault(e)) => {
+                                    Err(FanError::Transport(format!("EIO {path}: {e}")))
+                                }
+                                None => Err(FanError::Transport(format!(
+                                    "peer reply missing entry for {path}"
+                                ))),
+                            };
+                            outcomes.push((path, outcome));
+                        }
                     }
-                }
-                // peer down / malformed reply: fail the whole batch for
-                // this holder; callers fall back or surface the error
-                Err(e) => {
-                    for path in paths {
-                        outcomes.push((path, Err(FanError::Transport(e.to_string()))));
+                    // peer down / timed out / malformed reply: feed the
+                    // health map, then re-route each path to its next
+                    // holder — or degrade with a real error if none remain
+                    Err(e) => {
+                        if self.health.record_failure(holder) {
+                            stats.peers_marked_down.fetch_add(1, Ordering::Relaxed);
+                            transport.evict(holder);
+                        }
+                        for (path, candidates, attempts) in batch {
+                            if !candidates.is_empty() && attempts < retry_budget {
+                                stats.retries.fetch_add(1, Ordering::Relaxed);
+                                work.push((path, candidates, attempts + 1));
+                            } else {
+                                stats.degraded_reads.fetch_add(1, Ordering::Relaxed);
+                                outcomes.push((
+                                    path.clone(),
+                                    Err(FanError::Transport(format!(
+                                        "no live holder for {path} (node {holder} last: {e})"
+                                    ))),
+                                ));
+                            }
+                        }
                     }
                 }
             }
+            round += 1;
         }
         BatchedFetch {
             outcomes,
             remote_batches,
+        }
+    }
+
+    /// Health probe: one `Ping`/`Pong` round trip to `peer`, feeding the
+    /// outcome into the health map.  Returns `Ok(true)` iff the pong's
+    /// epoch reveals the peer restarted since it was last identified.
+    pub fn probe_peer(&self, transport: &dyn Transport, peer: u32) -> Result<bool> {
+        match transport.call(self.id, peer, Request::Ping { epoch: self.epoch }) {
+            Ok(Response::Pong { epoch }) => Ok(self.health.note_pong(peer, epoch)),
+            Ok(other) => {
+                self.health.record_failure(peer);
+                Err(FanError::Transport(format!(
+                    "peer {peer} answered ping with {other:?}"
+                )))
+            }
+            Err(e) => {
+                if self.health.record_failure(peer) {
+                    self.stats.peers_marked_down.fetch_add(1, Ordering::Relaxed);
+                    transport.evict(peer);
+                }
+                Err(e)
+            }
         }
     }
 }
@@ -662,6 +790,13 @@ impl FanStoreNode {
     /// Join the worker (after `Transport::shutdown_all`); returns requests
     /// served.
     pub fn join(mut self) -> u64 {
+        self.join_worker()
+    }
+
+    /// Join the worker thread in place (after this node alone was sent
+    /// `Shutdown` — `Cluster::kill_node`).  Idempotent: a later `join` /
+    /// cluster-wide shutdown sees no handle and returns 0.
+    pub fn join_worker(&mut self) -> u64 {
         self.worker
             .take()
             .map(|h| h.join().unwrap_or(0))
@@ -1191,6 +1326,140 @@ mod tests {
         // stale fills are still rejected by the advanced generation
         node.install_listing("/zzz", g, &hot);
         assert!(node.cached_listing("/zzz").is_none(), "pre-bump stamp rejected");
+    }
+
+    #[test]
+    fn batched_fetch_fails_over_to_replica_and_tracks_health() {
+        // 3 nodes, 3 partitions, replication 2: holders(p) = {p, p+1 mod 3}.
+        // Node 1 is dead before the epoch starts; reader node 0's fetches of
+        // partition-1 files (preferred holder 1) must fail over to node 2
+        // and walk node 1 Up → Suspect → Down in the health map.
+        let fs = files(9);
+        let (blobs, _) = build_partitions(&fs, 3, Codec::None).unwrap();
+        let placement = Placement::new(3, 3, 2);
+        let blobs: Vec<(u32, Vec<u8>)> =
+            blobs.into_iter().enumerate().map(|(i, b)| (i as u32, b)).collect();
+        let mut table = MetaTable::new();
+        index_input_metadata(&mut table, &blobs, "/m", &placement).unwrap();
+        let table = Arc::new(table);
+
+        let (tp, mut eps) = InProcTransport::fully_connected(3);
+        let ep2 = eps.pop().unwrap();
+        drop(eps.pop()); // node 1: endpoint dropped = dead host
+        let _ep0 = eps.pop().unwrap();
+
+        let mut b2 = NodeBuilder::new(2, DiskStore::in_memory(), placement.clone());
+        b2.store.load_partition(1, blobs[1].1.clone(), "/m").unwrap();
+        b2.input_meta = Arc::clone(&table);
+        let mut node2 = FanStoreNode::spawn(b2.seal(), ep2);
+
+        let mut b0 = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b0.input_meta = Arc::clone(&table);
+        let node0 = b0.seal();
+
+        let fetch_one = |name: &str, want: Vec<u8>| {
+            let path: Arc<str> = format!("/m/train/{name}").into();
+            let loc = table.get(&path).unwrap().location;
+            let batch = node0.fetch_inputs_batched(&tp, vec![(Arc::clone(&path), loc)]);
+            let (p, outcome) = batch.outcomes.into_iter().next().unwrap();
+            let (pin, src) = outcome.unwrap();
+            assert_eq!(src, FetchSource::Remote);
+            assert_eq!(&pin[..], &want[..]);
+            node0.cache.release(&p, &pin);
+        };
+        // first partition-1 read: send to 1 fails, re-routed to 2
+        fetch_one("f1", vec![1u8; 101]);
+        let st = node0.stats.snapshot();
+        assert_eq!((st.retries, st.failovers), (1, 1));
+        assert_eq!(st.peers_marked_down, 0, "one failure only suspects");
+        assert_eq!(node0.health.state(1), crate::net::health::PeerState::Suspect);
+        // second read: node 1 tried once more (Suspect is still live),
+        // second consecutive failure marks it Down
+        fetch_one("f4", vec![4u8; 104]);
+        let st = node0.stats.snapshot();
+        assert_eq!((st.retries, st.failovers), (2, 2));
+        assert_eq!(st.peers_marked_down, 1);
+        assert_eq!(node0.health.state(1), crate::net::health::PeerState::Down);
+        // third read: Down holder sinks to the back — node 2 is tried
+        // first, no retry, no failover
+        fetch_one("f7", vec![7u8; 107]);
+        let st = node0.stats.snapshot();
+        assert_eq!((st.retries, st.failovers), (2, 2));
+        assert_eq!(st.remote_reads_issued, 3);
+        assert_eq!(st.degraded_reads, 0);
+
+        tp.shutdown_all();
+        node2.join_worker();
+    }
+
+    #[test]
+    fn all_holders_down_degrades_with_an_error_not_a_hang() {
+        // 2 nodes, replication 1: partition 1's only holder is node 1,
+        // which is dead.  The read must come back as a transport error
+        // (EIO at the VFS boundary) promptly — never block.
+        let fs = files(4);
+        let (blobs, _) = build_partitions(&fs, 2, Codec::None).unwrap();
+        let placement = Placement::new(2, 2, 1);
+        let blobs: Vec<(u32, Vec<u8>)> =
+            blobs.into_iter().enumerate().map(|(i, b)| (i as u32, b)).collect();
+        let mut table = MetaTable::new();
+        index_input_metadata(&mut table, &blobs, "/m", &placement).unwrap();
+
+        let (tp, eps) = InProcTransport::fully_connected(2);
+        drop(eps); // everyone dead; reader uses only its sealed state
+        let mut b0 = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b0.input_meta = Arc::new(table);
+        let node0 = b0.seal();
+
+        let path: Arc<str> = "/m/train/f1".into();
+        let loc = node0.input_meta.get(&path).unwrap().location;
+        let t0 = std::time::Instant::now();
+        let batch = node0.fetch_inputs_batched(&tp, vec![(Arc::clone(&path), loc)]);
+        let (_, outcome) = batch.outcomes.into_iter().next().unwrap();
+        assert!(matches!(outcome, Err(FanError::Transport(_))), "real errno");
+        assert!(
+            t0.elapsed() < std::time::Duration::from_secs(5),
+            "degraded read must be prompt"
+        );
+        let st = node0.stats.snapshot();
+        assert_eq!(st.degraded_reads, 1);
+        assert_eq!(st.retries, 0, "no other holder to retry");
+        assert_eq!(batch.remote_batches, 0, "nothing was ever in flight");
+    }
+
+    #[test]
+    fn ping_pong_probe_feeds_health_and_detects_restart() {
+        let placement = Placement::new(2, 2, 1);
+        let (tp, mut eps) = InProcTransport::fully_connected(2);
+        let ep1 = eps.pop().unwrap();
+        let _ep0 = eps.pop().unwrap();
+        let b1 = NodeBuilder::new(1, DiskStore::in_memory(), placement.clone());
+        let shared1 = b1.seal();
+        let epoch1 = shared1.epoch;
+        let mut node1 = FanStoreNode::spawn(shared1, ep1);
+
+        let node0 = NodeBuilder::new(0, DiskStore::in_memory(), placement.clone()).seal();
+        assert!(node0.epoch != epoch1, "every sealed node gets its own epoch");
+        // first probe identifies the peer; a repeat is not a restart
+        assert!(!node0.probe_peer(&tp, 1).unwrap());
+        assert!(!node0.probe_peer(&tp, 1).unwrap());
+        // a re-sealed node 1 (same id, new incarnation) answers with a new
+        // epoch: the probe reports a restart
+        tp.shutdown_all();
+        node1.join_worker();
+        let (tp2, mut eps2) = InProcTransport::fully_connected(2);
+        let ep1b = eps2.pop().unwrap();
+        let _ep0b = eps2.pop().unwrap();
+        let mut node1b =
+            FanStoreNode::spawn(NodeBuilder::new(1, DiskStore::in_memory(), placement).seal(), ep1b);
+        assert!(node0.probe_peer(&tp2, 1).unwrap(), "new epoch = restart");
+        // probing a dead peer is an error and feeds the failure counter
+        tp2.shutdown_all();
+        node1b.join_worker();
+        assert!(node0.probe_peer(&tp2, 1).is_err());
+        assert!(node0.probe_peer(&tp2, 1).is_err());
+        assert_eq!(node0.health.state(1), crate::net::health::PeerState::Down);
+        assert_eq!(node0.stats.snapshot().peers_marked_down, 1);
     }
 
     #[test]

@@ -48,6 +48,17 @@
 //! * **Unknown / Failed** — return `None`; the caller falls back to the
 //!   ordinary synchronous read path, which surfaces the real error.
 //!
+//! # Failure semantics (PR 7)
+//!
+//! Fetchers inherit node-failure handling from the shared batched-fetch
+//! body: a peer that errors is recorded in the node's
+//! [`crate::net::health::HealthMap`] and the affected paths are re-queued
+//! to the next live holder (bounded by the retry budget).  A path whose
+//! holders are all down resolves to **Failed**, the reader's claim returns
+//! `None`, and the synchronous fallback surfaces the degraded-read error
+//! (`EIO`) — a dead peer never parks a fetcher thread or wedges the
+//! claim protocol.
+//!
 //! # Counter algebra
 //!
 //! Each picked path performs exactly one cache `acquire` (hit → Ready

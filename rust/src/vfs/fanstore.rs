@@ -12,6 +12,17 @@
 //! partitions a zero-copy view of the region itself); `read()` copies into
 //! the caller's buffer (the POSIX contract) but nothing else copies
 //! payloads.  Wire paths are `Arc<str>` handles, cloned per request.
+//!
+//! # Failure semantics (PR 7)
+//!
+//! Every input read funnels through
+//! [`NodeShared::fetch_inputs_batched`], which owns failover: on a
+//! transport error the fetch retries the next live holder from the node's
+//! health map, so `open()`/`read_all()` survive a dead peer transparently
+//! whenever a replica exists.  When *every* holder of a file is down, the
+//! call returns `FanError::Transport` (mapping to `EIO` at the syscall
+//! boundary) within the configured call timeout — a degraded read is a
+//! real errno, never a hang.
 
 use std::collections::HashMap;
 use std::sync::atomic::Ordering;

@@ -1,0 +1,186 @@
+//! Chaos integration (PR 7): node failure mid-epoch on both fabrics.
+//!
+//! The acceptance contract: with a surviving replica, reads stay
+//! byte-identical to a healthy run while `failovers` fires; with every
+//! holder dead, reads degrade to a real errno in bounded time; and the
+//! fault injector replays the exact same schedule from the same seed over
+//! real sockets.  Every test doubles as a no-hung-threads check — a
+//! parked waiter or an unbounded wait deadlocks the cluster join and the
+//! test itself.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fanstore::config::{ClusterConfig, TransportKind};
+use fanstore::coordinator::Cluster;
+use fanstore::error::{errno, FanError};
+use fanstore::experiments::failover::run_failover;
+use fanstore::net::fault::{FaultInjector, FaultPlan};
+use fanstore::net::transport::{Request, Transport};
+use fanstore::partition::builder::InputFile;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+
+fn inputs(n: usize, seed: u64) -> Vec<InputFile> {
+    let mut rng = Prng::new(seed);
+    (0..n)
+        .map(|i| {
+            let mut data = vec![0u8; 300 + 17 * i];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/class{}/img{i:03}.raw", i % 4),
+                data,
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn kill_a_node_mid_epoch_reads_stay_byte_identical_on_both_fabrics() {
+    // 3 nodes, replication 2: node 1 is the preferred holder of the one
+    // partition node 0 must fetch remotely — the kill lands on the hot
+    // remote path, and the surviving replica (node 2) must cover it
+    let runs = run_failover(
+        &[TransportKind::InProc, TransportKind::TcpLoopback],
+        48,
+        2048,
+    )
+    .unwrap();
+    assert_eq!(runs.len(), 2);
+    for r in &runs {
+        assert_eq!(
+            r.chaos_digest,
+            r.healthy_digest,
+            "{}: chaos sweep must read the exact same bytes",
+            r.kind.name()
+        );
+        assert!(
+            r.chaos_stats.failovers > 0,
+            "{}: the kill must force at least one re-routed read: {:?}",
+            r.kind.name(),
+            r.chaos_stats
+        );
+        assert!(
+            r.chaos_stats.peers_marked_down >= 1,
+            "{}: the dead holder must be marked Down: {:?}",
+            r.kind.name(),
+            r.chaos_stats
+        );
+        assert_eq!(
+            r.chaos_stats.degraded_reads, 0,
+            "{}: a surviving replica means nothing degrades: {:?}",
+            r.kind.name(),
+            r.chaos_stats
+        );
+    }
+    // identical dataset + identical sweep order on both fabrics: the
+    // fabric must not change a single byte
+    assert_eq!(
+        runs[0].healthy_digest, runs[1].healthy_digest,
+        "fabrics must agree on the healthy bytes"
+    );
+}
+
+#[test]
+fn all_holders_down_reads_degrade_with_an_errno_not_a_hang() {
+    // 2 nodes, replication 1: partition 1 lives only on node 1.  Killing
+    // it leaves its files with zero live holders — those reads must fail
+    // fast with EIO while node 0's local files keep serving.
+    let files = inputs(16, 42);
+    let mut cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 2,
+            partitions: 2,
+            replication: 1,
+            transport: TransportKind::TcpLoopback,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut vfs = cluster.client(0);
+    cluster.kill_node(1);
+
+    let t0 = Instant::now();
+    let mut ok = 0u32;
+    let mut degraded = 0u32;
+    for f in &files {
+        match vfs.read_all(&format!("/fanstore/user/{}", f.path)) {
+            Ok(data) => {
+                assert_eq!(data, f.data);
+                ok += 1;
+            }
+            Err(e) => {
+                assert!(
+                    matches!(e, FanError::Transport(_)),
+                    "dead-holder read must be a transport error, got {e}"
+                );
+                assert_eq!(e.errno(), errno::EIO, "degraded read must map to EIO");
+                degraded += 1;
+            }
+        }
+    }
+    let elapsed = t0.elapsed();
+    assert!(ok > 0, "local partition must keep serving");
+    assert!(degraded > 0, "dead partition must surface errors");
+    assert!(
+        elapsed < Duration::from_secs(30),
+        "degraded reads must be bounded, took {elapsed:?} for {} reads",
+        files.len()
+    );
+    let stats = cluster.node_state(0).stats.snapshot();
+    assert_eq!(
+        stats.degraded_reads, degraded as u64,
+        "every failed read is accounted: {stats:?}"
+    );
+    assert!(
+        stats.peers_marked_down >= 1,
+        "node 1 must have been marked Down: {stats:?}"
+    );
+    drop(vfs);
+    cluster.shutdown();
+}
+
+#[test]
+fn fault_injector_replays_the_same_schedule_over_real_sockets() {
+    let plan = FaultPlan {
+        drop_p: 0.25,
+        reset_p: 0.15,
+        delay_p: 0.25,
+        max_delay_ms: 2,
+    };
+    let mut schedules = Vec::new();
+    for _ in 0..2 {
+        let files = inputs(12, 77);
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 2,
+                partitions: 2,
+                transport: TransportKind::TcpLoopback,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let inj = FaultInjector::new(Arc::clone(&cluster.transport), plan, 0xD57);
+        for i in 0..30 {
+            let _ = inj.call(
+                0,
+                1,
+                Request::ListOutputs {
+                    dir: format!("/d{i}").into(),
+                },
+            );
+        }
+        schedules.push(inj.events());
+        cluster.shutdown();
+    }
+    assert!(
+        !schedules[0].is_empty(),
+        "0.65 fault mass must fire within 30 sends"
+    );
+    assert_eq!(
+        schedules[0], schedules[1],
+        "same seed, same message sequence => same injected schedule"
+    );
+}

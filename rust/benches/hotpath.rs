@@ -574,6 +574,140 @@ fn bench_spill_read(out: &mut Entries, smoke: bool) {
     std::fs::remove_dir_all(&base).ok();
 }
 
+/// Tiered reads under a zipfian access skew: the same spilled store read
+/// with a static placement (everything stays on disk — the pre-PR 8
+/// behavior) vs after the heat-based migrator promotes the hot partitions
+/// into RAM under a byte budget.  85% of reads land on the files of two
+/// hot partitions; the budget admits exactly those two, so the promoted
+/// leg serves the skewed majority as zero-copy RAM views while the cold
+/// tail still pays the positioned read.  CI asserts
+/// `tiered_read/heat_promoted` beats `tiered_read/static_spill` by a
+/// margin — the acceptance gauge for dynamic placement actually paying
+/// off on the access pattern it targets.
+fn bench_tiered_read(out: &mut Entries, smoke: bool) {
+    use fanstore::storage::{FreqPlacement, PlacementPolicy};
+    println!("== tiered reads: static spill vs heat-promoted RAM (zipfian skew) ==");
+    let (n_files, size, seq_len, rounds) = if smoke {
+        (256usize, 4 << 10, 1024usize, 4u32)
+    } else {
+        (1024usize, 8 << 10, 4096usize, 16u32)
+    };
+    let mut rng = Prng::new(61);
+    let files: Vec<InputFile> = (0..n_files)
+        .map(|i| {
+            let mut data = vec![0u8; size];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("z/f{i:05}"),
+                data,
+            }
+        })
+        .collect();
+    let (blobs, _) = build_partitions(&files, 4, fanstore::compress::Codec::None).unwrap();
+    let base = std::env::temp_dir().join(format!("fanstore_bench_tier_{}", std::process::id()));
+    std::fs::remove_dir_all(&base).ok();
+
+    let load = |dir: &std::path::Path| {
+        let mut store = DiskStore::on_disk_with_mode(dir, SpillReadMode::Pread).unwrap();
+        for (pid, blob) in blobs.iter().enumerate() {
+            store.load_partition(pid as u32, blob.clone(), "/z").unwrap();
+        }
+        store
+    };
+
+    // hot set = the files of partitions 0 and 1; the budget admits exactly
+    // those two partitions, so the policy can promote the skew target and
+    // nothing else
+    let probe = load(&base.join("probe"));
+    let budget: u64 = probe
+        .take_heat()
+        .iter()
+        .filter(|h| h.pid < 2)
+        .map(|h| h.bytes)
+        .sum();
+    let all: Vec<String> = files.iter().map(|f| format!("/z/{}", f.path)).collect();
+    let hot: Vec<String> = all
+        .iter()
+        .filter(|p| probe.locate(p).unwrap().partition < 2)
+        .cloned()
+        .collect();
+    drop(probe);
+
+    // one fixed zipfian-ish sequence, shared by both legs: 85% hot
+    let mut rng = Prng::new(67);
+    let seq: Vec<&String> = (0..seq_len)
+        .map(|_| {
+            if rng.index(100) < 85 {
+                &hot[rng.index(hot.len())]
+            } else {
+                &all[rng.index(all.len())]
+            }
+        })
+        .collect();
+
+    let sweep = |store: &DiskStore| -> (f64, f64) {
+        let t0 = Instant::now();
+        let mut bytes = 0u64;
+        for _ in 0..rounds {
+            for p in &seq {
+                let (data, _) = store.read_stored(p).unwrap();
+                bytes += data.len() as u64;
+                std::hint::black_box(&data);
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        (
+            (rounds as usize * seq.len()) as f64 / secs,
+            bytes as f64 / secs,
+        )
+    };
+
+    // leg 1: static placement — every read is a positioned disk read
+    let store = load(&base.join("static"));
+    let (static_ops, static_rate) = sweep(&store);
+    println!(
+        "  static_spill : {:>12}, {static_ops:.0} reads/s",
+        human_rate(static_rate)
+    );
+    out.push(("tiered_read/static_spill".into(), static_ops, static_rate));
+    drop(store);
+
+    // leg 2: heat-based placement — warm the heat with one skewed pass,
+    // let the frequency policy converge under the budget, then measure
+    let store = load(&base.join("tiered"));
+    let mut policy = FreqPlacement::new();
+    for p in &seq {
+        store.read_stored(p).unwrap();
+    }
+    let plan = policy.plan(&store.take_heat(), budget);
+    for pid in plan.demote {
+        store.demote_partition(pid).unwrap();
+    }
+    for pid in plan.promote {
+        store.promote_partition(pid).unwrap();
+    }
+    assert_eq!(
+        (store.partition_resident(0), store.partition_resident(1)),
+        (Some(true), Some(true)),
+        "the skew target must be RAM-resident before the measured sweep"
+    );
+    let hot_before = store.tier_counts().3;
+    let (tiered_ops, tiered_rate) = sweep(&store);
+    let hot_frac =
+        (store.tier_counts().3 - hot_before) as f64 / (rounds as usize * seq.len()) as f64;
+    println!(
+        "  heat_promoted: {:>12}, {tiered_ops:.0} reads/s ({:.2}x vs static, {:.0}% RAM-tier hits)",
+        human_rate(tiered_rate),
+        tiered_ops / static_ops.max(1e-9),
+        hot_frac * 100.0
+    );
+    out.push(("tiered_read/heat_promoted".into(), tiered_ops, tiered_rate));
+    // emitted for CI: the measured sweep really was skew-majority-hot
+    out.push(("tiered_read/hot_hit_fraction".into(), hot_frac, 0.0));
+    drop(store);
+    std::fs::remove_dir_all(&base).ok();
+}
+
 /// Wire small-request streams over a real loopback socket: one vectored
 /// write per frame vs the coalescing writer (flush-on-full / queue-drain
 /// rules, as `TcpTransport` uses per pooled connection).
@@ -1001,6 +1135,7 @@ fn main() {
     bench_cache(&mut entries, smoke);
     bench_partition(&mut entries, smoke);
     bench_spill_read(&mut entries, smoke);
+    bench_tiered_read(&mut entries, smoke);
     bench_serve_path(&mut entries, smoke);
     bench_compress_serve(&mut entries, smoke);
     bench_wire_send(&mut entries, smoke);

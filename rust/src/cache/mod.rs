@@ -23,8 +23,9 @@
 //!   same-file accesses only contend with each other.
 
 use std::collections::HashMap;
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, OnceLock, RwLock};
 
+use crate::error::{FanError, Result};
 use crate::storage::payload::Payload;
 
 /// Cache statistics for the experiment reports.
@@ -275,6 +276,132 @@ impl ShardedCache {
     }
 }
 
+/// Default entry cap for [`DecodedCache`].  Decoded payloads are raw
+/// (expanded) bytes, so the cap bounds worst-case RAM at roughly
+/// `cap × max_file_size` — small on purpose: the cache only needs to
+/// cover the *concurrently hot* files, not the dataset.
+pub const DECODED_CACHE_CAP: usize = 32;
+
+/// One decoded file: the stored-form pin it was decoded from (the
+/// generation key) and the once-cell the decode lands in.
+struct DecodedEntry {
+    stored: Payload,
+    cell: Arc<OnceLock<std::result::Result<Payload, String>>>,
+}
+
+/// Decoded-payload side cache (PR 8 satellite): pin-identity-keyed, so N
+/// concurrent `open()`s of one hot compressed file cost **one**
+/// decompression instead of N.
+///
+/// The key insight is that the refcount cache already gives every reader
+/// of a resident file the *same* stored-form pin ([`Payload::same`]
+/// identity).  This cache maps `path → (that pin, decoded bytes)`: the
+/// first pickup decodes into the entry's once-cell while concurrent
+/// pickups of the same pin block on [`OnceLock::get_or_init`] and then
+/// clone the decoded handle (an `Arc` clone, no copy).  A *different* pin
+/// for the same path means the refcount-cache generation turned over
+/// (invalidate/retire + refetch) — the stale entry is replaced, so the
+/// cache can never serve bytes from a retired generation.
+///
+/// Failed decodes are not cached: the entry is removed so a later pickup
+/// retries (corruption is generally transient here — a torn spill read).
+/// At [`DecodedCache::cap`] entries the map is cleared wholesale; the
+/// next pickups simply re-decode, trading a rare burst of repeat work for
+/// zero bookkeeping on the hot path.
+pub struct DecodedCache {
+    cap: usize,
+    map: RwLock<HashMap<Arc<str>, DecodedEntry>>,
+}
+
+impl Default for DecodedCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl DecodedCache {
+    pub fn new() -> Self {
+        Self::with_capacity(DECODED_CACHE_CAP)
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        assert!(cap > 0, "decoded cache needs at least one slot");
+        DecodedCache {
+            cap,
+            map: RwLock::new(HashMap::new()),
+        }
+    }
+
+    pub fn resident_files(&self) -> usize {
+        self.map.read().unwrap().len()
+    }
+
+    /// Decoded bytes for `pin` (the stored-form handle of `path`), running
+    /// `decode` at most once per (path, pin generation) across any number
+    /// of concurrent callers.  Returns the decoded payload and whether it
+    /// was a cache hit (`decode` did not run in this call).
+    pub fn get_or_decode(
+        &self,
+        path: &str,
+        pin: &Payload,
+        decode: impl FnOnce() -> Result<Payload>,
+    ) -> Result<(Payload, bool)> {
+        // fast path: current-generation entry already present
+        let cell = {
+            let map = self.map.read().unwrap();
+            map.get(path)
+                .filter(|e| e.stored.same(pin))
+                .map(|e| Arc::clone(&e.cell))
+        };
+        let cell = match cell {
+            Some(cell) => cell,
+            None => {
+                let mut map = self.map.write().unwrap();
+                // re-check under the write lock: another pickup may have
+                // installed this generation while we waited
+                match map.get(path) {
+                    Some(e) if e.stored.same(pin) => Arc::clone(&e.cell),
+                    _ => {
+                        if map.len() >= self.cap && !map.contains_key(path) {
+                            map.clear();
+                        }
+                        let cell = Arc::new(OnceLock::new());
+                        map.insert(
+                            Arc::from(path),
+                            DecodedEntry {
+                                stored: pin.clone(),
+                                cell: Arc::clone(&cell),
+                            },
+                        );
+                        cell
+                    }
+                }
+            }
+        };
+        // outside every lock: exactly one caller runs the decode, the rest
+        // block on the cell and then share the decoded Arc
+        let mut ran = false;
+        let out = cell.get_or_init(|| {
+            ran = true;
+            decode().map_err(|e| e.to_string())
+        });
+        match out {
+            Ok(decoded) => Ok((decoded.clone(), !ran)),
+            Err(msg) => {
+                // do not cache failures: drop the entry (only if it still
+                // holds this cell) so a later pickup retries
+                let mut map = self.map.write().unwrap();
+                if let Some(e) = map.get(path) {
+                    if Arc::ptr_eq(&e.cell, &cell) {
+                        map.remove(path);
+                    }
+                }
+                Err(FanError::Format(msg.clone()))
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -476,6 +603,116 @@ mod tests {
     #[should_panic]
     fn zero_shards_rejected() {
         let _ = ShardedCache::with_shards(0);
+    }
+
+    #[test]
+    fn decoded_cache_decodes_once_per_generation() {
+        let c = DecodedCache::new();
+        let path: Arc<str> = Arc::from("/f");
+        let pin: Payload = vec![1u8; 8].into();
+        let mut decodes = 0;
+        let (a, hit) = c
+            .get_or_decode(&path, &pin, || {
+                decodes += 1;
+                Ok(vec![9u8; 32].into())
+            })
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(decodes, 1);
+        let (b, hit) = c
+            .get_or_decode(&path, &pin, || {
+                decodes += 1;
+                Ok(vec![0u8; 32].into())
+            })
+            .unwrap();
+        assert!(hit, "same pin generation is a hit");
+        assert_eq!(decodes, 1, "second pickup shares the first decode");
+        assert!(a.same(&b), "both callers share one decoded allocation");
+        // a NEW generation of the path (different pin) replaces the entry
+        let pin2: Payload = vec![1u8; 8].into();
+        assert!(!pin.same(&pin2));
+        let (d, hit) = c
+            .get_or_decode(&path, &pin2, || {
+                decodes += 1;
+                Ok(vec![7u8; 16].into())
+            })
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(decodes, 2);
+        assert_eq!(&d[..], &[7u8; 16][..]);
+        assert_eq!(c.resident_files(), 1, "stale generation replaced in place");
+    }
+
+    #[test]
+    fn decoded_cache_concurrent_pickups_share_one_decode() {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        let c = Arc::new(DecodedCache::new());
+        let path: Arc<str> = Arc::from("/hot");
+        let pin: Payload = vec![3u8; 8].into();
+        let decodes = Arc::new(AtomicU64::new(0));
+        let mut handles = Vec::new();
+        for _ in 0..8 {
+            let c = Arc::clone(&c);
+            let path = Arc::clone(&path);
+            let pin = pin.clone();
+            let decodes = Arc::clone(&decodes);
+            handles.push(std::thread::spawn(move || {
+                let (d, _) = c
+                    .get_or_decode(&path, &pin, || {
+                        decodes.fetch_add(1, Ordering::Relaxed);
+                        // slow decode widens the race window
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                        Ok(vec![5u8; 64].into())
+                    })
+                    .unwrap();
+                assert_eq!(&d[..], &[5u8; 64][..]);
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(
+            decodes.load(Ordering::Relaxed),
+            1,
+            "8 concurrent pickups must cost exactly one decode"
+        );
+    }
+
+    #[test]
+    fn decoded_cache_does_not_cache_failures() {
+        let c = DecodedCache::new();
+        let path: Arc<str> = Arc::from("/f");
+        let pin: Payload = vec![1u8; 4].into();
+        let err = c.get_or_decode(&path, &pin, || Err(FanError::Format("torn".into())));
+        assert!(err.is_err());
+        assert_eq!(c.resident_files(), 0, "failure entry removed");
+        // the retry runs a fresh decode and succeeds
+        let (d, hit) = c
+            .get_or_decode(&path, &pin, || Ok(vec![2u8; 4].into()))
+            .unwrap();
+        assert!(!hit);
+        assert_eq!(&d[..], &[2u8; 4][..]);
+    }
+
+    #[test]
+    fn decoded_cache_cap_clears_wholesale() {
+        let c = DecodedCache::with_capacity(4);
+        let pins: Vec<(Arc<str>, Payload)> = (0..5)
+            .map(|i| (Arc::from(format!("/f{i}").as_str()), vec![i as u8; 4].into()))
+            .collect();
+        for (path, pin) in &pins[..4] {
+            c.get_or_decode(path, pin, || Ok(vec![0u8; 8].into())).unwrap();
+        }
+        assert_eq!(c.resident_files(), 4);
+        // the fifth insert clears and starts over
+        c.get_or_decode(&pins[4].0, &pins[4].1, || Ok(vec![0u8; 8].into()))
+            .unwrap();
+        assert_eq!(c.resident_files(), 1);
+        // a re-pickup of a cleared entry simply re-decodes
+        let (_, hit) = c
+            .get_or_decode(&pins[0].0, &pins[0].1, || Ok(vec![0u8; 8].into()))
+            .unwrap();
+        assert!(!hit);
     }
 
     #[test]

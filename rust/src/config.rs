@@ -8,6 +8,7 @@
 use crate::compress::{Codec, CompressPolicy};
 use crate::error::{FanError, Result};
 use crate::storage::disk::SpillReadMode;
+use crate::storage::placement::PlacementKind;
 
 /// Which fabric the cluster's request/response protocol runs over.  The
 /// node workers, VFS clients and prefetchers are identical either way —
@@ -76,6 +77,15 @@ pub struct ClusterConfig {
     /// Bounded per-call reply wait in milliseconds (`--call-timeout-ms`);
     /// `0` waits forever (the pre-PR-7 behavior).
     pub call_timeout_ms: u64,
+    /// Per-node RAM-tier byte budget for heat-based placement
+    /// (`--ram-budget`); `0` disables dynamic tiering entirely.
+    pub ram_budget_bytes: u64,
+    /// Which placement policy drives RAM↔spill migration (`--placement`).
+    pub tier_policy: PlacementKind,
+    /// Background migrator tick interval in milliseconds
+    /// (`--migrate-interval-ms`); `0` disables the thread (tests and
+    /// benches drive `NodeShared::migrate_tick` directly instead).
+    pub migrate_interval_ms: u64,
 }
 
 impl Default for ClusterConfig {
@@ -96,6 +106,9 @@ impl Default for ClusterConfig {
             transport: TransportKind::InProc,
             retry_budget: 2,
             call_timeout_ms: 5000,
+            ram_budget_bytes: 0,
+            tier_policy: PlacementKind::Noop,
+            migrate_interval_ms: 0,
         }
     }
 }
@@ -134,6 +147,13 @@ impl ClusterConfig {
                 "retry_budget must be <= 64, got {}",
                 self.retry_budget
             )));
+        }
+        if self.ram_budget_bytes > 0 && self.spill_dir.is_none() {
+            return Err(FanError::Config(
+                "--ram-budget needs --spill-dir: without a spill tier there \
+                 is nowhere to demote cold partitions to"
+                    .into(),
+            ));
         }
         if self.prefetch_window < self.prefetch_fetchers {
             return Err(FanError::Config(format!(
@@ -252,6 +272,11 @@ mod tests {
             },
             ClusterConfig {
                 retry_budget: 65,
+                ..Default::default()
+            },
+            ClusterConfig {
+                ram_budget_bytes: 1 << 20,
+                spill_dir: None,
                 ..Default::default()
             },
         ] {

@@ -134,6 +134,9 @@ pub fn build_node_shared(
     let mut builder = NodeBuilder::new(id, store, placement.clone());
     builder.cache_shards = config.cache_shards;
     builder.health_policy.retry_budget = config.retry_budget;
+    builder.tier_policy = config.tier_policy;
+    builder.ram_budget_bytes = config.ram_budget_bytes;
+    builder.migrate_interval_ms = config.migrate_interval_ms;
     // dump the partitions this node hosts
     for (pid, blob) in &data.blobs {
         if placement.is_local(*pid, id) {
@@ -325,6 +328,9 @@ impl Cluster {
     /// partition replicas; reads whose every holder is gone degrade with
     /// an error.  Returns the requests the dead worker had served.
     pub fn kill_node(&mut self, n: u32) -> u64 {
+        // the migrator must stop first: a dead node's store should not keep
+        // shuffling tiers underneath the failover reads of the survivors
+        self.nodes[n as usize].shared.stop_migrator();
         // best-effort shutdown request — over TCP the worker may already be
         // unreachable, and the listener teardown below covers that case
         let _ = self.transport.call(u32::MAX, n, Request::Shutdown);
@@ -342,6 +348,10 @@ impl Cluster {
         // prefetch engines first: their fetcher threads talk to the node
         // workers, and their unclaimed pins must drain before stats settle
         self.stop_prefetchers();
+        // migrators next, so tier counters are settled before the snapshot
+        for n in &self.nodes {
+            n.shared.stop_migrator();
+        }
         let per_node: Vec<NodeStats> = self
             .nodes
             .iter()

@@ -39,6 +39,8 @@ fn usage() {
          bench-io    run the §6.2 benchmark on the in-proc cluster\n\
                      (--spill-dir DIR --spill-read-mode reopen|pread|mmap\n\
                       for real file I/O instead of RAM backing;\n\
+                      --ram-budget BYTES --placement noop|freq\n\
+                      --migrate-interval-ms MS for heat-based RAM tiering;\n\
                       --replication R --retry-budget N --call-timeout-ms MS\n\
                       tune read-path failover)\n\
          train       train the CNN surrogate through FanStore + PJRT\n\
@@ -92,6 +94,24 @@ fn spill_opts(m: &ArgMap) -> Result<(Option<String>, fanstore::storage::SpillRea
         })?,
     };
     Ok((dir, mode))
+}
+
+/// `--ram-budget SIZE` / `--placement noop|freq` / `--migrate-interval-ms MS`
+/// options for commands that can run heat-based RAM↔spill tiering.
+fn tier_opts(m: &ArgMap) -> Result<(u64, fanstore::storage::PlacementKind, u64)> {
+    let budget = match m.get("ram-budget") {
+        None => 0,
+        Some(s) => fanstore::util::bytes::parse_size(s)
+            .ok_or_else(|| fanstore::FanError::Config(format!("bad --ram-budget {s}")))?,
+    };
+    let policy = match m.get("placement") {
+        None => fanstore::storage::PlacementKind::default(),
+        Some(s) => fanstore::storage::PlacementKind::parse(s).ok_or_else(|| {
+            fanstore::FanError::Config(format!("--placement expects noop|freq, got {s}"))
+        })?,
+    };
+    let interval = m.get_u64("migrate-interval-ms", 50)?;
+    Ok((budget, policy, interval))
 }
 
 fn artifacts_dir() -> std::path::PathBuf {
@@ -164,6 +184,8 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
     let n_files = m.get_u64("files", 256)? as usize;
     let size = m.get_u64("size", 64 << 10)? as usize;
     let seed = m.get_u64("seed", 0xFA57)?;
+    let (spill_dir, spill_read_mode) = spill_opts(m)?;
+    let (ram_budget_bytes, tier_policy, migrate_interval_ms) = tier_opts(m)?;
     let defaults = ClusterConfig::default();
     let cfg = ClusterConfig {
         nodes,
@@ -171,6 +193,11 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
         replication: m.get_u32("replication", 1)?,
         codec: codec_of(m)?,
         compress_policy: compress_policy_of(m),
+        spill_dir,
+        spill_read_mode,
+        ram_budget_bytes,
+        tier_policy,
+        migrate_interval_ms,
         retry_budget: m.get_u32("retry-budget", defaults.retry_budget)?,
         call_timeout_ms: m.get_u64("call-timeout-ms", defaults.call_timeout_ms)?,
         ..Default::default()
@@ -353,6 +380,7 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
     };
     let data = spec.generate_point(spec.points[0], 3);
     let (spill_dir, spill_read_mode) = spill_opts(m)?;
+    let (ram_budget_bytes, tier_policy, migrate_interval_ms) = tier_opts(m)?;
     let defaults = ClusterConfig::default();
     let cfg = ClusterConfig {
         nodes,
@@ -362,6 +390,9 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
         compress_policy: compress_policy_of(m),
         spill_dir,
         spill_read_mode,
+        ram_budget_bytes,
+        tier_policy,
+        migrate_interval_ms,
         retry_budget: m.get_u32("retry-budget", defaults.retry_budget)?,
         call_timeout_ms: m.get_u64("call-timeout-ms", defaults.call_timeout_ms)?,
         ..Default::default()
@@ -401,6 +432,25 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
         files as u64 * nodes as u64,
         100.0 * remote as f64 / (files as u64 * nodes as u64) as f64
     );
+    if ram_budget_bytes > 0 {
+        let (promos, demos, moved, hot): (u64, u64, u64, u64) = report.per_node.iter().fold(
+            (0, 0, 0, 0),
+            |(p, d, m, h), s| {
+                (
+                    p + s.promotions,
+                    d + s.demotions,
+                    m + s.migrated_bytes,
+                    h + s.tier_hot_hits,
+                )
+            },
+        );
+        println!(
+            "tiering ({}, budget {}): {promos} promotions, {demos} demotions, {} migrated, {hot} RAM-tier hits",
+            tier_policy.name(),
+            fanstore::util::human_bytes(ram_budget_bytes),
+            fanstore::util::human_bytes(moved),
+        );
+    }
     Ok(())
 }
 

@@ -28,11 +28,11 @@
 
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, RwLock};
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
-use crate::cache::ShardedCache;
+use crate::cache::{DecodedCache, ShardedCache};
 use crate::error::{FanError, Result};
 use crate::metadata::placement::Placement;
 use crate::metadata::record::{FileLocation, FileMeta};
@@ -43,6 +43,7 @@ use crate::net::transport::{
 };
 use crate::storage::disk::DiskStore;
 use crate::storage::payload::Payload;
+use crate::storage::placement::{PlacementKind, PlacementPolicy};
 
 /// Per-node I/O accounting snapshot used by the experiment reports.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -88,6 +89,20 @@ pub struct NodeStats {
     /// Reads that exhausted every holder / the retry budget and degraded
     /// to a real error (EIO to the caller — never a hang).
     pub degraded_reads: u64,
+    /// Tier migrations executed by this node's migrator (PR 8): spill→RAM
+    /// promotions, RAM→spill demotions, and the bytes moved either way
+    /// (`migrated_bytes` = Σ blob sizes over both directions, so
+    /// per-direction byte sums reconstruct exactly from the plan sizes).
+    /// Tallied inside `DiskStore`; populated only by
+    /// `NodeShared::stats_snapshot`, like `spill_reads_*`.
+    pub promotions: u64,
+    pub demotions: u64,
+    pub migrated_bytes: u64,
+    /// Reads served out of the RAM tier (store-tallied, snapshot-merged).
+    pub tier_hot_hits: u64,
+    /// Descriptor pickups answered by the decoded-payload side cache
+    /// instead of a repeat decompression (PR 8 satellite).
+    pub decoded_cache_hits: u64,
 }
 
 /// Lock-free accounting: every counter is a relaxed `AtomicU64`, updated on
@@ -112,6 +127,7 @@ pub struct AtomicNodeStats {
     pub retries: AtomicU64,
     pub peers_marked_down: AtomicU64,
     pub degraded_reads: AtomicU64,
+    pub decoded_cache_hits: AtomicU64,
 }
 
 impl AtomicNodeStats {
@@ -147,6 +163,12 @@ impl AtomicNodeStats {
             retries: ld(&self.retries),
             peers_marked_down: ld(&self.peers_marked_down),
             degraded_reads: ld(&self.degraded_reads),
+            // tallied inside DiskStore; merged by NodeShared::stats_snapshot
+            promotions: 0,
+            demotions: 0,
+            migrated_bytes: 0,
+            tier_hot_hits: 0,
+            decoded_cache_hits: ld(&self.decoded_cache_hits),
         }
     }
 }
@@ -170,6 +192,15 @@ pub struct NodeBuilder {
     /// Failure-detection tunables (retry budget, Suspect/Down thresholds,
     /// backoff); see [`crate::config::ClusterConfig::retry_budget`].
     pub health_policy: HealthPolicy,
+    /// Tiered-placement policy kind (PR 8); `Noop` preserves static
+    /// placement and spawns no migrator thread.
+    pub tier_policy: PlacementKind,
+    /// RAM-tier byte budget for the migrator (0 = no RAM tier / disabled).
+    pub ram_budget_bytes: u64,
+    /// Migration-tick interval.  0 disables the background thread even
+    /// with a non-noop policy — tests drive [`NodeShared::migrate_tick`]
+    /// directly for determinism.
+    pub migrate_interval_ms: u64,
 }
 
 /// Process-global node-epoch source: every sealed [`NodeShared`] gets a
@@ -188,15 +219,21 @@ impl NodeBuilder {
             placement,
             cache_shards: crate::cache::CACHE_SHARDS,
             health_policy: HealthPolicy::default(),
+            tier_policy: PlacementKind::Noop,
+            ram_budget_bytes: 0,
+            migrate_interval_ms: 0,
         }
     }
 
-    /// Freeze the launch-time state into the shared node handle.
+    /// Freeze the launch-time state into the shared node handle, spawning
+    /// the background migrator when tiered placement is configured (a
+    /// non-noop policy, a RAM budget, somewhere to demote to, and a
+    /// nonzero tick interval).
     pub fn seal(self) -> Arc<NodeShared> {
         let peer_count = self.placement.nodes;
         // deterministic per-node jitter seed: replayable backoff schedules
         let health_seed = 0x9E37_79B9_7F4A_7C15u64 ^ self.id as u64;
-        Arc::new(NodeShared {
+        let shared = Arc::new(NodeShared {
             id: self.id,
             epoch: NODE_EPOCH_SEQ.fetch_add(1, Ordering::Relaxed),
             store: self.store,
@@ -204,6 +241,11 @@ impl NodeBuilder {
             placement: self.placement,
             health: HealthMap::new(peer_count, self.health_policy, health_seed),
             cache: ShardedCache::with_shards(self.cache_shards),
+            decoded: DecodedCache::new(),
+            ram_budget_bytes: self.ram_budget_bytes,
+            tier_policy: Mutex::new(self.tier_policy.build()),
+            migrator: Mutex::new(None),
+            migrator_stop: Arc::new((Mutex::new(false), Condvar::new())),
             output_meta: RwLock::new(MetaTable::new()),
             output_data: RwLock::new(HashMap::new()),
             output_meta_cache: RwLock::new(HashMap::new()),
@@ -212,7 +254,58 @@ impl NodeBuilder {
             readdir_cache: RwLock::new(HashMap::new()),
             listing_gen: AtomicU64::new(0),
             stats: AtomicNodeStats::default(),
-        })
+        });
+        let wants_migrator = self.tier_policy != PlacementKind::Noop
+            && self.ram_budget_bytes > 0
+            && self.migrate_interval_ms > 0
+            && shared.store.can_demote();
+        if wants_migrator {
+            let weak = Arc::downgrade(&shared);
+            let stop = Arc::clone(&shared.migrator_stop);
+            let interval = Duration::from_millis(self.migrate_interval_ms);
+            let handle = std::thread::Builder::new()
+                .name(format!("fanstore-migrator-{}", shared.id))
+                .spawn(move || migrator_loop(weak, stop, interval))
+                .expect("spawn migrator");
+            *shared.migrator.lock().unwrap() = Some(handle);
+        }
+        shared
+    }
+}
+
+/// Background migrator body: every `interval`, upgrade the node handle and
+/// run one migration tick.  Holds only a `Weak` between ticks, so the
+/// thread never keeps the node alive; it exits when the node is gone or
+/// [`NodeShared::stop_migrator`] rings the condvar.
+fn migrator_loop(
+    node: Weak<NodeShared>,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    interval: Duration,
+) {
+    let (lock, cv) = &*stop;
+    let mut stopped = lock.lock().unwrap();
+    loop {
+        let (guard, timeout) = cv.wait_timeout(stopped, interval).unwrap();
+        stopped = guard;
+        if *stopped {
+            return;
+        }
+        if timeout.timed_out() {
+            // never hold the stop lock across a tick: stop_migrator must
+            // always be able to ring the condvar promptly
+            drop(stopped);
+            match node.upgrade() {
+                Some(shared) => {
+                    shared.migrate_tick();
+                }
+                None => return,
+            }
+            stopped = lock.lock().unwrap();
+            // a stop rung during the tick must not wait out another interval
+            if *stopped {
+                return;
+            }
+        }
     }
 }
 
@@ -241,6 +334,20 @@ pub struct NodeShared {
     /// budget scales with the compressed dataset; `decode_payload` expands
     /// a pinned entry at descriptor pickup.
     pub cache: ShardedCache,
+    /// Decoded-payload side cache (PR 8 satellite): pin-identity-keyed, so
+    /// N concurrent `open()`s of one hot compressed file decode once — see
+    /// [`NodeShared::decode_payload_cached`].
+    pub decoded: DecodedCache,
+    /// RAM-tier byte budget the migrator enforces (0 = tiering disabled).
+    pub ram_budget_bytes: u64,
+    /// The placement policy fed by [`DiskStore::take_heat`] samples.  Taken
+    /// by exactly one ticker at a time ([`NodeShared::migrate_tick`]); the
+    /// mutex makes direct test-driven ticks safe alongside the thread.
+    tier_policy: Mutex<Box<dyn PlacementPolicy>>,
+    /// Background migrator thread handle (None when tiering is off).
+    migrator: Mutex<Option<JoinHandle<()>>>,
+    /// Stop flag + condvar the migrator sleeps on.
+    migrator_stop: Arc<(Mutex<bool>, Condvar)>,
     /// Output metadata homed on this node by the consistent hash (§5.3).
     pub output_meta: RwLock<MetaTable>,
     /// Output file bytes kept on their originating node (§5.4: the data is
@@ -294,14 +401,76 @@ pub struct BatchedFetch {
 
 impl NodeShared {
     /// Full accounting snapshot: the atomic counters plus the store's
-    /// per-mode spilled-read tallies.
+    /// per-mode spilled-read and tier-migration tallies.
     pub fn stats_snapshot(&self) -> NodeStats {
         let mut s = self.stats.snapshot();
         let (reopen, pread, mmap) = self.store.spill_read_counts();
         s.spill_reads_reopen = reopen;
         s.spill_reads_pread = pread;
         s.spill_reads_mmap = mmap;
+        let (promotions, demotions, migrated_bytes, hot_hits) = self.store.tier_counts();
+        s.promotions = promotions;
+        s.demotions = demotions;
+        s.migrated_bytes = migrated_bytes;
+        s.tier_hot_hits = hot_hits;
         s
+    }
+
+    /// One migration tick: drain the heat sample, ask the policy for a
+    /// plan, and execute it — demotions first so promotions fit the freed
+    /// budget, then promotions with a residency backstop (a promotion that
+    /// would overshoot `ram_budget_bytes` is skipped even if planned).
+    /// Returns `(promotions, demotions)` executed.  Normally driven by the
+    /// background thread; tests and benches call it directly for
+    /// deterministic migration schedules.
+    pub fn migrate_tick(&self) -> (u64, u64) {
+        let heat = self.store.take_heat();
+        let plan = {
+            let mut policy = self.tier_policy.lock().unwrap();
+            policy.plan(&heat, self.ram_budget_bytes)
+        };
+        if plan.is_empty() {
+            return (0, 0);
+        }
+        let sizes: HashMap<u32, u64> = heat.iter().map(|h| (h.pid, h.bytes)).collect();
+        let (mut promoted, mut demoted) = (0u64, 0u64);
+        for pid in plan.demote {
+            match self.store.demote_partition(pid) {
+                Ok(moved) if moved > 0 => demoted += 1,
+                _ => {}
+            }
+        }
+        for pid in plan.promote {
+            // backstop: trust but verify the policy's budget math against
+            // live residency (concurrent ticks / skipped demotions)
+            let bytes = sizes.get(&pid).copied().unwrap_or(0);
+            if self.store.ram_resident_bytes() + bytes > self.ram_budget_bytes {
+                continue;
+            }
+            match self.store.promote_partition(pid) {
+                Ok(moved) if moved > 0 => promoted += 1,
+                _ => {}
+            }
+        }
+        (promoted, demoted)
+    }
+
+    /// Stop and join the background migrator (idempotent; no-op when
+    /// tiering is off).  Called by the cluster teardown and by `Drop`, so
+    /// the thread never outlives the node.
+    pub fn stop_migrator(&self) {
+        let handle = self.migrator.lock().unwrap().take();
+        if let Some(handle) = handle {
+            let (lock, cv) = &*self.migrator_stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+            // the migrator's tick briefly holds the last Arc in teardown
+            // races; if Drop lands on the migrator thread itself, detach
+            // instead of self-joining
+            if handle.thread().id() != std::thread::current().id() {
+                let _ = handle.join();
+            }
+        }
     }
 
     /// Current watermark of the listing cache (sample it *before* starting
@@ -548,6 +717,26 @@ impl NodeShared {
         }
     }
 
+    /// [`NodeShared::decode_payload`] behind the decoded-payload side
+    /// cache: concurrent pickups of the same *pin* (same cache generation
+    /// of `path`) share one decompression — the first caller decodes while
+    /// the rest block on the entry's cell, then everyone clones the same
+    /// decoded `Payload`.  A new generation of the path (pin identity
+    /// changes) replaces the stale entry.  Plain payloads bypass the cache
+    /// entirely: there is nothing to decode, and a clone is already free.
+    pub fn decode_payload_cached(&self, path: &str, pin: &Payload) -> Result<Payload> {
+        if pin.codec().is_none() {
+            return self.decode_payload(pin);
+        }
+        let (decoded, hit) = self
+            .decoded
+            .get_or_decode(path, pin, || self.decode_payload(pin))?;
+        if hit {
+            self.stats.decoded_cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        Ok(decoded)
+    }
+
     /// The one batched input-fetch body every read path shares
     /// (`FanStoreVfs::fetch_input`, `Vfs::prefetch`, the prefetch engine's
     /// pickups): resolve each path against the refcount cache, read the
@@ -749,6 +938,15 @@ impl NodeShared {
                 Err(e)
             }
         }
+    }
+}
+
+impl Drop for NodeShared {
+    fn drop(&mut self) {
+        // belt-and-braces: the migrator only holds a Weak, so it would exit
+        // on its next tick anyway, but an explicit stop keeps teardown
+        // deterministic (no orphan tick racing directory cleanup)
+        self.stop_migrator();
     }
 }
 

@@ -581,6 +581,14 @@ fn fetch_batch(inner: &Inner, picked: Vec<Arc<str>>) {
         }
     }
 
+    // tiering hint (PR 8): a pickup is the earliest moment we *know* these
+    // bytes are about to be read, so tell the kernel to fault the spilled
+    // pages in now — by the time the fetch (or the trainer behind it) gets
+    // there the pages are warm.  No-op for RAM-backed or remote paths.
+    for (p, _) in &items {
+        inner.shared.store.advise_willneed(p);
+    }
+
     let batch = inner
         .shared
         .fetch_inputs_batched(inner.transport.as_ref(), items);

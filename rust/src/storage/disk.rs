@@ -23,6 +23,24 @@
 //! Per-mode read counters are exposed via [`DiskStore::spill_read_counts`]
 //! and surface in `NodeStats`.
 //!
+//! # Tiered placement (PR 8)
+//!
+//! A partition's backing is no longer fixed at load time.  Each partition
+//! lives in a [`PartitionSlot`]: an `RwLock`'d [`Backing`] plus a relaxed
+//! heat counter bumped by every read (local *and* remote-served reads both
+//! funnel through [`DiskStore::read_stored`], so heat sees every touch).
+//! [`DiskStore::promote_partition`] swaps a spilled backing for a RAM blob
+//! and [`DiskStore::demote_partition`] swaps a RAM blob back to its spill
+//! file — atomically, under the `Payload` ownership rules: the old
+//! backing's `Arc` (RAM blob or mmap region) stays alive until every
+//! outstanding view drops, so in-flight descriptors, cache pins and queued
+//! replies keep reading the old bytes and **no reader ever blocks on a
+//! migration** (reads take the slot's read lock; the write lock is held
+//! only for the pointer swap itself — the blob copy happens outside it).
+//! The background migrator (`node::NodeShared`) drives these from a
+//! [`PlacementPolicy`](crate::storage::placement::PlacementPolicy) fed by
+//! [`DiskStore::take_heat`].
+//!
 //! [`DiskStore::read_stored`] hands out [`Payload`] handles: RAM-backed and
 //! mmap-backed partitions serve **zero-copy views** whose `Arc` keeps the
 //! blob/region alive (mapped) for the handle's lifetime — so the region is
@@ -33,13 +51,14 @@ use std::collections::HashMap;
 use std::fs;
 use std::path::PathBuf;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use crate::compress::Codec;
 use crate::error::{FanError, Result};
 use crate::metadata::record::FileStat;
 use crate::partition::format::PartitionReader;
 use crate::storage::payload::{Payload, PayloadRegion};
+use crate::storage::placement::PartitionHeat;
 
 /// How stored ranges are read back out of spilled partition files.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
@@ -82,9 +101,13 @@ mod mmap_region {
     use std::fs;
     use std::io;
     use std::os::unix::io::AsRawFd;
+    use std::sync::atomic::{AtomicU64, Ordering};
 
     const PROT_READ: i32 = 1;
     const MAP_SHARED: i32 = 1;
+    const MADV_WILLNEED: i32 = 3;
+    const MADV_DONTNEED: i32 = 4;
+    const PAGE: usize = 4096;
 
     extern "C" {
         fn mmap(
@@ -96,6 +119,26 @@ mod mmap_region {
             offset: i64,
         ) -> *mut u8;
         fn munmap(addr: *mut u8, len: usize) -> i32;
+        fn madvise(addr: *mut u8, len: usize, advice: i32) -> i32;
+    }
+
+    /// Process-wide tally of successful `madvise` hints (relaxed,
+    /// monotonic) — tests and benches snapshot before/after to prove the
+    /// hints actually fired.
+    static MADVISE_CALLS: AtomicU64 = AtomicU64::new(0);
+
+    pub fn madvise_calls() -> u64 {
+        MADVISE_CALLS.load(Ordering::Relaxed)
+    }
+
+    /// Page-residency hint passed down to the kernel.
+    #[derive(Clone, Copy)]
+    pub enum Advice {
+        /// About to be read (prefetch pickup): fault pages in ahead of use.
+        WillNeed,
+        /// Gone cold (demotion, epoch tail): drop the page-cache references;
+        /// a later read simply re-faults from the file.
+        DontNeed,
     }
 
     pub struct MmapRegion {
@@ -136,6 +179,26 @@ mod mmap_region {
         pub fn as_slice(&self) -> &[u8] {
             unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
         }
+
+        /// Advise the kernel about `self[off..off + len]` (clamped to the
+        /// region, start aligned down to a page as `madvise` requires).
+        /// Best-effort: a refusing kernel is ignored; successes bump
+        /// [`madvise_calls`].
+        pub fn advise(&self, off: usize, len: usize, advice: Advice) {
+            if len == 0 || off >= self.len {
+                return;
+            }
+            let start = off & !(PAGE - 1);
+            let end = off.saturating_add(len).min(self.len);
+            let a = match advice {
+                Advice::WillNeed => MADV_WILLNEED,
+                Advice::DontNeed => MADV_DONTNEED,
+            };
+            let rc = unsafe { madvise(self.ptr.add(start), end - start, a) };
+            if rc == 0 {
+                MADVISE_CALLS.fetch_add(1, Ordering::Relaxed);
+            }
+        }
     }
 
     impl Drop for MmapRegion {
@@ -157,6 +220,17 @@ mod mmap_region {
 
 #[cfg(unix)]
 use mmap_region::MmapRegion;
+
+/// Successful `madvise` hints issued since process start (0 off-unix).
+#[cfg(unix)]
+pub fn madvise_calls() -> u64 {
+    mmap_region::madvise_calls()
+}
+
+#[cfg(not(unix))]
+pub fn madvise_calls() -> u64 {
+    0
+}
 
 /// Index entry for one stored file.
 #[derive(Clone, Copy, Debug)]
@@ -201,11 +275,23 @@ impl SpillFile {
 
 /// Backing for partition blobs.
 enum Backing {
-    /// Blob kept in RAM (fast mode for tests and the simulator's "real
-    /// logic" checks).  `Arc`'d so reads serve zero-copy `Payload` views.
+    /// Blob kept in RAM (fast tier).  `Arc`'d so reads serve zero-copy
+    /// `Payload` views that outlive a subsequent demotion.
     Ram(Arc<Vec<u8>>),
-    /// Blob spilled to a file (real-I/O mode) with persistent handles.
+    /// Blob spilled to a file (slow tier) with persistent handles.
     File(SpillFile),
+}
+
+/// One partition's migratable state: the swappable backing plus the heat
+/// counter the placement policy samples.  Reads take the read lock for the
+/// duration of handle construction only; migrations do their byte copies
+/// *outside* the write lock and hold it just for the swap.
+struct PartitionSlot {
+    backing: RwLock<Backing>,
+    /// Touches since the last [`DiskStore::take_heat`] (relaxed).
+    heat: AtomicU64,
+    /// Stored blob size — identical in both tiers, used for budgeting.
+    bytes: u64,
 }
 
 /// Relaxed per-mode spilled-read tallies (merged into `NodeStats`).
@@ -216,14 +302,25 @@ struct SpillReadCounters {
     mmap: AtomicU64,
 }
 
+/// Relaxed tier-migration tallies (merged into `NodeStats`).
+#[derive(Debug, Default)]
+struct TierCounters {
+    promotions: AtomicU64,
+    demotions: AtomicU64,
+    migrated_bytes: AtomicU64,
+    /// Reads served out of the RAM tier.
+    hot_hits: AtomicU64,
+}
+
 /// A node's local store: dumped partitions + the path index.
 pub struct DiskStore {
-    partitions: HashMap<u32, Backing>,
+    partitions: HashMap<u32, PartitionSlot>,
     index: HashMap<String, StoredAt>,
     stats: HashMap<String, FileStat>,
     spill_dir: Option<PathBuf>,
     spill_mode: SpillReadMode,
     spill_counts: SpillReadCounters,
+    tier_counts: TierCounters,
     bytes_stored: u64,
 }
 
@@ -237,6 +334,7 @@ impl DiskStore {
             spill_dir: None,
             spill_mode: SpillReadMode::default(),
             spill_counts: SpillReadCounters::default(),
+            tier_counts: TierCounters::default(),
             bytes_stored: 0,
         }
     }
@@ -258,6 +356,7 @@ impl DiskStore {
             spill_dir: Some(dir),
             spill_mode: mode,
             spill_counts: SpillReadCounters::default(),
+            tier_counts: TierCounters::default(),
             bytes_stored: 0,
         })
     }
@@ -266,12 +365,28 @@ impl DiskStore {
         self.spill_mode
     }
 
+    /// Whether this store can demote (it has somewhere to spill to).
+    pub fn can_demote(&self) -> bool {
+        self.spill_dir.is_some()
+    }
+
     /// Spilled reads served since launch as `(reopen, pread, mmap)`.
     pub fn spill_read_counts(&self) -> (u64, u64, u64) {
         (
             self.spill_counts.reopen.load(Ordering::Relaxed),
             self.spill_counts.pread.load(Ordering::Relaxed),
             self.spill_counts.mmap.load(Ordering::Relaxed),
+        )
+    }
+
+    /// Tier-migration tallies since launch as
+    /// `(promotions, demotions, migrated_bytes, tier_hot_hits)`.
+    pub fn tier_counts(&self) -> (u64, u64, u64, u64) {
+        (
+            self.tier_counts.promotions.load(Ordering::Relaxed),
+            self.tier_counts.demotions.load(Ordering::Relaxed),
+            self.tier_counts.migrated_bytes.load(Ordering::Relaxed),
+            self.tier_counts.hot_hits.load(Ordering::Relaxed),
         )
     }
 
@@ -303,7 +418,8 @@ impl DiskStore {
             self.stats.insert(path, stat);
             n += 1;
         }
-        self.bytes_stored += blob.len() as u64;
+        let blob_len = blob.len() as u64;
+        self.bytes_stored += blob_len;
         let backing = match &self.spill_dir {
             None => Backing::Ram(Arc::new(blob)),
             Some(dir) => {
@@ -312,7 +428,14 @@ impl DiskStore {
                 Backing::File(SpillFile::open(p, self.spill_mode)?)
             }
         };
-        self.partitions.insert(pid, backing);
+        self.partitions.insert(
+            pid,
+            PartitionSlot {
+                backing: RwLock::new(backing),
+                heat: AtomicU64::new(0),
+                bytes: blob_len,
+            },
+        );
         Ok(n)
     }
 
@@ -325,17 +448,17 @@ impl DiskStore {
         self.stats.get(path)
     }
 
-    /// Index lookup + backing handle for one stored file.
-    fn backing_of(&self, path: &str) -> Result<(StoredAt, &Backing)> {
+    /// Index lookup + partition slot for one stored file.
+    fn slot_of(&self, path: &str) -> Result<(StoredAt, &PartitionSlot)> {
         let at = *self
             .index
             .get(path)
             .ok_or_else(|| FanError::NotFound(path.to_string()))?;
-        let backing = self
+        let slot = self
             .partitions
             .get(&at.partition)
             .ok_or_else(|| FanError::Format(format!("missing partition {}", at.partition)))?;
-        Ok((at, backing))
+        Ok((at, slot))
     }
 
     /// Read one stored range out of a spilled partition via the configured
@@ -394,14 +517,23 @@ impl DiskStore {
     }
 
     /// Lookup + backing dispatch shared by the stored and raw read paths.
+    /// Every call bumps the partition's heat counter (the placement
+    /// policy's food) and holds the slot's read lock only while the
+    /// handle is constructed — a concurrent migration waits for the swap,
+    /// never the other way around.
     fn read_payload(&self, path: &str) -> Result<(Payload, StoredAt)> {
-        let (at, backing) = self.backing_of(path)?;
-        let payload = match backing {
-            Backing::Ram(blob) => Payload::view(
-                Arc::clone(blob) as Arc<dyn PayloadRegion>,
-                at.offset as usize,
-                at.stored_len as usize,
-            ),
+        let (at, slot) = self.slot_of(path)?;
+        slot.heat.fetch_add(1, Ordering::Relaxed);
+        let guard = slot.backing.read().expect("backing lock poisoned");
+        let payload = match &*guard {
+            Backing::Ram(blob) => {
+                self.tier_counts.hot_hits.fetch_add(1, Ordering::Relaxed);
+                Payload::view(
+                    Arc::clone(blob) as Arc<dyn PayloadRegion>,
+                    at.offset as usize,
+                    at.stored_len as usize,
+                )
+            }
             Backing::File(sf) => self.read_spilled(sf, &at)?,
         };
         Ok((payload, at))
@@ -432,6 +564,166 @@ impl DiskStore {
             Codec::None => Ok(stored.to_vec()),
             codec => codec.decompress(&stored, at.raw_len as usize),
         }
+    }
+
+    /// Promote a spilled partition into the RAM tier.  Returns the bytes
+    /// moved (0 if already resident or lost a race).  The blob is read
+    /// from disk *outside* the write lock; the lock is held only for the
+    /// swap.  The displaced `SpillFile` drops here, but its mmap region
+    /// stays alive (mapped) through any outstanding `Payload` views — the
+    /// ownership rules make the swap invisible to in-flight readers.
+    pub fn promote_partition(&self, pid: u32) -> Result<u64> {
+        let slot = self
+            .partitions
+            .get(&pid)
+            .ok_or_else(|| FanError::Format(format!("missing partition {pid}")))?;
+        let path = {
+            let guard = slot.backing.read().expect("backing lock poisoned");
+            match &*guard {
+                Backing::Ram(_) => return Ok(0),
+                Backing::File(sf) => sf.path.clone(),
+            }
+        };
+        let blob = fs::read(&path)?;
+        let n = blob.len() as u64;
+        let mut guard = slot.backing.write().expect("backing lock poisoned");
+        if matches!(&*guard, Backing::Ram(_)) {
+            return Ok(0); // lost a promote race; keep the winner's blob
+        }
+        *guard = Backing::Ram(Arc::new(blob));
+        drop(guard);
+        self.tier_counts.promotions.fetch_add(1, Ordering::Relaxed);
+        self.tier_counts.migrated_bytes.fetch_add(n, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Demote a RAM-resident partition back to its spill file.  Returns
+    /// the bytes moved (0 if already spilled or lost a race).  The spill
+    /// file persists across a promotion, so this usually just reopens it;
+    /// the file is (re)written only when missing or torn.  The displaced
+    /// RAM blob's `Arc` keeps serving outstanding `Payload` views until
+    /// they drop.  Requires a spill dir ([`DiskStore::can_demote`]).
+    pub fn demote_partition(&self, pid: u32) -> Result<u64> {
+        let dir = self
+            .spill_dir
+            .as_ref()
+            .ok_or_else(|| FanError::Format("demotion requires a spill dir".to_string()))?;
+        let slot = self
+            .partitions
+            .get(&pid)
+            .ok_or_else(|| FanError::Format(format!("missing partition {pid}")))?;
+        let blob = {
+            let guard = slot.backing.read().expect("backing lock poisoned");
+            match &*guard {
+                Backing::File(_) => return Ok(0),
+                Backing::Ram(b) => Arc::clone(b),
+            }
+        };
+        let p = dir.join(format!("partition_{pid:05}.fan"));
+        let torn = fs::metadata(&p)
+            .map(|m| m.len() != blob.len() as u64)
+            .unwrap_or(true);
+        if torn {
+            fs::write(&p, &blob[..])?;
+        }
+        let sf = SpillFile::open(p, self.spill_mode)?;
+        #[cfg(unix)]
+        if let Some(map) = &sf.map {
+            // cold data: tell the kernel to drop the pages now rather than
+            // under pressure later; a future read re-faults from the file
+            map.advise(0, blob.len(), mmap_region::Advice::DontNeed);
+        }
+        let n = blob.len() as u64;
+        let mut guard = slot.backing.write().expect("backing lock poisoned");
+        if matches!(&*guard, Backing::File(_)) {
+            return Ok(0); // lost a demote race
+        }
+        *guard = Backing::File(sf);
+        drop(guard);
+        self.tier_counts.demotions.fetch_add(1, Ordering::Relaxed);
+        self.tier_counts.migrated_bytes.fetch_add(n, Ordering::Relaxed);
+        Ok(n)
+    }
+
+    /// Hint the kernel to fault in `path`'s stored range ahead of an
+    /// imminent read (prefetch pickup).  No-op for RAM / pread / reopen
+    /// backings — only mapped spill files have pages to advise.
+    pub fn advise_willneed(&self, path: &str) {
+        #[cfg(unix)]
+        if let Ok((at, slot)) = self.slot_of(path) {
+            if let Backing::File(sf) = &*slot.backing.read().expect("backing lock poisoned") {
+                if let Some(map) = &sf.map {
+                    map.advise(
+                        at.offset as usize,
+                        at.stored_len as usize,
+                        mmap_region::Advice::WillNeed,
+                    );
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        let _ = path;
+    }
+
+    /// Hint the kernel that a mapped spilled partition has gone cold
+    /// (epoch tail): drop its page-cache references now.  No-op for RAM
+    /// or unmapped backings.
+    pub fn advise_dontneed_partition(&self, pid: u32) {
+        #[cfg(unix)]
+        if let Some(slot) = self.partitions.get(&pid) {
+            if let Backing::File(sf) = &*slot.backing.read().expect("backing lock poisoned") {
+                if let Some(map) = &sf.map {
+                    map.advise(0, map.as_slice().len(), mmap_region::Advice::DontNeed);
+                }
+            }
+        }
+        #[cfg(not(unix))]
+        let _ = pid;
+    }
+
+    /// Whether partition `pid` currently lives in the RAM tier.
+    pub fn partition_resident(&self, pid: u32) -> Option<bool> {
+        self.partitions.get(&pid).map(|slot| {
+            matches!(
+                &*slot.backing.read().expect("backing lock poisoned"),
+                Backing::Ram(_)
+            )
+        })
+    }
+
+    /// Bytes currently held by RAM-tier backings (budget enforcement).
+    pub fn ram_resident_bytes(&self) -> u64 {
+        self.partitions
+            .values()
+            .filter(|slot| {
+                matches!(
+                    &*slot.backing.read().expect("backing lock poisoned"),
+                    Backing::Ram(_)
+                )
+            })
+            .map(|slot| slot.bytes)
+            .sum()
+    }
+
+    /// Drain this interval's heat sample for the placement policy: each
+    /// partition's touches since the last call (counter swaps to 0), its
+    /// current tier and its blob size.  Sorted by pid for determinism.
+    pub fn take_heat(&self) -> Vec<PartitionHeat> {
+        let mut v: Vec<PartitionHeat> = self
+            .partitions
+            .iter()
+            .map(|(pid, slot)| PartitionHeat {
+                pid: *pid,
+                touches: slot.heat.swap(0, Ordering::Relaxed),
+                resident: matches!(
+                    &*slot.backing.read().expect("backing lock poisoned"),
+                    Backing::Ram(_)
+                ),
+                bytes: slot.bytes,
+            })
+            .collect();
+        v.sort_by_key(|h| h.pid);
+        v
     }
 
     pub fn file_count(&self) -> usize {
@@ -518,6 +810,10 @@ mod tests {
             assert_eq!(store.stat(&path).unwrap().size as usize, f.data.len());
         }
         assert_eq!(store.spill_read_counts(), (0, 0, 0), "RAM never spills");
+        // every RAM read is a hot-tier hit
+        let (p, d, mb, hot) = store.tier_counts();
+        assert_eq!((p, d, mb), (0, 0, 0));
+        assert_eq!(hot, 20);
     }
 
     #[test]
@@ -615,5 +911,153 @@ mod tests {
         assert_eq!(stored.raw_len(), 8192);
         assert!(stored.len() < 8192 / 10);
         assert_eq!(store.read_raw("/m/a/rle.bin").unwrap(), vec![7u8; 8192]);
+    }
+
+    #[test]
+    fn promote_demote_roundtrip_with_exact_counter_algebra() {
+        for mode in [
+            SpillReadMode::Reopen,
+            SpillReadMode::Pread,
+            SpillReadMode::Mmap,
+        ] {
+            let dir = TestDir::new(&format!("tier_{}", mode.name()));
+            let files = sample_files(16);
+            let (blobs, _) = build_partitions(&files, 4, Codec::Lzss(3)).unwrap();
+            let mut store = DiskStore::on_disk_with_mode(&dir.0, mode).unwrap();
+            let mut blob_sizes = Vec::new();
+            for (pid, blob) in blobs.into_iter().enumerate() {
+                blob_sizes.push(blob.len() as u64);
+                store.load_partition(pid as u32, blob, "/m").unwrap();
+            }
+            assert!(store.can_demote());
+            for pid in 0..4u32 {
+                assert_eq!(store.partition_resident(pid), Some(false));
+            }
+            assert_eq!(store.ram_resident_bytes(), 0);
+
+            // promote 0 and 2; reads must stay byte-identical throughout
+            let moved = store.promote_partition(0).unwrap() + store.promote_partition(2).unwrap();
+            assert_eq!(moved, blob_sizes[0] + blob_sizes[2]);
+            assert_eq!(store.promote_partition(0).unwrap(), 0, "idempotent");
+            assert_eq!(store.partition_resident(0), Some(true));
+            assert_eq!(store.partition_resident(1), Some(false));
+            assert_eq!(store.ram_resident_bytes(), blob_sizes[0] + blob_sizes[2]);
+            for f in &files {
+                let path = format!("/m/{}", f.path);
+                assert_eq!(store.read_raw(&path).unwrap(), f.data, "{mode:?} {path}");
+            }
+
+            // demote 0 back; bytes still identical
+            let back = store.demote_partition(0).unwrap();
+            assert_eq!(back, blob_sizes[0]);
+            assert_eq!(store.demote_partition(0).unwrap(), 0, "idempotent");
+            assert_eq!(store.partition_resident(0), Some(false));
+            assert_eq!(store.ram_resident_bytes(), blob_sizes[2]);
+            for f in &files {
+                let path = format!("/m/{}", f.path);
+                assert_eq!(store.read_raw(&path).unwrap(), f.data, "{mode:?} {path}");
+            }
+
+            let (p, d, mb, _hot) = store.tier_counts();
+            assert_eq!((p, d), (2, 1));
+            assert_eq!(mb, blob_sizes[0] * 2 + blob_sizes[2], "migrated bytes balance");
+        }
+    }
+
+    #[test]
+    fn demotion_requires_a_spill_dir() {
+        let files = sample_files(4);
+        let (blobs, _) = build_partitions(&files, 1, Codec::None).unwrap();
+        let mut store = DiskStore::in_memory();
+        store
+            .load_partition(0, blobs.into_iter().next().unwrap(), "/m")
+            .unwrap();
+        assert!(!store.can_demote());
+        assert!(store.demote_partition(0).is_err());
+        // promotion of a RAM partition is a no-op, not an error
+        assert_eq!(store.promote_partition(0).unwrap(), 0);
+    }
+
+    #[test]
+    fn payloads_outlive_migration() {
+        // a handle taken before a tier swap keeps serving the OLD backing's
+        // bytes — migration never invalidates in-flight readers
+        let dir = TestDir::new("outlive");
+        let files = sample_files(6);
+        let (blobs, _) = build_partitions(&files, 1, Codec::None).unwrap();
+        let mut store = DiskStore::on_disk_with_mode(&dir.0, SpillReadMode::Mmap).unwrap();
+        store
+            .load_partition(0, blobs.into_iter().next().unwrap(), "/m")
+            .unwrap();
+        let path = format!("/m/{}", files[0].path);
+        let (before, _) = store.read_stored(&path).unwrap();
+        store.promote_partition(0).unwrap();
+        let (after_promote, _) = store.read_stored(&path).unwrap();
+        store.demote_partition(0).unwrap();
+        let (after_demote, _) = store.read_stored(&path).unwrap();
+        // all three handles stay readable and byte-identical, each pinned
+        // to the backing generation it was born under
+        assert_eq!(&before[..], &files[0].data[..]);
+        assert_eq!(&after_promote[..], &files[0].data[..]);
+        assert_eq!(&after_demote[..], &files[0].data[..]);
+        assert!(
+            !before.same(&after_promote),
+            "different backing generations are different pins"
+        );
+    }
+
+    #[test]
+    fn take_heat_drains_touch_counts() {
+        let files = sample_files(8);
+        let (blobs, _) = build_partitions(&files, 2, Codec::None).unwrap();
+        let mut store = DiskStore::in_memory();
+        for (pid, blob) in blobs.into_iter().enumerate() {
+            store.load_partition(pid as u32, blob, "/m").unwrap();
+        }
+        let hot_path = format!("/m/{}", files[0].path);
+        let hot_pid = store.locate(&hot_path).unwrap().partition;
+        for _ in 0..5 {
+            store.read_raw(&hot_path).unwrap();
+        }
+        let heat = store.take_heat();
+        assert_eq!(heat.len(), 2);
+        let hot = heat.iter().find(|h| h.pid == hot_pid).unwrap();
+        assert_eq!(hot.touches, 5);
+        assert!(hot.resident);
+        assert!(hot.bytes > 0);
+        // drained: a second sample sees zero touches
+        assert!(store.take_heat().iter().all(|h| h.touches == 0));
+    }
+
+    #[cfg(unix)]
+    #[test]
+    fn madvise_hints_fire_on_mapped_partitions() {
+        let dir = TestDir::new("madvise");
+        let files = sample_files(6);
+        let (blobs, _) = build_partitions(&files, 1, Codec::None).unwrap();
+        let mut store = DiskStore::on_disk_with_mode(&dir.0, SpillReadMode::Mmap).unwrap();
+        store
+            .load_partition(0, blobs.into_iter().next().unwrap(), "/m")
+            .unwrap();
+        let path = format!("/m/{}", files[0].path);
+        let mapped = {
+            let (p, _) = store.read_stored(&path).unwrap();
+            matches!(p, Payload::View { .. })
+        };
+        if !mapped {
+            return; // mmap degraded to pread on this filesystem: nothing to advise
+        }
+        let before = madvise_calls();
+        store.advise_willneed(&path);
+        assert_eq!(madvise_calls(), before + 1, "WILLNEED fired");
+        store.advise_dontneed_partition(0);
+        assert_eq!(madvise_calls(), before + 2, "DONTNEED fired");
+        // demotion of a RAM partition re-advises the fresh cold map
+        store.promote_partition(0).unwrap();
+        let mid = madvise_calls();
+        store.demote_partition(0).unwrap();
+        assert_eq!(madvise_calls(), mid + 1, "demotion advises DONTNEED");
+        // bytes survive all the advice
+        assert_eq!(store.read_raw(&path).unwrap(), files[0].data);
     }
 }

@@ -9,7 +9,11 @@
 pub mod disk;
 pub mod models;
 pub mod payload;
+pub mod placement;
 
-pub use disk::{DiskStore, SpillReadMode};
-pub use models::{DeviceProfile, FuseModel, SharedFsModel, SsdModel};
+pub use disk::{madvise_calls, DiskStore, SpillReadMode};
+pub use models::{DeviceProfile, DramModel, FuseModel, SharedFsModel, SsdModel};
 pub use payload::{payload_copies, Payload, PayloadRegion};
+pub use placement::{
+    FreqPlacement, MigrationPlan, NoopPlacement, PartitionHeat, PlacementKind, PlacementPolicy,
+};

@@ -12,6 +12,33 @@
 
 use crate::sim::clock::{transfer_ns, SimNs, US};
 
+/// DRAM tier: what a RAM-resident (or heat-promoted, PR 8) partition read
+/// costs.  The point of the model is the *contrast* with the SSD/FUSE/SFS
+/// tiers below — the tiered-placement simulator charges `DramModel` for
+/// hot-set hits and the device model for spilled reads, which is exactly
+/// the gap the background migrator converts into throughput.
+#[derive(Clone, Copy, Debug)]
+pub struct DramModel {
+    pub read_latency_ns: SimNs,
+    pub read_bw: u64, // bytes/s
+}
+
+impl DramModel {
+    /// DDR4-era node memory (§6.1 testbeds): ~100 ns access, ~10 GB/s
+    /// effective single-stream copy bandwidth.
+    pub fn ddr4_2018() -> Self {
+        DramModel {
+            read_latency_ns: US / 10,
+            read_bw: 10_000_000_000,
+        }
+    }
+
+    /// Service time for one read of `bytes` out of the RAM tier.
+    pub fn read_service(&self, bytes: u64) -> SimNs {
+        self.read_latency_ns + transfer_ns(bytes, self.read_bw)
+    }
+}
+
 /// SATA/NVMe-class local SSD.
 #[derive(Clone, Copy, Debug)]
 pub struct SsdModel {
@@ -163,6 +190,20 @@ pub enum DeviceProfile {
 mod tests {
     use super::*;
     use crate::sim::clock::{MS, NS_PER_SEC};
+
+    #[test]
+    fn dram_tier_beats_every_device_tier() {
+        let dram = DramModel::ddr4_2018();
+        let ssd = SsdModel::sata_2018();
+        for bytes in [4 * 1024, 128 * 1024, 8 << 20] {
+            let hot = dram.read_service(bytes);
+            let cold = ssd.read_service(bytes);
+            assert!(
+                cold > 10 * hot,
+                "{bytes}B: dram {hot}ns should be >10x faster than ssd {cold}ns"
+            );
+        }
+    }
 
     #[test]
     fn ssd_read_service_sane() {

@@ -1,0 +1,302 @@
+//! Placement policies for heat-based tiered storage (PR 8).
+//!
+//! FanStore's §4 design picks a partition's tier (RAM vs spill) statically
+//! at launch; DL access is skewed and shifts across epochs, so the hot set
+//! should *converge* into RAM instead.  A [`PlacementPolicy`] turns one
+//! migration tick's heat sample ([`PartitionHeat`], drained from
+//! `DiskStore::take_heat`) plus the node's RAM budget into a
+//! [`MigrationPlan`] — which partitions to promote into RAM and which to
+//! demote back to spill.  The background migrator in `node::NodeShared`
+//! executes the plan; the policy itself never touches bytes.
+//!
+//! # Contract
+//!
+//! * `plan` is called from exactly one thread (the migrator), so policies
+//!   may keep interior state (EWMA histories) without synchronization —
+//!   the trait only requires `Send`.
+//! * The heat sample is sorted by pid and covers every partition; plans
+//!   must be deterministic functions of (state, sample, budget) so tests
+//!   and the in-proc simulator can replay migration decisions exactly.
+//! * Promotions listed in a plan must fit the budget *assuming the listed
+//!   demotions happen first*; the migrator executes demotions before
+//!   promotions and re-checks residency against the budget as a backstop.
+//! * A budget of 0 means "no RAM tier": policies must plan nothing.
+
+use std::collections::HashMap;
+
+/// One partition's slice of a migration-tick heat sample.
+#[derive(Clone, Copy, Debug)]
+pub struct PartitionHeat {
+    pub pid: u32,
+    /// Reads that touched this partition since the last sample.
+    pub touches: u64,
+    /// Whether it currently lives in the RAM tier.
+    pub resident: bool,
+    /// Stored blob size (same in both tiers) — the budget currency.
+    pub bytes: u64,
+}
+
+/// What one migration tick should move.  Demotions are executed first so
+/// promotions fit the freed budget.
+#[derive(Clone, Debug, Default)]
+pub struct MigrationPlan {
+    pub promote: Vec<u32>,
+    pub demote: Vec<u32>,
+}
+
+impl MigrationPlan {
+    pub fn is_empty(&self) -> bool {
+        self.promote.is_empty() && self.demote.is_empty()
+    }
+}
+
+/// Tier-placement decision maker — see the module docs for the contract.
+pub trait PlacementPolicy: Send {
+    fn name(&self) -> &'static str;
+
+    /// Decide this tick's migrations from the drained heat sample and the
+    /// RAM budget in bytes.
+    fn plan(&mut self, heat: &[PartitionHeat], ram_budget_bytes: u64) -> MigrationPlan;
+}
+
+/// Today's static behavior: never migrate anything.
+#[derive(Debug, Default)]
+pub struct NoopPlacement;
+
+impl PlacementPolicy for NoopPlacement {
+    fn name(&self) -> &'static str {
+        "noop"
+    }
+
+    fn plan(&mut self, _heat: &[PartitionHeat], _ram_budget_bytes: u64) -> MigrationPlan {
+        MigrationPlan::default()
+    }
+}
+
+/// Frequency policy: per-partition EWMA of touch counts picks the target
+/// RAM set greedily (hottest first) under the byte budget.
+///
+/// Residents get a hysteresis bonus when ranked, so a spilled partition
+/// must be measurably hotter (not merely tied) to displace a resident one
+/// — without it, equal-heat partitions would swap tiers every tick and the
+/// migrator would churn bytes for nothing.
+#[derive(Debug)]
+pub struct FreqPlacement {
+    /// EWMA smoothing factor in [0, 1]: weight of the newest sample.
+    alpha: f64,
+    /// Multiplier applied to resident partitions' scores when ranking.
+    hysteresis: f64,
+    ewma: HashMap<u32, f64>,
+}
+
+impl FreqPlacement {
+    pub fn new() -> FreqPlacement {
+        FreqPlacement {
+            alpha: 0.5,
+            hysteresis: 1.25,
+            ewma: HashMap::new(),
+        }
+    }
+
+    /// Override the smoothing factor (tests; clamped to [0, 1]).
+    pub fn with_alpha(mut self, alpha: f64) -> FreqPlacement {
+        self.alpha = alpha.clamp(0.0, 1.0);
+        self
+    }
+
+    /// Current smoothed heat of `pid` (0 if never sampled).
+    pub fn score(&self, pid: u32) -> f64 {
+        self.ewma.get(&pid).copied().unwrap_or(0.0)
+    }
+}
+
+impl Default for FreqPlacement {
+    fn default() -> Self {
+        FreqPlacement::new()
+    }
+}
+
+impl PlacementPolicy for FreqPlacement {
+    fn name(&self) -> &'static str {
+        "freq"
+    }
+
+    fn plan(&mut self, heat: &[PartitionHeat], ram_budget_bytes: u64) -> MigrationPlan {
+        // fold this tick into the EWMA history first — even when the
+        // budget is 0 the history should keep tracking the workload
+        for h in heat {
+            let e = self.ewma.entry(h.pid).or_insert(0.0);
+            *e = self.alpha * h.touches as f64 + (1.0 - self.alpha) * *e;
+        }
+        if ram_budget_bytes == 0 {
+            return MigrationPlan::default();
+        }
+
+        // rank hottest-first; residents get the hysteresis bonus and win
+        // ties (stable order: score desc, resident first, pid asc)
+        let mut ranked: Vec<&PartitionHeat> = heat.iter().collect();
+        ranked.sort_by(|a, b| {
+            let sa = self.score(a.pid) * if a.resident { self.hysteresis } else { 1.0 };
+            let sb = self.score(b.pid) * if b.resident { self.hysteresis } else { 1.0 };
+            sb.partial_cmp(&sa)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(b.resident.cmp(&a.resident))
+                .then(a.pid.cmp(&b.pid))
+        });
+
+        // greedy fill: the target RAM set is the hottest prefix that fits;
+        // never-touched partitions (score 0) are left where they are
+        let mut budget = ram_budget_bytes;
+        let mut plan = MigrationPlan::default();
+        for h in ranked {
+            let wanted = self.score(h.pid) > 0.0 && h.bytes <= budget;
+            if wanted {
+                budget -= h.bytes;
+                if !h.resident {
+                    plan.promote.push(h.pid);
+                }
+            } else if h.resident {
+                plan.demote.push(h.pid);
+            }
+        }
+        plan
+    }
+}
+
+/// Config/CLI spelling of a placement policy.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// Static placement (today's behavior); no migrator thread runs.
+    #[default]
+    Noop,
+    /// Frequency/EWMA policy ([`FreqPlacement`]).
+    Freq,
+}
+
+impl PlacementKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PlacementKind::Noop => "noop",
+            PlacementKind::Freq => "freq",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<PlacementKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "noop" | "static" => Some(PlacementKind::Noop),
+            "freq" | "ewma" => Some(PlacementKind::Freq),
+            _ => None,
+        }
+    }
+
+    pub fn build(&self) -> Box<dyn PlacementPolicy> {
+        match self {
+            PlacementKind::Noop => Box::new(NoopPlacement),
+            PlacementKind::Freq => Box::new(FreqPlacement::new()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(rows: &[(u32, u64, bool, u64)]) -> Vec<PartitionHeat> {
+        rows.iter()
+            .map(|&(pid, touches, resident, bytes)| PartitionHeat {
+                pid,
+                touches,
+                resident,
+                bytes,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn noop_never_plans() {
+        let mut p = NoopPlacement;
+        let heat = sample(&[(0, 100, false, 10), (1, 0, true, 10)]);
+        let plan = p.plan(&heat, 1 << 30);
+        assert!(plan.is_empty());
+        assert_eq!(p.name(), "noop");
+    }
+
+    #[test]
+    fn freq_promotes_hottest_under_budget() {
+        let mut p = FreqPlacement::new().with_alpha(1.0);
+        // three 10-byte spilled partitions, budget fits two
+        let heat = sample(&[(0, 5, false, 10), (1, 50, false, 10), (2, 20, false, 10)]);
+        let plan = p.plan(&heat, 20);
+        assert_eq!(plan.promote, vec![1, 2], "hottest two fit");
+        assert!(plan.demote.is_empty());
+    }
+
+    #[test]
+    fn freq_zero_budget_plans_nothing() {
+        let mut p = FreqPlacement::new();
+        let heat = sample(&[(0, 100, false, 10), (1, 100, true, 10)]);
+        assert!(p.plan(&heat, 0).is_empty());
+    }
+
+    #[test]
+    fn freq_demotes_cold_residents_when_heat_shifts() {
+        let mut p = FreqPlacement::new().with_alpha(1.0);
+        // tick 1: partition 0 is hot and gets the single RAM slot
+        let plan = p.plan(&sample(&[(0, 100, false, 10), (1, 0, false, 10)]), 10);
+        assert_eq!(plan.promote, vec![0]);
+        // tick 2: the workload moved to partition 1 decisively
+        let plan = p.plan(&sample(&[(0, 0, true, 10), (1, 100, false, 10)]), 10);
+        assert_eq!(plan.promote, vec![1]);
+        assert_eq!(plan.demote, vec![0]);
+    }
+
+    #[test]
+    fn hysteresis_prevents_tie_flapping() {
+        let mut p = FreqPlacement::new().with_alpha(1.0);
+        // equal heat: the resident keeps its slot, the challenger stays out
+        let plan = p.plan(&sample(&[(0, 50, true, 10), (1, 50, false, 10)]), 10);
+        assert!(plan.is_empty(), "equal heat must not churn: {plan:?}");
+        // a decisive lead (beyond the 1.25x bonus) does displace
+        let plan = p.plan(&sample(&[(0, 10, true, 10), (1, 100, false, 10)]), 10);
+        assert_eq!(plan.demote, vec![0]);
+        assert_eq!(plan.promote, vec![1]);
+    }
+
+    #[test]
+    fn never_touched_partitions_stay_put() {
+        let mut p = FreqPlacement::new();
+        // huge budget, but nothing has been read: no speculative promotion
+        let plan = p.plan(&sample(&[(0, 0, false, 10), (1, 0, false, 10)]), 1 << 30);
+        assert!(plan.is_empty());
+    }
+
+    #[test]
+    fn oversized_partition_is_skipped_not_wedged() {
+        let mut p = FreqPlacement::new().with_alpha(1.0);
+        // partition 0 is hot but bigger than the whole budget; 1 still fits
+        let plan = p.plan(&sample(&[(0, 100, false, 50), (1, 10, false, 10)]), 20);
+        assert_eq!(plan.promote, vec![1]);
+    }
+
+    #[test]
+    fn ewma_smooths_bursts() {
+        let mut p = FreqPlacement::new().with_alpha(0.5);
+        let heat = sample(&[(0, 100, false, 10)]);
+        p.plan(&heat, 0);
+        assert!((p.score(0) - 50.0).abs() < 1e-9);
+        // a silent tick halves the score instead of zeroing it
+        p.plan(&sample(&[(0, 0, false, 10)]), 0);
+        assert!((p.score(0) - 25.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn kind_parse_build_roundtrip() {
+        for kind in [PlacementKind::Noop, PlacementKind::Freq] {
+            assert_eq!(PlacementKind::parse(kind.name()), Some(kind));
+            assert_eq!(kind.build().name(), kind.name());
+        }
+        assert_eq!(PlacementKind::parse("EWMA"), Some(PlacementKind::Freq));
+        assert_eq!(PlacementKind::parse("static"), Some(PlacementKind::Noop));
+        assert_eq!(PlacementKind::parse("nope"), None);
+    }
+}

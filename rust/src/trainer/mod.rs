@@ -277,21 +277,32 @@ pub fn train_cnn(
                 h.schedule_table(table, order);
             }
         }
-        for _ in 0..steps_this_epoch {
+        for step in 0..steps_this_epoch {
             // each node draws + reads + steps; then allreduce
             let mut replicas = Vec::with_capacity(nodes as usize);
             for node in 0..nodes as usize {
-                // Note: when the sampler wraps (None -> adopt/reshuffle)
-                // MID-epoch, the post-wrap stretch reads synchronously until
-                // the next schedule point.  Epoch-boundary wraps are covered:
-                // the cross-epoch hook below pre-commits the next order and
-                // warms its head, and the top-of-epoch schedule queues the
-                // rest.
+                // When the sampler wraps (None -> adopt/reshuffle) MID-epoch
+                // (partitioned views, capped epochs), pre-commit the next
+                // order and warm its head through the pipeline BEFORE the
+                // wrap adopts it — pre-committing draws the RNG identically,
+                // so the sampled sequence is unchanged, but the post-wrap
+                // stretch no longer reads cold.  The stretch is capped at
+                // this epoch's remaining consumption, so everything queued
+                // here is claimed before the next schedule point.
                 let idx = match samplers[node].next_batch(batch) {
                     Some(idx) => idx,
-                    None => samplers[node]
-                        .next_batch(batch)
-                        .expect("reshuffled epoch is non-empty"),
+                    None => {
+                        if let (Some(h), Some(table)) = (&pf_handles[node], &epoch_table) {
+                            samplers[node].precommit_next();
+                            let left = (steps_this_epoch - step) as usize * batch;
+                            let stretch = cluster.config.prefetch_window.min(left);
+                            let ids = samplers[node].draw_window(0, stretch);
+                            h.schedule_table(table, ids);
+                        }
+                        samplers[node]
+                            .next_batch(batch)
+                            .expect("reshuffled epoch is non-empty")
+                    }
                 };
                 let (images, labels) =
                     data::read_batch(&mut clients[node], train_paths, &idx, batch)?;

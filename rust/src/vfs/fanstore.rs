@@ -354,9 +354,11 @@ impl Vfs for FanStoreVfs {
                     }
                 };
                 // the single decode point (§5.4): the cache pin stays in
-                // stored form; this descriptor gets the expanded content.
+                // stored form; this descriptor gets the expanded content —
+                // via the decoded side cache, so N concurrent opens of one
+                // hot compressed file share a single decompression (PR 8).
                 // On a codec fault the pin must not leak its refcount.
-                let data = match self.shared.decode_payload(&pin) {
+                let data = match self.shared.decode_payload_cached(&path, &pin) {
                     Ok(data) => data,
                     Err(e) => {
                         self.shared.cache.release(&path, &pin);

@@ -1,0 +1,448 @@
+//! Migration under fire: the heat-based tier migrator (PR 8) must never
+//! perturb the bytes a reader sees.  8 reader threads hammer a tiered
+//! cluster with a zipfian-skewed, phase-shifting access pattern while a
+//! churn thread drives `migrate_tick` and force-demotes partitions out
+//! from under them — across every `SpillReadMode` and both fabrics — and
+//! every read must come back byte-identical.  Afterwards the tier
+//! counters must balance exactly: partitions start spilled, so
+//! `promotions - demotions == RAM-resident partitions`, and
+//! `migrated_bytes` is nonzero iff any migration ran.  A convergence test
+//! proves the frequency policy pulls the hot partition into RAM (and
+//! leaves untouched ones spilled), a decode-sharing test pins the
+//! decoded side cache's once-per-generation guarantee under concurrent
+//! opens, and a background-thread test proves the migrator promotes with
+//! no manual ticks.
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use fanstore::compress::Codec;
+use fanstore::config::{ClusterConfig, TransportKind};
+use fanstore::coordinator::Cluster;
+use fanstore::partition::builder::InputFile;
+use fanstore::storage::disk::SpillReadMode;
+use fanstore::storage::PlacementKind;
+use fanstore::util::prng::Prng;
+use fanstore::vfs::Vfs;
+
+/// Unique scratch dir, removed on drop (hygiene: concurrent tests in one
+/// process must not collide, leftovers must not poison reruns).
+struct TempDir(std::path::PathBuf);
+
+impl TempDir {
+    fn new(tag: &str) -> TempDir {
+        static SEQ: AtomicU32 = AtomicU32::new(0);
+        let dir = std::env::temp_dir().join(format!(
+            "fanstore_tier_{tag}_{}_{}",
+            std::process::id(),
+            SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::remove_dir_all(&dir).ok();
+        TempDir(dir)
+    }
+
+    fn path_string(&self) -> String {
+        self.0.to_string_lossy().into_owned()
+    }
+}
+
+impl Drop for TempDir {
+    fn drop(&mut self) {
+        std::fs::remove_dir_all(&self.0).ok();
+    }
+}
+
+/// Mixed compressible / incompressible files so both stored shapes cross
+/// the migration paths (promoted bytes are the *stored* bytes).
+fn dataset(n: usize) -> Vec<InputFile> {
+    let mut rng = Prng::new(0x7E1A);
+    (0..n)
+        .map(|i| {
+            let mut data = vec![0u8; 300 + rng.index(2048)];
+            if i % 2 == 0 {
+                rng.fill_bytes(&mut data);
+            } else {
+                data.fill((i % 251) as u8);
+            }
+            InputFile {
+                path: format!("train/c{}/f{i:04}.raw", i % 3),
+                data,
+            }
+        })
+        .collect()
+}
+
+const MODES: [SpillReadMode; 3] = [
+    SpillReadMode::Reopen,
+    SpillReadMode::Pread,
+    SpillReadMode::Mmap,
+];
+
+/// Zipfian-ish pick: 70% of reads land in an 8-file hot window whose
+/// position depends on `phase`, the rest are uniform over the dataset.
+fn skewed_pick(rng: &mut Prng, phase: usize, n: usize) -> usize {
+    if rng.index(10) < 7 {
+        (phase * 24 + rng.index(8)) % n
+    } else {
+        rng.index(n)
+    }
+}
+
+fn migration_under_fire(transport: TransportKind) {
+    const NODES: u32 = 2;
+    const PARTITIONS: u32 = 4;
+    const THREADS: usize = 8;
+    const ROUNDS: usize = 40;
+
+    let files = dataset(48);
+    let total: u64 = files.iter().map(|f| f.data.len() as u64).sum();
+    let expect: Arc<Vec<(String, Vec<u8>)>> = Arc::new(
+        files
+            .iter()
+            .map(|f| (format!("/fanstore/user/{}", f.path), f.data.clone()))
+            .collect(),
+    );
+
+    for mode in MODES {
+        let dir = TempDir::new(&format!("fire_{}_{}", transport.name(), mode.name()));
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: NODES,
+                partitions: PARTITIONS,
+                codec: Codec::Lzss(3),
+                spill_dir: Some(dir.path_string()),
+                spill_read_mode: mode,
+                // comfortably fits the hottest partition per node, tight
+                // enough that cold ones have no business being resident
+                ram_budget_bytes: total / 2,
+                tier_policy: PlacementKind::Freq,
+                // no background thread: the churn thread below owns the
+                // migration schedule, so every run sees real churn
+                migrate_interval_ms: 0,
+                transport,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let states: Vec<_> = (0..NODES).map(|n| cluster.node_state(n)).collect();
+
+        // churn thread: tick the policy AND force-demote partitions out
+        // from under the readers, so both migration directions run while
+        // reads are in flight
+        let done = Arc::new(AtomicBool::new(false));
+        let churn = {
+            let states = states.clone();
+            let done = Arc::clone(&done);
+            std::thread::spawn(move || {
+                // keep churning a few rounds past the readers so each
+                // node's resident set provably gets force-demoted and
+                // re-promoted at least once, however fast the reads ran
+                let mut iter = 0u32;
+                while !done.load(Ordering::Relaxed) || iter < 24 {
+                    for s in &states {
+                        s.migrate_tick();
+                        // non-local pids error; already-spilled return Ok(0)
+                        s.store.demote_partition(iter % PARTITIONS).ok();
+                    }
+                    iter += 1;
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+            })
+        };
+
+        let mut readers = Vec::new();
+        for t in 0..THREADS {
+            let mut vfs = cluster.client(t as u32 % NODES);
+            let expect = Arc::clone(&expect);
+            let name = mode.name();
+            readers.push(std::thread::spawn(move || {
+                let mut rng = Prng::new(0xF1E + t as u64);
+                for phase in 0..2 {
+                    for _ in 0..ROUNDS {
+                        let k = skewed_pick(&mut rng, phase, expect.len());
+                        let (path, want) = &expect[k];
+                        assert_eq!(
+                            &vfs.read_all(path).unwrap(),
+                            want,
+                            "{name}: bytes diverged under migration on {path}"
+                        );
+                    }
+                }
+            }));
+        }
+        for r in readers {
+            r.join().expect("no reader observed torn bytes");
+        }
+        done.store(true, Ordering::Relaxed);
+        churn.join().unwrap();
+
+        // settle: one quiet tick per node, then a full sweep so promoted
+        // partitions provably serve from the RAM tier
+        for s in &states {
+            s.migrate_tick();
+        }
+        for n in 0..NODES {
+            let mut vfs = cluster.client(n);
+            for (path, want) in expect.iter() {
+                assert_eq!(&vfs.read_all(path).unwrap(), want, "settle sweep {path}");
+            }
+        }
+
+        // exact counter algebra: every partition starts spilled, every
+        // swap is counted once, so the tier ledger must reconcile with
+        // live residency — no lost or phantom migrations under fire
+        for (n, s) in states.iter().enumerate() {
+            let (promos, demos, moved, _) = s.store.tier_counts();
+            let resident = (0..PARTITIONS)
+                .filter(|&pid| s.store.partition_resident(pid) == Some(true))
+                .count() as u64;
+            assert!(
+                promos >= demos,
+                "{}: node {n} demoted more than it ever promoted ({promos} vs {demos})",
+                mode.name()
+            );
+            assert_eq!(
+                promos - demos,
+                resident,
+                "{}: node {n} tier ledger does not reconcile with residency",
+                mode.name()
+            );
+            assert_eq!(
+                moved > 0,
+                promos + demos > 0,
+                "{}: node {n} migrated_bytes must move iff a migration ran",
+                mode.name()
+            );
+            assert!(
+                s.store.ram_resident_bytes() <= total / 2,
+                "{}: node {n} RAM tier exceeds its budget",
+                mode.name()
+            );
+        }
+
+        let report = cluster.shutdown();
+        let (promos, demos, hot): (u64, u64, u64) =
+            report.per_node.iter().fold((0, 0, 0), |acc, s| {
+                (
+                    acc.0 + s.promotions,
+                    acc.1 + s.demotions,
+                    acc.2 + s.tier_hot_hits,
+                )
+            });
+        assert!(promos > 0, "{}: churn must promote", mode.name());
+        assert!(demos > 0, "{}: churn must demote", mode.name());
+        assert!(
+            hot > 0,
+            "{}: promoted partitions must serve RAM-tier hits",
+            mode.name()
+        );
+        // the spilled reads that did happen landed on the configured mode
+        let spills: (u64, u64, u64) = report.per_node.iter().fold((0, 0, 0), |acc, s| {
+            (
+                acc.0 + s.spill_reads_reopen,
+                acc.1 + s.spill_reads_pread,
+                acc.2 + s.spill_reads_mmap,
+            )
+        });
+        match mode {
+            SpillReadMode::Reopen => assert_eq!((spills.1, spills.2), (0, 0)),
+            SpillReadMode::Pread => assert_eq!((spills.0, spills.2), (0, 0)),
+            SpillReadMode::Mmap => assert_eq!(spills.0, 0),
+        }
+    }
+}
+
+#[test]
+fn migration_under_fire_inproc() {
+    migration_under_fire(TransportKind::InProc);
+}
+
+#[test]
+fn migration_under_fire_tcp() {
+    migration_under_fire(TransportKind::TcpLoopback);
+}
+
+/// The frequency policy must converge the hot set into RAM: after skewed
+/// reads and one tick, exactly the partition holding the hot files is
+/// resident — untouched partitions (EWMA score zero) stay spilled no
+/// matter how much budget is free — and subsequent hot reads are counted
+/// as RAM-tier hits, one per read.
+#[test]
+fn freq_policy_converges_hot_partition_into_ram() {
+    let files = dataset(32);
+    let total: u64 = files.iter().map(|f| f.data.len() as u64).sum();
+    let dir = TempDir::new("converge");
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 1,
+            partitions: 4,
+            codec: Codec::Lzss(3),
+            spill_dir: Some(dir.path_string()),
+            spill_read_mode: SpillReadMode::Pread,
+            ram_budget_bytes: total, // budget is not the constraint here
+            tier_policy: PlacementKind::Freq,
+            migrate_interval_ms: 0,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let state = cluster.node_state(0);
+
+    // group the store's paths by partition; heat only partition 0's files
+    let mut by_pid: Vec<Vec<String>> = vec![Vec::new(); 4];
+    for p in state.store.paths() {
+        let at = state.store.locate(p).expect("indexed path locates");
+        by_pid[at.partition as usize].push(p.clone());
+    }
+    assert!(by_pid.iter().all(|v| !v.is_empty()), "4 non-empty partitions");
+
+    let mut vfs = cluster.client(0);
+    for _ in 0..5 {
+        for p in &by_pid[0] {
+            vfs.read_all(p).unwrap();
+        }
+    }
+    let (promoted, demoted) = state.migrate_tick();
+    assert_eq!((promoted, demoted), (1, 0), "one hot partition, one move");
+    assert_eq!(state.store.partition_resident(0), Some(true));
+    for pid in 1..4 {
+        assert_eq!(
+            state.store.partition_resident(pid),
+            Some(false),
+            "partition {pid} was never read; score 0 must not promote"
+        );
+    }
+
+    // every post-promotion hot read is a RAM-tier hit, exactly one each
+    let (.., hot_before) = state.store.tier_counts();
+    for p in &by_pid[0] {
+        vfs.read_all(p).unwrap();
+    }
+    let (.., hot_after) = state.store.tier_counts();
+    assert_eq!(
+        hot_after - hot_before,
+        by_pid[0].len() as u64,
+        "each hot read serves from the RAM tier"
+    );
+    drop(vfs);
+    cluster.shutdown();
+}
+
+/// The background migrator promotes on its own: with a live interval and
+/// no manual ticks, skewed reads alone must pull a partition into RAM.
+#[test]
+fn background_migrator_promotes_without_manual_ticks() {
+    let files = dataset(24);
+    let total: u64 = files.iter().map(|f| f.data.len() as u64).sum();
+    let dir = TempDir::new("bg");
+    let cluster = Cluster::launch(
+        &files,
+        ClusterConfig {
+            nodes: 1,
+            partitions: 3,
+            codec: Codec::Lzss(3),
+            spill_dir: Some(dir.path_string()),
+            spill_read_mode: SpillReadMode::Pread,
+            ram_budget_bytes: total,
+            tier_policy: PlacementKind::Freq,
+            migrate_interval_ms: 2,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let state = cluster.node_state(0);
+    let paths: Vec<String> = files
+        .iter()
+        .map(|f| format!("/fanstore/user/{}", f.path))
+        .collect();
+
+    let mut vfs = cluster.client(0);
+    let deadline = Instant::now() + Duration::from_secs(10);
+    loop {
+        for p in &paths {
+            vfs.read_all(p).unwrap();
+        }
+        if state.store.tier_counts().0 > 0 {
+            break;
+        }
+        assert!(
+            Instant::now() < deadline,
+            "background migrator never promoted despite sustained heat"
+        );
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    drop(vfs);
+    let report = cluster.shutdown(); // joins the migrator before snapshot
+    assert!(report.per_node[0].promotions > 0);
+}
+
+/// Decoded side cache (PR 8 satellite): N concurrent opens of one hot
+/// compressed file must share a single decompression.  The file is warmed
+/// once (the only decode), then 8 threads open/read it simultaneously —
+/// `decompressions` stays exactly 1 and every threaded open counts a
+/// decoded-cache hit.  With no tiering configured, the tier ledger stays
+/// all-zero.
+#[test]
+fn concurrent_opens_share_one_decompression() {
+    const THREADS: usize = 8;
+    let files = vec![InputFile {
+        path: "train/c0/hot.raw".into(),
+        data: vec![42u8; 16384], // highly compressible: stored Lzss-tagged
+    }];
+    let cluster = Arc::new(
+        Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 1,
+                partitions: 1,
+                codec: Codec::Lzss(5),
+                ..Default::default()
+            },
+        )
+        .unwrap(),
+    );
+    let path = "/fanstore/user/train/c0/hot.raw".to_string();
+
+    // warm: the one and only decompression for this generation
+    let mut vfs = cluster.client(0);
+    assert_eq!(vfs.read_all(&path).unwrap(), files[0].data);
+    drop(vfs);
+
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let mut vfs = cluster.client(0);
+        let barrier = Arc::clone(&barrier);
+        let path = path.clone();
+        let want = files[0].data.clone();
+        handles.push(std::thread::spawn(move || {
+            barrier.wait();
+            assert_eq!(vfs.read_all(&path).unwrap(), want);
+        }));
+    }
+    for h in handles {
+        h.join().expect("no concurrent opener failed");
+    }
+
+    let cluster = Arc::try_unwrap(cluster).ok().expect("all clones dropped");
+    let report = cluster.shutdown();
+    let s = &report.per_node[0];
+    assert_eq!(
+        s.decompressions, 1,
+        "N concurrent opens must share the warm decode"
+    );
+    assert_eq!(
+        s.decoded_cache_hits, THREADS as u64,
+        "every threaded open hits the decoded side cache"
+    );
+    // no spill tier, no policy: nothing can migrate (RAM-tier hits still
+    // count — every read of an in-memory store is a hot hit by definition)
+    assert_eq!(
+        (s.promotions, s.demotions, s.migrated_bytes),
+        (0, 0, 0),
+        "tiering off: the migration ledger must stay zero"
+    );
+}

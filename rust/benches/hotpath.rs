@@ -348,6 +348,66 @@ fn bench_failover_overhead(out: &mut Entries, smoke: bool) {
     handle.join().unwrap();
 }
 
+/// Healthy-cluster cost of the PR 9 recovery layer: the same end-to-end
+/// read sweep with recovery off (`probe_interval_ms = 0`) vs a recovery
+/// thread per node probing aggressively (every 2 ms).  With every peer Up
+/// the ticks early-out (no Down holders, empty reseed queue, nothing
+/// under-replicated), so the measured cost is the keepalive traffic
+/// itself; CI asserts `recovery/steady_state` stays >= 0.95x
+/// `recovery/baseline` ops/s.
+fn bench_recovery_overhead(out: &mut Entries, smoke: bool) {
+    println!("== recovery layer: reads with prober off vs probing every 2 ms ==");
+    let (n_files, size) = if smoke { (96, 32 * 1024) } else { (384, 128 * 1024) };
+    let mut rng = Prng::new(41);
+    let files: Vec<InputFile> = (0..n_files)
+        .map(|i| {
+            let mut data = vec![0u8; size];
+            rng.fill_bytes(&mut data);
+            InputFile {
+                path: format!("train/f{i:04}"),
+                data,
+            }
+        })
+        .collect();
+    let mut run = |probe_ms: u64| -> (f64, f64) {
+        let cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 3,
+                partitions: 6,
+                replication: 2,
+                probe_interval_ms: probe_ms,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        let mut vfs = cluster.client(0);
+        let t0 = Instant::now();
+        let mut bytes = 0u64;
+        for _ in 0..2 {
+            for f in &files {
+                bytes += vfs
+                    .read_all(&format!("/fanstore/user/{}", f.path))
+                    .unwrap()
+                    .len() as u64;
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64();
+        drop(vfs);
+        cluster.shutdown();
+        (2.0 * files.len() as f64 / secs, bytes as f64 / secs)
+    };
+    let (base, base_bw) = run(0);
+    println!("  baseline    : {base:.0} files/s");
+    out.push(("recovery/baseline".into(), base, base_bw));
+    let (ss, ss_bw) = run(2);
+    println!(
+        "  steady_state: {ss:.0} files/s ({:.3}x of baseline)",
+        ss / base.max(1e-9)
+    );
+    out.push(("recovery/steady_state".into(), ss, ss_bw));
+}
+
 fn bench_read_path(out: &mut Entries, smoke: bool) {
     println!("== in-proc end-to-end read_all (4 nodes) ==");
     let (n_files, size) = if smoke { (128, 32 * 1024) } else { (512, 128 * 1024) };
@@ -1142,6 +1202,7 @@ fn main() {
     bench_reply_send(&mut entries, smoke);
     bench_transport(&mut entries, smoke);
     bench_failover_overhead(&mut entries, smoke);
+    bench_recovery_overhead(&mut entries, smoke);
     bench_read_path(&mut entries, smoke);
     bench_multithread_reads(&mut entries, smoke);
     bench_remote_pipeline(&mut entries, smoke);

@@ -86,6 +86,14 @@ pub struct ClusterConfig {
     /// (`--migrate-interval-ms`); `0` disables the thread (tests and
     /// benches drive `NodeShared::migrate_tick` directly instead).
     pub migrate_interval_ms: u64,
+    /// Background recovery (keepalive prober + re-replicator) tick interval
+    /// in milliseconds (`--probe-interval-ms`); `0` disables the thread
+    /// (tests drive `NodeShared::probe_tick`/`repair_tick` directly).
+    pub probe_interval_ms: u64,
+    /// At most this many repair transfers (partition pulls, reseeds, output
+    /// re-commits) start per repair tick (`--repair-max-inflight`) — the
+    /// throttle that keeps re-replication from starving training reads.
+    pub repair_max_inflight: u32,
 }
 
 impl Default for ClusterConfig {
@@ -109,6 +117,8 @@ impl Default for ClusterConfig {
             ram_budget_bytes: 0,
             tier_policy: PlacementKind::Noop,
             migrate_interval_ms: 0,
+            probe_interval_ms: 0,
+            repair_max_inflight: 2,
         }
     }
 }
@@ -154,6 +164,12 @@ impl ClusterConfig {
                  is nowhere to demote cold partitions to"
                     .into(),
             ));
+        }
+        if self.repair_max_inflight == 0 || self.repair_max_inflight > 64 {
+            return Err(FanError::Config(format!(
+                "repair_max_inflight must be in 1..=64, got {}",
+                self.repair_max_inflight
+            )));
         }
         if self.prefetch_window < self.prefetch_fetchers {
             return Err(FanError::Config(format!(
@@ -277,6 +293,14 @@ mod tests {
             ClusterConfig {
                 ram_budget_bytes: 1 << 20,
                 spill_dir: None,
+                ..Default::default()
+            },
+            ClusterConfig {
+                repair_max_inflight: 0,
+                ..Default::default()
+            },
+            ClusterConfig {
+                repair_max_inflight: 65,
                 ..Default::default()
             },
         ] {

@@ -137,6 +137,9 @@ pub fn build_node_shared(
     builder.tier_policy = config.tier_policy;
     builder.ram_budget_bytes = config.ram_budget_bytes;
     builder.migrate_interval_ms = config.migrate_interval_ms;
+    builder.mount = config.mount.clone();
+    builder.probe_interval_ms = config.probe_interval_ms;
+    builder.repair_max_inflight = config.repair_max_inflight;
     // dump the partitions this node hosts
     for (pid, blob) in &data.blobs {
         if placement.is_local(*pid, id) {
@@ -245,6 +248,12 @@ impl Cluster {
             )?;
             nodes.push(FanStoreNode::spawn(shared, ep));
         }
+        // recovery threads last — probing needs the fabric, so unlike the
+        // migrator this cannot start at seal time.  No-op unless
+        // `probe_interval_ms` is set.
+        for n in &nodes {
+            n.shared.start_recovery(Arc::clone(&transport));
+        }
 
         let prefetchers = Mutex::new((0..config.nodes).map(|_| None).collect());
         Ok(Cluster {
@@ -328,7 +337,10 @@ impl Cluster {
     /// partition replicas; reads whose every holder is gone degrade with
     /// an error.  Returns the requests the dead worker had served.
     pub fn kill_node(&mut self, n: u32) -> u64 {
-        // the migrator must stop first: a dead node's store should not keep
+        // the recovery thread first: a dead node must not keep probing and
+        // repairing the cluster it just "left"
+        self.nodes[n as usize].shared.stop_recovery();
+        // the migrator next: a dead node's store should not keep
         // shuffling tiers underneath the failover reads of the survivors
         self.nodes[n as usize].shared.stop_migrator();
         // best-effort shutdown request — over TCP the worker may already be
@@ -348,6 +360,10 @@ impl Cluster {
         // prefetch engines first: their fetcher threads talk to the node
         // workers, and their unclaimed pins must drain before stats settle
         self.stop_prefetchers();
+        // recovery threads next: no probes or repairs may race the teardown
+        for n in &self.nodes {
+            n.shared.stop_recovery();
+        }
         // migrators next, so tier counters are settled before the snapshot
         for n in &self.nodes {
             n.shared.stop_migrator();

@@ -42,7 +42,9 @@ fn usage() {
                       --ram-budget BYTES --placement noop|freq\n\
                       --migrate-interval-ms MS for heat-based RAM tiering;\n\
                       --replication R --retry-budget N --call-timeout-ms MS\n\
-                      tune read-path failover)\n\
+                      tune read-path failover;\n\
+                      --probe-interval-ms MS --repair-max-inflight N\n\
+                      enable keepalive probing + background re-replication)\n\
          train       train the CNN surrogate through FanStore + PJRT\n\
          cluster     run one FanStore node over real TCP:\n\
                        serve --node-id I --nodes N --listen HOST:PORT\n\
@@ -200,6 +202,8 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
         migrate_interval_ms,
         retry_budget: m.get_u32("retry-budget", defaults.retry_budget)?,
         call_timeout_ms: m.get_u64("call-timeout-ms", defaults.call_timeout_ms)?,
+        probe_interval_ms: m.get_u64("probe-interval-ms", defaults.probe_interval_ms)?,
+        repair_max_inflight: m.get_u32("repair-max-inflight", defaults.repair_max_inflight)?,
         ..Default::default()
     };
     cfg.validate()?;
@@ -263,6 +267,9 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
                 None => None,
             };
             let transport: Arc<dyn Transport> = Arc::new(TcpTransport::connect(&addrs)?);
+            // keepalive prober + re-replicator, now that a fabric exists
+            // (no-op unless --probe-interval-ms is set)
+            shared.start_recovery(Arc::clone(&transport));
             let mut vfs = FanStoreVfs::new(node_id, shared, Arc::clone(&transport));
             let mount = cfg.mount.clone();
             let listing = vfs.readdir(&format!("{mount}/train"))?;
@@ -395,6 +402,8 @@ fn cmd_bench_io(m: &ArgMap) -> Result<()> {
         migrate_interval_ms,
         retry_budget: m.get_u32("retry-budget", defaults.retry_budget)?,
         call_timeout_ms: m.get_u64("call-timeout-ms", defaults.call_timeout_ms)?,
+        probe_interval_ms: m.get_u64("probe-interval-ms", defaults.probe_interval_ms)?,
+        repair_max_inflight: m.get_u32("repair-max-inflight", defaults.repair_max_inflight)?,
         ..Default::default()
     };
     let mount = cfg.mount.clone();

@@ -43,6 +43,39 @@ impl Placement {
         (path_hash(path) % self.nodes as u64) as u32
     }
 
+    /// All `r` homes of an *output* file.  The first entry is always
+    /// [`Self::output_home`] (the generation-stamping primary); replicas
+    /// follow the same stride pattern as [`Self::partition_holders`] so the
+    /// copies land on distinct nodes whenever `nodes >= replication`.
+    pub fn output_homes(&self, path: &str) -> Vec<u32> {
+        let primary = self.output_home(path);
+        let mut homes = Vec::with_capacity(self.replication as usize);
+        let stride = (self.nodes / self.replication).max(1);
+        for i in 0..self.replication {
+            let n = (primary + i * stride) % self.nodes;
+            if !homes.contains(&n) {
+                homes.push(n);
+            }
+        }
+        homes
+    }
+
+    /// Deterministic replacement holder after a failure: the first node,
+    /// scanning upward from `start`, that is not already in `exclude` and
+    /// not down.  Every node that observes the same down-set computes the
+    /// same adoptee, so repair needs no coordination round.  Returns `None`
+    /// when no eligible node exists (cluster too small or everyone down).
+    pub fn adopt_node(
+        &self,
+        exclude: &[u32],
+        start: u32,
+        is_down: impl Fn(u32) -> bool,
+    ) -> Option<u32> {
+        (0..self.nodes)
+            .map(|i| (start + i) % self.nodes)
+            .find(|&n| !exclude.contains(&n) && !is_down(n))
+    }
+
     /// Primary node hosting input partition `p`.
     pub fn partition_primary(&self, p: u32) -> u32 {
         p % self.nodes
@@ -139,6 +172,44 @@ mod tests {
                 assert_eq!(p.choose_holder(part, holder), holder);
             }
         }
+    }
+
+    #[test]
+    fn output_homes_first_is_primary_and_distinct() {
+        let p = Placement::new(8, 8, 3);
+        for i in 0..200 {
+            let path = format!("/ckpt/model_{i}.h5");
+            let homes = p.output_homes(&path);
+            assert_eq!(homes[0], p.output_home(&path));
+            assert_eq!(homes.len(), 3, "replicas must land on distinct nodes");
+            let mut uniq = homes.clone();
+            uniq.sort_unstable();
+            uniq.dedup();
+            assert_eq!(uniq.len(), homes.len());
+        }
+        // r = 1 degenerates to the single-home contract
+        let p1 = Placement::new(8, 8, 1);
+        assert_eq!(p1.output_homes("/a"), vec![p1.output_home("/a")]);
+    }
+
+    #[test]
+    fn adopt_node_is_deterministic_and_skips_down() {
+        let p = Placement::new(6, 12, 2);
+        let holders = p.partition_holders(4); // e.g. [4, 1]
+        let down = holders[1];
+        let adoptee = p
+            .adopt_node(&holders, (holders[0] + 1) % 6, |n| n == down)
+            .unwrap();
+        assert!(!holders.contains(&adoptee));
+        assert_ne!(adoptee, down);
+        // same inputs -> same answer, no matter who computes it
+        let again = p
+            .adopt_node(&holders, (holders[0] + 1) % 6, |n| n == down)
+            .unwrap();
+        assert_eq!(adoptee, again);
+        // everyone down or excluded -> None
+        assert_eq!(p.adopt_node(&[0, 1, 2, 3, 4, 5], 0, |_| false), None);
+        assert_eq!(p.adopt_node(&[], 0, |_| true), None);
     }
 
     #[test]

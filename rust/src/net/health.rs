@@ -163,13 +163,23 @@ impl HealthMap {
     }
 
     /// Exponential backoff with deterministic jitter before retry round
-    /// `attempt` (0-based): `base << attempt`, capped, plus up to +50%
-    /// jitter so recovering peers aren't hammered in phase.
+    /// `attempt` (0-based): `base · 2^attempt`, saturating at
+    /// `backoff_cap_ms`, plus up to +50% jitter so recovering peers aren't
+    /// hammered in phase.
+    ///
+    /// The growth is a saturating *multiplication*, not a shift:
+    /// `checked_shl` only rejects shift amounts ≥ 64 and silently drops
+    /// high bits otherwise, so `base << attempt` collapses to a tiny (or
+    /// zero) backoff once `base · 2^attempt` no longer fits in a `u64` —
+    /// the exact opposite of backing off.
     pub fn backoff(&self, attempt: u32) -> Duration {
+        let factor = 1u64
+            .checked_shl(attempt.min(63))
+            .expect("shift clamped below 64");
         let base = self
             .policy
             .backoff_base_ms
-            .saturating_shl(attempt.min(16))
+            .saturating_mul(factor)
             .min(self.policy.backoff_cap_ms)
             .max(1);
         let jitter = self.jitter.lock().unwrap().below(base / 2 + 1);
@@ -201,16 +211,6 @@ impl HealthMap {
         }
         live.extend_from_slice(&down);
         live
-    }
-}
-
-trait SaturatingShl {
-    fn saturating_shl(self, rhs: u32) -> Self;
-}
-
-impl SaturatingShl for u64 {
-    fn saturating_shl(self, rhs: u32) -> u64 {
-        self.checked_shl(rhs).unwrap_or(u64::MAX)
     }
 }
 
@@ -274,6 +274,93 @@ mod tests {
         let c = HealthMap::new(2, policy, 43);
         let sched_c: Vec<Duration> = (0..8).map(|n| c.backoff(n)).collect();
         assert_ne!(sched_a, sched_c, "different seed, different jitter");
+    }
+
+    #[test]
+    fn backoff_saturates_at_cap_for_huge_attempts_and_bases() {
+        // Regression: the old shift-based growth used `checked_shl`, which
+        // only rejects shift amounts >= 64 — it happily drops high bits, so
+        // a large base at a large attempt collapsed toward 0ms instead of
+        // pinning at the cap.  `2^63 << 1 == 0` is the canonical example.
+        let policy = HealthPolicy {
+            backoff_base_ms: 1 << 63,
+            backoff_cap_ms: 1000,
+            ..HealthPolicy::default()
+        };
+        let h = HealthMap::new(2, policy, 7);
+        for attempt in [1, 2, 16, 63, 64, 200, u32::MAX] {
+            let d = h.backoff(attempt).as_millis() as u64;
+            assert!(
+                (1000..=1500).contains(&d),
+                "attempt {attempt}: {d}ms escaped the cap window"
+            );
+        }
+        // small base, astronomically large attempt: still exactly cap+jitter
+        let policy = HealthPolicy {
+            backoff_base_ms: 3,
+            backoff_cap_ms: 80,
+            ..HealthPolicy::default()
+        };
+        let h = HealthMap::new(2, policy, 0xABCD);
+        // pin the exact jittered sequence against a parallel PRNG: every
+        // draw must be `cap + below(cap/2 + 1)` from the same seed stream
+        let mut reference = Prng::new(0xABCD);
+        for attempt in [100, 1000, u32::MAX - 1, u32::MAX] {
+            let expect = 80 + reference.below(41);
+            assert_eq!(
+                h.backoff(attempt).as_millis() as u64,
+                expect,
+                "attempt {attempt}: jitter sequence diverged"
+            );
+        }
+    }
+
+    #[test]
+    fn suspect_recovers_to_up_on_success_and_failure_count_resets() {
+        let h = map();
+        h.record_failure(1);
+        assert_eq!(h.state(1), PeerState::Suspect);
+        h.record_success(1, None);
+        assert_eq!(h.state(1), PeerState::Up);
+        // the consecutive-failure counter must reset too: one new failure
+        // re-suspects but does NOT carry over toward Down
+        assert!(!h.record_failure(1), "reset counter: not a Down transition");
+        assert_eq!(h.state(1), PeerState::Suspect);
+    }
+
+    #[test]
+    fn restart_epoch_bump_mid_backoff_window_resets_peer() {
+        let h = map();
+        h.note_pong(2, 500); // identify incarnation 500
+        h.record_failure(2);
+        h.record_failure(2);
+        assert_eq!(h.state(2), PeerState::Down);
+        // the prober is mid-backoff against the Down peer (draws consumed,
+        // attempts mounting) when a pong with a NEW epoch lands: the peer
+        // was replaced, not healed — note_pong must report the restart and
+        // reset state so stale Down/failure history doesn't taint the
+        // fresh incarnation
+        let _ = h.backoff(3);
+        let _ = h.backoff(4);
+        assert!(h.note_pong(2, 501), "new epoch during backoff = restart");
+        assert_eq!(h.state(2), PeerState::Up);
+        assert!(!h.record_failure(2), "failure history cleared by restart");
+        assert_eq!(h.state(2), PeerState::Suspect);
+    }
+
+    #[test]
+    fn candidate_order_with_every_holder_down_keeps_all_and_rotation() {
+        let h = map();
+        for peer in [0u32, 1, 2] {
+            h.record_failure(peer);
+            h.record_failure(peer);
+            assert_eq!(h.state(peer), PeerState::Down);
+        }
+        // nothing is dropped and the preferred-first rotation survives, so
+        // a fully-dark replica set still gets a deterministic try order
+        assert_eq!(h.order_candidates(&[0, 1, 2], 1), vec![1, 2, 0]);
+        assert_eq!(h.order_candidates(&[0, 1, 2], 2), vec![2, 0, 1]);
+        assert_eq!(h.order_candidates(&[0, 1, 2], 9), vec![0, 1, 2]);
     }
 
     #[test]

@@ -50,9 +50,19 @@ pub enum Request {
     /// [`MetaFetch`] per requested path, request order — `ReadFiles`'
     /// per-path-outcome shape applied to metadata.
     StatOutputs { paths: Vec<Arc<str>> },
-    /// Forward a finished output file's metadata to its home node
-    /// (visible-until-finish commit, §5.4).
-    CommitOutput { path: Arc<str>, meta: FileMeta },
+    /// Forward a finished output file's metadata *and bytes* to a home
+    /// node (visible-until-finish commit, §5.4; replicated homes PR 9).
+    /// `stamped == false` is the primary commit: the receiving home stamps
+    /// `meta.generation` from its commit counter and echoes it back in a
+    /// [`Response::Meta`].  `stamped == true` installs a replica (secondary
+    /// homes, repair pushes) with the generation already assigned, so all
+    /// homes agree on the stamp the primary chose.
+    CommitOutput {
+        path: Arc<str>,
+        meta: FileMeta,
+        data: Payload,
+        stamped: bool,
+    },
     /// List output files homed on this node under a directory.
     ListOutputs { dir: Arc<str> },
     /// Remove an output file's metadata at its home node; the reply names
@@ -71,6 +81,14 @@ pub enum Request {
     /// epoch; the reply carries the receiver's, so a restarted peer (new
     /// epoch) is distinguishable from the incarnation that was probed.
     Ping { epoch: u64 },
+    /// Stream the whole container blob of an input partition to a peer
+    /// (PR 9 re-replication pull).  The reply is a
+    /// [`Response::PartitionData`] riding the zero-copy [`Payload`] path.
+    FetchPartition { pid: u32 },
+    /// Install a partition blob on the receiving node (PR 9 re-replication
+    /// push — reseeding a restarted peer).  Idempotent: a node that
+    /// already holds `pid` replies Ok without re-indexing.
+    InstallPartition { pid: u32, blob: Payload },
     /// Orderly shutdown of the worker thread.
     Shutdown,
 }
@@ -144,6 +162,9 @@ pub enum Response {
     /// once per incarnation at seal time).  A changed epoch means the peer
     /// restarted since it was last seen.
     Pong { epoch: u64 },
+    /// A whole partition container blob (reply to
+    /// [`Request::FetchPartition`]) — the unit of background repair.
+    PartitionData { blob: Payload },
     Ok,
     Err(String),
 }
@@ -402,6 +423,17 @@ impl Response {
             Response::Err(e) => Err(FanError::Transport(e)),
             other => Err(FanError::Transport(format!(
                 "expected Metas, got {other:?}"
+            ))),
+        }
+    }
+
+    /// Unwrap a `PartitionData` (repair transfer) response.
+    pub fn into_partition_data(self) -> Result<Payload> {
+        match self {
+            Response::PartitionData { blob } => Ok(blob),
+            Response::Err(e) => Err(FanError::Transport(e)),
+            other => Err(FanError::Transport(format!(
+                "expected PartitionData, got {other:?}"
             ))),
         }
     }

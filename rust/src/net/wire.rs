@@ -56,6 +56,8 @@ const REQ_DROP_OUTPUT: u8 = 7;
 const REQ_SHUTDOWN: u8 = 8;
 const REQ_INVALIDATE_LISTINGS: u8 = 9;
 const REQ_PING: u8 = 10;
+const REQ_FETCH_PARTITION: u8 = 11;
+const REQ_INSTALL_PARTITION: u8 = 12;
 
 const RESP_FILE_DATA: u8 = 0;
 const RESP_FILES_DATA: u8 = 1;
@@ -65,6 +67,7 @@ const RESP_NAMES: u8 = 4;
 const RESP_OK: u8 = 5;
 const RESP_ERR: u8 = 6;
 const RESP_PONG: u8 = 7;
+const RESP_PARTITION_DATA: u8 = 8;
 
 const FETCH_DATA: u8 = 0;
 const FETCH_NOT_FOUND: u8 = 1;
@@ -630,10 +633,19 @@ pub fn encode_request(corr: u64, from: u32, req: &Request) -> Frame {
                 f.put_str(p);
             }
         }
-        Request::CommitOutput { path, meta } => {
+        Request::CommitOutput {
+            path,
+            meta,
+            data,
+            stamped,
+        } => {
             f.put_u8(REQ_COMMIT_OUTPUT);
             f.put_str(path);
             put_meta(&mut f, meta);
+            f.put_u8(u8::from(*stamped));
+            f.put_varint(data.raw_len());
+            f.put_u8(data.codec().to_wire());
+            f.put_shared(data.clone());
         }
         Request::ListOutputs { dir } => {
             f.put_u8(REQ_LIST_OUTPUTS);
@@ -654,6 +666,15 @@ pub fn encode_request(corr: u64, from: u32, req: &Request) -> Frame {
         Request::Ping { epoch } => {
             f.put_u8(REQ_PING);
             f.put_u64(*epoch);
+        }
+        Request::FetchPartition { pid } => {
+            f.put_u8(REQ_FETCH_PARTITION);
+            f.put_u32(*pid);
+        }
+        Request::InstallPartition { pid, blob } => {
+            f.put_u8(REQ_INSTALL_PARTITION);
+            f.put_u32(*pid);
+            f.put_shared(blob.clone());
         }
         Request::Shutdown => f.put_u8(REQ_SHUTDOWN),
     }
@@ -696,7 +717,20 @@ pub fn decode_request(body: &[u8], paths: &mut PathInterner) -> Result<(u64, u32
         REQ_COMMIT_OUTPUT => {
             let path = r.get_path(paths)?;
             let meta = get_meta(&mut r)?;
-            Request::CommitOutput { path, meta }
+            let stamped = match r.get_u8()? {
+                0 => false,
+                1 => true,
+                t => return Err(FanError::Format(format!("bad stamped flag {t}"))),
+            };
+            let raw_len = r.get_varint()?;
+            let codec = Codec::from_wire(r.get_u8()?)?;
+            let data = Payload::compressed(codec, raw_len, r.get_bytes()?);
+            Request::CommitOutput {
+                path,
+                meta,
+                data,
+                stamped,
+            }
         }
         REQ_LIST_OUTPUTS => Request::ListOutputs {
             dir: r.get_path(paths)?,
@@ -713,6 +747,12 @@ pub fn decode_request(body: &[u8], paths: &mut PathInterner) -> Result<(u64, u32
         REQ_PING => Request::Ping {
             epoch: r.get_u64()?,
         },
+        REQ_FETCH_PARTITION => Request::FetchPartition { pid: r.get_u32()? },
+        REQ_INSTALL_PARTITION => {
+            let pid = r.get_u32()?;
+            let blob = r.get_bytes()?;
+            Request::InstallPartition { pid, blob }
+        }
         REQ_SHUTDOWN => Request::Shutdown,
         t => return Err(FanError::Format(format!("unknown request tag {t}"))),
     };
@@ -780,6 +820,10 @@ pub fn encode_response(corr: u64, resp: &Response) -> Frame {
         Response::Pong { epoch } => {
             f.put_u8(RESP_PONG);
             f.put_u64(*epoch);
+        }
+        Response::PartitionData { blob } => {
+            f.put_u8(RESP_PARTITION_DATA);
+            f.put_shared(blob.clone());
         }
         Response::Ok => f.put_u8(RESP_OK),
         Response::Err(e) => {
@@ -861,6 +905,9 @@ pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Re
         RESP_PONG => Response::Pong {
             epoch: r.get_u64()?,
         },
+        RESP_PARTITION_DATA => Response::PartitionData {
+            blob: r.get_bytes()?,
+        },
         RESP_OK => Response::Ok,
         RESP_ERR => Response::Err(r.get_str()?),
         t => return Err(FanError::Format(format!("unknown response tag {t}"))),
@@ -931,11 +978,34 @@ mod tests {
         let (_, _, req) = roundtrip_request(&Request::CommitOutput {
             path: "/ckpt/m.bin".into(),
             meta: meta(42),
+            data: vec![7u8; 42].into(),
+            stamped: true,
         });
         match req {
-            Request::CommitOutput { path, meta: m } => {
+            Request::CommitOutput {
+                path,
+                meta: m,
+                data,
+                stamped,
+            } => {
                 assert_eq!(&*path, "/ckpt/m.bin");
                 assert_eq!(m, meta(42));
+                assert_eq!(data.as_slice(), &[7u8; 42][..]);
+                assert!(stamped);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        let (_, _, req) = roundtrip_request(&Request::FetchPartition { pid: 0xBEEF });
+        assert!(matches!(req, Request::FetchPartition { pid } if pid == 0xBEEF));
+        let (_, _, req) = roundtrip_request(&Request::InstallPartition {
+            pid: 3,
+            blob: vec![0xA5u8; 1024].into(),
+        });
+        match req {
+            Request::InstallPartition { pid, blob } => {
+                assert_eq!(pid, 3);
+                assert_eq!(blob.as_slice(), &[0xA5u8; 1024][..]);
             }
             other => panic!("unexpected {other:?}"),
         }
@@ -1057,6 +1127,13 @@ mod tests {
 
         let (_, resp) = roundtrip_response(&Response::Pong { epoch: 0x8000_0000_0001 });
         assert!(matches!(resp, Response::Pong { epoch } if epoch == 0x8000_0000_0001));
+        let (_, resp) = roundtrip_response(&Response::PartitionData {
+            blob: vec![0x5Au8; 2048].into(),
+        });
+        match resp {
+            Response::PartitionData { blob } => assert_eq!(blob.as_slice(), &[0x5Au8; 2048][..]),
+            other => panic!("unexpected {other:?}"),
+        }
         let (_, resp) = roundtrip_response(&Response::Ok);
         assert!(matches!(resp, Response::Ok));
         let (_, resp) = roundtrip_response(&Response::Err("nope".into()));
@@ -1094,6 +1171,8 @@ mod tests {
             &Request::CommitOutput {
                 path: "/ckpt/x".into(),
                 meta: meta(3),
+                data: vec![1u8; 3].into(),
+                stamped: false,
             },
         )
         .to_body_bytes();
@@ -1102,6 +1181,35 @@ mod tests {
             assert!(
                 decode_request(&body[..cut], &mut it).is_err(),
                 "cut at {cut} must fail"
+            );
+        }
+        // repair transfer frames: payload length prefixes under the knife
+        let body = encode_request(
+            7,
+            2,
+            &Request::InstallPartition {
+                pid: 5,
+                blob: vec![2u8; 32].into(),
+            },
+        )
+        .to_body_bytes();
+        for cut in 0..body.len() {
+            assert!(
+                decode_request(&body[..cut], &mut it).is_err(),
+                "install cut at {cut} must fail"
+            );
+        }
+        let body = encode_response(
+            8,
+            &Response::PartitionData {
+                blob: vec![3u8; 32].into(),
+            },
+        )
+        .to_body_bytes();
+        for cut in 0..body.len() {
+            assert!(
+                decode_response(&body[..cut], &mut it).is_err(),
+                "partition-data cut at {cut} must fail"
             );
         }
         let resp = Response::FilesData(vec![(

@@ -26,8 +26,8 @@
 //! on [`NodeBuilder`]; [`NodeBuilder::seal`] freezes them into the shared,
 //! lock-free `NodeShared`.
 
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, HashSet};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -89,6 +89,21 @@ pub struct NodeStats {
     /// Reads that exhausted every holder / the retry budget and degraded
     /// to a real error (EIO to the caller — never a hang).
     pub degraded_reads: u64,
+    /// Keepalive pings issued by this node's prober (PR 9) — every probe,
+    /// whether it answered or not.
+    pub probes_sent: u64,
+    /// Down peers a probe found alive again (Down → Up via the prober, not
+    /// via a lucky data round trip).
+    pub peers_recovered: u64,
+    /// Repair transfers this node started as the adopting/driving side
+    /// (partition pulls, reseed pushes, output re-commits).
+    pub repairs_started: u64,
+    /// Repair transfers that installed successfully.  `repairs_started -
+    /// repairs_completed` = transfers still failing (retried next tick).
+    pub repairs_completed: u64,
+    /// Σ blob/data bytes over completed repairs — exact ledger algebra:
+    /// each completed repair adds exactly its transferred size.
+    pub repaired_bytes: u64,
     /// Tier migrations executed by this node's migrator (PR 8): spill→RAM
     /// promotions, RAM→spill demotions, and the bytes moved either way
     /// (`migrated_bytes` = Σ blob sizes over both directions, so
@@ -127,6 +142,11 @@ pub struct AtomicNodeStats {
     pub retries: AtomicU64,
     pub peers_marked_down: AtomicU64,
     pub degraded_reads: AtomicU64,
+    pub probes_sent: AtomicU64,
+    pub peers_recovered: AtomicU64,
+    pub repairs_started: AtomicU64,
+    pub repairs_completed: AtomicU64,
+    pub repaired_bytes: AtomicU64,
     pub decoded_cache_hits: AtomicU64,
 }
 
@@ -163,6 +183,11 @@ impl AtomicNodeStats {
             retries: ld(&self.retries),
             peers_marked_down: ld(&self.peers_marked_down),
             degraded_reads: ld(&self.degraded_reads),
+            probes_sent: ld(&self.probes_sent),
+            peers_recovered: ld(&self.peers_recovered),
+            repairs_started: ld(&self.repairs_started),
+            repairs_completed: ld(&self.repairs_completed),
+            repaired_bytes: ld(&self.repaired_bytes),
             // tallied inside DiskStore; merged by NodeShared::stats_snapshot
             promotions: 0,
             demotions: 0,
@@ -201,6 +226,20 @@ pub struct NodeBuilder {
     /// with a non-noop policy — tests drive [`NodeShared::migrate_tick`]
     /// directly for determinism.
     pub migrate_interval_ms: u64,
+    /// Mount prefix input paths were indexed under — needed at repair time
+    /// so an installed partition's entries land at the same paths the
+    /// replicated metadata names.  The coordinator sets this from
+    /// `ClusterConfig::mount`.
+    pub mount: String,
+    /// Keepalive/repair tick interval for the recovery thread started by
+    /// [`NodeShared::start_recovery`].  0 disables the thread — tests
+    /// drive [`NodeShared::probe_tick`] / [`NodeShared::repair_tick`]
+    /// directly for determinism.
+    pub probe_interval_ms: u64,
+    /// Max partition/output transfers one repair tick may start
+    /// (`--repair-max-inflight`) — keeps repair from flooding the fabric
+    /// the moment a node dies.
+    pub repair_max_inflight: u32,
 }
 
 /// Process-global node-epoch source: every sealed [`NodeShared`] gets a
@@ -222,6 +261,9 @@ impl NodeBuilder {
             tier_policy: PlacementKind::Noop,
             ram_budget_bytes: 0,
             migrate_interval_ms: 0,
+            mount: String::new(),
+            probe_interval_ms: 0,
+            repair_max_inflight: 2,
         }
     }
 
@@ -246,13 +288,24 @@ impl NodeBuilder {
             tier_policy: Mutex::new(self.tier_policy.build()),
             migrator: Mutex::new(None),
             migrator_stop: Arc::new((Mutex::new(false), Condvar::new())),
+            mount: self.mount,
+            repair_max_inflight: self.repair_max_inflight,
+            probe_interval_ms: self.probe_interval_ms,
+            installed: RwLock::new(DiskStore::in_memory()),
+            has_installed: AtomicBool::new(false),
+            overrides: RwLock::new(HashMap::new()),
+            has_overrides: AtomicBool::new(false),
+            reseed: Mutex::new(Vec::new()),
+            output_repairs_done: Mutex::new(HashSet::new()),
+            probe_sched: Mutex::new(vec![ProbeSched::default(); peer_count as usize]),
+            recovery: Mutex::new(None),
+            recovery_stop: Arc::new((Mutex::new(false), Condvar::new())),
             output_meta: RwLock::new(MetaTable::new()),
             output_data: RwLock::new(HashMap::new()),
             output_meta_cache: RwLock::new(HashMap::new()),
             output_gen: RwLock::new(HashMap::new()),
             commit_seq: AtomicU64::new(1),
-            readdir_cache: RwLock::new(HashMap::new()),
-            listing_gen: AtomicU64::new(0),
+            listings: RwLock::new(ListingCache::default()),
             stats: AtomicNodeStats::default(),
         });
         let wants_migrator = self.tier_policy != PlacementKind::Noop
@@ -348,6 +401,45 @@ pub struct NodeShared {
     migrator: Mutex<Option<JoinHandle<()>>>,
     /// Stop flag + condvar the migrator sleeps on.
     migrator_stop: Arc<(Mutex<bool>, Condvar)>,
+    /// Mount prefix for re-indexing repaired partitions (see
+    /// [`NodeBuilder::mount`]).
+    pub mount: String,
+    /// Per-tick transfer throttle for [`NodeShared::repair_tick`].
+    pub repair_max_inflight: u32,
+    /// Recovery-thread tick interval ([`NodeShared::start_recovery`]).
+    pub probe_interval_ms: u64,
+    /// Partitions this node adopted through background repair (PR 9).  A
+    /// second, mutable store beside the sealed launch-time `store`: reads
+    /// consult it on a sealed-store miss, `serve(FetchPartition)` serves
+    /// from either.  RAM-backed — repaired replicas are a recovery
+    /// measure, not a tiering concern.
+    installed: RwLock<DiskStore>,
+    /// Fast-path guard: false until the first install, so the healthy read
+    /// path never takes the `installed` lock.
+    has_installed: AtomicBool,
+    /// Holder-override map: partition → adopted holders *other nodes*
+    /// installed (deterministically computed by every node's repair tick
+    /// from its own down-set).  Consulted by the batched read path when
+    /// building the candidate list — overrides are appended to the
+    /// placement holders and health-ordered with them.
+    overrides: RwLock<HashMap<u32, Vec<u32>>>,
+    /// Fast-path guard mirroring `has_installed` for `overrides`.
+    has_overrides: AtomicBool,
+    /// Peers the prober saw restart (new epoch): the next repair tick
+    /// pushes their partitions back via `InstallPartition`.
+    reseed: Mutex<Vec<u32>>,
+    /// Output repairs already pushed, keyed by (path, adoptee) — keeps the
+    /// repair ledger exact across ticks (re-pushing is idempotent but must
+    /// not double-count).
+    output_repairs_done: Mutex<HashSet<(String, u32)>>,
+    /// Per-peer probe backoff schedule (attempt count + earliest next
+    /// probe) for Down peers.
+    probe_sched: Mutex<Vec<ProbeSched>>,
+    /// Background recovery thread handle (prober + repairer; None until
+    /// [`NodeShared::start_recovery`], or when `probe_interval_ms` is 0).
+    recovery: Mutex<Option<JoinHandle<()>>>,
+    /// Stop flag + condvar the recovery thread sleeps on.
+    recovery_stop: Arc<(Mutex<bool>, Condvar)>,
     /// Output metadata homed on this node by the consistent hash (§5.3).
     pub output_meta: RwLock<MetaTable>,
     /// Output file bytes kept on their originating node (§5.4: the data is
@@ -372,13 +464,62 @@ pub struct NodeShared {
     /// names + the cluster-wide `ListOutputs` gather), so a steady-state
     /// listing is a local lookup.  Any commit/unlink invalidates it: the
     /// local serve path directly, remote mutators via the writer's
-    /// `InvalidateListings` broadcast (see `FanStoreVfs`).
-    pub readdir_cache: RwLock<HashMap<String, Arc<Vec<String>>>>,
-    /// Invalidation watermark for `readdir_cache`: bumped by every
-    /// invalidation; a gather stamped with an older value may not install
-    /// its (possibly stale) listing.
-    pub listing_gen: AtomicU64,
+    /// `InvalidateListings` broadcast (see `FanStoreVfs`).  Install
+    /// watermarks are **per-directory** (PR 9): a gather for `/a` can
+    /// still install while a racing commit mutates `/b` — see
+    /// [`ListingCache`].
+    listings: RwLock<ListingCache>,
     pub stats: AtomicNodeStats,
+}
+
+/// The `readdir` listing cache with per-directory install watermarks.
+///
+/// A monotonic `clock` stamps every invalidation; each mutated directory
+/// records the stamp it was invalidated at (`dir_gens`), and a blanket
+/// invalidation raises the global `floor`.  A gather samples the clock
+/// *before* collecting and may install for `dir` only if no invalidation
+/// of *that directory* (and no blanket one) stamped later — so unrelated
+/// in-flight gathers install even while another directory churns.
+#[derive(Default)]
+struct ListingCache {
+    entries: HashMap<String, Arc<Vec<String>>>,
+    /// Clock value at each directory's most recent invalidation.
+    dir_gens: HashMap<String, u64>,
+    /// Clock value at the most recent blanket invalidation.
+    floor: u64,
+    /// Monotonic invalidation stamp source.
+    clock: u64,
+}
+
+/// Per-peer probe scheduling state: how many consecutive probes have
+/// failed and the earliest instant the next one may go out (Down peers
+/// are re-probed on the health map's jittered backoff schedule, not every
+/// tick).
+#[derive(Clone, Copy, Debug, Default)]
+struct ProbeSched {
+    attempts: u32,
+    next_at: Option<Instant>,
+}
+
+/// What one [`NodeShared::probe_tick`] did (counters also land in
+/// `probes_sent` / `peers_recovered`).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ProbeReport {
+    /// Probes issued this tick.
+    pub probes: u64,
+    /// Down peers found alive again.
+    pub recovered: u64,
+    /// Peers whose pong carried a new epoch (restarted incarnations) —
+    /// queued for reseeding by the next repair tick.
+    pub restarted: Vec<u32>,
+}
+
+/// What one [`NodeShared::repair_tick`] did (mirrored in the
+/// `repairs_started` / `repairs_completed` / `repaired_bytes` counters).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct RepairReport {
+    pub started: u64,
+    pub completed: u64,
 }
 
 /// Where one successfully fetched input in a [`NodeShared::fetch_inputs_batched`]
@@ -473,36 +614,40 @@ impl NodeShared {
         }
     }
 
-    /// Current watermark of the listing cache (sample it *before* starting
-    /// a gather; pass it back to [`NodeShared::install_listing`]).
+    /// Current stamp of the listing-cache invalidation clock (sample it
+    /// *before* starting a gather; pass it back to
+    /// [`NodeShared::install_listing`]).
     pub fn listing_generation(&self) -> u64 {
-        self.listing_gen.load(Ordering::Acquire)
+        self.listings.read().unwrap().clock
     }
 
-    /// Drop every cached listing and advance the generation, so a gather
-    /// that started before this point can no longer install a stale entry.
-    /// The blanket fallback — mutations with a known path use the
-    /// directory-granular [`NodeShared::invalidate_listings_for`].
+    /// Drop every cached listing and raise the blanket floor, so a gather
+    /// that started before this point can no longer install a stale entry
+    /// for *any* directory.  The blanket fallback — mutations with a known
+    /// path use the directory-granular
+    /// [`NodeShared::invalidate_listings_for`].
     pub fn invalidate_listings(&self) {
-        let mut cache = self.readdir_cache.write().unwrap();
-        self.listing_gen.fetch_add(1, Ordering::AcqRel);
-        cache.clear();
+        let mut cache = self.listings.write().unwrap();
+        cache.clock += 1;
+        cache.floor = cache.clock;
+        cache.dir_gens.clear(); // subsumed by the floor
+        cache.entries.clear();
     }
 
-    /// Directory-granular invalidation: drop only the cached listings a
-    /// mutation of `path` can change — its ancestor directory chain (the
-    /// immediate parent gains/loses the name; higher ancestors may gain/
-    /// lose a subdirectory).  Unrelated hot listings stay cached across
-    /// checkpoints.  The generation still advances globally, so any
-    /// in-flight gather stamped before this point is (conservatively)
-    /// rejected at install time — correctness never depends on the
-    /// granularity.
+    /// Directory-granular invalidation: stamp and drop only the cached
+    /// listings a mutation of `path` can change — its ancestor directory
+    /// chain (the immediate parent gains/loses the name; higher ancestors
+    /// may gain/lose a subdirectory).  Unrelated hot listings stay cached
+    /// across checkpoints, and — per-directory watermarks, PR 9 — an
+    /// unrelated *in-flight* gather may still install when it lands.
     pub fn invalidate_listings_for(&self, path: &str) {
-        let mut cache = self.readdir_cache.write().unwrap();
-        self.listing_gen.fetch_add(1, Ordering::AcqRel);
+        let mut cache = self.listings.write().unwrap();
+        cache.clock += 1;
+        let stamp = cache.clock;
         let mut dir = crate::metadata::table::parent(path);
         loop {
-            cache.remove(dir);
+            cache.dir_gens.insert(dir.to_string(), stamp);
+            cache.entries.remove(dir);
             if dir == "/" {
                 break;
             }
@@ -510,20 +655,27 @@ impl NodeShared {
         }
     }
 
-    /// Install a gathered listing for `dir` unless an invalidation has
-    /// happened since the caller sampled `gen` (both the stamp check and
-    /// the insert happen under the cache lock, so they are atomic with
-    /// respect to `invalidate_listings`).
+    /// Install a gathered listing for `dir` unless *that directory* (or
+    /// everything, via a blanket invalidation) was invalidated after the
+    /// caller sampled `gen` (both the stamp check and the insert happen
+    /// under the cache lock, so they are atomic with respect to the
+    /// invalidation paths).
     pub fn install_listing(&self, dir: &str, gen: u64, names: &[String]) {
-        let mut cache = self.readdir_cache.write().unwrap();
-        if self.listing_gen.load(Ordering::Acquire) == gen {
-            cache.insert(dir.to_string(), Arc::new(names.to_vec()));
+        let mut cache = self.listings.write().unwrap();
+        let barrier = cache
+            .dir_gens
+            .get(dir)
+            .copied()
+            .unwrap_or(0)
+            .max(cache.floor);
+        if barrier <= gen {
+            cache.entries.insert(dir.to_string(), Arc::new(names.to_vec()));
         }
     }
 
     /// Cached merged listing for `dir`, if the cache holds a fresh one.
     pub fn cached_listing(&self, dir: &str) -> Option<Arc<Vec<String>>> {
-        self.readdir_cache.read().unwrap().get(dir).cloned()
+        self.listings.read().unwrap().entries.get(dir).cloned()
     }
 
     /// Serve a peer's request (also used directly for self-requests so the
@@ -579,16 +731,38 @@ impl NodeShared {
                         .collect(),
                 )
             }
-            Request::CommitOutput { path, meta } => {
-                // the home node is the serializer for a path: stamping the
-                // generation here guarantees two commits of the same name
-                // are distinguishable even with identical origin and size
+            Request::CommitOutput {
+                path,
+                meta,
+                data,
+                stamped,
+            } => {
+                // the primary home is the serializer for a path: stamping
+                // the generation here guarantees two commits of the same
+                // name are distinguishable even with identical origin and
+                // size.  Secondary homes and repair pushes arrive
+                // pre-stamped (`stamped == true`) so every home agrees on
+                // the primary's stamp.
                 let mut meta = meta.clone();
-                meta.generation = self.commit_seq.fetch_add(1, Ordering::Relaxed);
+                if !*stamped {
+                    meta.generation = self.commit_seq.fetch_add(1, Ordering::Relaxed);
+                }
+                // every home keeps the bytes too (PR 9): an output must
+                // survive the death of its origin, so reads can fail over
+                // to any home's buffered copy
+                self.output_data
+                    .write()
+                    .unwrap()
+                    .insert(path.to_string(), data.clone().into_arc());
+                let reply = Response::Meta {
+                    stat: meta.stat,
+                    origin: meta.location.node,
+                    generation: meta.generation,
+                };
                 self.output_meta.write().unwrap().insert(path, meta);
                 // the new name is listable: its ancestor listings are stale
                 self.invalidate_listings_for(path);
-                Response::Ok
+                reply
             }
             Request::ListOutputs { dir } => {
                 let names = self
@@ -636,8 +810,91 @@ impl NodeShared {
                 Response::Ok
             }
             Request::Ping { .. } => Response::Pong { epoch: self.epoch },
+            Request::FetchPartition { pid } => match self.partition_blob(*pid) {
+                Ok(blob) => {
+                    self.stats
+                        .bytes_served_remote
+                        .fetch_add(blob.len() as u64, Ordering::Relaxed);
+                    Response::PartitionData { blob }
+                }
+                Err(e) => Response::Err(format!("ENOPART {pid}: {e}")),
+            },
+            Request::InstallPartition { pid, blob } => match self.install_partition(*pid, blob) {
+                Ok(_) => Response::Ok,
+                Err(e) => Response::Err(format!("EINSTALL {pid}: {e}")),
+            },
             Request::Shutdown => Response::Ok,
         }
+    }
+
+    /// The whole container blob of `pid`, from the sealed launch-time
+    /// store or the repair-installed side store.
+    pub fn partition_blob(&self, pid: u32) -> Result<Payload> {
+        if self.store.has_partition(pid) {
+            return self.store.partition_blob(pid);
+        }
+        self.installed.read().unwrap().partition_blob(pid)
+    }
+
+    /// Does this node hold partition `pid` (launch-time or repaired)?
+    pub fn holds_partition(&self, pid: u32) -> bool {
+        self.store.has_partition(pid)
+            || (self.has_installed.load(Ordering::Relaxed)
+                && self.installed.read().unwrap().has_partition(pid))
+    }
+
+    /// Index a partition blob into the repair-installed side store
+    /// (idempotent: a node already holding `pid` returns `Ok(0)` without
+    /// re-indexing).  Returns the number of files installed.
+    pub fn install_partition(&self, pid: u32, blob: &Payload) -> Result<u32> {
+        if self.holds_partition(pid) {
+            return Ok(0);
+        }
+        let mut st = self.installed.write().unwrap();
+        if st.has_partition(pid) {
+            return Ok(0); // raced with another installer
+        }
+        let n = st.load_partition(pid, blob.to_vec(), &self.mount)?;
+        drop(st);
+        self.has_installed.store(true, Ordering::Release);
+        Ok(n)
+    }
+
+    /// Record that `adoptee` is (or will be) an extra holder of `pid`.
+    /// Advisory, per-node: every node that observes the same down-set
+    /// computes the same adoptee, so readers learn the override from their
+    /// own repair ticks without a coordination round.  Self-knowledge
+    /// lives in the `installed` store, not here.
+    pub fn register_override(&self, pid: u32, adoptee: u32) {
+        if adoptee == self.id {
+            return;
+        }
+        let mut ov = self.overrides.write().unwrap();
+        let v = ov.entry(pid).or_default();
+        if !v.contains(&adoptee) {
+            v.push(adoptee);
+            self.has_overrides.store(true, Ordering::Release);
+        }
+    }
+
+    /// Placement holders of `pid` plus any repair-adopted holders from the
+    /// override map — the candidate list the batched read path hands to
+    /// [`HealthMap::order_candidates`].  Overrides are appended after the
+    /// placement holders, so with everyone healthy the order is unchanged;
+    /// the health ordering then ranks an Up adoptee ahead of Down
+    /// original holders.
+    pub fn candidate_holders(&self, pid: u32) -> Vec<u32> {
+        let mut holders = self.placement.partition_holders(pid);
+        if self.has_overrides.load(Ordering::Relaxed) {
+            if let Some(extra) = self.overrides.read().unwrap().get(&pid) {
+                for &n in extra {
+                    if !holders.contains(&n) {
+                        holders.push(n);
+                    }
+                }
+            }
+        }
+        holders
     }
 
     /// Read one stored (or output-buffered) file for a peer, reporting the
@@ -646,7 +903,7 @@ impl NodeShared {
     /// ships as [`Payload::Compressed`], so the wire carries the small
     /// representation and the *reader* decides when to expand it.
     pub fn fetch_stored(&self, path: &str) -> FileFetch {
-        match self.store.read_stored(path) {
+        match self.read_stored_any(path) {
             Ok((stored, _at)) => {
                 self.stats.remote_reads_served.fetch_add(1, Ordering::Relaxed);
                 self.stats
@@ -677,14 +934,35 @@ impl NodeShared {
     }
 
     /// Which node this node should fetch an input's bytes from: itself for
-    /// replicated directories (§5.4 test-set broadcast — always local),
-    /// else the placement's nearest holder.  Shared by every read path so
-    /// a placement-policy change lands exactly once.
+    /// replicated directories (§5.4 test-set broadcast — always local) and
+    /// for partitions it adopted through repair, else the placement's
+    /// nearest holder.  Shared by every read path so a placement-policy
+    /// change lands exactly once.
     pub fn holder_of(&self, loc: &FileLocation) -> u32 {
         if loc.partition == crate::metadata::record::REPLICATED_PARTITION {
-            self.id
-        } else {
-            self.placement.choose_holder(loc.partition, self.id)
+            return self.id;
+        }
+        if self.has_installed.load(Ordering::Relaxed)
+            && self.installed.read().unwrap().has_partition(loc.partition)
+        {
+            return self.id;
+        }
+        self.placement.choose_holder(loc.partition, self.id)
+    }
+
+    /// Read a stored input from the sealed launch-time store, falling back
+    /// to the repair-installed side store on a miss.  The healthy path
+    /// pays nothing: the fallback is gated on `has_installed`.
+    fn read_stored_any(&self, path: &str) -> Result<(Payload, crate::storage::disk::StoredAt)> {
+        match self.store.read_stored(path) {
+            Err(crate::error::FanError::NotFound(e)) => {
+                if self.has_installed.load(Ordering::Relaxed) {
+                    self.installed.read().unwrap().read_stored(path)
+                } else {
+                    Err(crate::error::FanError::NotFound(e))
+                }
+            }
+            r => r,
         }
     }
 
@@ -788,7 +1066,10 @@ impl NodeShared {
             if holder == self.id {
                 local.push(path);
             } else {
-                let holders = self.placement.partition_holders(loc.partition);
+                // placement holders plus repair-adopted overrides,
+                // health-ordered (Down holders last, adoptees ranked by
+                // their own liveness)
+                let holders = self.candidate_holders(loc.partition);
                 let candidates = self.health.order_candidates(&holders, holder);
                 work.push((path, candidates, 0));
             }
@@ -831,7 +1112,7 @@ impl NodeShared {
             // serve the local share while the peers work (first round only)
             if round == 0 {
                 for path in std::mem::take(&mut local) {
-                    let outcome = match self.store.read_stored(&path) {
+                    let outcome = match self.read_stored_any(&path) {
                         Ok((stored, _)) => {
                             stats.local_reads.fetch_add(1, Ordering::Relaxed);
                             stats
@@ -939,6 +1220,350 @@ impl NodeShared {
             }
         }
     }
+
+    /// One keepalive tick (PR 9): probe every peer, feeding the health
+    /// map.  Up/Suspect peers are probed every tick (failure *detection*
+    /// between reads); Down peers only once their jittered backoff
+    /// deadline passes (recovery *discovery* without hammering a corpse).
+    /// A probe that finds a Down peer alive counts `peers_recovered`; a
+    /// pong with a new epoch queues the restarted peer for reseeding by
+    /// the next [`NodeShared::repair_tick`].  Normally driven by the
+    /// recovery thread ([`NodeShared::start_recovery`]); tests call it
+    /// directly for deterministic schedules.
+    pub fn probe_tick(&self, transport: &dyn Transport) -> ProbeReport {
+        let mut report = ProbeReport::default();
+        let now = Instant::now();
+        for peer in 0..self.placement.nodes {
+            if peer == self.id {
+                continue;
+            }
+            let was = self.health.state(peer);
+            if was == crate::net::health::PeerState::Down {
+                let sched = self.probe_sched.lock().unwrap()[peer as usize];
+                if matches!(sched.next_at, Some(at) if now < at) {
+                    continue; // still backing off this peer
+                }
+            }
+            self.stats.probes_sent.fetch_add(1, Ordering::Relaxed);
+            report.probes += 1;
+            match self.probe_peer(transport, peer) {
+                Ok(restarted) => {
+                    if was == crate::net::health::PeerState::Down {
+                        self.stats.peers_recovered.fetch_add(1, Ordering::Relaxed);
+                        report.recovered += 1;
+                    }
+                    self.probe_sched.lock().unwrap()[peer as usize] = ProbeSched::default();
+                    if restarted {
+                        report.restarted.push(peer);
+                        let mut rs = self.reseed.lock().unwrap();
+                        if !rs.contains(&peer) {
+                            rs.push(peer);
+                        }
+                    }
+                }
+                Err(_) => {
+                    // schedule the re-probe on the seeded-jitter backoff
+                    // curve; the attempt count only grows while the peer
+                    // stays unreachable
+                    let delay = {
+                        let attempts = self.probe_sched.lock().unwrap()[peer as usize].attempts;
+                        self.health.backoff(attempts)
+                    };
+                    let mut sched = self.probe_sched.lock().unwrap();
+                    let s = &mut sched[peer as usize];
+                    s.attempts = s.attempts.saturating_add(1);
+                    s.next_at = Some(now + delay);
+                }
+            }
+        }
+        report
+    }
+
+    /// One repair tick (PR 9): re-converge toward full replication after
+    /// the health map's view changed.
+    ///
+    /// * **Input partitions** — for every partition with a Down holder, a
+    ///   replacement holder is computed deterministically
+    ///   ([`Placement::adopt_node`]) from this node's own down-set and
+    ///   recorded in the override map; if *this* node is the adoptee it
+    ///   pulls the blob from the first live holder (`FetchPartition`) and
+    ///   indexes it into the side store.
+    /// * **Restarted peers** — partitions belonging to a peer the prober
+    ///   saw restart are pushed back to it (`InstallPartition`) by its
+    ///   lowest-id live co-holder.
+    /// * **Outputs** — for every output homed here whose co-home set lost
+    ///   a node, the lowest-id live home re-commits (pre-stamped
+    ///   generation, `CommitOutput { stamped: true }`) to the adoptee.
+    ///
+    /// At most `repair_max_inflight` transfers start per tick; everything
+    /// skipped is retried next tick (the under-replication predicate is
+    /// re-derived, so the tick is idempotent and converges).
+    pub fn repair_tick(&self, transport: &dyn Transport) -> RepairReport {
+        let mut rep = RepairReport::default();
+        let down: Vec<bool> = (0..self.placement.nodes)
+            .map(|p| p != self.id && self.health.state(p) == crate::net::health::PeerState::Down)
+            .collect();
+        let budget = self.repair_max_inflight.max(1) as u64;
+        let mut inflight = 0u64;
+
+        // -- input partitions: pull-based adoption ----------------------
+        if down.iter().any(|&d| d) {
+            for pid in 0..self.placement.partitions {
+                let holders = self.placement.partition_holders(pid);
+                if !holders.iter().any(|&h| down[h as usize]) {
+                    continue; // fully replicated (as far as we can see)
+                }
+                let live: Vec<u32> = holders
+                    .iter()
+                    .copied()
+                    .filter(|&h| !down[h as usize])
+                    .collect();
+                if live.is_empty() {
+                    continue; // no surviving copy to repair from
+                }
+                let start = (self.placement.partition_primary(pid) + 1) % self.placement.nodes;
+                let Some(adoptee) =
+                    self.placement
+                        .adopt_node(&holders, start, |n| down[n as usize])
+                else {
+                    continue; // cluster too small / everyone else down
+                };
+                self.register_override(pid, adoptee);
+                if adoptee != self.id || self.holds_partition(pid) {
+                    continue;
+                }
+                if inflight >= budget {
+                    continue; // throttled; next tick re-derives the need
+                }
+                inflight += 1;
+                self.stats.repairs_started.fetch_add(1, Ordering::Relaxed);
+                rep.started += 1;
+                for &src in &self.health.order_candidates(&live, live[0]) {
+                    if src == self.id {
+                        continue;
+                    }
+                    let got = transport
+                        .call(self.id, src, Request::FetchPartition { pid })
+                        .and_then(|r| r.into_partition_data());
+                    match got {
+                        Ok(blob) => {
+                            self.health.record_success(src, None);
+                            if self.install_partition(pid, &blob).is_ok() {
+                                self.stats.repairs_completed.fetch_add(1, Ordering::Relaxed);
+                                self.stats
+                                    .repaired_bytes
+                                    .fetch_add(blob.len() as u64, Ordering::Relaxed);
+                                rep.completed += 1;
+                            }
+                            break;
+                        }
+                        Err(_) => {
+                            if self.health.record_failure(src) {
+                                self.stats.peers_marked_down.fetch_add(1, Ordering::Relaxed);
+                                transport.evict(src);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+
+        // -- restarted peers: push their partitions back ----------------
+        let peers: Vec<u32> = std::mem::take(&mut *self.reseed.lock().unwrap());
+        for peer in peers {
+            let mut retry = false;
+            for pid in 0..self.placement.partitions {
+                let holders = self.placement.partition_holders(pid);
+                if !holders.contains(&peer) {
+                    continue;
+                }
+                // lowest-id live co-holder drives, so exactly one node
+                // pushes each partition
+                let driver = holders
+                    .iter()
+                    .copied()
+                    .filter(|&h| h != peer && !down[h as usize])
+                    .min();
+                if driver != Some(self.id) {
+                    continue;
+                }
+                if inflight >= budget {
+                    retry = true;
+                    continue;
+                }
+                let Ok(blob) = self.partition_blob(pid) else {
+                    continue;
+                };
+                inflight += 1;
+                self.stats.repairs_started.fetch_add(1, Ordering::Relaxed);
+                rep.started += 1;
+                let sent = transport.call(
+                    self.id,
+                    peer,
+                    Request::InstallPartition {
+                        pid,
+                        blob: blob.clone(),
+                    },
+                );
+                match sent {
+                    Ok(Response::Ok) => {
+                        self.stats.repairs_completed.fetch_add(1, Ordering::Relaxed);
+                        self.stats
+                            .repaired_bytes
+                            .fetch_add(blob.len() as u64, Ordering::Relaxed);
+                        rep.completed += 1;
+                    }
+                    _ => retry = true,
+                }
+            }
+            if retry {
+                let mut rs = self.reseed.lock().unwrap();
+                if !rs.contains(&peer) {
+                    rs.push(peer);
+                }
+            }
+        }
+
+        // -- outputs homed here: re-commit to an adopted home -----------
+        if down.iter().any(|&d| d) {
+            let my_outputs: Vec<(String, FileMeta)> = {
+                let t = self.output_meta.read().unwrap();
+                t.paths()
+                    .filter_map(|p| t.get(p).map(|m| (p.clone(), m.clone())))
+                    .collect()
+            };
+            for (path, meta) in my_outputs {
+                let homes = self.placement.output_homes(&path);
+                if !homes.contains(&self.id) {
+                    continue; // adopted copies serve reads, they don't re-adopt
+                }
+                if !homes.iter().any(|&h| down[h as usize]) {
+                    continue;
+                }
+                let live_min = homes
+                    .iter()
+                    .copied()
+                    .filter(|&h| !down[h as usize])
+                    .min();
+                if live_min != Some(self.id) {
+                    continue; // another live home drives this path
+                }
+                let start = (homes[0] + 1) % self.placement.nodes;
+                let Some(adoptee) =
+                    self.placement
+                        .adopt_node(&homes, start, |n| down[n as usize])
+                else {
+                    continue;
+                };
+                let done_key = (path.clone(), adoptee);
+                if self.output_repairs_done.lock().unwrap().contains(&done_key) {
+                    continue;
+                }
+                let Some(data) = self.output_data.read().unwrap().get(&path).cloned() else {
+                    continue; // meta-only entry (pre-replication commit)
+                };
+                if inflight >= budget {
+                    continue;
+                }
+                inflight += 1;
+                self.stats.repairs_started.fetch_add(1, Ordering::Relaxed);
+                rep.started += 1;
+                let bytes = data.len() as u64;
+                let sent = transport.call(
+                    self.id,
+                    adoptee,
+                    Request::CommitOutput {
+                        path: path.as_str().into(),
+                        meta,
+                        data: data.into(),
+                        stamped: true,
+                    },
+                );
+                if matches!(sent, Ok(Response::Ok | Response::Meta { .. })) {
+                    self.stats.repairs_completed.fetch_add(1, Ordering::Relaxed);
+                    self.stats.repaired_bytes.fetch_add(bytes, Ordering::Relaxed);
+                    rep.completed += 1;
+                    self.output_repairs_done.lock().unwrap().insert(done_key);
+                }
+            }
+        }
+        rep
+    }
+
+    /// Spawn the background recovery thread (keepalive prober + repairer)
+    /// once a transport exists — unlike the migrator this cannot happen at
+    /// seal time, because probing needs the fabric.  No-op when
+    /// `probe_interval_ms` is 0 (tests drive the ticks directly), on
+    /// single-node clusters, or when already started.
+    pub fn start_recovery(self: &Arc<Self>, transport: Arc<dyn Transport>) {
+        if self.probe_interval_ms == 0 || self.placement.nodes < 2 {
+            return;
+        }
+        let mut slot = self.recovery.lock().unwrap();
+        if slot.is_some() {
+            return;
+        }
+        let weak = Arc::downgrade(self);
+        let stop = Arc::clone(&self.recovery_stop);
+        let interval = Duration::from_millis(self.probe_interval_ms);
+        let handle = std::thread::Builder::new()
+            .name(format!("fanstore-recovery-{}", self.id))
+            .spawn(move || recovery_loop(weak, stop, interval, transport))
+            .expect("spawn recovery");
+        *slot = Some(handle);
+    }
+
+    /// Stop and join the background recovery thread (idempotent; no-op
+    /// when it was never started).  Called by cluster teardown,
+    /// `kill_node`, and `Drop`.
+    pub fn stop_recovery(&self) {
+        let handle = self.recovery.lock().unwrap().take();
+        if let Some(handle) = handle {
+            let (lock, cv) = &*self.recovery_stop;
+            *lock.lock().unwrap() = true;
+            cv.notify_all();
+            if handle.thread().id() != std::thread::current().id() {
+                let _ = handle.join();
+            }
+        }
+    }
+}
+
+/// Background recovery body (PR 9), shaped exactly like [`migrator_loop`]:
+/// every `interval`, upgrade the node handle and run one probe tick plus
+/// one repair tick.  Holds only a `Weak` between ticks and exits when the
+/// node is gone or [`NodeShared::stop_recovery`] rings the condvar.
+fn recovery_loop(
+    node: Weak<NodeShared>,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    interval: Duration,
+    transport: Arc<dyn Transport>,
+) {
+    let (lock, cv) = &*stop;
+    let mut stopped = lock.lock().unwrap();
+    loop {
+        let (guard, timeout) = cv.wait_timeout(stopped, interval).unwrap();
+        stopped = guard;
+        if *stopped {
+            return;
+        }
+        if timeout.timed_out() {
+            // never hold the stop lock across a tick: stop_recovery must
+            // always be able to ring the condvar promptly
+            drop(stopped);
+            match node.upgrade() {
+                Some(shared) => {
+                    shared.probe_tick(&*transport);
+                    shared.repair_tick(&*transport);
+                }
+                None => return,
+            }
+            stopped = lock.lock().unwrap();
+            if *stopped {
+                return;
+            }
+        }
+    }
 }
 
 impl Drop for NodeShared {
@@ -946,6 +1571,7 @@ impl Drop for NodeShared {
         // belt-and-braces: the migrator only holds a Weak, so it would exit
         // on its next tick anyway, but an explicit stop keeps teardown
         // deterministic (no orphan tick racing directory cleanup)
+        self.stop_recovery();
         self.stop_migrator();
     }
 }
@@ -1174,6 +1800,8 @@ mod tests {
         node.serve(&Request::CommitOutput {
             path: "/out/ckpt_1.h5".into(),
             meta,
+            data: vec![9u8; 42].into(),
+            stamped: false,
         });
         match node.serve(&Request::StatOutput {
             path: "/out/ckpt_1.h5".into(),
@@ -1212,10 +1840,20 @@ mod tests {
             Response::Meta { generation, .. } => generation,
             other => panic!("unexpected {other:?}"),
         };
-        node.serve(&Request::CommitOutput { path: "/o/x".into(), meta: meta.clone() });
+        node.serve(&Request::CommitOutput {
+            path: "/o/x".into(),
+            meta: meta.clone(),
+            data: vec![1u8; 8].into(),
+            stamped: false,
+        });
         let g1 = gen_of(&node);
         // same origin, same size, recommitted — the home must re-stamp
-        node.serve(&Request::CommitOutput { path: "/o/x".into(), meta });
+        node.serve(&Request::CommitOutput {
+            path: "/o/x".into(),
+            meta,
+            data: vec![1u8; 8].into(),
+            stamped: false,
+        });
         let g2 = gen_of(&node);
         assert_ne!(g1, g2, "identical recommit must get a fresh generation");
     }
@@ -1235,7 +1873,12 @@ mod tests {
             },
             generation: 0,
         };
-        node.serve(&Request::CommitOutput { path: "/s/a".into(), meta });
+        node.serve(&Request::CommitOutput {
+            path: "/s/a".into(),
+            meta,
+            data: vec![2u8; 77].into(),
+            stamped: false,
+        });
         let resp = node.serve(&Request::StatOutputs {
             paths: vec!["/s/a".into(), "/s/ghost".into(), "/s/a".into()],
         });
@@ -1418,11 +2061,9 @@ mod tests {
         node.serve(&Request::CommitOutput {
             path: "/o/x".into(),
             meta,
+            data: vec![9u8; 5].into(),
+            stamped: false,
         });
-        node.output_data
-            .write()
-            .unwrap()
-            .insert("/o/x".into(), vec![9u8; 5].into());
         match node.serve(&Request::UnlinkOutput { path: "/o/x".into() }) {
             Response::Meta { origin, stat, .. } => {
                 assert_eq!(origin, 0);
@@ -1463,7 +2104,12 @@ mod tests {
             },
             generation: 0,
         };
-        node.serve(&Request::CommitOutput { path: "/d/b".into(), meta });
+        node.serve(&Request::CommitOutput {
+            path: "/d/b".into(),
+            meta,
+            data: vec![4u8; 3].into(),
+            stamped: false,
+        });
         assert!(node.cached_listing("/d").is_none());
         // ...so a gather stamped before the commit cannot install stale data
         node.install_listing("/d", g, &names);
@@ -1507,7 +2153,12 @@ mod tests {
             },
             generation: 0,
         };
-        node.serve(&Request::CommitOutput { path: "/ckpt/run1/s0.bin".into(), meta });
+        node.serve(&Request::CommitOutput {
+            path: "/ckpt/run1/s0.bin".into(),
+            meta,
+            data: vec![5u8; 3].into(),
+            stamped: false,
+        });
         // the ancestor chain is retired...
         assert!(node.cached_listing("/ckpt/run1").is_none());
         assert!(node.cached_listing("/ckpt").is_none());
@@ -1521,9 +2172,15 @@ mod tests {
         node.serve(&Request::InvalidateListings { path: "/ckpt/run1/s1.bin".into() });
         assert!(node.cached_listing("/ckpt/run1").is_none());
         assert!(node.cached_listing("/other/dir").is_some(), "unrelated dir survives");
-        // stale fills are still rejected by the advanced generation
+        // a dir nothing ever mutated accepts even a pre-bump stamp: the
+        // generation barrier is per-directory, not a global watermark
         node.install_listing("/zzz", g, &hot);
-        assert!(node.cached_listing("/zzz").is_none(), "pre-bump stamp rejected");
+        assert!(node.cached_listing("/zzz").is_some(), "untouched dir installs");
+        // ...until a full invalidation raises the floor for every dir
+        node.invalidate_listings();
+        let stale = node.listing_generation() - 1;
+        node.install_listing("/zzz", stale, &hot);
+        assert!(node.cached_listing("/zzz").is_none(), "floor rejects pre-bump stamp");
     }
 
     #[test]
@@ -1674,5 +2331,280 @@ mod tests {
             assert_eq!(m.location.partition, (i % 4) as u32);
             assert_eq!(m.location.node, (i % 4) as u32);
         }
+    }
+
+    #[test]
+    fn probe_tick_backs_off_down_peers_and_counts_recovery() {
+        use crate::net::health::PeerState;
+        let placement = Placement::new(2, 2, 1);
+        let (tp, mut eps) = InProcTransport::fully_connected(2);
+        let ep1 = eps.pop().unwrap();
+        let _ep0 = eps.pop().unwrap();
+        let mut node1 =
+            FanStoreNode::spawn(NodeBuilder::new(1, DiskStore::in_memory(), placement.clone()).seal(), ep1);
+
+        // wide backoff window so "the immediate next tick skips a Down
+        // peer" cannot flake on a loaded machine
+        let mut b0 = NodeBuilder::new(0, DiskStore::in_memory(), placement.clone());
+        b0.health_policy.backoff_base_ms = 200;
+        b0.health_policy.backoff_cap_ms = 800;
+        let node0 = b0.seal();
+
+        // healthy peer: probed every tick, nothing recovered
+        let r = node0.probe_tick(&tp);
+        assert_eq!((r.probes, r.recovered), (1, 0));
+        assert!(r.restarted.is_empty());
+
+        // kill node 1: two failed probes walk it Suspect -> Down
+        tp.shutdown_all();
+        node1.join_worker();
+        assert_eq!(node0.probe_tick(&tp).probes, 1);
+        assert_eq!(node0.health.state(1), PeerState::Suspect);
+        assert_eq!(node0.probe_tick(&tp).probes, 1);
+        assert_eq!(node0.health.state(1), PeerState::Down);
+        // Down peer sits on the jittered backoff schedule (>= 400ms here):
+        // an immediate re-tick must not hammer the corpse
+        let r = node0.probe_tick(&tp);
+        assert_eq!(r.probes, 0, "down peer still backing off");
+
+        // past the deadline, a probe goes out and finds the restarted
+        // incarnation: recovery counted, reseed queued (new epoch)
+        std::thread::sleep(Duration::from_millis(700));
+        let (tp2, mut eps2) = InProcTransport::fully_connected(2);
+        let ep1b = eps2.pop().unwrap();
+        let _ep0b = eps2.pop().unwrap();
+        let mut node1b =
+            FanStoreNode::spawn(NodeBuilder::new(1, DiskStore::in_memory(), placement).seal(), ep1b);
+        let r = node0.probe_tick(&tp2);
+        assert_eq!((r.probes, r.recovered), (1, 1));
+        assert_eq!(r.restarted, vec![1], "new epoch queues the peer for reseed");
+        assert_eq!(node0.health.state(1), PeerState::Up);
+        let st = node0.stats.snapshot();
+        assert_eq!(st.probes_sent, 4, "skipped tick sent nothing");
+        assert_eq!(st.peers_recovered, 1);
+        assert_eq!(st.peers_marked_down, 1);
+        tp2.shutdown_all();
+        node1b.join_worker();
+    }
+
+    #[test]
+    fn repair_tick_adopts_and_installs_missing_partition() {
+        use crate::net::health::PeerState;
+        // 3 nodes, 3 partitions, replication 2: holders(p) = {p, p+1 mod 3}.
+        // Node 1 dies.  Deterministic adoption: partition 1 (holders {1,2},
+        // scan starts after primary 1) -> node 0; partition 0 (holders
+        // {0,1}) -> node 2; partition 2 has no down holder.
+        let fs = files(9);
+        let (blobs, _) = build_partitions(&fs, 3, Codec::None).unwrap();
+        let placement = Placement::new(3, 3, 2);
+        let blobs: Vec<(u32, Vec<u8>)> =
+            blobs.into_iter().enumerate().map(|(i, b)| (i as u32, b)).collect();
+        let mut table = MetaTable::new();
+        index_input_metadata(&mut table, &blobs, "/m", &placement).unwrap();
+        let table = Arc::new(table);
+
+        let (tp, mut eps) = InProcTransport::fully_connected(3);
+        let ep2 = eps.pop().unwrap();
+        drop(eps.pop()); // node 1: dead host
+        let _ep0 = eps.pop().unwrap();
+
+        let mut b2 = NodeBuilder::new(2, DiskStore::in_memory(), placement.clone());
+        b2.store.load_partition(1, blobs[1].1.clone(), "/m").unwrap();
+        b2.store.load_partition(2, blobs[2].1.clone(), "/m").unwrap();
+        b2.input_meta = Arc::clone(&table);
+        let mut node2 = FanStoreNode::spawn(b2.seal(), ep2);
+
+        let mut b0 = NodeBuilder::new(0, DiskStore::in_memory(), placement);
+        b0.store.load_partition(0, blobs[0].1.clone(), "/m").unwrap();
+        b0.store.load_partition(2, blobs[2].1.clone(), "/m").unwrap();
+        b0.input_meta = Arc::clone(&table);
+        b0.mount = "/m".to_string();
+        let node0 = b0.seal();
+
+        // node 0 has already observed node 1 Down (e.g. via failed reads)
+        let _ = node0.health.record_failure(1);
+        let _ = node0.health.record_failure(1);
+        assert_eq!(node0.health.state(1), PeerState::Down);
+        assert!(!node0.holds_partition(1));
+
+        // one tick: node 0 adopts partition 1, pulling it from node 2, and
+        // records node 2 as partition 0's adopted holder
+        let rep = node0.repair_tick(&tp);
+        assert_eq!(rep, RepairReport { started: 1, completed: 1 });
+        assert!(node0.holds_partition(1), "adopted partition installed");
+        assert_eq!(node0.candidate_holders(0), vec![0, 1, 2], "override appended");
+        assert_eq!(node0.candidate_holders(1), vec![1, 2], "self-adoption is not an override");
+        let st = node0.stats.snapshot();
+        assert_eq!((st.repairs_started, st.repairs_completed), (1, 1));
+        assert_eq!(st.repaired_bytes, blobs[1].1.len() as u64);
+
+        // the tick is idempotent: the need re-derives to nothing
+        assert_eq!(node0.repair_tick(&tp), RepairReport::default());
+        assert_eq!(node0.stats.snapshot().repairs_started, 1);
+
+        // partition-1 reads are now local on node 0...
+        let path: Arc<str> = "/m/train/f4".into();
+        let loc = table.get(&path).unwrap().location;
+        let batch = node0.fetch_inputs_batched(&tp, vec![(Arc::clone(&path), loc)]);
+        let (p, outcome) = batch.outcomes.into_iter().next().unwrap();
+        let (pin, src) = outcome.unwrap();
+        assert_eq!(src, FetchSource::Local);
+        assert_eq!(&pin[..], &vec![4u8; 104][..]);
+        node0.cache.release(&p, &pin);
+        // ...and the repaired replica is itself a repair source
+        match node0.serve(&Request::FetchPartition { pid: 1 }) {
+            Response::PartitionData { blob } => assert_eq!(&blob[..], &blobs[1].1[..]),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        tp.shutdown_all();
+        node2.join_worker();
+    }
+
+    #[test]
+    fn install_partition_is_idempotent() {
+        let fs = files(4);
+        let (blobs, _) = build_partitions(&fs, 1, Codec::None).unwrap();
+        let mut b = NodeBuilder::new(1, DiskStore::in_memory(), Placement::new(2, 1, 1));
+        b.mount = "/m".to_string();
+        let node = b.seal();
+        assert!(!node.holds_partition(0));
+        let blob: Payload = blobs[0].clone().into();
+        assert_eq!(node.install_partition(0, &blob).unwrap(), 4);
+        assert!(node.holds_partition(0));
+        assert_eq!(node.install_partition(0, &blob).unwrap(), 0, "re-install is a no-op");
+        // installed files land at the mount-indexed paths...
+        match node.serve(&Request::ReadFile { path: "/m/train/f3".into() }) {
+            Response::FileData { stored } => assert_eq!(&stored[..], &vec![3u8; 103][..]),
+            other => panic!("unexpected {other:?}"),
+        }
+        // ...and the blob round-trips for onward repairs
+        assert_eq!(&node.partition_blob(0).unwrap()[..], &blobs[0][..]);
+    }
+
+    #[test]
+    fn concurrent_listing_gathers_install_per_directory() {
+        let placement = Placement::new(1, 1, 1);
+        let node = NodeBuilder::new(0, DiskStore::in_memory(), placement).seal();
+        let meta = FileMeta {
+            stat: FileStat::regular(1, 3),
+            location: FileLocation {
+                node: 0,
+                partition: u32::MAX,
+                offset: 0,
+                stored_len: 3,
+                codec: Codec::None,
+            },
+            generation: 0,
+        };
+        // two gathers sample the clock, then a commit lands in /ckpt while
+        // both are still in flight
+        let g_hot = node.listing_generation();
+        let g_ckpt = node.listing_generation();
+        node.serve(&Request::CommitOutput {
+            path: "/ckpt/s0.bin".into(),
+            meta: meta.clone(),
+            data: vec![7u8; 3].into(),
+            stamped: false,
+        });
+        // the mutated dir rejects its now-stale gather; the unrelated one
+        // still installs — the watermark is per-directory, not global
+        node.install_listing("/ckpt", g_ckpt, &["stale".to_string()]);
+        assert!(node.cached_listing("/ckpt").is_none(), "stale gather rejected");
+        let hot = vec!["hot.bin".to_string()];
+        node.install_listing("/hot", g_hot, &hot);
+        assert_eq!(&node.cached_listing("/hot").unwrap()[..], &hot[..]);
+
+        // under real concurrency: a committer churns /churn while a gather
+        // loop installs /stable — the untouched dir must always install
+        let committer = {
+            let node = Arc::clone(&node);
+            let meta = meta.clone();
+            std::thread::spawn(move || {
+                for i in 0..50 {
+                    node.serve(&Request::CommitOutput {
+                        path: format!("/churn/c{i}").into(),
+                        meta: meta.clone(),
+                        data: vec![1u8; 3].into(),
+                        stamped: false,
+                    });
+                }
+            })
+        };
+        let gatherer = {
+            let node = Arc::clone(&node);
+            std::thread::spawn(move || {
+                for _ in 0..200 {
+                    let g = node.listing_generation();
+                    node.install_listing("/stable", g, &["s".to_string()]);
+                    assert!(
+                        node.cached_listing("/stable").is_some(),
+                        "unmutated dir always installs mid-churn"
+                    );
+                }
+            })
+        };
+        committer.join().unwrap();
+        gatherer.join().unwrap();
+        // a gather that predates the churn stays rejected for /churn
+        node.install_listing("/churn", g_ckpt, &["stale".to_string()]);
+        assert!(node.cached_listing("/churn").is_none());
+    }
+
+    #[test]
+    fn repair_tick_reseeds_restarted_peer() {
+        // 2 nodes, 2 partitions, replication 2: both nodes hold everything.
+        // Node 1 restarts empty; node 0 (its only live co-holder) pushes
+        // both partitions back via InstallPartition.
+        let fs = files(6);
+        let (blobs, _) = build_partitions(&fs, 2, Codec::None).unwrap();
+        let placement = Placement::new(2, 2, 2);
+
+        let mut b0 = NodeBuilder::new(0, DiskStore::in_memory(), placement.clone());
+        b0.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        b0.store.load_partition(1, blobs[1].clone(), "/m").unwrap();
+        b0.mount = "/m".to_string();
+        let node0 = b0.seal();
+
+        // incarnation 1: probed once so node 0 learns its epoch
+        let (tp, mut eps) = InProcTransport::fully_connected(2);
+        let ep1 = eps.pop().unwrap();
+        let _ep0 = eps.pop().unwrap();
+        let mut b1 = NodeBuilder::new(1, DiskStore::in_memory(), placement.clone());
+        b1.store.load_partition(0, blobs[0].clone(), "/m").unwrap();
+        b1.store.load_partition(1, blobs[1].clone(), "/m").unwrap();
+        let mut node1 = FanStoreNode::spawn(b1.seal(), ep1);
+        assert!(!node0.probe_peer(&tp, 1).unwrap());
+        tp.shutdown_all();
+        node1.join_worker();
+
+        // incarnation 2 comes back with nothing
+        let (tp2, mut eps2) = InProcTransport::fully_connected(2);
+        let ep1b = eps2.pop().unwrap();
+        let _ep0b = eps2.pop().unwrap();
+        let mut b1b = NodeBuilder::new(1, DiskStore::in_memory(), placement);
+        b1b.mount = "/m".to_string();
+        let shared1b = b1b.seal();
+        let mut node1b = FanStoreNode::spawn(Arc::clone(&shared1b), ep1b);
+
+        let r = node0.probe_tick(&tp2);
+        assert_eq!((r.probes, r.recovered), (1, 0), "restart without an observed death");
+        assert_eq!(r.restarted, vec![1]);
+        let rep = node0.repair_tick(&tp2);
+        assert_eq!(rep, RepairReport { started: 2, completed: 2 });
+        let st = node0.stats.snapshot();
+        assert_eq!(st.repaired_bytes, (blobs[0].len() + blobs[1].len()) as u64);
+        assert!(shared1b.holds_partition(0) && shared1b.holds_partition(1));
+
+        // the restarted peer serves reseeded data again, and the reseed
+        // queue is drained
+        let resp = tp2
+            .call(0, 1, Request::ReadFile { path: "/m/train/f1".into() })
+            .unwrap();
+        assert_eq!(&resp.into_file_data().unwrap()[..], &vec![1u8; 101][..]);
+        assert_eq!(node0.repair_tick(&tp2), RepairReport::default());
+
+        tp2.shutdown_all();
+        node1b.join_worker();
     }
 }

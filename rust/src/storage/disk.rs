@@ -681,6 +681,42 @@ impl DiskStore {
         let _ = pid;
     }
 
+    /// Does this store hold partition `pid` (either tier)?
+    pub fn has_partition(&self, pid: u32) -> bool {
+        self.partitions.contains_key(&pid)
+    }
+
+    /// Read the entire container blob of partition `pid` — the unit the
+    /// re-replicator streams node-to-node ([`FetchPartition`] serves it,
+    /// the adoptee re-indexes it with `load_partition`).  RAM backings
+    /// hand out a zero-copy [`Payload`] view over the whole blob; spilled
+    /// backings materialize it with one `fs::read` outside the backing
+    /// lock (repair is a background path — it must not pin the lock for
+    /// the duration of a disk read).
+    ///
+    /// [`FetchPartition`]: crate::net::transport::Request::FetchPartition
+    pub fn partition_blob(&self, pid: u32) -> Result<Payload> {
+        let slot = self
+            .partitions
+            .get(&pid)
+            .ok_or_else(|| FanError::Format(format!("missing partition {pid}")))?;
+        let path = {
+            let guard = slot.backing.read().expect("backing lock poisoned");
+            match &*guard {
+                Backing::Ram(blob) => {
+                    let len = blob.len();
+                    return Ok(Payload::view(
+                        Arc::clone(blob) as Arc<dyn PayloadRegion>,
+                        0,
+                        len,
+                    ));
+                }
+                Backing::File(sf) => sf.path.clone(),
+            }
+        };
+        Ok(fs::read(path)?.into())
+    }
+
     /// Whether partition `pid` currently lives in the RAM tier.
     pub fn partition_resident(&self, pid: u32) -> Option<bool> {
         self.partitions.get(&pid).map(|slot| {

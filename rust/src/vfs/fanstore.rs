@@ -190,46 +190,103 @@ impl FanStoreVfs {
             // removes the entry only if it still holds this stale data
             self.shared.cache.retire(path, &data);
         }
-        let stats = &self.shared.stats;
+        // Candidate sources (PR 9): the origin buffered the bytes at
+        // `write()`, and `close()` fanned a copy out to every output home —
+        // any one of them serves a resume read, so the death of the origin
+        // no longer loses the checkpoint.  When a home is Down, the
+        // deterministic adoptee may hold a repaired copy; ask it last.
         let origin = meta.location.node;
-        let data: Payload = if origin == self.node_id {
-            let data = self
-                .shared
-                .output_data
-                .read()
-                .unwrap()
-                .get(path)
-                .cloned()
-                .ok_or_else(|| FanError::NotFound(path.to_string()))?;
-            stats.local_reads.fetch_add(1, Ordering::Relaxed);
-            stats
-                .bytes_read_local
-                .fetch_add(data.len() as u64, Ordering::Relaxed);
-            data.into()
-        } else {
+        let homes = self.shared.placement.output_homes(path);
+        let mut sources: Vec<u32> = Vec::with_capacity(homes.len() + 2);
+        sources.push(origin);
+        for &h in &homes {
+            if !sources.contains(&h) {
+                sources.push(h);
+            }
+        }
+        let down = |n: u32| {
+            n != self.node_id
+                && self.shared.health.state(n) == crate::net::health::PeerState::Down
+        };
+        if homes.iter().any(|&h| down(h)) {
+            let start = (homes[0] + 1) % self.shared.placement.nodes;
+            if let Some(a) = self.shared.placement.adopt_node(&homes, start, down) {
+                if !sources.contains(&a) {
+                    sources.push(a);
+                }
+            }
+        }
+        let stats = &self.shared.stats;
+        let mut transport_err: Option<FanError> = None;
+        let mut found: Option<Payload> = None;
+        for &src in &sources {
+            if src == self.node_id {
+                let local = self.shared.output_data.read().unwrap().get(path).cloned();
+                if let Some(data) = local {
+                    stats.local_reads.fetch_add(1, Ordering::Relaxed);
+                    stats
+                        .bytes_read_local
+                        .fetch_add(data.len() as u64, Ordering::Relaxed);
+                    found = Some(data.into());
+                    break;
+                }
+                continue;
+            }
             // batched-read request even for one file: its per-file result
-            // keeps a gone-at-origin file distinguishable (ENOENT) from a
+            // keeps a gone-at-source file distinguishable (ENOENT) from a
             // transport fault, which the stale-metadata retry in `open`
             // depends on
-            let resp = self.transport.call(
-                self.node_id,
-                origin,
-                Request::ReadFiles {
-                    paths: vec![path.into()],
-                },
-            )?;
-            let fetch = resp
-                .into_files_data()?
-                .into_iter()
-                .next()
-                .map(|(_, f)| f)
-                .unwrap_or(FileFetch::NotFound);
-            let stored = fetch.into_result(path)?;
-            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
-            stats
-                .bytes_fetched_remote
-                .fetch_add(stored.len() as u64, Ordering::Relaxed);
-            stored
+            let resp = self
+                .transport
+                .call(
+                    self.node_id,
+                    src,
+                    Request::ReadFiles {
+                        paths: vec![path.into()],
+                    },
+                )
+                .and_then(|r| r.into_files_data());
+            match resp {
+                Ok(files) => {
+                    self.shared.health.record_success(src, None);
+                    let fetch = files
+                        .into_iter()
+                        .next()
+                        .map(|(_, f)| f)
+                        .unwrap_or(FileFetch::NotFound);
+                    match fetch.into_result(path) {
+                        Ok(stored) => {
+                            stats.remote_reads_issued.fetch_add(1, Ordering::Relaxed);
+                            stats
+                                .bytes_fetched_remote
+                                .fetch_add(stored.len() as u64, Ordering::Relaxed);
+                            found = Some(stored);
+                            break;
+                        }
+                        // this source never got (or already dropped) a copy;
+                        // the next replica may still hold one
+                        Err(FanError::NotFound(_)) => {}
+                        Err(e) => return Err(e),
+                    }
+                }
+                Err(e) => {
+                    if self.shared.health.record_failure(src) {
+                        stats.peers_marked_down.fetch_add(1, Ordering::Relaxed);
+                        self.transport.evict(src);
+                    }
+                    transport_err = Some(e);
+                }
+            }
+        }
+        let data: Payload = match found {
+            Some(data) => data,
+            // every reachable source answered ENOENT: authoritative miss
+            // (drives the stale-metadata retry in `open`).  If a source was
+            // unreachable the bytes may still exist — that is EIO, not a lie.
+            None => match transport_err {
+                Some(e) => return Err(e),
+                None => return Err(FanError::NotFound(path.to_string())),
+            },
         };
         // remember which commit generation these resident bytes belong to —
         // the referee for the staleness check above on later re-opens
@@ -249,16 +306,19 @@ impl FanStoreVfs {
     }
 
     fn stat_output_ex(&mut self, path: &str, fresh: bool) -> Result<FileMeta> {
-        let home = self.shared.placement.output_home(path);
-        if home == self.node_id {
-            return self
-                .shared
-                .output_meta
-                .read()
-                .unwrap()
-                .get(path)
-                .cloned()
-                .ok_or_else(|| FanError::NotFound(path.to_string()));
+        let homes = self.shared.placement.output_homes(path);
+        let primary = homes[0];
+        if homes.contains(&self.node_id) {
+            let local = self.shared.output_meta.read().unwrap().get(path).cloned();
+            if let Some(meta) = local {
+                return Ok(meta);
+            }
+            if primary == self.node_id {
+                // the primary's table is the authority for the name
+                return Err(FanError::NotFound(path.to_string()));
+            }
+            // a secondary home without the record (missed replica commit):
+            // fall through and ask the other homes
         }
         if !fresh {
             let cached = self
@@ -276,26 +336,69 @@ impl FanStoreVfs {
                 return Ok(meta);
             }
         }
-        match self.transport.call(
-            self.node_id,
-            home,
-            Request::StatOutput { path: path.into() },
-        )? {
-            Response::Meta {
-                stat,
-                origin,
-                generation,
-            } => {
-                let meta = output_meta(stat, origin, generation);
-                self.shared
-                    .output_meta_cache
-                    .write()
-                    .unwrap()
-                    .insert(path.to_string(), meta.clone());
-                Ok(meta)
+        // Ask the homes health-ordered, primary preferred (PR 9): any home
+        // can answer a stat because `close()` replicated the stamped
+        // metadata.  Only the *primary's* ENOENT is authoritative — a
+        // secondary may simply have missed its replica commit, so its miss
+        // only counts once no home can prove the name exists.
+        let remote: Vec<u32> = homes
+            .iter()
+            .copied()
+            .filter(|&h| h != self.node_id)
+            .collect();
+        let mut transport_err: Option<FanError> = None;
+        let mut missing_at: Option<u32> = None;
+        for &h in &self.shared.health.order_candidates(&remote, primary) {
+            match self.transport.call(
+                self.node_id,
+                h,
+                Request::StatOutput { path: path.into() },
+            ) {
+                Ok(Response::Meta {
+                    stat,
+                    origin,
+                    generation,
+                }) => {
+                    self.shared.health.record_success(h, None);
+                    let meta = output_meta(stat, origin, generation);
+                    self.shared
+                        .output_meta_cache
+                        .write()
+                        .unwrap()
+                        .insert(path.to_string(), meta.clone());
+                    return Ok(meta);
+                }
+                Ok(Response::Err(_)) => {
+                    self.shared.health.record_success(h, None);
+                    if h == primary {
+                        return Err(FanError::NotFound(path.to_string()));
+                    }
+                    missing_at = Some(h);
+                }
+                Ok(other) => {
+                    return Err(FanError::Transport(format!("unexpected {other:?}")))
+                }
+                Err(e) => {
+                    if self.shared.health.record_failure(h) {
+                        self.shared
+                            .stats
+                            .peers_marked_down
+                            .fetch_add(1, Ordering::Relaxed);
+                        self.transport.evict(h);
+                    }
+                    transport_err = Some(e);
+                }
             }
-            Response::Err(_) => Err(FanError::NotFound(path.to_string())),
-            other => Err(FanError::Transport(format!("unexpected {other:?}"))),
+        }
+        match (missing_at, transport_err) {
+            // every reachable home answered ENOENT and nobody was skipped:
+            // the name provably does not exist
+            (Some(_), None) => Err(FanError::NotFound(path.to_string())),
+            // an unreachable home might still hold the record a reachable
+            // secondary missed — EIO, never a fabricated ENOENT
+            (_, Some(e)) => Err(e),
+            // single-node homes degenerate: remote set was empty
+            (None, None) => Err(FanError::NotFound(path.to_string())),
         }
     }
 }
@@ -453,28 +556,66 @@ impl Vfs for FanStoreVfs {
                 // data first, then the metadata commit: once the name is
                 // discoverable at the home node, the bytes must already be
                 // servable from here.
+                let bytes: Arc<[u8]> = buf.into();
+                let payload: Payload = Arc::clone(&bytes).into();
                 self.shared
                     .output_data
                     .write()
                     .unwrap()
-                    .insert(path.clone(), buf.into());
-                let home = self.shared.placement.output_home(&path);
-                // one interned wire handle for the commit + the broadcast
+                    .insert(path.clone(), bytes);
+                let homes = self.shared.placement.output_homes(&path);
+                let home = homes[0];
+                // one interned wire handle for the commits + the broadcast
                 let path: Arc<str> = path.into();
-                if home == self.node_id {
+                // The primary home is the serializer: it stamps the commit
+                // generation and its success IS the commit.  Data rides
+                // along, so the home set can serve reads without the origin.
+                let landed = if home == self.node_id {
                     self.shared.serve(&Request::CommitOutput {
                         path: Arc::clone(&path),
-                        meta,
-                    });
+                        meta: meta.clone(),
+                        data: payload.clone(),
+                        stamped: false,
+                    })
                 } else {
                     self.transport.call(
                         self.node_id,
                         home,
                         Request::CommitOutput {
                             path: Arc::clone(&path),
-                            meta,
+                            meta: meta.clone(),
+                            data: payload.clone(),
+                            stamped: false,
                         },
-                    )?;
+                    )?
+                };
+                let generation = match landed {
+                    Response::Meta { generation, .. } => generation,
+                    other => {
+                        return Err(FanError::Transport(format!(
+                            "commit not acknowledged: {other:?}"
+                        )))
+                    }
+                };
+                // Replica fan-out (PR 9): the stamped meta + bytes go to the
+                // remaining homes, so the checkpoint survives the death of
+                // its origin or primary.  Best effort — a missed replica is
+                // healed by the background re-replicator, and generation
+                // stamps resolve any commit/repair race deterministically.
+                let mut replica = meta;
+                replica.generation = generation;
+                for &h in &homes[1..] {
+                    let req = Request::CommitOutput {
+                        path: Arc::clone(&path),
+                        meta: replica.clone(),
+                        data: payload.clone(),
+                        stamped: true,
+                    };
+                    if h == self.node_id {
+                        self.shared.serve(&req);
+                    } else {
+                        let _ = self.transport.call(self.node_id, h, req);
+                    }
                 }
                 // count only once the commit actually landed — a dead home
                 // node must not inflate the committed totals
@@ -604,13 +745,13 @@ impl Vfs for FanStoreVfs {
                         slots[i] = Slot::Done(outcome);
                     }
                 }
-                // home unreachable: surface the transport failure per path,
-                // exactly like a per-path stat would — a dead home must not
-                // masquerade as ENOENT during a checkpoint resume
-                Err(e) => {
+                // primary home unreachable: recover each path through the
+                // replicated homes (PR 9) instead of failing the whole
+                // shard batch — only if no home can answer does the
+                // transport failure surface (never a fabricated ENOENT)
+                Err(_) => {
                     for (i, path) in entries {
-                        slots[i] =
-                            Slot::Done(Err(FanError::Transport(format!("stat {path}: {e}"))));
+                        slots[i] = Slot::Done(self.stat_output_ex(&path, true).map(|m| m.stat));
                     }
                 }
             }
@@ -744,10 +885,11 @@ impl Vfs for FanStoreVfs {
                 "input files are immutable: {path}"
             )));
         }
-        // 1) remove the authoritative metadata at the home node; the
+        // 1) remove the authoritative metadata at the primary home; the
         //    answer names the originating node holding the bytes
-        let home = self.shared.placement.output_home(&path);
-        // one interned wire handle for the unlink + drop + broadcast
+        let homes = self.shared.placement.output_homes(&path);
+        let home = homes[0];
+        // one interned wire handle for the unlinks + drops + broadcast
         let wire_path: Arc<str> = path.as_str().into();
         let origin = if home == self.node_id {
             let meta = self.shared.output_meta.write().unwrap().remove(&path)?;
@@ -772,21 +914,59 @@ impl Vfs for FanStoreVfs {
         //    their eventual close a no-op)
         self.shared.cache.invalidate(&path);
         self.shared.output_meta_cache.write().unwrap().remove(&path);
-        // 3) GC the buffered bytes at the origin — without this the origin
-        //    leaks the buffer until shutdown.  Best effort: a dead origin
-        //    cannot leak, and the name is already gone from the home.
-        if origin == self.node_id {
-            self.shared.serve(&Request::DropOutput {
-                path: Arc::clone(&wire_path),
-            });
-        } else {
-            let _ = self.transport.call(
-                self.node_id,
-                origin,
-                Request::DropOutput {
+        // 3) retire the replica metas and GC every buffered copy (PR 9: the
+        //    origin's write buffer plus the copy each home landed at commit,
+        //    plus a possible repaired copy at the deterministic adoptee).
+        //    Best effort: a dead copy-holder cannot leak, the name is
+        //    already gone from the primary, and ENOENT replies are the
+        //    idempotence we expect.
+        let mut copies: Vec<u32> = Vec::with_capacity(homes.len() + 2);
+        copies.push(origin);
+        copies.push(home);
+        for &h in &homes[1..] {
+            if !copies.contains(&h) {
+                copies.push(h);
+            }
+        }
+        let down = |n: u32| {
+            n != self.node_id
+                && self.shared.health.state(n) == crate::net::health::PeerState::Down
+        };
+        if homes.iter().any(|&h| down(h)) {
+            let start = (homes[0] + 1) % self.shared.placement.nodes;
+            if let Some(a) = self.shared.placement.adopt_node(&homes, start, down) {
+                if !copies.contains(&a) {
+                    copies.push(a);
+                }
+            }
+        }
+        for &h in &copies {
+            if h != home && h != self.node_id {
+                // replica meta (the primary's was removed above; a
+                // secondary's local remove below needs no round trip)
+                let _ = self.transport.call(
+                    self.node_id,
+                    h,
+                    Request::UnlinkOutput {
+                        path: Arc::clone(&wire_path),
+                    },
+                );
+            } else if h != home {
+                let _ = self.shared.output_meta.write().unwrap().remove(&path);
+            }
+            if h == self.node_id {
+                self.shared.serve(&Request::DropOutput {
                     path: Arc::clone(&wire_path),
-                },
-            );
+                });
+            } else {
+                let _ = self.transport.call(
+                    self.node_id,
+                    h,
+                    Request::DropOutput {
+                        path: Arc::clone(&wire_path),
+                    },
+                );
+            }
         }
         // the name is gone from every listing: retire its ancestor-chain
         // listings cluster-wide before unlink returns

@@ -202,6 +202,23 @@ impl Cluster {
             0 => None,
             ms => Some(Duration::from_millis(ms)),
         };
+        // metadata broadcast: every node gets the full table.  Built once,
+        // sealed immutable, and shared as one Arc — in-proc, a single RAM
+        // copy stands in for the N identical replicas of the real wire
+        // broadcast (§5.3).  Node state is built BEFORE the fabric so the
+        // TCP accept loops can share each node's `decode_rejects` counter.
+        let global_meta = Arc::new(build_global_meta(&data, &config, &placement)?);
+        let mut shareds = Vec::with_capacity(config.nodes as usize);
+        for id in 0..config.nodes {
+            shareds.push(build_node_shared(
+                id,
+                &data,
+                Arc::clone(&global_meta),
+                &placement,
+                &config,
+            )?);
+        }
+
         let mut tcp_servers: Vec<Option<TcpServer>> = Vec::new();
         let (transport, endpoints): (Arc<dyn Transport>, Vec<NodeEndpoint>) =
             match config.transport {
@@ -217,7 +234,11 @@ impl Cluster {
                     let mut endpoints = Vec::with_capacity(config.nodes as usize);
                     let mut addrs = Vec::with_capacity(config.nodes as usize);
                     for id in 0..config.nodes {
-                        let (srv, ep) = TcpServer::bind(id, "127.0.0.1:0")?;
+                        let (srv, ep) = TcpServer::bind_counted(
+                            id,
+                            "127.0.0.1:0",
+                            Arc::clone(&shareds[id as usize].stats.decode_rejects),
+                        )?;
                         addrs.push(srv.local_addr());
                         tcp_servers.push(Some(srv));
                         endpoints.push(ep);
@@ -231,21 +252,9 @@ impl Cluster {
                 }
             };
 
-        // metadata broadcast: every node gets the full table.  Built once,
-        // sealed immutable, and shared as one Arc — in-proc, a single RAM
-        // copy stands in for the N identical replicas of the real wire
-        // broadcast (§5.3).
-        let global_meta = Arc::new(build_global_meta(&data, &config, &placement)?);
-
         let mut nodes = Vec::with_capacity(config.nodes as usize);
-        for ep in endpoints {
-            let shared = build_node_shared(
-                ep.node_id,
-                &data,
-                Arc::clone(&global_meta),
-                &placement,
-                &config,
-            )?;
+        for (shared, ep) in shareds.into_iter().zip(endpoints) {
+            debug_assert_eq!(shared.id, ep.node_id);
             nodes.push(FanStoreNode::spawn(shared, ep));
         }
         // recovery threads last — probing needs the fabric, so unlike the

@@ -1,0 +1,27 @@
+//! Deterministic, dependency-free fuzzing harness (PR 10 tentpole).
+//!
+//! Two fuzzers, both seeded and fully reproducible:
+//!
+//! * [`wire`] — adversarial wire-codec fuzzing: raw random bodies,
+//!   truncations, bit-flips, and structure-aware mutations of valid
+//!   encoded frames are fed to the decoders under panic containment, a
+//!   wall-clock watchdog, and (when [`alloc_guard::CountingAlloc`] is the
+//!   process's global allocator) an allocation-amplification oracle.
+//!   Valid frames also get a differential re-encode check: decode ∘
+//!   encode must be the identity on canonical bytes.
+//! * [`store`] — stateful store/cluster fuzzing: PRNG-generated op
+//!   schedules run against a *real* in-process cluster while an
+//!   in-memory shadow model predicts contents, metadata, and errno
+//!   classes; the first divergence is shrunk to a minimal schedule.
+//!
+//! Failures print the seed; `fanstore fuzz wire|store --seed N` replays
+//! them exactly.  Regression inputs live in `rust/tests/corpus/` and are
+//! replayed by the `fuzz_corpus` test target on every `cargo test`.
+
+pub mod alloc_guard;
+pub(crate) mod model;
+pub mod store;
+pub mod wire;
+
+pub use store::{run_store_fuzz, Op, StoreFuzzReport};
+pub use wire::{run_wire_fuzz, WireFuzzReport};

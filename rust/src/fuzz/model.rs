@@ -1,0 +1,521 @@
+//! Shadow model for the stateful store fuzzer: a ~200-line in-memory
+//! re-implementation of the VFS contract that the real cluster is diffed
+//! against after every operation.
+//!
+//! Two regimes:
+//!
+//! * **Healthy** (no node ever killed): the contract is *strict*.  Reads
+//!   return the exact committed bytes, stats the exact size, listings the
+//!   exact sorted child set; errors carry the exact errno class (ENOENT
+//!   for missing paths, EPERM for immutability violations, ENOTDIR for
+//!   readdir-on-file).
+//! * **Degraded** (any kill happened; permanent for the round): the
+//!   contract is *relaxed but still falsifiable*.  An operation may fail
+//!   with EIO where the healthy model would succeed — that is what losing
+//!   copies means — but data can never be *wrong*: a successful read must
+//!   return bytes some write actually produced, a successful listing may
+//!   only contain names the model knows, a stat size must match a real
+//!   content length.  Commits/unlinks that error after a kill leave the
+//!   path *indeterminate* (the mutation may or may not have landed); the
+//!   model then accepts either world but still rejects invented data.
+//!
+//! The model deliberately tracks output *directories* forever once
+//! created: the real metadata tables keep a dir entry alive after its
+//! last file is unlinked, so listings legitimately show empty-able child
+//! dirs while the dirs themselves stat as ENOENT (outputs have no dir
+//! inodes).
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::error::FanError;
+use crate::metadata::record::FileStat;
+
+const S_IFMT: u32 = 0o170000;
+const S_IFDIR: u32 = 0o040000;
+
+pub struct ShadowModel {
+    /// Input files: path → bytes (immutable for the whole round).
+    inputs: BTreeMap<String, Vec<u8>>,
+    /// Every ancestor directory of every input path (these have inodes).
+    input_dirs: BTreeSet<String>,
+    /// Committed outputs the model believes exist: path → bytes.
+    outputs: BTreeMap<String, Vec<u8>>,
+    /// Ancestor dirs of every output ever committed (never removed — the
+    /// real tables keep them, see module docs).
+    output_dirs: BTreeSet<String>,
+    /// Paths whose post-kill mutation errored: the bytes each failed or
+    /// superseded attempt carried.  A read of such a path may see any of
+    /// these, or the committed bytes, or an error — but nothing else.
+    limbo: BTreeMap<String, Vec<Vec<u8>>>,
+    degraded: bool,
+}
+
+/// Ancestor directories of `path`, including "/" but not `path` itself.
+fn ancestors(path: &str) -> Vec<String> {
+    let mut out = vec!["/".to_string()];
+    let mut acc = String::new();
+    let mut parts = path.split('/').filter(|p| !p.is_empty()).peekable();
+    while let Some(part) = parts.next() {
+        if parts.peek().is_none() {
+            break; // the leaf is not its own ancestor
+        }
+        acc.push('/');
+        acc.push_str(part);
+        out.push(acc.clone());
+    }
+    out
+}
+
+/// First path component of `path` strictly under directory `dir`.
+fn child_of<'a>(dir: &str, path: &'a str) -> Option<&'a str> {
+    let rest = if dir == "/" {
+        path.strip_prefix('/')?
+    } else {
+        path.strip_prefix(dir)?.strip_prefix('/')?
+    };
+    let first = rest.split('/').next()?;
+    if first.is_empty() {
+        None
+    } else {
+        Some(first)
+    }
+}
+
+impl ShadowModel {
+    pub fn new(inputs: &[(String, Vec<u8>)]) -> ShadowModel {
+        let mut input_dirs = BTreeSet::new();
+        for (p, _) in inputs {
+            input_dirs.extend(ancestors(p));
+        }
+        ShadowModel {
+            inputs: inputs.iter().cloned().collect(),
+            input_dirs,
+            outputs: BTreeMap::new(),
+            output_dirs: BTreeSet::new(),
+            limbo: BTreeMap::new(),
+            degraded: false,
+        }
+    }
+
+    pub fn note_kill(&mut self) {
+        self.degraded = true;
+    }
+
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    fn known_content_lens(&self, path: &str) -> Vec<u64> {
+        let mut lens: Vec<u64> = self
+            .limbo
+            .get(path)
+            .map(|cands| cands.iter().map(|c| c.len() as u64).collect())
+            .unwrap_or_default();
+        if let Some(d) = self.inputs.get(path).or_else(|| self.outputs.get(path)) {
+            lens.push(d.len() as u64);
+        }
+        lens
+    }
+
+    // ------------------------------------------------------------- reads
+
+    pub fn check_read(&self, path: &str, got: &Result<Vec<u8>, FanError>) -> Result<(), String> {
+        let expected = self.inputs.get(path).or_else(|| self.outputs.get(path));
+        match got {
+            Ok(bytes) => {
+                if let Some(want) = expected {
+                    if bytes == want {
+                        return Ok(());
+                    }
+                }
+                if self.degraded {
+                    // a limbo candidate that actually landed is fine; an
+                    // unlinked-under-failure stale copy is the documented
+                    // residual window (see DESIGN.md) — also a candidate
+                    if self.limbo.get(path).is_some_and(|c| c.iter().any(|w| w == bytes)) {
+                        return Ok(());
+                    }
+                }
+                Err(format!(
+                    "read {path}: got {} unexpected bytes (expected {})",
+                    bytes.len(),
+                    expected.map_or("ENOENT".into(), |w| format!("{} bytes", w.len())),
+                ))
+            }
+            Err(e) => self.check_absent_or_degraded_err("read", path, expected.is_some(), e),
+        }
+    }
+
+    pub fn check_stat(&self, path: &str, got: &Result<FileStat, FanError>) -> Result<(), String> {
+        // input dirs have real (directory) inodes; output dirs do not
+        if self.input_dirs.contains(path) {
+            return match got {
+                Ok(s) if s.mode & S_IFMT == S_IFDIR => Ok(()),
+                Ok(s) => Err(format!("stat {path}: input dir came back mode {:o}", s.mode)),
+                Err(e) if self.degraded => self.allow_degraded_err("stat", path, e),
+                Err(e) => Err(format!("stat {path}: input dir errored: {e}")),
+            };
+        }
+        let expected = self
+            .inputs
+            .get(path)
+            .or_else(|| self.outputs.get(path))
+            .map(|d| d.len() as u64);
+        match got {
+            Ok(s) => {
+                if expected == Some(s.size) {
+                    return Ok(());
+                }
+                if self.degraded && self.known_content_lens(path).contains(&s.size) {
+                    return Ok(());
+                }
+                Err(format!(
+                    "stat {path}: got size {}, expected {expected:?}",
+                    s.size
+                ))
+            }
+            Err(e) => self.check_absent_or_degraded_err("stat", path, expected.is_some(), e),
+        }
+    }
+
+    pub fn check_readdir(
+        &self,
+        dir: &str,
+        got: &Result<Vec<String>, FanError>,
+    ) -> Result<(), String> {
+        // readdir on an input *file* is ENOTDIR; on an output file the
+        // real gather sees no children and degrades to ENOENT
+        let expected_errno = if self.inputs.contains_key(dir) {
+            Some(FanError::NotDirectory(String::new()).errno())
+        } else {
+            let listing = self.expected_listing(dir);
+            if listing.is_empty() && !self.input_dirs.contains(dir) {
+                Some(FanError::NotFound(String::new()).errno())
+            } else {
+                None
+            }
+        };
+        match (got, expected_errno) {
+            (Ok(names), None) => {
+                let want: Vec<String> =
+                    self.expected_listing(dir).into_iter().collect();
+                if *names == want {
+                    return Ok(());
+                }
+                if self.degraded {
+                    // dead homes drop names from the gather: require a
+                    // sorted deduped subset of what the model knows
+                    let known = self.listable_superset(dir);
+                    let sorted = names.windows(2).all(|w| w[0] < w[1]);
+                    if sorted && names.iter().all(|n| known.contains(n)) {
+                        return Ok(());
+                    }
+                }
+                Err(format!("readdir {dir}: got {names:?}, want {want:?}"))
+            }
+            (Ok(names), Some(errno)) => {
+                if self.degraded {
+                    // a limbo commit that landed can make the dir appear
+                    let known = self.listable_superset(dir);
+                    if !names.is_empty() && names.iter().all(|n| known.contains(n)) {
+                        return Ok(());
+                    }
+                }
+                Err(format!("readdir {dir}: got {names:?}, want errno {errno}"))
+            }
+            (Err(e), Some(errno)) => {
+                if e.errno() == errno {
+                    return Ok(());
+                }
+                if self.degraded {
+                    return self.allow_degraded_err("readdir", dir, e);
+                }
+                Err(format!("readdir {dir}: got errno {}, want {errno}: {e}", e.errno()))
+            }
+            (Err(e), None) => {
+                if self.degraded {
+                    return self.allow_degraded_err("readdir", dir, e);
+                }
+                Err(format!("readdir {dir}: unexpected error: {e}"))
+            }
+        }
+    }
+
+    /// The exact healthy listing: immediate children from input files and
+    /// dirs, committed outputs, and ever-created output dirs.
+    fn expected_listing(&self, dir: &str) -> BTreeSet<String> {
+        let mut names = BTreeSet::new();
+        for p in self.inputs.keys().chain(self.outputs.keys()) {
+            if let Some(c) = child_of(dir, p) {
+                names.insert(c.to_string());
+            }
+        }
+        for d in self.input_dirs.iter().chain(self.output_dirs.iter()) {
+            if let Some(c) = child_of(dir, d) {
+                names.insert(c.to_string());
+            }
+        }
+        names
+    }
+
+    /// Every name a degraded listing may legally show: the healthy set
+    /// plus children of limbo paths (commits that landed despite the
+    /// error, unlinks that did not).
+    fn listable_superset(&self, dir: &str) -> BTreeSet<String> {
+        let mut names = self.expected_listing(dir);
+        for p in self.limbo.keys() {
+            for a in ancestors(p) {
+                if let Some(c) = child_of(dir, &a) {
+                    names.insert(c.to_string());
+                }
+            }
+            if let Some(c) = child_of(dir, p) {
+                names.insert(c.to_string());
+            }
+        }
+        names
+    }
+
+    // --------------------------------------------------------- mutations
+
+    /// Account for a `write_file` outcome; checks the outcome against the
+    /// model and updates the model's world.
+    pub fn apply_write(
+        &mut self,
+        path: &str,
+        data: &[u8],
+        got: &Result<(), FanError>,
+    ) -> Result<(), String> {
+        let eperm = FanError::Consistency(String::new()).errno();
+        let exists =
+            self.inputs.contains_key(path) || self.outputs.contains_key(path);
+        match got {
+            Ok(()) => {
+                if self.inputs.contains_key(path) {
+                    return Err(format!("write {path}: an input file accepted a write"));
+                }
+                if self.outputs.contains_key(path) && !self.degraded {
+                    return Err(format!("write {path}: single-write output rewritten"));
+                }
+                // degraded rewrite of an existing output is the known
+                // stat-blind window; the new bytes are now the truth and
+                // the old bytes stay acceptable as a stale serve
+                if let Some(old) = self.outputs.insert(path.to_string(), data.to_vec()) {
+                    self.limbo.entry(path.to_string()).or_default().push(old);
+                }
+                self.output_dirs.extend(ancestors(path));
+                Ok(())
+            }
+            Err(e) if e.errno() == eperm => {
+                if exists || self.limbo.contains_key(path) {
+                    Ok(())
+                } else {
+                    Err(format!("write {path}: EPERM for a path that never existed"))
+                }
+            }
+            Err(e) => {
+                if !self.degraded {
+                    return Err(format!("write {path}: healthy write errored: {e}"));
+                }
+                // may or may not have landed: remember the bytes
+                self.limbo.entry(path.to_string()).or_default().push(data.to_vec());
+                self.output_dirs.extend(ancestors(path));
+                Ok(())
+            }
+        }
+    }
+
+    pub fn apply_unlink(&mut self, path: &str, got: &Result<(), FanError>) -> Result<(), String> {
+        let eperm = FanError::Consistency(String::new()).errno();
+        let enoent = FanError::NotFound(String::new()).errno();
+        match got {
+            Ok(()) => {
+                if self.inputs.contains_key(path) {
+                    return Err(format!("unlink {path}: an input file was unlinked"));
+                }
+                let removed = self.outputs.remove(path);
+                if removed.is_none() && !self.degraded && !self.limbo.contains_key(path) {
+                    return Err(format!("unlink {path}: Ok for a missing path"));
+                }
+                if self.degraded {
+                    // a straggler copy on a node the unlinker could not
+                    // reach may still serve the old bytes (documented
+                    // residual window) — keep them as a limbo candidate
+                    if let Some(old) = removed {
+                        self.limbo.entry(path.to_string()).or_default().push(old);
+                    }
+                } else {
+                    self.limbo.remove(path);
+                }
+                Ok(())
+            }
+            Err(e) if e.errno() == eperm => {
+                if self.inputs.contains_key(path) {
+                    Ok(())
+                } else {
+                    Err(format!("unlink {path}: EPERM for a non-input: {e}"))
+                }
+            }
+            Err(e) if e.errno() == enoent => {
+                if !self.outputs.contains_key(path) || self.degraded {
+                    Ok(())
+                } else {
+                    Err(format!("unlink {path}: ENOENT for an existing output"))
+                }
+            }
+            Err(e) => {
+                if !self.degraded {
+                    return Err(format!("unlink {path}: healthy unlink errored: {e}"));
+                }
+                // indeterminate: the name may be gone, half-gone, or intact
+                if let Some(old) = self.outputs.remove(path) {
+                    self.limbo.entry(path.to_string()).or_default().push(old);
+                }
+                Ok(())
+            }
+        }
+    }
+
+    // ----------------------------------------------------------- helpers
+
+    /// Error verdict for a path the model says is absent/present.
+    fn check_absent_or_degraded_err(
+        &self,
+        what: &str,
+        path: &str,
+        present: bool,
+        e: &FanError,
+    ) -> Result<(), String> {
+        let enoent = FanError::NotFound(String::new()).errno();
+        if !present && e.errno() == enoent {
+            return Ok(()); // exact ENOENT for a missing path, any regime
+        }
+        if self.degraded {
+            return self.allow_degraded_err(what, path, e);
+        }
+        if present {
+            Err(format!("{what} {path}: healthy op errored: {e}"))
+        } else {
+            Err(format!("{what} {path}: want ENOENT, got errno {}: {e}", e.errno()))
+        }
+    }
+
+    /// Degraded regime: losing copies may surface ENOENT or EIO, never a
+    /// "you did something wrong" errno like EPERM/EBADF.
+    pub(super) fn allow_degraded_err(
+        &self,
+        what: &str,
+        path: &str,
+        e: &FanError,
+    ) -> Result<(), String> {
+        let enoent = FanError::NotFound(String::new()).errno();
+        let eio = FanError::Runtime(String::new()).errno();
+        if e.errno() == enoent || e.errno() == eio {
+            Ok(())
+        } else {
+            Err(format!(
+                "{what} {path}: degraded errno must be ENOENT/EIO, got {}: {e}",
+                e.errno()
+            ))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn model() -> ShadowModel {
+        ShadowModel::new(&[
+            ("/m/train/a.raw".to_string(), vec![1, 2, 3]),
+            ("/m/train/b.raw".to_string(), vec![4; 10]),
+        ])
+    }
+
+    #[test]
+    fn healthy_contract_is_strict() {
+        let mut m = model();
+        assert!(m.check_read("/m/train/a.raw", &Ok(vec![1, 2, 3])).is_ok());
+        assert!(m.check_read("/m/train/a.raw", &Ok(vec![9, 9])).is_err());
+        assert!(m
+            .check_read("/nope", &Err(FanError::NotFound("/nope".into())))
+            .is_ok());
+        assert!(m
+            .check_read("/nope", &Err(FanError::Runtime("eio".into())))
+            .is_err());
+        assert!(m.apply_write("/out/x.bin", &[7; 5], &Ok(())).is_ok());
+        assert!(m.check_read("/out/x.bin", &Ok(vec![7; 5])).is_ok());
+        // single-write: a second Ok is a divergence, EPERM is correct
+        assert!(m.apply_write("/out/x.bin", &[8], &Ok(())).is_err());
+        let m2 = model();
+        assert!(m2
+            .check_read("/m/train/a.raw", &Err(FanError::Runtime("eio".into())))
+            .is_err());
+    }
+
+    #[test]
+    fn listings_track_inputs_outputs_and_sticky_dirs() {
+        let mut m = model();
+        assert!(m
+            .check_readdir("/m/train", &Ok(vec!["a.raw".into(), "b.raw".into()]))
+            .is_ok());
+        assert!(m.check_readdir("/m/train", &Ok(vec!["a.raw".into()])).is_err());
+        m.apply_write("/out/sub/c.bin", &[1], &Ok(())).unwrap();
+        assert!(m.check_readdir("/", &Ok(vec!["m".into(), "out".into()])).is_ok());
+        assert!(m.check_readdir("/out", &Ok(vec!["sub".into()])).is_ok());
+        m.apply_unlink("/out/sub/c.bin", &Ok(())).unwrap();
+        // the file is gone but the dir chain sticks; the now-empty leaf
+        // dir lists as a child while itself answering ENOENT to a gather
+        assert!(m.check_readdir("/out", &Ok(vec!["sub".into()])).is_ok());
+        assert!(m
+            .check_readdir("/out/sub", &Err(FanError::NotFound("/out/sub".into())))
+            .is_ok());
+        // readdir on an input file is ENOTDIR
+        assert!(m
+            .check_readdir(
+                "/m/train/a.raw",
+                &Err(FanError::NotDirectory("/m/train/a.raw".into()))
+            )
+            .is_ok());
+    }
+
+    #[test]
+    fn degraded_contract_allows_loss_but_not_invention() {
+        let mut m = model();
+        m.apply_write("/out/x.bin", &[7; 5], &Ok(())).unwrap();
+        m.note_kill();
+        // loss: EIO where healthy would succeed
+        assert!(m
+            .check_read("/out/x.bin", &Err(FanError::Runtime("eio".into())))
+            .is_ok());
+        // but never wrong bytes
+        assert!(m.check_read("/out/x.bin", &Ok(vec![1])).is_err());
+        // a failed degraded write leaves the path in limbo: both worlds OK
+        m.apply_write("/out/y.bin", &[9; 4], &Err(FanError::Runtime("eio".into())))
+            .unwrap();
+        assert!(m.check_read("/out/y.bin", &Ok(vec![9; 4])).is_ok());
+        assert!(m
+            .check_read("/out/y.bin", &Err(FanError::NotFound("y".into())))
+            .is_ok());
+        assert!(m.check_read("/out/y.bin", &Ok(vec![5])).is_err());
+        // degraded errno discipline: EBADF is never a loss signal
+        assert!(m
+            .check_read("/out/x.bin", &Err(FanError::BadFd(3)))
+            .is_err());
+    }
+
+    #[test]
+    fn stat_distinguishes_input_dirs_from_output_dirs() {
+        let mut m = model();
+        m.apply_write("/out/x.bin", &[7; 5], &Ok(())).unwrap();
+        let mut dir = FileStat::regular(1, 4096);
+        dir.mode = 0o040755;
+        assert!(m.check_stat("/m/train", &Ok(dir)).is_ok());
+        assert!(m.check_stat("/m/train", &Ok(FileStat::regular(1, 4096))).is_err());
+        assert!(m
+            .check_stat("/out", &Err(FanError::NotFound("/out".into())))
+            .is_ok());
+        assert!(m.check_stat("/out/x.bin", &Ok(FileStat::regular(2, 5))).is_ok());
+        assert!(m.check_stat("/out/x.bin", &Ok(FileStat::regular(2, 6))).is_err());
+    }
+}

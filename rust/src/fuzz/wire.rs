@@ -1,0 +1,682 @@
+//! Adversarial wire-codec fuzzer (PR 10 tentpole, part 1).
+//!
+//! Feeds the `net::wire` decoders six families of inputs — raw random
+//! bytes, truncations of valid bodies, bit-flips, structure-aware
+//! mutations (splices, range duplication/deletion, varint tampering),
+//! fully valid frames, and `MAX_FRAME`-adjacent framed streams — and
+//! holds decode to three oracles on every single input:
+//!
+//! 1. **No panic.**  Every decode runs under `catch_unwind`; an unwind is
+//!    a finding, not a crash.
+//! 2. **No hang.**  A watchdog thread aborts the process (printing the
+//!    seed) if the fuzz loop stops making progress for ~2 s — a decode
+//!    that spins can never look like a pass.
+//! 3. **No memory amplification.**  When the binary registers the
+//!    [`crate::fuzz::alloc_guard::CountingAlloc`] global allocator, every
+//!    decode's gross allocation is measured and bounded:
+//!
+//!    * rejected input → `≤ REJECT_FACTOR × len + SLACK` — hard-linear,
+//!      covering the worst legal element density (a 2-byte `MetaFetch::
+//!      NotFound` entry materializes a ~160-byte tuple, doubled by `Vec`
+//!      growth) plus interner and error-string overhead;
+//!    * accepted frame → `≤ ACCEPT_FACTOR × len + ITEM_OVERHEAD × items
+//!      + SLACK` — the headline "small multiple of input" bound, with a
+//!      per-decoded-element term for the unavoidable in-memory width of
+//!      batch entries (an element's struct is wider than its minimal
+//!      encoding, so a pure byte multiple is unsatisfiable for degenerate
+//!      but *legal* batches of empty names/paths).
+//!
+//! Valid frames additionally face a **differential oracle**: decode must
+//! succeed and re-encoding the decoded value must reproduce the original
+//! body byte-for-byte (the generators only emit canonical encodings, so
+//! any drift is a codec bug).
+//!
+//! On a violation the input is shrunk with
+//! [`crate::util::proptest_lite::shrink_bytes`] to a 1-removal/1-zeroing
+//! minimal reproducer and reported as hex, ready to be checked into
+//! `rust/tests/corpus/`.
+
+use std::io::Cursor;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use crate::compress::Codec;
+use crate::fuzz::alloc_guard;
+use crate::metadata::record::{FileLocation, FileMeta, FileStat};
+use crate::net::transport::{FileFetch, MetaFetch, Request, Response};
+use crate::net::wire::{
+    decode_request, decode_response, encode_request, encode_response, read_frame, PathInterner,
+    MAX_FRAME, READ_CHUNK,
+};
+use crate::storage::payload::Payload;
+use crate::util::prng::Prng;
+use crate::util::proptest_lite::shrink_bytes;
+
+/// Accepted frames: byte multiple of the input length.
+const ACCEPT_FACTOR: u64 = 4;
+/// Accepted frames: per-decoded-element allowance (struct width + `Vec`
+/// doubling + interner entry for the densest legal elements).
+const ITEM_OVERHEAD: u64 = 512;
+/// Rejected input: hard-linear multiple covering elements decoded before
+/// the error surfaced (an element can be ~80× wider in memory than on the
+/// wire; ×2 for `Vec` growth; rounded up to a power of two).
+const REJECT_FACTOR: u64 = 256;
+/// Constant slack: error strings, small preallocations, `HashMap` seeds.
+const SLACK: u64 = 16 * 1024;
+/// `read_frame` slack: the chunked reader may hold one `READ_CHUNK` of
+/// capacity (plus its doubling) beyond the bytes actually delivered.
+const STREAM_SLACK: u64 = (2 * READ_CHUNK + 4096) as u64;
+
+/// Outcome counters for one fuzz run (all inputs, all modes).
+#[derive(Debug, Default, Clone)]
+pub struct WireFuzzReport {
+    /// Inputs fed to the decoders.
+    pub iters: u64,
+    /// Inputs that decoded into a valid `Request`/`Response`.
+    pub accepted: u64,
+    /// Inputs rejected with a structured error (the common case).
+    pub rejected: u64,
+    /// Largest measured decode allocation, in bytes (0 without the
+    /// counting allocator).
+    pub max_alloc: u64,
+    /// Whether the allocation oracle was live (counting allocator
+    /// registered by this binary).
+    pub alloc_guarded: bool,
+}
+
+/// Run the wire fuzzer: `iters` adversarial inputs derived from `seed`.
+/// Returns counters on success; on the first oracle violation returns a
+/// shrunk, hex-encoded minimal reproducer (the process aborts instead if
+/// a decode hangs).
+pub fn run_wire_fuzz(seed: u64, iters: u64) -> Result<WireFuzzReport, String> {
+    let progress = Arc::new(AtomicU64::new(0));
+    let stop = Arc::new(AtomicBool::new(false));
+    let watchdog = spawn_watchdog(Arc::clone(&progress), Arc::clone(&stop), seed);
+
+    let mut rng = Prng::new(seed);
+    let mut report = WireFuzzReport {
+        alloc_guarded: alloc_guard::installed(),
+        ..WireFuzzReport::default()
+    };
+    let mut paths = PathInterner::default();
+    let result = (0..iters).try_for_each(|i| {
+        // a long-lived interner is part of the attack surface, but bound
+        // its growth across a big run
+        if i % 4096 == 0 {
+            paths = PathInterner::default();
+        }
+        let verdict = fuzz_one(&mut rng, &mut paths, &mut report).map_err(|what| {
+            format!("wire fuzz failed (seed {seed:#x}, iter {i}): {what}")
+        });
+        progress.store(i + 1, Ordering::Relaxed);
+        report.iters = i + 1;
+        verdict
+    });
+
+    stop.store(true, Ordering::Relaxed);
+    let _ = watchdog.join();
+    result.map(|()| report)
+}
+
+/// One fuzz input: pick a mode, build the input, run every applicable
+/// oracle.  `Err` carries a shrunk reproducer description.
+fn fuzz_one(
+    rng: &mut Prng,
+    paths: &mut PathInterner,
+    report: &mut WireFuzzReport,
+) -> Result<(), String> {
+    match rng.below(6) {
+        // raw random bytes
+        0 => {
+            let mut body = vec![0u8; 1 + rng.below(1024) as usize];
+            rng.fill_bytes(&mut body);
+            check_body(&body, paths, report)
+        }
+        // truncation of a valid body
+        1 => {
+            let body = gen_valid_body(rng);
+            let cut = rng.index(body.len());
+            check_body(&body[..cut], paths, report)
+        }
+        // bit flips in a valid body
+        2 => {
+            let mut body = gen_valid_body(rng);
+            for _ in 0..1 + rng.below(8) {
+                let bit = rng.below(body.len() as u64 * 8);
+                body[(bit / 8) as usize] ^= 1 << (bit % 8);
+            }
+            check_body(&body, paths, report)
+        }
+        // structure-aware mutations
+        3 => {
+            let body = mutate_structured(rng);
+            check_body(&body, paths, report)
+        }
+        // fully valid frame: must decode AND re-encode byte-identically
+        4 => {
+            let body = gen_valid_body(rng);
+            check_body(&body, paths, report)?;
+            roundtrip_check(&body, paths)
+        }
+        // framed stream with a MAX_FRAME-adjacent (or lying) length prefix
+        _ => check_stream(rng, report),
+    }
+}
+
+// ---------------------------------------------------------------- oracles
+
+/// Feed one body to both decoders under the panic + allocation oracles.
+fn check_body(
+    body: &[u8],
+    paths: &mut PathInterner,
+    report: &mut WireFuzzReport,
+) -> Result<(), String> {
+    if let Err(what) = decode_once(body, paths, report) {
+        // shrink against fresh interners so the reproducer stands alone
+        let shrunk = shrink_bytes(body, |b| {
+            let mut p = PathInterner::default();
+            let mut r = WireFuzzReport {
+                alloc_guarded: report.alloc_guarded,
+                ..WireFuzzReport::default()
+            };
+            decode_once(b, &mut p, &mut r).is_err()
+        });
+        return Err(format!("{what}; shrunk to {} bytes: {}", shrunk.len(), hex(&shrunk)));
+    }
+    Ok(())
+}
+
+/// The unshrunk single-shot check: decode `body` as a request and as a
+/// response, each under `catch_unwind` and the allocation guard.
+fn decode_once(
+    body: &[u8],
+    paths: &mut PathInterner,
+    report: &mut WireFuzzReport,
+) -> Result<(), String> {
+    // as a request --------------------------------------------------
+    let before = paths.len();
+    let (outcome, alloc) = alloc_guard::measure(|| {
+        catch_unwind(AssertUnwindSafe(|| decode_request(body, paths)))
+    });
+    report.max_alloc = report.max_alloc.max(alloc);
+    let new_paths = paths.len().saturating_sub(before);
+    match outcome {
+        Err(_) => return Err(format!("decode_request panicked on {}-byte body", body.len())),
+        Ok(Ok((_, _, req))) => {
+            report.accepted += 1;
+            let items = (request_items(&req) + new_paths) as u64;
+            check_alloc("decode_request accept", body.len(), alloc, accept_bound(body.len(), items))?;
+        }
+        Ok(Err(_)) => {
+            report.rejected += 1;
+            check_alloc("decode_request reject", body.len(), alloc, reject_bound(body.len()))?;
+        }
+    }
+
+    // as a response -------------------------------------------------
+    let before = paths.len();
+    let (outcome, alloc) = alloc_guard::measure(|| {
+        catch_unwind(AssertUnwindSafe(|| decode_response(body, paths)))
+    });
+    report.max_alloc = report.max_alloc.max(alloc);
+    let new_paths = paths.len().saturating_sub(before);
+    match outcome {
+        Err(_) => return Err(format!("decode_response panicked on {}-byte body", body.len())),
+        Ok(Ok((_, resp))) => {
+            report.accepted += 1;
+            let items = (response_items(&resp) + new_paths) as u64;
+            check_alloc("decode_response accept", body.len(), alloc, accept_bound(body.len(), items))?;
+        }
+        Ok(Err(_)) => {
+            report.rejected += 1;
+            check_alloc("decode_response reject", body.len(), alloc, reject_bound(body.len()))?;
+        }
+    }
+    Ok(())
+}
+
+fn accept_bound(len: usize, items: u64) -> u64 {
+    ACCEPT_FACTOR * len as u64 + ITEM_OVERHEAD * items + SLACK
+}
+
+fn reject_bound(len: usize) -> u64 {
+    REJECT_FACTOR * len as u64 + SLACK
+}
+
+fn check_alloc(what: &str, len: usize, alloc: u64, bound: u64) -> Result<(), String> {
+    if alloc > bound {
+        return Err(format!(
+            "{what}: allocated {alloc} bytes decoding {len} input bytes (bound {bound})"
+        ));
+    }
+    Ok(())
+}
+
+/// Differential oracle for generator-produced bodies: decode must accept,
+/// and re-encoding the decoded value must reproduce the body exactly.
+fn roundtrip_check(body: &[u8], paths: &mut PathInterner) -> Result<(), String> {
+    let fail = |what: &str| {
+        Err(format!("roundtrip: {what} on valid {}-byte body: {}", body.len(), hex(body)))
+    };
+    match body.first() {
+        Some(1) => match decode_request(body, paths) {
+            Ok((corr, from, req)) => {
+                let re = encode_request(corr, from, &req).to_body_bytes();
+                if re != body {
+                    return fail("re-encoded request differs");
+                }
+                Ok(())
+            }
+            Err(e) => fail(&format!("decode_request rejected: {e}")),
+        },
+        Some(2) => match decode_response(body, paths) {
+            Ok((corr, resp)) => {
+                let re = encode_response(corr, &resp).to_body_bytes();
+                if re != body {
+                    return fail("re-encoded response differs");
+                }
+                Ok(())
+            }
+            Err(e) => fail(&format!("decode_response rejected: {e}")),
+        },
+        _ => fail("generator produced an unknown frame kind"),
+    }
+}
+
+/// Framed-stream oracle: a length prefix near (or beyond) `MAX_FRAME`
+/// backed by far fewer delivered bytes must fail cheaply — bounded
+/// allocation, correct error class, no panic.
+fn check_stream(rng: &mut Prng, report: &mut WireFuzzReport) -> Result<(), String> {
+    let claimed: u32 = match rng.below(5) {
+        0 => MAX_FRAME,
+        1 => MAX_FRAME - 1,
+        2 => MAX_FRAME + 1,
+        3 => u32::MAX,
+        _ => rng.below(u64::from(MAX_FRAME)) as u32,
+    };
+    let delivered = (rng.below(4096) as usize).min(claimed as usize);
+    let mut stream = Vec::with_capacity(4 + delivered);
+    stream.extend_from_slice(&claimed.to_le_bytes());
+    let start = stream.len();
+    stream.resize(start + delivered, 0);
+    rng.fill_bytes(&mut stream[start..]);
+
+    let run = |bytes: &[u8]| {
+        alloc_guard::measure(|| {
+            catch_unwind(AssertUnwindSafe(|| read_frame(&mut Cursor::new(bytes))))
+        })
+    };
+    let (outcome, alloc) = run(&stream);
+    report.max_alloc = report.max_alloc.max(alloc);
+    let bound = ACCEPT_FACTOR * stream.len() as u64 + STREAM_SLACK;
+    let verdict = match outcome {
+        Err(_) => Some("read_frame panicked".to_string()),
+        Ok(Ok(body)) => {
+            // only possible when the stream delivered the whole claimed body
+            if body.len() != claimed as usize || claimed > MAX_FRAME {
+                Some(format!("read_frame accepted a torn frame ({} of {claimed})", body.len()))
+            } else if alloc > bound {
+                Some(format!("read_frame allocated {alloc} for {} stream bytes", stream.len()))
+            } else {
+                None
+            }
+        }
+        Ok(Err(_)) => {
+            report.rejected += 1;
+            if alloc > bound {
+                Some(format!(
+                    "read_frame allocated {alloc} rejecting a {claimed}-byte claim with {} stream bytes",
+                    stream.len()
+                ))
+            } else {
+                None
+            }
+        }
+    };
+    if let Some(what) = verdict {
+        let shrunk = shrink_bytes(&stream, |b| {
+            let (o, a) = run(b);
+            match o {
+                Err(_) => true,
+                Ok(_) => a > ACCEPT_FACTOR * b.len() as u64 + STREAM_SLACK,
+            }
+        });
+        return Err(format!("{what}; shrunk to {} bytes: {}", shrunk.len(), hex(&shrunk)));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------- corpus replay
+
+/// Replay one checked-in corpus *body* (the bytes inside a frame) under
+/// the full decode oracle set — panic containment and, when the counting
+/// allocator is registered, the allocation bounds.  Used by the
+/// `fuzz_corpus` test target; failures come back shrunk exactly like live
+/// fuzz findings.  Returns whether either decoder accepted the body.
+pub fn replay_body(body: &[u8]) -> Result<bool, String> {
+    let mut paths = PathInterner::default();
+    let mut report = WireFuzzReport {
+        alloc_guarded: alloc_guard::installed(),
+        ..WireFuzzReport::default()
+    };
+    check_body(body, &mut paths, &mut report)?;
+    Ok(report.accepted > 0)
+}
+
+/// Replay one corpus byte *stream* (length prefix + however much of the
+/// body the "peer" delivered) through [`read_frame`] under the panic and
+/// streaming-allocation oracles.  Returns whether a frame was produced.
+pub fn replay_stream(stream: &[u8]) -> Result<bool, String> {
+    let (outcome, alloc) = alloc_guard::measure(|| {
+        catch_unwind(AssertUnwindSafe(|| read_frame(&mut Cursor::new(stream))))
+    });
+    let bound = ACCEPT_FACTOR * stream.len() as u64 + STREAM_SLACK;
+    if alloc > bound {
+        return Err(format!(
+            "read_frame allocated {alloc} bytes on a {}-byte stream (bound {bound})",
+            stream.len()
+        ));
+    }
+    match outcome {
+        Err(_) => Err(format!("read_frame panicked on a {}-byte stream", stream.len())),
+        Ok(Ok(body)) => {
+            let framed = stream.len().saturating_sub(4);
+            if body.len() == framed {
+                Ok(true)
+            } else {
+                Err(format!(
+                    "read_frame returned {} bytes from a {framed}-byte delivery",
+                    body.len()
+                ))
+            }
+        }
+        Ok(Err(_)) => Ok(false),
+    }
+}
+
+// ------------------------------------------------------------- watchdog
+
+/// Abort (loudly, with the seed) if the fuzz loop makes no progress for
+/// ~2 s: a hung decode must fail CI, not idle until the job times out.
+fn spawn_watchdog(
+    progress: Arc<AtomicU64>,
+    stop: Arc<AtomicBool>,
+    seed: u64,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let mut last = u64::MAX;
+        let mut stalled = 0u32;
+        loop {
+            thread::sleep(Duration::from_millis(250));
+            if stop.load(Ordering::Relaxed) {
+                return;
+            }
+            let now = progress.load(Ordering::Relaxed);
+            if now == last {
+                stalled += 1;
+                if stalled >= 8 {
+                    eprintln!(
+                        "wire fuzz watchdog: no progress for 2s after iter {now} \
+                         (seed {seed:#x}); aborting"
+                    );
+                    std::process::abort();
+                }
+            } else {
+                stalled = 0;
+                last = now;
+            }
+        }
+    })
+}
+
+// ----------------------------------------------------------- generators
+
+/// How many batch elements a decoded request materialized (for the
+/// per-element allocation allowance).
+fn request_items(req: &Request) -> usize {
+    match req {
+        Request::ReadFiles { paths } | Request::StatOutputs { paths } => paths.len().max(1),
+        _ => 1,
+    }
+}
+
+fn response_items(resp: &Response) -> usize {
+    match resp {
+        Response::FilesData(v) => v.len().max(1),
+        Response::Metas(v) => v.len().max(1),
+        Response::Names(v) => v.len().max(1),
+        _ => 1,
+    }
+}
+
+/// A canonical encoded body for a random valid request or response.
+fn gen_valid_body(rng: &mut Prng) -> Vec<u8> {
+    if rng.chance(0.5) {
+        encode_request(rng.next_u64(), rng.below(64) as u32, &gen_request(rng)).to_body_bytes()
+    } else {
+        encode_response(rng.next_u64(), &gen_response(rng)).to_body_bytes()
+    }
+}
+
+fn gen_path(rng: &mut Prng) -> Arc<str> {
+    const DIRS: [&str; 4] = ["/fanstore/user/train/class0", "/out", "/ckpt", "/a/b/c"];
+    if rng.chance(0.05) {
+        return Arc::from("");
+    }
+    let dir = DIRS[rng.index(DIRS.len())];
+    Arc::from(format!("{dir}/f{:03}.bin", rng.below(200)))
+}
+
+fn gen_paths(rng: &mut Prng) -> Vec<Arc<str>> {
+    (0..rng.below(9)).map(|_| gen_path(rng)).collect()
+}
+
+fn gen_string(rng: &mut Prng) -> String {
+    if rng.chance(0.1) {
+        String::new()
+    } else {
+        format!("entry {:04x}", rng.below(1 << 16))
+    }
+}
+
+/// Random payload; a claimed compression wrapper rides the wire without
+/// being decoded, so `raw_len` is free to disagree with the byte count.
+fn gen_payload(rng: &mut Prng) -> Payload {
+    let mut bytes = vec![0u8; rng.below(257) as usize];
+    rng.fill_bytes(&mut bytes);
+    if rng.chance(0.5) {
+        let raw_len = rng.below(1 << 20);
+        Payload::compressed(Codec::Lzss(1 + rng.below(9) as u8), raw_len, bytes.into())
+    } else {
+        bytes.into()
+    }
+}
+
+fn gen_stat(rng: &mut Prng) -> FileStat {
+    let mut s = FileStat::regular(rng.next_u64(), rng.below(1 << 30));
+    s.mode = rng.next_u64() as u32;
+    s.uid = rng.next_u64() as u32;
+    s.mtime = rng.next_u64() as i64;
+    s.blocks = rng.next_u64();
+    s
+}
+
+fn gen_codec(rng: &mut Prng) -> Codec {
+    if rng.chance(0.4) {
+        Codec::None
+    } else {
+        Codec::Lzss(1 + rng.below(9) as u8)
+    }
+}
+
+fn gen_meta(rng: &mut Prng) -> FileMeta {
+    FileMeta {
+        stat: gen_stat(rng),
+        location: FileLocation {
+            node: rng.below(64) as u32,
+            partition: rng.next_u64() as u32,
+            offset: rng.next_u64() >> rng.below(64) as u32,
+            stored_len: rng.next_u64() >> rng.below(64) as u32,
+            codec: gen_codec(rng),
+        },
+        generation: rng.next_u64() >> rng.below(64) as u32,
+    }
+}
+
+fn gen_fetch(rng: &mut Prng) -> FileFetch {
+    match rng.below(3) {
+        0 => FileFetch::Data { stored: gen_payload(rng) },
+        1 => FileFetch::NotFound,
+        _ => FileFetch::Fault(gen_string(rng)),
+    }
+}
+
+fn gen_meta_fetch(rng: &mut Prng) -> MetaFetch {
+    if rng.chance(0.5) {
+        MetaFetch::Meta {
+            stat: gen_stat(rng),
+            origin: rng.below(64) as u32,
+            generation: rng.next_u64() >> rng.below(64) as u32,
+        }
+    } else {
+        MetaFetch::NotFound
+    }
+}
+
+fn gen_request(rng: &mut Prng) -> Request {
+    match rng.below(13) {
+        0 => Request::ReadFile { path: gen_path(rng) },
+        1 => Request::ReadFiles { paths: gen_paths(rng) },
+        2 => Request::StatOutput { path: gen_path(rng) },
+        3 => Request::StatOutputs { paths: gen_paths(rng) },
+        4 => Request::CommitOutput {
+            path: gen_path(rng),
+            meta: gen_meta(rng),
+            data: gen_payload(rng),
+            stamped: rng.chance(0.5),
+        },
+        5 => Request::ListOutputs { dir: gen_path(rng) },
+        6 => Request::UnlinkOutput { path: gen_path(rng) },
+        7 => Request::DropOutput { path: gen_path(rng) },
+        8 => Request::InvalidateListings { path: gen_path(rng) },
+        9 => Request::Ping { epoch: rng.next_u64() },
+        10 => Request::FetchPartition { pid: rng.next_u64() as u32 },
+        11 => Request::InstallPartition {
+            pid: rng.next_u64() as u32,
+            blob: gen_payload(rng),
+        },
+        _ => Request::Shutdown,
+    }
+}
+
+fn gen_response(rng: &mut Prng) -> Response {
+    match rng.below(9) {
+        0 => Response::FileData { stored: gen_payload(rng) },
+        1 => Response::FilesData(
+            (0..rng.below(9)).map(|_| (gen_path(rng), gen_fetch(rng))).collect(),
+        ),
+        2 => Response::Meta {
+            stat: gen_stat(rng),
+            origin: rng.below(64) as u32,
+            generation: rng.next_u64() >> rng.below(64) as u32,
+        },
+        3 => Response::Metas(
+            (0..rng.below(9)).map(|_| (gen_path(rng), gen_meta_fetch(rng))).collect(),
+        ),
+        4 => Response::Names((0..rng.below(17)).map(|_| gen_string(rng)).collect()),
+        5 => Response::Pong { epoch: rng.next_u64() },
+        6 => Response::PartitionData { blob: gen_payload(rng) },
+        7 => Response::Ok,
+        _ => Response::Err(gen_string(rng)),
+    }
+}
+
+/// Structure-aware mutation of valid bodies: splice two bodies, duplicate
+/// or delete a range, tamper with a run of bytes (0x00 / 0xFF floods bend
+/// varint continuation bits and length prefixes).
+fn mutate_structured(rng: &mut Prng) -> Vec<u8> {
+    let a = gen_valid_body(rng);
+    match rng.below(4) {
+        // splice: prefix of one body + suffix of another
+        0 => {
+            let b = gen_valid_body(rng);
+            let cut_a = rng.index(a.len() + 1);
+            let cut_b = rng.index(b.len() + 1);
+            let mut out = a[..cut_a].to_vec();
+            out.extend_from_slice(&b[cut_b..]);
+            out
+        }
+        // duplicate a range in place
+        1 => {
+            let start = rng.index(a.len());
+            let len = 1 + rng.index(a.len() - start);
+            let mut out = a.clone();
+            let dup = a[start..start + len].to_vec();
+            out.splice(start..start, dup);
+            out
+        }
+        // delete a range
+        2 => {
+            let start = rng.index(a.len());
+            let len = 1 + rng.index(a.len() - start);
+            let mut out = a.clone();
+            out.drain(start..start + len);
+            out
+        }
+        // flood a run with 0x00 / 0xFF / a random byte
+        _ => {
+            let start = rng.index(a.len());
+            let len = 1 + rng.index((a.len() - start).min(16));
+            let fill = match rng.below(3) {
+                0 => 0x00,
+                1 => 0xFF,
+                _ => rng.next_u64() as u8,
+            };
+            let mut out = a;
+            out[start..start + len].fill(fill);
+            out
+        }
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    const SHOWN: usize = 256;
+    let mut s = String::with_capacity(bytes.len().min(SHOWN) * 2 + 16);
+    for b in bytes.iter().take(SHOWN) {
+        s.push_str(&format!("{b:02x}"));
+    }
+    if bytes.len() > SHOWN {
+        s.push_str(&format!("... ({} more bytes)", bytes.len() - SHOWN));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // A short deterministic run of every mode.  The library test binary
+    // has no counting allocator, so this exercises the panic, hang,
+    // differential, and error-class oracles; the allocation oracle runs
+    // for real in the `fuzz_corpus` test target and the CLI.
+    #[test]
+    fn short_wire_fuzz_run_is_clean() {
+        let report = run_wire_fuzz(0xF0CC_AC1A, 600).expect("no oracle violations");
+        assert_eq!(report.iters, 600);
+        assert!(report.rejected > 0, "mutation modes must exercise rejects");
+        assert!(report.accepted > 0, "valid mode must exercise accepts");
+    }
+
+    #[test]
+    fn generated_bodies_always_roundtrip() {
+        let mut rng = Prng::new(0x5EED);
+        let mut paths = PathInterner::default();
+        for _ in 0..300 {
+            let body = gen_valid_body(&mut rng);
+            roundtrip_check(&body, &mut paths).expect("canonical roundtrip");
+        }
+    }
+}

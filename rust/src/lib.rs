@@ -29,6 +29,7 @@ pub mod config;
 pub mod coordinator;
 pub mod error;
 pub mod experiments;
+pub mod fuzz;
 pub mod metadata;
 pub mod net;
 pub mod node;

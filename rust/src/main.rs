@@ -20,6 +20,14 @@ use fanstore::runtime::Engine;
 use fanstore::trainer::{self, DatasetView, TrainConfig};
 use fanstore::workload::datasets::DatasetSpec;
 
+// The counting allocator powers the wire fuzzer's allocation-amplification
+// oracle (`fanstore fuzz wire`); outside `alloc_guard::measure` it is a
+// passthrough over the system allocator with one thread-local read of
+// overhead per allocation.
+#[global_allocator]
+static ALLOC: fanstore::fuzz::alloc_guard::CountingAlloc =
+    fanstore::fuzz::alloc_guard::CountingAlloc;
+
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
     if let Err(e) = run(&args) {
@@ -30,7 +38,7 @@ fn main() {
 
 fn usage() {
     eprintln!(
-        "usage: fanstore <prepare|bench-io|train|cluster|experiment> [--key value ...]\n\
+        "usage: fanstore <prepare|bench-io|train|cluster|experiment|fuzz> [--key value ...]\n\
          \n\
          prepare     pack a synthetic dataset into partitions (§5.2)\n\
                      (--compress none|lzss|lzss-1..9 picks the codec;\n\
@@ -52,7 +60,11 @@ fn usage() {
                      (every host passes the same --files/--size/--seed/--partitions)\n\
          experiment  regenerate a paper figure: fig1 fig3 fig4 fig5 fig6\n\
                      fig7 fig8 fig9 fig10 fig11 prep-cost pipeline transport\n\
-                     failover all"
+                     failover all\n\
+         fuzz        deterministic fuzzing (--seed N --iters N):\n\
+                       wire   adversarial wire-codec decode fuzzing\n\
+                       store  op-schedule fuzzing of a live cluster against\n\
+                              an in-memory shadow model"
     );
 }
 
@@ -134,9 +146,62 @@ fn run(args: &[String]) -> Result<()> {
         "train" => cmd_train(&m),
         "cluster" => cmd_cluster(&m),
         "experiment" => cmd_experiment(&m),
+        "fuzz" => cmd_fuzz(&m),
         _ => {
             usage();
             Err(fanstore::FanError::Config(format!("unknown command {cmd}")))
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// `fanstore fuzz wire|store` — deterministic fuzzing entrypoints.
+//
+// Both targets are pure functions of (--seed, --iters); a failure prints
+// the seed and a shrunk minimal reproducer, and re-running with the same
+// flags replays it exactly.  This binary registers the counting allocator,
+// so the wire target's allocation-amplification oracle is live.
+// ---------------------------------------------------------------------------
+
+fn cmd_fuzz(m: &ArgMap) -> Result<()> {
+    let Some(target) = m.positional.get(1).map(|s| s.as_str()) else {
+        usage();
+        return Err(fanstore::FanError::Config(
+            "fuzz needs a target: wire | store".into(),
+        ));
+    };
+    let seed = m.get_u64("seed", 0xFA57_F0CC)?;
+    match target {
+        "wire" => {
+            let iters = m.get_u64("iters", 10_000)?;
+            let report = fanstore::fuzz::run_wire_fuzz(seed, iters)
+                .map_err(fanstore::FanError::Runtime)?;
+            println!(
+                "wire fuzz clean: seed={seed:#x} iters={} accepted={} rejected={} \
+                 max_alloc={}B alloc_guarded={}",
+                report.iters,
+                report.accepted,
+                report.rejected,
+                report.max_alloc,
+                report.alloc_guarded
+            );
+            Ok(())
+        }
+        "store" => {
+            let iters = m.get_u64("iters", 2_000)?;
+            let report = fanstore::fuzz::run_store_fuzz(seed, iters)
+                .map_err(fanstore::FanError::Runtime)?;
+            println!(
+                "store fuzz clean: seed={seed:#x} rounds={} ops={} kill_rounds={} strict_rounds={}",
+                report.rounds, report.ops, report.kills, report.strict_rounds
+            );
+            Ok(())
+        }
+        other => {
+            usage();
+            Err(fanstore::FanError::Config(format!(
+                "unknown fuzz target {other}"
+            )))
         }
     }
 }
@@ -223,7 +288,11 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
     match sub {
         "serve" => {
             let listen = m.get("listen").unwrap_or("127.0.0.1:0").to_string();
-            let (server, endpoint) = TcpServer::bind(node_id, listen.as_str())?;
+            let (server, endpoint) = TcpServer::bind_counted(
+                node_id,
+                listen.as_str(),
+                Arc::clone(&shared.stats.decode_rejects),
+            )?;
             println!(
                 "node {node_id}/{nodes}: serving {} files ({} partitions dumped) on {}",
                 n_files,
@@ -260,7 +329,11 @@ fn cmd_cluster(m: &ArgMap) -> Result<()> {
             // optionally serve our own share too (peers may read from us)
             let server_node = match m.get("listen") {
                 Some(listen) => {
-                    let (server, endpoint) = TcpServer::bind(node_id, listen)?;
+                    let (server, endpoint) = TcpServer::bind_counted(
+                        node_id,
+                        listen,
+                        Arc::clone(&shared.stats.decode_rejects),
+                    )?;
                     println!("node {node_id}: also serving on {}", server.local_addr());
                     Some((server, FanStoreNode::spawn(Arc::clone(&shared), endpoint)))
                 }

@@ -80,6 +80,22 @@ impl TcpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral loopback port)
     /// and return the server handle plus the node's worker endpoint.
     pub fn bind(node_id: u32, addr: impl ToSocketAddrs) -> Result<(TcpServer, NodeEndpoint)> {
+        Self::bind_counted(node_id, addr, Arc::new(AtomicU64::new(0)))
+    }
+
+    /// [`TcpServer::bind`] with an externally owned reject counter,
+    /// surfaced as `NodeStats::decode_rejects` when the coordinator wires
+    /// the node's own counter through.  Every frame this server refuses —
+    /// an oversize/corrupt length prefix or an undecodable body — bumps
+    /// it; plain EOF and short reads (a peer hanging up) do not.  The
+    /// decode-failure policy is per-connection: the offending bridge
+    /// thread closes its own socket and the accept loop keeps serving
+    /// everyone else.
+    pub fn bind_counted(
+        node_id: u32,
+        addr: impl ToSocketAddrs,
+        decode_rejects: Arc<AtomicU64>,
+    ) -> Result<(TcpServer, NodeEndpoint)> {
         let listener = TcpListener::bind(addr)
             .map_err(|e| FanError::Transport(format!("node {node_id} bind: {e}")))?;
         let local_addr = listener
@@ -106,9 +122,10 @@ impl TcpServer {
                         }
                     };
                     let tx = inbox_tx.clone();
+                    let rejects = Arc::clone(&decode_rejects);
                     let _ = std::thread::Builder::new()
                         .name(format!("fanstore-tcp-bridge-{node_id}"))
-                        .spawn(move || bridge_connection(stream, tx));
+                        .spawn(move || bridge_connection(stream, tx, rejects));
                 }
             })
             .map_err(|e| FanError::Transport(format!("spawn accept loop: {e}")))?;
@@ -184,8 +201,10 @@ impl BridgeWriter {
 }
 
 /// Per-connection bridge: framed requests in, correlated (coalesced)
-/// responses out.
-fn bridge_connection(stream: TcpStream, inbox: Sender<Message>) {
+/// responses out.  A frame that fails to decode kills only this
+/// connection (counted in `rejects`); the accept loop and every other
+/// bridge keep running.
+fn bridge_connection(stream: TcpStream, inbox: Sender<Message>, rejects: Arc<AtomicU64>) {
     let _ = stream.set_nodelay(true);
     let mut read_half = match stream.try_clone() {
         Ok(s) => s,
@@ -200,12 +219,19 @@ fn bridge_connection(stream: TcpStream, inbox: Sender<Message>) {
     let mut paths = wire::PathInterner::default();
     loop {
         // EOF / torn frame / corrupt body all close this connection; the
-        // peer's pending requests fail over on its side
+        // peer's pending requests fail over on its side.  Format errors
+        // (a hostile or corrupt frame, as opposed to a peer hanging up)
+        // are counted so operators can see garbage arriving.
         let body = match wire::read_frame(&mut read_half) {
             Ok(b) => b,
+            Err(FanError::Format(_)) => {
+                rejects.fetch_add(1, Ordering::Relaxed);
+                break;
+            }
             Err(_) => break,
         };
         let Ok((corr, from, req)) = wire::decode_request(&body, &mut paths) else {
+            rejects.fetch_add(1, Ordering::Relaxed);
             break;
         };
         // account the request BEFORE forwarding: its reply must observe
@@ -680,6 +706,73 @@ mod tests {
             w.join().unwrap();
         }
         drop(servers);
+    }
+
+    #[test]
+    fn garbage_bytes_kill_only_their_own_connection() {
+        use std::io::{Read as _, Write as _};
+        // a live server with an owned reject counter; a healthy client
+        // talks to it before, during, and after hostile connections feed
+        // it garbage — only the garbage connections may die
+        let rejects = Arc::new(AtomicU64::new(0));
+        let (srv, ep) = TcpServer::bind_counted(0, "127.0.0.1:0", Arc::clone(&rejects)).unwrap();
+        let worker = spawn_echo(ep);
+        let tp = TcpTransport::connect(&[srv.local_addr()]).unwrap();
+        let d = tp
+            .call(0, 0, Request::ReadFile { path: "/ok".into() })
+            .unwrap()
+            .into_file_data()
+            .unwrap();
+        assert_eq!(&d[..], b"/ok");
+
+        // hostile frame #1: valid length prefix, undecodable body
+        let mut framed_garbage = Vec::new();
+        framed_garbage.extend_from_slice(&8u32.to_le_bytes());
+        framed_garbage.extend_from_slice(&[0xEE; 8]);
+        // hostile frame #2: length prefix beyond MAX_FRAME
+        let oversize_prefix = u32::MAX.to_le_bytes().to_vec();
+        for garbage in [framed_garbage, oversize_prefix] {
+            let mut s = TcpStream::connect(srv.local_addr()).unwrap();
+            s.write_all(&garbage).unwrap();
+            let _ = s.shutdown(Shutdown::Write);
+            // the bridge must close THIS connection: read to EOF
+            let mut buf = [0u8; 64];
+            loop {
+                match s.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => {}
+                }
+            }
+        }
+
+        // the accept loop survived: the old connection still works and a
+        // brand-new one is served too
+        let d = tp
+            .call(0, 0, Request::ReadFile { path: "/still".into() })
+            .unwrap()
+            .into_file_data()
+            .unwrap();
+        assert_eq!(&d[..], b"/still");
+        let tp2 = TcpTransport::connect(&[srv.local_addr()]).unwrap();
+        let d = tp2
+            .call(0, 0, Request::ReadFile { path: "/fresh".into() })
+            .unwrap()
+            .into_file_data()
+            .unwrap();
+        assert_eq!(&d[..], b"/fresh");
+
+        // both rejects are counted (bounded wait: the bridge bumps the
+        // counter just before closing the socket we EOF'd on)
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        while rejects.load(Ordering::SeqCst) < 2 && std::time::Instant::now() < deadline {
+            thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(rejects.load(Ordering::SeqCst), 2, "both garbage frames counted");
+
+        tp.shutdown_all();
+        tp2.disconnect();
+        worker.join().unwrap();
+        drop(srv);
     }
 
     #[test]

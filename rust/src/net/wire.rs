@@ -409,7 +409,17 @@ impl PathInterner {
     }
 }
 
+/// Body bytes read per step by [`read_frame`].  Allocation grows with the
+/// bytes actually delivered, so a lying `MAX_FRAME`-adjacent length prefix
+/// on a torn stream costs at most one chunk, not a gigabyte.
+pub(crate) const READ_CHUNK: usize = 64 * 1024;
+
 /// Read one `[len][body]` frame; returns the body.
+///
+/// The body is read incrementally in [`READ_CHUNK`] steps: the buffer only
+/// ever holds capacity for bytes the peer has actually produced (plus one
+/// chunk), so a corrupt or hostile length prefix cannot drive a large
+/// speculative allocation before the stream runs dry.
 pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
     let mut len = [0u8; 4];
     r.read_exact(&mut len)
@@ -420,9 +430,15 @@ pub fn read_frame(r: &mut impl Read) -> Result<Vec<u8>> {
             "frame length {len} exceeds MAX_FRAME"
         )));
     }
-    let mut body = vec![0u8; len as usize];
-    r.read_exact(&mut body)
-        .map_err(|e| FanError::Transport(format!("frame body read: {e}")))?;
+    let len = len as usize;
+    let mut body = Vec::with_capacity(len.min(READ_CHUNK));
+    while body.len() < len {
+        let step = (len - body.len()).min(READ_CHUNK);
+        let start = body.len();
+        body.resize(start + step, 0);
+        r.read_exact(&mut body[start..])
+            .map_err(|e| FanError::Transport(format!("frame body read: {e}")))?;
+    }
     Ok(body)
 }
 
@@ -498,6 +514,22 @@ impl<'a> WireReader<'a> {
         Ok(n as usize)
     }
 
+    /// Varint *element count* for a batch whose elements each encode to at
+    /// least `min_encoded` bytes.  Rejected before any allocation if the
+    /// remaining frame bytes cannot possibly back that many elements —
+    /// a corrupt count cannot reserve memory the frame never shipped.
+    fn get_count(&mut self, min_encoded: usize) -> Result<usize> {
+        let n = self.get_varint()?;
+        let max = (self.remaining() / min_encoded.max(1)) as u64;
+        if n > max {
+            return Err(FanError::Format(format!(
+                "batch count {n} exceeds what {} remaining frame bytes can encode",
+                self.remaining()
+            )));
+        }
+        Ok(n as usize)
+    }
+
     fn get_str(&mut self) -> Result<String> {
         let n = self.get_len()?;
         String::from_utf8(self.take(n)?.to_vec())
@@ -530,6 +562,19 @@ impl<'a> WireReader<'a> {
         }
         Ok(())
     }
+}
+
+/// Batch vector whose *preallocation* is capped by the bytes actually left
+/// in the frame: decoded elements (16–24 B of `Arc<str>` / tuple each) can
+/// be far wider than their 1–2 B minimum encoding, so even a count that
+/// passed [`WireReader::get_count`] could otherwise reserve ~16–24× the
+/// input.  Real batches (paths are ≥ ~8 bytes on the wire) still get their
+/// full capacity up front; hostile degenerate counts fall back to amortized
+/// growth, bounding speculative allocation at ~2× the remaining bytes.
+fn bounded_vec<T>(n: usize, remaining: usize) -> Vec<T> {
+    let elem = std::mem::size_of::<T>().max(1);
+    let cap_elems = (2 * remaining) / elem + 1;
+    Vec::with_capacity(n.min(cap_elems))
 }
 
 fn put_stat(f: &mut Frame, stat: &FileStat) {
@@ -696,8 +741,9 @@ pub fn decode_request(body: &[u8], paths: &mut PathInterner) -> Result<(u64, u32
             path: r.get_path(paths)?,
         },
         REQ_READ_FILES => {
-            let n = r.get_len()?;
-            let mut batch = Vec::with_capacity(n);
+            // each path encodes to >= 1 byte (its length varint)
+            let n = r.get_count(1)?;
+            let mut batch = bounded_vec(n, r.remaining());
             for _ in 0..n {
                 batch.push(r.get_path(paths)?);
             }
@@ -707,8 +753,8 @@ pub fn decode_request(body: &[u8], paths: &mut PathInterner) -> Result<(u64, u32
             path: r.get_path(paths)?,
         },
         REQ_STAT_OUTPUTS => {
-            let n = r.get_len()?;
-            let mut batch = Vec::with_capacity(n);
+            let n = r.get_count(1)?;
+            let mut batch = bounded_vec(n, r.remaining());
             for _ in 0..n {
                 batch.push(r.get_path(paths)?);
             }
@@ -852,8 +898,9 @@ pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Re
             }
         }
         RESP_FILES_DATA => {
-            let n = r.get_len()?;
-            let mut files = Vec::with_capacity(n);
+            // each entry encodes to >= 2 bytes (path length varint + tag)
+            let n = r.get_count(2)?;
+            let mut files = bounded_vec(n, r.remaining());
             for _ in 0..n {
                 let path = r.get_path(paths)?;
                 let fetch = get_fetch(&mut r)?;
@@ -872,8 +919,8 @@ pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Re
             }
         }
         RESP_METAS => {
-            let n = r.get_len()?;
-            let mut metas = Vec::with_capacity(n);
+            let n = r.get_count(2)?;
+            let mut metas = bounded_vec(n, r.remaining());
             for _ in 0..n {
                 let path = r.get_path(paths)?;
                 let m = match r.get_u8()? {
@@ -895,8 +942,8 @@ pub fn decode_response(body: &[u8], paths: &mut PathInterner) -> Result<(u64, Re
             Response::Metas(metas)
         }
         RESP_NAMES => {
-            let n = r.get_len()?;
-            let mut names = Vec::with_capacity(n);
+            let n = r.get_count(1)?;
+            let mut names = bounded_vec(n, r.remaining());
             for _ in 0..n {
                 names.push(r.get_str()?);
             }
@@ -1280,6 +1327,65 @@ mod tests {
         framed.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
         let mut cur = std::io::Cursor::new(framed);
         assert!(read_frame(&mut cur).is_err());
+    }
+
+    /// A corrupt batch count larger than the remaining frame bytes could
+    /// possibly encode must be rejected *before* any element vector is
+    /// reserved — on every one of the five batched arms.
+    #[test]
+    fn hostile_batch_counts_are_rejected_before_allocation() {
+        let mut it = PathInterner::default();
+        let huge = u32::MAX as u64; // ~4 G elements claimed in a tiny body
+        for tag in [REQ_READ_FILES, REQ_STAT_OUTPUTS] {
+            let mut f = Frame::new();
+            f.put_u8(KIND_REQUEST);
+            f.put_u64(1);
+            f.put_u32(0);
+            f.put_u8(tag);
+            f.put_varint(huge);
+            f.put_slice(&[0; 8]); // 8 tail bytes cannot back 4G paths
+            let err = decode_request(&f.to_body_bytes(), &mut it).unwrap_err();
+            assert!(matches!(err, FanError::Format(_)), "tag {tag}: {err:?}");
+        }
+        for tag in [RESP_FILES_DATA, RESP_METAS, RESP_NAMES] {
+            let mut f = Frame::new();
+            f.put_u8(KIND_RESPONSE);
+            f.put_u64(1);
+            f.put_u8(tag);
+            f.put_varint(huge);
+            f.put_slice(&[0; 8]);
+            let err = decode_response(&f.to_body_bytes(), &mut it).unwrap_err();
+            assert!(matches!(err, FanError::Format(_)), "tag {tag}: {err:?}");
+        }
+    }
+
+    /// Degenerate-but-valid batches (many empty names) still decode: the
+    /// count guard keys off minimum *encoded* size, not decoded width.
+    #[test]
+    fn degenerate_empty_name_batches_still_decode() {
+        let mut it = PathInterner::default();
+        let names: Vec<String> = vec![String::new(); 64];
+        let body = encode_response(7, &Response::Names(names.clone())).to_body_bytes();
+        let (corr, resp) = decode_response(&body, &mut it).unwrap();
+        assert_eq!(corr, 7);
+        assert_eq!(resp, Response::Names(names));
+    }
+
+    /// A length prefix just under MAX_FRAME over a stream that delivers
+    /// only a few bytes must fail from the short read, without ever
+    /// allocating the claimed gigabyte (the incremental read stops at the
+    /// first starved chunk; the byte bound itself is asserted under the
+    /// counting allocator in tests/fuzz_corpus.rs).
+    #[test]
+    fn max_frame_adjacent_prefix_fails_cheaply_on_short_stream() {
+        for claimed in [MAX_FRAME, MAX_FRAME - 1, MAX_FRAME / 2] {
+            let mut framed = Vec::new();
+            framed.extend_from_slice(&claimed.to_le_bytes());
+            framed.extend_from_slice(&[0xAA; 64]); // stream dies after 64 B
+            let mut cur = std::io::Cursor::new(framed);
+            let err = read_frame(&mut cur).unwrap_err();
+            assert!(matches!(err, FanError::Transport(_)), "got {err:?}");
+        }
     }
 
     #[test]

@@ -118,6 +118,11 @@ pub struct NodeStats {
     /// Descriptor pickups answered by the decoded-payload side cache
     /// instead of a repeat decompression (PR 8 satellite).
     pub decoded_cache_hits: u64,
+    /// Frames this node's TCP server refused to decode (garbage bodies,
+    /// oversize length prefixes).  Each reject kills only its own
+    /// connection, never the accept loop; always zero on the in-proc
+    /// fabric.
+    pub decode_rejects: u64,
 }
 
 /// Lock-free accounting: every counter is a relaxed `AtomicU64`, updated on
@@ -148,6 +153,11 @@ pub struct AtomicNodeStats {
     pub repairs_completed: AtomicU64,
     pub repaired_bytes: AtomicU64,
     pub decoded_cache_hits: AtomicU64,
+    /// `Arc` rather than a bare atomic: the TCP accept loop is bound
+    /// *before* the node is sealed, so the coordinator hands the same
+    /// counter to [`crate::net::tcp::TcpServer::bind_counted`] and to the
+    /// sealed stats.
+    pub decode_rejects: Arc<AtomicU64>,
 }
 
 impl AtomicNodeStats {
@@ -194,6 +204,7 @@ impl AtomicNodeStats {
             migrated_bytes: 0,
             tier_hot_hits: 0,
             decoded_cache_hits: ld(&self.decoded_cache_hits),
+            decode_rejects: ld(&self.decode_rejects),
         }
     }
 }

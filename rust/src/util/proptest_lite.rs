@@ -42,6 +42,113 @@ where
     }
 }
 
+/// Greedily shrink a failing byte input to a (locally) minimal one.
+///
+/// `fails(bytes)` must return `true` for the original input.  The shrinker
+/// applies three passes to a fixpoint, keeping any candidate that still
+/// fails:
+///
+/// 1. **Halve/truncate** — drop the back half, then the front half, then
+///    progressively smaller chunks from anywhere in the input (removing a
+///    chunk is how spliced/duplicated garbage disappears).
+/// 2. **Simplify** — replace bytes with `0` (the "simplest" byte), one
+///    chunk at a time.
+/// 3. **Trim** — single-byte removals once chunks stop helping.
+///
+/// The result is minimal in the 1-removal / 1-zeroing neighborhood: no
+/// single byte can be removed or zeroed without the failure vanishing.
+/// Deterministic — no randomness; same input + predicate, same output.
+pub fn shrink_bytes(input: &[u8], mut fails: impl FnMut(&[u8]) -> bool) -> Vec<u8> {
+    debug_assert!(fails(input), "shrink_bytes needs a failing input");
+    let mut best = input.to_vec();
+    loop {
+        let mut improved = false;
+        // pass 1: chunk removal, chunk size halving from len/2 down to 1
+        let mut chunk = (best.len() / 2).max(1);
+        while chunk >= 1 {
+            let mut start = 0;
+            while start < best.len() {
+                let end = (start + chunk).min(best.len());
+                let mut cand = Vec::with_capacity(best.len() - (end - start));
+                cand.extend_from_slice(&best[..start]);
+                cand.extend_from_slice(&best[end..]);
+                if fails(&cand) {
+                    best = cand;
+                    improved = true;
+                    // retry the same offset: the next chunk slid into place
+                } else {
+                    start += chunk;
+                }
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+        // pass 2: zero out bytes (chunked, then singly) — simpler content,
+        // same length
+        let mut chunk = (best.len() / 2).max(1);
+        while chunk >= 1 {
+            let mut start = 0;
+            while start < best.len() {
+                let end = (start + chunk).min(best.len());
+                if best[start..end].iter().any(|&b| b != 0) {
+                    let mut cand = best.clone();
+                    cand[start..end].fill(0);
+                    if fails(&cand) {
+                        best = cand;
+                        improved = true;
+                    }
+                }
+                start += chunk;
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
+/// [`shrink_bytes`] for op sequences: greedily remove schedule entries
+/// (back-half first, then smaller chunks, then single ops) while the
+/// sequence still fails.  Ops are opaque — only removal simplifies, so
+/// the result is 1-removal minimal.  Used by the store fuzzer to report
+/// minimal failing schedules.
+pub fn shrink_seq<T: Clone>(input: &[T], mut fails: impl FnMut(&[T]) -> bool) -> Vec<T> {
+    debug_assert!(fails(input), "shrink_seq needs a failing input");
+    let mut best = input.to_vec();
+    loop {
+        let mut improved = false;
+        let mut chunk = (best.len() / 2).max(1);
+        while chunk >= 1 {
+            let mut start = 0;
+            while start < best.len() {
+                let end = (start + chunk).min(best.len());
+                let mut cand = Vec::with_capacity(best.len() - (end - start));
+                cand.extend_from_slice(&best[..start]);
+                cand.extend_from_slice(&best[end..]);
+                if fails(&cand) {
+                    best = cand;
+                    improved = true;
+                } else {
+                    start += chunk;
+                }
+            }
+            if chunk == 1 {
+                break;
+            }
+            chunk /= 2;
+        }
+        if !improved {
+            return best;
+        }
+    }
+}
+
 /// Convenience: assert-style helper for property bodies.
 #[macro_export]
 macro_rules! prop_assert {
@@ -81,5 +188,56 @@ mod tests {
                 Err("hit zero".into())
             }
         });
+    }
+
+    #[test]
+    fn shrink_bytes_finds_the_single_poison_byte() {
+        // failure = "contains 0x42": the minimal reproduction is [0x42]
+        let mut input = vec![7u8; 300];
+        input[137] = 0x42;
+        let shrunk = shrink_bytes(&input, |b| b.contains(&0x42));
+        assert_eq!(shrunk, vec![0x42]);
+    }
+
+    #[test]
+    fn shrink_bytes_minimizes_length_and_content() {
+        // failure = "at least 5 bytes": minimal is 5 bytes, all zeroed
+        let input: Vec<u8> = (1..=200u8).collect();
+        let shrunk = shrink_bytes(&input, |b| b.len() >= 5);
+        assert_eq!(shrunk, vec![0u8; 5]);
+    }
+
+    #[test]
+    fn shrink_bytes_handles_multi_byte_dependencies() {
+        // failure needs BOTH a 0x10 and a later 0x20 — the pair survives
+        let mut input = vec![0xFFu8; 64];
+        input[10] = 0x10;
+        input[50] = 0x20;
+        let shrunk = shrink_bytes(&input, |b| {
+            b.iter()
+                .position(|&x| x == 0x10)
+                .is_some_and(|i| b[i..].contains(&0x20))
+        });
+        assert_eq!(shrunk, vec![0x10, 0x20]);
+    }
+
+    #[test]
+    fn shrink_seq_removes_irrelevant_ops() {
+        // failure = "contains op 3 after op 1"
+        let input = vec![0, 1, 2, 9, 9, 3, 4, 5];
+        let shrunk = shrink_seq(&input, |s: &[i32]| {
+            s.iter()
+                .position(|&x| x == 1)
+                .is_some_and(|i| s[i..].contains(&3))
+        });
+        assert_eq!(shrunk, vec![1, 3]);
+    }
+
+    #[test]
+    fn shrink_is_identity_on_already_minimal_input() {
+        let shrunk = shrink_bytes(&[0x42], |b| b.contains(&0x42));
+        assert_eq!(shrunk, vec![0x42]);
+        let shrunk = shrink_seq(&[7], |s: &[u8]| !s.is_empty());
+        assert_eq!(shrunk, vec![7]);
     }
 }

@@ -390,6 +390,44 @@ impl FanStoreVfs {
                 }
             }
         }
+        // Double-failure window (PR 10, carried from PR 9): when the homes
+        // themselves are down, the deterministic adoptee may hold a
+        // repaired copy — `repair_tick` re-commits bytes + stamped
+        // metadata there with the same `adopt_node` arithmetic used here.
+        // Its found answer is as good as a home's; its ENOENT is NOT
+        // authoritative (the repair may simply not have run yet).
+        let down = |n: u32| {
+            n != self.node_id
+                && self.shared.health.state(n) == crate::net::health::PeerState::Down
+        };
+        if homes.iter().any(|&h| down(h)) {
+            let start = (homes[0] + 1) % self.shared.placement.nodes;
+            if let Some(a) = self.shared.placement.adopt_node(&homes, start, down) {
+                if a == self.node_id {
+                    let local = self.shared.output_meta.read().unwrap().get(path).cloned();
+                    if let Some(meta) = local {
+                        return Ok(meta);
+                    }
+                } else if let Ok(Response::Meta {
+                    stat,
+                    origin,
+                    generation,
+                }) = self.transport.call(
+                    self.node_id,
+                    a,
+                    Request::StatOutput { path: path.into() },
+                ) {
+                    self.shared.health.record_success(a, None);
+                    let meta = output_meta(stat, origin, generation);
+                    self.shared
+                        .output_meta_cache
+                        .write()
+                        .unwrap()
+                        .insert(path.to_string(), meta.clone());
+                    return Ok(meta);
+                }
+            }
+        }
         match (missing_at, transport_err) {
             // every reachable home answered ENOENT and nobody was skipped:
             // the name provably does not exist

@@ -220,3 +220,106 @@ fn committed_output_survives_death_of_its_origin_home() {
         cluster.shutdown();
     }
 }
+
+/// Double failure (PR 10, the ROADMAP's carried window): after BOTH output
+/// homes of a path die, the adopted copy — installed by the PR 9 repair
+/// tick — must answer `stat` metadata too, not just reads.  Before the
+/// fix, `stat` only consulted the homes and degraded to EIO even though a
+/// live node provably held bytes + stamped metadata.
+#[test]
+fn output_stat_survives_death_of_every_home_via_the_adoptee() {
+    for kind in [TransportKind::InProc, TransportKind::TcpLoopback] {
+        // 4 nodes, replication 2: homes(path) = {h, h+2}, so the adoptee
+        // arithmetic — first non-home live node from (homes[0]+1) — always
+        // lands on the bystander h+1
+        let files = inputs(8, 0xD0B1);
+        let mut cluster = Cluster::launch(
+            &files,
+            ClusterConfig {
+                nodes: 4,
+                partitions: 4,
+                replication: 2,
+                transport: kind,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+
+        let path = "/ckpt/double_fail.bin";
+        let homes = cluster.placement.output_homes(path);
+        assert_eq!(homes.len(), 2);
+        let adoptee_id = (homes[0] + 1) % 4;
+        assert!(!homes.contains(&adoptee_id), "stride-2 homes skip h+1");
+        let other = (0..4u32)
+            .find(|n| !homes.contains(n) && *n != adoptee_id)
+            .unwrap();
+
+        // worst case: the writer IS the primary home, so the first kill
+        // takes the origin buffer and the stamping home down together
+        let mut data = vec![0u8; 4096];
+        Prng::new(0xDF01).fill_bytes(&mut data);
+        let mut writer = cluster.client(homes[0]);
+        writer.write_file(path, &data).unwrap();
+        drop(writer);
+
+        // first kill + detection + repair: the surviving home re-commits
+        // the output (bytes + stamped metadata) to the adoptee.  No client
+        // reads in between — they would warm per-node meta caches and mask
+        // the stat path this test exists to pin down.
+        cluster.kill_node(homes[0]);
+        let tp = Arc::clone(&cluster.transport);
+        for s in [homes[1], adoptee_id, other] {
+            let n = cluster.node_state(s);
+            n.probe_tick(&*tp);
+            n.probe_tick(&*tp);
+            assert_eq!(n.health.state(homes[0]), PeerState::Down, "{}", kind.name());
+        }
+        for _ in 0..8 {
+            let mut progress = 0;
+            for s in [homes[1], adoptee_id, other] {
+                progress += cluster.node_state(s).repair_tick(&*tp).started;
+            }
+            if progress == 0 {
+                break;
+            }
+        }
+        let adoptee = cluster.node_state(adoptee_id);
+        assert!(
+            adoptee.output_meta.read().unwrap().get(path).is_some(),
+            "{}: repair must install stamped metadata at the adoptee",
+            kind.name()
+        );
+
+        // second kill: now EVERY home of the path is down
+        cluster.kill_node(homes[1]);
+        for s in [adoptee_id, other] {
+            let n = cluster.node_state(s);
+            n.probe_tick(&*tp);
+            n.probe_tick(&*tp);
+            assert_eq!(n.health.state(homes[1]), PeerState::Down, "{}", kind.name());
+        }
+
+        // a cold bystander stats and reads through the adopted copy
+        let mut reader = cluster.client(other);
+        assert_eq!(
+            reader.stat(path).unwrap().size,
+            data.len() as u64,
+            "{}: stat must consult the adopted copy when every home is down",
+            kind.name()
+        );
+        assert_eq!(reader.read_all(path).unwrap(), data, "{}", kind.name());
+
+        // the adoptee itself stats through its own adopted home table
+        let mut local = cluster.client(adoptee_id);
+        assert_eq!(
+            local.stat(path).unwrap().size,
+            data.len() as u64,
+            "{}: the adoptee answers from its local adopted record",
+            kind.name()
+        );
+        assert_eq!(local.read_all(path).unwrap(), data, "{}", kind.name());
+        drop(local);
+        drop(reader);
+        cluster.shutdown();
+    }
+}

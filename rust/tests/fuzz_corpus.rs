@@ -1,0 +1,168 @@
+//! Regression-corpus replay + bounded fuzz smokes (PR 10).
+//!
+//! `rust/tests/corpus/` holds hand-written hostile wire inputs — huge batch
+//! counts backed by empty tails, overlong varints, unknown tags/kinds/codec
+//! ids, truncated structures, and MAX_FRAME-adjacent length prefixes.  Every
+//! file is replayed through the same oracles the live fuzzer uses (panic
+//! containment, allocation-amplification bounds, torn-frame detection), so a
+//! decode regression fails `cargo test` long before a fuzz campaign runs.
+//!
+//! This binary registers [`CountingAlloc`] as its global allocator — unlike
+//! the library's own unit-test binary — so the allocation oracle here is
+//! *live*, not a no-op: the test asserts it.
+
+use fanstore::compress::Codec;
+use fanstore::fuzz::alloc_guard::{self, CountingAlloc};
+use fanstore::fuzz::wire::{replay_body, replay_stream};
+use fanstore::fuzz::{run_store_fuzz, run_wire_fuzz};
+use fanstore::metadata::record::{FileLocation, FileMeta, FileStat};
+use fanstore::net::transport::{FileFetch, MetaFetch, Request, Response};
+use fanstore::net::wire::{encode_request, encode_response};
+use fanstore::storage::payload::Payload;
+use std::sync::Arc;
+
+#[global_allocator]
+static ALLOC: CountingAlloc = CountingAlloc;
+
+fn corpus(name: &str) -> Vec<u8> {
+    let path = format!("{}/rust/tests/corpus/{name}", env!("CARGO_MANIFEST_DIR"));
+    std::fs::read(&path).unwrap_or_else(|e| panic!("read corpus file {path}: {e}"))
+}
+
+#[test]
+fn the_allocation_oracle_is_live_in_this_binary() {
+    assert!(
+        alloc_guard::installed(),
+        "fuzz_corpus must run under the counting allocator"
+    );
+}
+
+#[test]
+fn hostile_corpus_bodies_are_rejected_within_bounds() {
+    // every file here must be rejected by BOTH decoders — cheaply (the
+    // allocation oracle is live in this binary) and without panicking
+    let reject = [
+        "req_huge_count_read_files.bin",
+        "req_huge_count_stat_outputs.bin",
+        "resp_huge_count_names.bin",
+        "req_bad_tag.bin",
+        "body_bad_kind.bin",
+        "req_truncated_commit.bin",
+        "resp_fetch_bad_codec.bin",
+        "body_overlong_varint.bin",
+    ];
+    for name in reject {
+        let accepted =
+            replay_body(&corpus(name)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!accepted, "{name}: hostile body must not decode");
+    }
+}
+
+#[test]
+fn degenerate_but_legal_bodies_decode_within_bounds() {
+    // 64 empty names: 75 input bytes materializing 64 `String`s — legal,
+    // and the worst case for the per-item allocation allowance
+    let accepted = replay_body(&corpus("body_empty_names_64.bin"))
+        .expect("empty-names body violated an oracle");
+    assert!(accepted, "empty-names body is canonical and must decode");
+}
+
+#[test]
+fn hostile_corpus_streams_fail_cheaply() {
+    // a MAX_FRAME length claim backed by 64 delivered bytes, and a length
+    // above MAX_FRAME: neither may panic, allocate past the streaming
+    // bound, or hand back a torn frame
+    for name in ["stream_frame_len_max.bin", "stream_frame_len_over.bin"] {
+        let produced =
+            replay_stream(&corpus(name)).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert!(!produced, "{name}: must not produce a frame");
+    }
+    // the accept path still works: a complete 5-byte frame
+    let mut ok = vec![5u8, 0, 0, 0];
+    ok.extend([1, 2, 3, 4, 5]);
+    assert!(replay_stream(&ok).expect("tiny valid frame"), "frame lost");
+}
+
+#[test]
+fn every_message_variant_replays_under_the_allocation_oracle() {
+    let path = || -> Arc<str> { Arc::from("out/ckpt/model_0007.bin") };
+    let stat = FileStat::regular(42, 4096);
+    let meta = FileMeta {
+        stat,
+        location: FileLocation {
+            node: 3,
+            partition: 7,
+            offset: 8192,
+            stored_len: 2048,
+            codec: Codec::Lzss(5),
+        },
+        generation: 9,
+    };
+    let data = Payload::from(vec![0xA5u8; 1024]);
+    let requests = [
+        Request::ReadFile { path: path() },
+        Request::ReadFiles { paths: vec![path(), Arc::from("a"), Arc::from("")] },
+        Request::StatOutput { path: path() },
+        Request::StatOutputs { paths: vec![path()] },
+        Request::CommitOutput {
+            path: path(),
+            meta: meta.clone(),
+            data: data.clone(),
+            stamped: true,
+        },
+        Request::ListOutputs { dir: Arc::from("out") },
+        Request::UnlinkOutput { path: path() },
+        Request::DropOutput { path: path() },
+        Request::InvalidateListings { path: Arc::from("out") },
+        Request::Ping { epoch: 77 },
+        Request::FetchPartition { pid: 5 },
+        Request::InstallPartition { pid: 5, blob: data.clone() },
+        Request::Shutdown,
+    ];
+    for (i, req) in requests.iter().enumerate() {
+        let body = encode_request(i as u64, 2, req).to_body_bytes();
+        let accepted = replay_body(&body)
+            .unwrap_or_else(|e| panic!("request variant {i} ({req:?}): {e}"));
+        assert!(accepted, "request variant {i} must decode");
+    }
+    let responses = [
+        Response::FileData { stored: data.clone() },
+        Response::FilesData(vec![
+            (path(), FileFetch::Data { stored: data.clone() }),
+            (Arc::from("b"), FileFetch::NotFound),
+            (Arc::from("c"), FileFetch::Fault("disk on fire".into())),
+        ]),
+        Response::Meta { stat, origin: 1, generation: 4 },
+        Response::Metas(vec![
+            (path(), MetaFetch::Meta { stat, origin: 1, generation: 4 }),
+            (Arc::from("d"), MetaFetch::NotFound),
+        ]),
+        Response::Names(vec![String::new(), "model_0007.bin".into()]),
+        Response::Pong { epoch: 77 },
+        Response::PartitionData { blob: data },
+        Response::Ok,
+        Response::Err("no".into()),
+    ];
+    for (i, resp) in responses.iter().enumerate() {
+        let body = encode_response(i as u64, resp).to_body_bytes();
+        let accepted = replay_body(&body)
+            .unwrap_or_else(|e| panic!("response variant {i} ({resp:?}): {e}"));
+        assert!(accepted, "response variant {i} must decode");
+    }
+}
+
+#[test]
+fn bounded_wire_fuzz_smoke() {
+    let report = run_wire_fuzz(0xC0FF_EE00, 3_000).expect("wire fuzz diverged");
+    assert!(report.alloc_guarded, "oracle must be live here");
+    assert!(report.accepted > 0, "generator coverage: some inputs decode");
+    assert!(report.rejected > 0, "mutation coverage: some inputs rejected");
+    assert!(report.max_alloc > 0, "allocation counter never moved");
+}
+
+#[test]
+fn bounded_store_fuzz_smoke() {
+    let report = run_store_fuzz(0xFA57_F00D, 150).expect("store fuzz diverged");
+    assert!(report.ops >= 150);
+    assert!(report.rounds >= 2);
+}
